@@ -1,0 +1,16 @@
+//! The paper's motivating example (§2, §A.2; Beznosikov et al. 2020,
+//! Example 1): distributed gradient descent with biased Top1 compression
+//! and NO error feedback diverges *exponentially* on an average of three
+//! strongly convex quadratics — while EF14 and EF21-Muon converge with the
+//! very same compressor and stepsize.
+//!
+//! ```bash
+//! cargo run --release --example divergence_demo
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    println!("f_j(x) = <a_j, x>^2 / 2,  a_1=(-3,2,2), a_2=(2,-3,2), a_3=(2,2,-3)");
+    println!("x0 = (1,1,1); Top1 compression; stepsize 0.1\n");
+    efmuon::exp::divergence::run_demo(60, &mut std::io::stdout())?;
+    Ok(())
+}

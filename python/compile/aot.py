@@ -1,0 +1,145 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust (L3).
+
+Run once at build time (``make artifacts``); the rust binary is then fully
+self-contained. Interchange format is **HLO text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Emits, under --out-dir (default ../artifacts):
+  grad.hlo.txt        (params..., tokens, targets) -> (loss, grads...)
+  eval.hlo.txt        (params..., tokens, targets) -> (loss,)
+  ns_{m}x{n}.hlo.txt  Newton-Schulz orthogonalization (Pallas matmul inside)
+                      for every distinct hidden-layer shape
+  manifest.json       layer table / shapes / groups / artifact index
+  init_params.bin     f32 little-endian initial parameters (rust & jax agree)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.ns import newton_schulz_pallas, NS_STEPS
+from .kernels.matmul import vmem_bytes, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: M.GptConfig, batch: int):
+    """Lower grad + eval closures over fixed (batch, seq_len) shapes."""
+    pspecs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape, _ in M.layer_table(cfg)
+    ]
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    def grad_flat(*args):
+        params, tokens, targets = list(args[:-2]), args[-2], args[-1]
+        return M.grad_fn(cfg, params, tokens, targets)
+
+    def eval_flat(*args):
+        params, tokens, targets = list(args[:-2]), args[-2], args[-1]
+        return M.eval_fn(cfg, params, tokens, targets)
+
+    grad_l = jax.jit(grad_flat).lower(*pspecs, tok, tok)
+    eval_l = jax.jit(eval_flat).lower(*pspecs, tok, tok)
+    return to_hlo_text(grad_l), to_hlo_text(eval_l)
+
+
+def lower_ns(shape, steps=NS_STEPS):
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    fn = lambda g: (newton_schulz_pallas(g, steps=steps),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="micro", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=8,
+                    help="per-worker microbatch baked into grad.hlo.txt")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--skip-model", action="store_true",
+                    help="only NS artifacts (fast dev loop)")
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    table = M.layer_table(cfg)
+
+    def write(name, text):
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    # --- init params (bit-exact contract with rust) ---
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    flat.astype("<f4").tofile(os.path.join(out, "init_params.bin"))
+    print(f"  wrote init_params.bin ({flat.size} f32 = {4*flat.size} bytes)")
+
+    # --- NS artifacts for every distinct hidden shape ---
+    hidden_shapes = sorted({shape for _, shape, g in table if g == M.HIDDEN})
+    ns_index = {}
+    for shape in hidden_shapes:
+        name = f"ns_{shape[0]}x{shape[1]}.hlo.txt"
+        write(name, lower_ns(shape))
+        ns_index[f"{shape[0]}x{shape[1]}"] = name
+
+    # --- model grad/eval artifacts ---
+    if not args.skip_model:
+        grad_txt, eval_txt = lower_model(cfg, args.batch)
+        write("grad.hlo.txt", grad_txt)
+        write("eval.hlo.txt", eval_txt)
+
+    manifest = {
+        "preset": args.preset,
+        "config": {
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model, "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head, "d_ff": cfg.d_ff,
+        },
+        "batch": args.batch,
+        "seed": args.seed,
+        "param_count": int(flat.size),
+        "layers": [
+            {"name": n, "shape": list(s), "group": g} for n, s, g in table
+        ],
+        "artifacts": {
+            "grad": "grad.hlo.txt",
+            "eval": "eval.hlo.txt",
+            "init_params": "init_params.bin",
+            "ns": ns_index,
+        },
+        "ns_steps": NS_STEPS,
+        "arg_order": "params (layer-table order), tokens i32[B,T], targets i32[B,T]",
+        "grad_outputs": "tuple(loss f32[], grad per layer in table order)",
+        "l1_kernel": {
+            "bm": DEFAULT_BM, "bn": DEFAULT_BN, "bk": DEFAULT_BK,
+            "vmem_bytes": vmem_bytes(),
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(table)} layers, "
+          f"{flat.size/1e6:.2f}M params)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for EF21-Muon.
+
+All kernels are authored for TPU (BlockSpec-tiled, MXU-shaped blocks) but
+lowered with ``interpret=True`` on this image so the resulting HLO runs on
+any PJRT backend, including the rust CPU client. Correctness oracles live in
+``ref.py`` and are enforced by ``python/tests``.
+"""
+
+from .matmul import matmul_pallas
+from .ns import newton_schulz_pallas, NS_COEFFS, NS_STEPS
+
+__all__ = ["matmul_pallas", "newton_schulz_pallas", "NS_COEFFS", "NS_STEPS"]

@@ -1,0 +1,114 @@
+"""Tiled matmul Pallas kernel — the compute hot spot of Muon's Newton–Schulz
+orthogonalization (three dense contractions per NS step).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the GPU reference does
+bf16 tensor-core matmuls; here the HBM↔VMEM schedule is expressed with
+``BlockSpec`` over a (M/bm, N/bn, K/bk) grid. The K axis is the innermost
+(sequential) grid dimension, so the f32 output tile stays resident in VMEM
+and accumulates across K steps — the standard MXU-friendly pattern.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same kernel to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles. Shapes that do not divide are handled by
+# rounding the operands up with zero padding (zeros do not change the
+# product) and slicing the result back down.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the sequential K axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation on the MXU: preferred_element_type pins the
+    # accumulator type regardless of input dtype (bf16-friendly).
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, m, n):
+    pm = (-x.shape[0]) % m
+    pn = (-x.shape[1]) % n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_pallas(x, y, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                  interpret=True):
+    """``x @ y`` via the tiled Pallas kernel.
+
+    Args:
+      x: (m, k) array. y: (k, n) array.
+      bm/bn/bk: VMEM tile sizes. VMEM footprint ≈ (bm*bk + bk*bn + bm*bn)*4B.
+    Returns:
+      (m, n) f32 array.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x.astype(jnp.float32), bm_, bk_)
+    yp = _pad_to(y.astype(jnp.float32), bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, dtype_bytes=4):
+    """Estimated per-step VMEM residency of the kernel (DESIGN.md §Perf)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper. pallas_call (interpret included) has no VJP rule,
+# so the L2 model uses this custom_vjp: the backward pass is the textbook
+# matmul VJP, itself routed through the same Pallas kernel — both directions
+# of the training graph hit the L1 tile schedule.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def matmul_ad(x, y):
+    """Differentiable ``x @ y`` through the tiled Pallas kernel."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = matmul_pallas(g, y.T)
+    dy = matmul_pallas(x.T, g)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)

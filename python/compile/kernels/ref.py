@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These define ground truth: every kernel must match its oracle to float32
+tolerance across a hypothesis sweep of shapes (see python/tests).
+"""
+
+import jax.numpy as jnp
+
+from .ns import NS_COEFFS, NS_STEPS
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def axpby_ref(a, b, ca, cb):
+    return ca * a + cb * b
+
+
+def newton_schulz_ref(g, steps=NS_STEPS):
+    """Reference NS iteration with plain jnp contractions."""
+    a, b, c = NS_COEFFS
+    m, n = g.shape
+    transpose = m > n
+    x = g.T if transpose else g
+    x = x.astype(jnp.float32)
+    x = x / (jnp.linalg.norm(x) + 1e-7)
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    return x.T if transpose else x
+
+
+def orthogonalize_exact(g):
+    """Exact UV^T via SVD — the object NS approximates."""
+    u, _, vt = jnp.linalg.svd(g.astype(jnp.float32), full_matrices=False)
+    return u @ vt

@@ -1,0 +1,157 @@
+"""L2 — MicroGPT: the paper's NanoGPT workload, scaled for this testbed.
+
+Decoder-only transformer (GPT-2 style, as in Karpathy's nanoGPT which the
+paper trains): learned token + position embeddings, pre-LayerNorm (gain
+only, no bias — the modern nanoGPT default), causal self-attention, GELU
+MLP, weight-tied output head.
+
+Functional/stateless: parameters are a *flat list of arrays* in the fixed
+order given by ``layer_table`` so the rust coordinator can address layer i
+by index. Hidden 2-D matrices form the "hidden" group (spectral-norm LMO —
+Muon); embeddings/head the "embed" group (ℓ∞ LMO — Scion's choice, which the
+paper also uses); LayerNorm gains the "vector" group (ℓ∞ LMO).
+
+The MLP matmuls are routed through the L1 Pallas kernel (``matmul_ad``) so
+the Pallas tile schedule lowers into the grad artifact itself.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_ad
+
+# Parameter groups (mirrored by rust/src/model/mod.rs).
+HIDDEN = "hidden"   # 2-D matmul weights -> spectral LMO (Muon)
+EMBED = "embed"     # embedding / tied head -> sign (ℓ∞) LMO
+VECTOR = "vector"   # LayerNorm gains -> sign LMO, tiny radii
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    vocab: int = 256        # byte-level, as our synthetic corpus is bytes
+    seq_len: int = 128
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    d_ff: int = 512         # 4 * d_model by convention
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_head
+
+    def param_count(self):
+        return sum(int(math.prod(s)) for _, s, _ in layer_table(self))
+
+
+def layer_table(cfg: GptConfig):
+    """Fixed (name, shape, group) order — the contract with the rust side."""
+    t = [
+        ("wte", (cfg.vocab, cfg.d_model), EMBED),
+        ("wpe", (cfg.seq_len, cfg.d_model), EMBED),
+    ]
+    for i in range(cfg.n_layer):
+        t += [
+            (f"h{i}.ln1_g", (cfg.d_model,), VECTOR),
+            (f"h{i}.attn_qkv", (cfg.d_model, 3 * cfg.d_model), HIDDEN),
+            (f"h{i}.attn_out", (cfg.d_model, cfg.d_model), HIDDEN),
+            (f"h{i}.ln2_g", (cfg.d_model,), VECTOR),
+            (f"h{i}.mlp_fc", (cfg.d_model, cfg.d_ff), HIDDEN),
+            (f"h{i}.mlp_proj", (cfg.d_ff, cfg.d_model), HIDDEN),
+        ]
+    t.append(("lnf_g", (cfg.d_model,), VECTOR))
+    return t
+
+
+def init_params(cfg: GptConfig, key):
+    """GPT-2 style init: N(0, 0.02) embeddings, scaled residual projections."""
+    params = []
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layer)
+    for name, shape, group in layer_table(cfg):
+        key, sub = jax.random.split(key)
+        if group == VECTOR:
+            p = jnp.ones(shape, jnp.float32)
+        elif group == EMBED:
+            p = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = 0.02 * (resid_scale if name.endswith(("attn_out", "mlp_proj")) else 1.0)
+            p = std * jax.random.normal(sub, shape, jnp.float32)
+        params.append(p)
+    return params
+
+
+def _layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def _attention(cfg, x, w_qkv, w_out):
+    b, t, d = x.shape
+    qkv = x @ w_qkv                                     # (B,T,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    def heads(z):
+        return z.reshape(b, t, cfg.n_head, cfg.head_dim).transpose(0, 2, 1, 3)
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ w_out
+
+
+def _mlp(x, w_fc, w_proj):
+    b, t, d = x.shape
+    h = matmul_ad(x.reshape(b * t, d), w_fc)            # L1 Pallas kernel
+    h = jax.nn.gelu(h)
+    return matmul_ad(h, w_proj).reshape(b, t, d)
+
+
+def forward(cfg: GptConfig, params, tokens):
+    """tokens (B,T) int32 -> logits (B,T,V)."""
+    it = iter(params)
+    wte, wpe = next(it), next(it)
+    b, t = tokens.shape
+    x = wte[tokens] + wpe[:t][None, :, :]
+    for _ in range(cfg.n_layer):
+        ln1_g, w_qkv, w_out, ln2_g, w_fc, w_proj = (next(it) for _ in range(6))
+        x = x + _attention(cfg, _layernorm(x, ln1_g), w_qkv, w_out)
+        x = x + _mlp(_layernorm(x, ln2_g), w_fc, w_proj)
+    lnf_g = next(it)
+    x = _layernorm(x, lnf_g)
+    return x @ wte.T                                    # tied head
+
+
+def loss_fn(cfg: GptConfig, params, tokens, targets):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def grad_fn(cfg: GptConfig, params, tokens, targets):
+    """(loss, grads) — the object AOT-lowered into grad.hlo.txt."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+    return (loss, *grads)
+
+
+def eval_fn(cfg: GptConfig, params, tokens, targets):
+    return (loss_fn(cfg, params, tokens, targets),)
+
+
+# Named model presets exposed through aot.py / the rust config system.
+PRESETS = {
+    # end-to-end driver default: small enough for a 1-core CPU testbed
+    "micro": GptConfig(vocab=256, seq_len=128, d_model=128, n_layer=2,
+                       n_head=4, d_ff=512),
+    # smoke/test preset
+    "nano": GptConfig(vocab=256, seq_len=64, d_model=64, n_layer=2,
+                      n_head=2, d_ff=256),
+    # closer to the paper's nanoGPT-124M shape family (compile-only on CPU)
+    "small": GptConfig(vocab=256, seq_len=256, d_model=384, n_layer=6,
+                       n_head=6, d_ff=1536),
+}

@@ -1,0 +1,104 @@
+"""L2 model correctness: shapes, loss behaviour, gradient integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.PRESETS["nano"]
+
+
+def toy_batch(cfg, batch=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, cfg.seq_len), 0, cfg.vocab)
+    tgts = jnp.roll(toks, -1, axis=1)
+    return toks, tgts
+
+
+def test_layer_table_param_count():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    table = M.layer_table(CFG)
+    assert len(params) == len(table)
+    for p, (name, shape, _) in zip(params, table):
+        assert p.shape == shape, name
+    assert CFG.param_count() == sum(int(np.prod(s)) for _, s, _ in table)
+
+
+def test_groups_cover_expected_kinds():
+    groups = {g for _, _, g in M.layer_table(CFG)}
+    assert groups == {M.HIDDEN, M.EMBED, M.VECTOR}
+    # hidden layers are exactly the 2-D matmul weights
+    for name, shape, g in M.layer_table(CFG):
+        if g == M.HIDDEN:
+            assert len(shape) == 2 and min(shape) > 1, name
+
+
+def test_forward_shapes_and_loss_at_init():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    toks, tgts = toy_batch(CFG)
+    logits = M.forward(CFG, params, toks)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    loss = M.loss_fn(CFG, params, toks, tgts)
+    # near-uniform at init: loss ≈ ln V
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.15
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = M.init_params(CFG, jax.random.PRNGKey(1))
+    toks, _ = toy_batch(CFG, batch=1, seed=2)
+    logits = M.forward(CFG, params, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(CFG, params, toks2)
+    np.testing.assert_allclose(
+        logits[0, :-1], logits2[0, :-1], rtol=1e-5, atol=1e-5
+    )
+    assert not np.allclose(logits[0, -1], logits2[0, -1])
+
+
+def test_grad_fn_outputs():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    toks, tgts = toy_batch(CFG)
+    out = M.grad_fn(CFG, params, toks, tgts)
+    assert len(out) == len(params) + 1
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_gradient_descends():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    toks, tgts = toy_batch(CFG, batch=4)
+    out = M.grad_fn(CFG, params, toks, tgts)
+    loss0, grads = out[0], out[1:]
+    lr = 0.5
+    stepped = [p - lr * g for p, g in zip(params, grads)]
+    loss1 = M.loss_fn(CFG, stepped, toks, tgts)
+    assert float(loss1) < float(loss0)
+
+
+def test_grad_matches_finite_difference():
+    params = M.init_params(CFG, jax.random.PRNGKey(3))
+    toks, tgts = toy_batch(CFG, batch=1)
+    out = M.grad_fn(CFG, params, toks, tgts)
+    g_wte = np.asarray(out[1])
+    # probe one touched embedding row
+    row = int(toks[0, 0])
+    eps = 1e-2
+    for col in (0, 5):
+        bump = params[0].at[row, col].add(eps)
+        lp = M.loss_fn(CFG, [bump] + params[1:], toks, tgts)
+        bump = params[0].at[row, col].add(-eps)
+        lm = M.loss_fn(CFG, [bump] + params[1:], toks, tgts)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert abs(fd - g_wte[row, col]) < 5e-3, (fd, g_wte[row, col])
+
+
+@pytest.mark.parametrize("preset", sorted(M.PRESETS))
+def test_presets_construct(preset):
+    cfg = M.PRESETS[preset]
+    assert cfg.d_model % cfg.n_head == 0
+    assert cfg.param_count() > 0

@@ -1,0 +1,63 @@
+//! Appendix G.4 reproduction: compression-level ablation — final loss and
+//! per-round cost as the TopK / RankK level varies.
+//!
+//! Run: `cargo bench --bench ablation_level [-- --steps 60 --family rank]`
+
+use efmuon::config::TrainConfig;
+use efmuon::exp::level_ablation;
+use efmuon::metrics::{render_table, CsvWriter};
+use efmuon::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP ablation_level: run `make artifacts` first");
+        return Ok(());
+    }
+    let steps = args.usize("steps", 60);
+    let family = args.str("family", "rank");
+    let base = TrainConfig {
+        workers: 4,
+        steps,
+        beta: 0.9,
+        lr: 0.02,
+        warmup: steps / 10 + 1,
+        corpus_tokens: 800_000,
+        eval_every: steps,
+        eval_batches: 3,
+        ..TrainConfig::default()
+    };
+    let levels = [0.05, 0.1, 0.15, 0.2];
+    let rows = level_ablation(&base, &family, &levels)?;
+    std::fs::create_dir_all("results")?;
+    let mut csv = CsvWriter::create(
+        "results/ablation_level.csv",
+        &["family", "level", "final_eval_loss", "relative_bytes"],
+    )?;
+    let mut table = Vec::new();
+    for (lv, loss, rel) in &rows {
+        table.push(vec![
+            format!("{family}:{lv}"),
+            format!("{loss:.4}"),
+            format!("{rel:.4}"),
+        ]);
+        csv.row(&[
+            family.clone(),
+            format!("{lv}"),
+            format!("{loss:.5}"),
+            format!("{rel:.5}"),
+        ])?;
+    }
+    csv.flush()?;
+    println!("== G.4 compression-level ablation ({family}, {steps} steps) ==\n");
+    println!(
+        "{}",
+        render_table(&["spec", "final eval loss", "bytes/round ÷ dense"], &table)
+    );
+    // shape: cost must be monotone in level
+    for w in rows.windows(2) {
+        assert!(w[0].2 <= w[1].2 + 1e-9, "cost not monotone in level");
+    }
+    println!("written to results/ablation_level.csv");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Appendix G.3 reproduction: learning-rate (radius) ablation at a fixed
+//! compressor — final eval loss as a function of the base radius.
+//!
+//! Run: `cargo bench --bench ablation_lr [-- --steps 60 --comp top:0.15+nat]`
+
+use efmuon::config::TrainConfig;
+use efmuon::exp::lr_ablation;
+use efmuon::metrics::{render_table, CsvWriter};
+use efmuon::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP ablation_lr: run `make artifacts` first");
+        return Ok(());
+    }
+    let steps = args.usize("steps", 60);
+    let base = TrainConfig {
+        workers: 4,
+        steps,
+        worker_comp: args.str("comp", "top:0.15+nat"),
+        beta: 0.9,
+        warmup: steps / 10 + 1,
+        corpus_tokens: 800_000,
+        eval_every: steps, // final eval only
+        eval_batches: 3,
+        ..TrainConfig::default()
+    };
+    let lrs = [0.005, 0.01, 0.02, 0.04, 0.08];
+    let rows = lr_ablation(&base, &lrs)?;
+    std::fs::create_dir_all("results")?;
+    let mut csv = CsvWriter::create("results/ablation_lr.csv", &["lr", "final_eval_loss"])?;
+    let mut table = Vec::new();
+    for (lr, loss) in &rows {
+        table.push(vec![format!("{lr}"), format!("{loss:.4}")]);
+        csv.row(&[format!("{lr}"), format!("{loss:.5}")])?;
+    }
+    csv.flush()?;
+    println!(
+        "== G.3 learning-rate ablation ({} @ {steps} steps) ==\n",
+        base.worker_comp
+    );
+    println!("{}", render_table(&["radius (lr)", "final eval loss"], &table));
+    // shape: the sweep must contain an interior optimum or a plateau —
+    // i.e. the largest lr must not be the (unique) best
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!("best radius: {} (loss {:.4})", best.0, best.1);
+    println!("written to results/ablation_lr.csv");
+    Ok(())
+}

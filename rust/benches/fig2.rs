@@ -1,0 +1,92 @@
+//! Figure 2 reproduction: the token-efficiency vs communication-cost
+//! trade-off scatter at a target test loss. Reuses the runs persisted by
+//! the fig1 bench when present (run `cargo bench --bench fig1` first);
+//! otherwise runs a reduced sweep itself.
+//!
+//! Run: `cargo bench --bench fig2 [-- --target 4.2]`
+
+use efmuon::config::TrainConfig;
+use efmuon::exp;
+use efmuon::metrics::{render_table, CsvWriter};
+use efmuon::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let reports = match exp::load_reports("results/fig1_reports.json") {
+        Ok(r) if !r.is_empty() => {
+            eprintln!("(reusing {} runs from results/fig1_reports.json)", r.len());
+            r
+        }
+        _ => {
+            if !std::path::Path::new("artifacts/manifest.json").exists() {
+                eprintln!("SKIP fig2: run `make artifacts` first");
+                return Ok(());
+            }
+            eprintln!("(no fig1 results; running a reduced sweep)");
+            let steps = args.usize("steps", 100);
+            let base = TrainConfig {
+                workers: 4,
+                steps,
+                beta: 0.9,
+                lr: 0.02,
+                warmup: steps / 20 + 1,
+                corpus_tokens: 1_000_000,
+                eval_every: (steps / 12).max(1),
+                eval_batches: 3,
+                ..TrainConfig::default()
+            };
+            exp::figure_sweep(&base, &exp::figure_specs())?
+        }
+    };
+
+    // same threshold protocol as fig1: the worst final loss in the sweep
+    let target = args.f64("target", 0.0) as f32;
+    let target = if target > 0.0 {
+        target
+    } else {
+        reports
+            .iter()
+            .map(|r| r.final_eval_loss)
+            .fold(f32::MIN, f32::max)
+            * 1.002
+    };
+
+    let rows = exp::tradeoff_rows(&reports, target);
+    std::fs::create_dir_all("results")?;
+    let mut csv = CsvWriter::create(
+        "results/fig2.csv",
+        &["compressor", "tokens_to_target", "relative_bytes_to_target"],
+    )?;
+    let mut table = Vec::new();
+    for r in &rows {
+        if r.reached {
+            csv.row(&[
+                r.spec.clone(),
+                r.tokens_to_target.to_string(),
+                format!("{:.5}", r.relative_bytes_to_target),
+            ])?;
+        }
+        table.push(vec![
+            r.spec.clone(),
+            if r.reached { r.tokens_to_target.to_string() } else { "—".into() },
+            if r.reached {
+                format!("{:.4}", r.relative_bytes_to_target)
+            } else {
+                "—".into()
+            },
+            format!("{:.4}", r.final_loss),
+        ]);
+    }
+    csv.flush()?;
+    println!("== Figure 2: trade-off at target eval loss {target:.4} ==\n");
+    println!(
+        "{}",
+        render_table(
+            &["compressor", "tokens to target", "w2s bytes ÷ model", "final loss"],
+            &table
+        )
+    );
+    println!("(paper shape: compression trades slightly more tokens for far fewer bytes)");
+    println!("written to results/fig2.csv");
+    Ok(())
+}

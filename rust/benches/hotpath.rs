@@ -1,0 +1,130 @@
+//! Hot-path microbenchmarks (the §Perf instrument): per-layer costs of
+//! everything on the request path — compressors, codecs, LMOs (native NS vs
+//! the Pallas/PJRT artifact), matmul throughput, and a full end-to-end
+//! coordinator round on the synthetic backend.
+//!
+//! Run: `cargo bench --bench hotpath [-- --iters 30]`
+
+use efmuon::compress::{codec, parse_spec};
+use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::service::GradService;
+use efmuon::dist::TransportMode;
+use efmuon::funcs::{Objective, Quadratics};
+use efmuon::linalg::matmul::matmul;
+use efmuon::linalg::ns::newton_schulz;
+use efmuon::linalg::Matrix;
+use efmuon::lmo::LmoKind;
+use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::runtime::ModelRuntime;
+use efmuon::util::cli::Args;
+use efmuon::util::rng::Rng;
+use efmuon::util::timer::bench_fn;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let iters = args.usize("iters", 30);
+    let mut rng = Rng::new(0);
+    let mut results = Vec::new();
+
+    // ---- matmul throughput (512x128x512: the mlp_proj-shaped contraction)
+    {
+        let a = Matrix::randn(512, 128, 1.0, &mut rng);
+        let b = Matrix::randn(128, 512, 1.0, &mut rng);
+        let flops = 2.0 * 512.0 * 128.0 * 512.0;
+        let r = bench_fn("matmul 512x128x512 (native)", 3, iters, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{}   [{:.2} GFLOP/s]", r.report(), flops / r.median_s / 1e9);
+        results.push(r);
+    }
+
+    // ---- Newton–Schulz: native vs Pallas/PJRT artifact
+    {
+        let g = Matrix::randn(128, 512, 1.0, &mut rng);
+        let r = bench_fn("newton_schulz 128x512 (native rust)", 2, iters, || {
+            std::hint::black_box(newton_schulz(&g, 5));
+        });
+        println!("{}", r.report());
+        if let Ok(rt) = ModelRuntime::load("artifacts") {
+            if rt.has_ns_for(128, 512) {
+                let r = bench_fn("newton_schulz 128x512 (pallas/pjrt)", 2, iters, || {
+                    std::hint::black_box(rt.ns_orthogonalize(&g).unwrap().unwrap());
+                });
+                println!("{}", r.report());
+            }
+        } else {
+            eprintln!("  (no artifacts; skipping PJRT NS bench)");
+        }
+    }
+
+    // ---- compressors on a hidden-layer-sized residual
+    let x = Matrix::randn(128, 512, 1.0, &mut rng);
+    for spec in ["top:0.1", "top:0.1+nat", "rank:0.1", "rank:0.1+nat", "nat",
+                 "svdtop:4", "coltop:0.1"] {
+        let mut c = parse_spec(spec).unwrap();
+        let mut rng2 = Rng::new(1);
+        let r = bench_fn(&format!("compress {spec} 128x512"), 2, iters, || {
+            std::hint::black_box(c.compress(&x, &mut rng2));
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- codec roundtrip
+    {
+        let mut c = parse_spec("top:0.1+nat").unwrap();
+        let mut rng2 = Rng::new(2);
+        let msg = c.compress(&x, &mut rng2);
+        let r = bench_fn("codec encode+decode top:0.1+nat", 2, iters, || {
+            let bytes = codec::encode(&msg);
+            std::hint::black_box(codec::decode(&bytes).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- full coordinator round on the synthetic backend (protocol
+    //      overhead: channels + EF21 state + compression, no PJRT)
+    {
+        let q = Quadratics::new(4, 4096, 0.5, 0.1, &mut Rng::new(3));
+        let x0 = q.init(&mut Rng::new(3));
+        let svc = GradService::spawn_objective(Box::new(q), 3);
+        let mut coord = Coordinator::spawn(
+            x0,
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
+            svc.handle(),
+            CoordinatorCfg {
+                n_workers: 4,
+                worker_comp: "top:0.1".into(),
+                server_comp: "id".into(),
+                beta: 0.9,
+                schedule: Schedule::constant(0.01),
+                transport: TransportMode::Encoded,
+                seed: 3,
+                use_ns_artifact: false,
+            },
+        )?;
+        let r = bench_fn("coordinator round (4 workers, d=4096)", 3, iters, || {
+            coord.round().unwrap();
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- PJRT grad step (the dominant cost of a real round)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = ModelRuntime::load("artifacts")?;
+        let params = rt.manifest.load_init_params().unwrap();
+        let corpus = efmuon::data::Corpus::zipf_markov(100_000, rt.manifest.vocab, 1);
+        let shard = efmuon::data::Shard::new(&corpus, 0, 1, rt.manifest.seq_len);
+        let mut rng3 = Rng::new(4);
+        let (toks, tgts) = shard.sample_batch(rt.manifest.batch, &mut rng3);
+        let r = bench_fn("pjrt grad step (micro, batch 8)", 1, iters.min(10), || {
+            std::hint::black_box(rt.grad(&params, &toks, &tgts).unwrap());
+        });
+        println!("{}", r.report());
+        let r = bench_fn("pjrt eval step (micro, batch 8)", 1, iters.min(10), || {
+            std::hint::black_box(rt.eval_loss(&params, &toks, &tgts).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    Ok(())
+}

@@ -1,0 +1,349 @@
+//! Wire codec: serialize [`Message`]s to bytes and back. The byte meters in
+//! `dist::comm` use [`Message::wire_bytes`]; this module guarantees that
+//! number is *real* — `encode` produces exactly `wire_bytes()` bytes and
+//! `decode(encode(m)) == m` for every payload kind (tested below and in
+//! `rust/tests/compressors.rs`).
+//!
+//! Layout (little endian):
+//!   [0]      payload tag (0=Zero, 1=Dense, 2=Sparse, 3=LowRank) | nat<<7
+//!   [1..4]   rows (u24)
+//!   [4..7]   cols (u24)
+//!   [7..9]   aux: rank (LowRank) — count fields otherwise derived
+//!   body     payload-specific
+//!
+//! Sparse bodies carry a u32 count prefix? No — the count is derived from
+//! the remaining length, keeping the header fixed at 9 bytes so byte
+//! accounting is trivially auditable.
+
+use super::natural::{nat_code, nat_decode};
+use super::{Message, Payload, HEADER_BYTES};
+use crate::linalg::matrix::Matrix;
+
+const TAG_ZERO: u8 = 0;
+const TAG_DENSE: u8 = 1;
+const TAG_SPARSE: u8 = 2;
+const TAG_LOWRANK: u8 = 3;
+const TAG_SIGN: u8 = 4;
+const TAG_QUANT: u8 = 5;
+const NAT_FLAG: u8 = 0x80;
+
+/// Generic little-endian bit packer for fixed-width codes.
+fn pack_bits(codes: &[u16], width: usize, out: &mut Vec<u8>) {
+    let mut acc: u32 = 0;
+    let mut nbits = 0;
+    for &c in codes {
+        acc |= (c as u32) << nbits;
+        nbits += width;
+        while nbits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+}
+
+fn unpack_bits(bytes: &[u8], width: usize, count: usize) -> Vec<u16> {
+    let mut codes = Vec::with_capacity(count);
+    let mut acc: u32 = 0;
+    let mut nbits = 0;
+    let mut pos = 0;
+    let mask = (1u32 << width) - 1;
+    for _ in 0..count {
+        while nbits < width {
+            acc |= (bytes[pos] as u32) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        codes.push((acc & mask) as u16);
+        acc >>= width;
+        nbits -= width;
+    }
+    codes
+}
+
+fn push_u24(out: &mut Vec<u8>, v: usize) {
+    assert!(v < (1 << 24), "dimension too large for u24 header");
+    out.extend_from_slice(&[(v & 0xff) as u8, ((v >> 8) & 0xff) as u8, ((v >> 16) & 0xff) as u8]);
+}
+
+fn read_u24(b: &[u8]) -> usize {
+    b[0] as usize | (b[1] as usize) << 8 | (b[2] as usize) << 16
+}
+
+/// Pack 9-bit natural codes.
+fn pack_nat(vals: &[f32], out: &mut Vec<u8>) {
+    let mut acc: u32 = 0;
+    let mut nbits = 0;
+    for &v in vals {
+        acc |= (nat_code(v) as u32) << nbits;
+        nbits += 9;
+        while nbits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+}
+
+fn unpack_nat(bytes: &[u8], count: usize) -> Vec<f32> {
+    let mut vals = Vec::with_capacity(count);
+    let mut acc: u32 = 0;
+    let mut nbits = 0;
+    let mut pos = 0;
+    for _ in 0..count {
+        while nbits < 9 {
+            acc |= (bytes[pos] as u32) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        vals.push(nat_decode((acc & 0x1ff) as u16));
+        acc >>= 9;
+        nbits -= 9;
+    }
+    vals
+}
+
+fn push_f32s(vals: &[f32], out: &mut Vec<u8>) {
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_f32s(bytes: &[u8], count: usize) -> Vec<f32> {
+    (0..count)
+        .map(|i| f32::from_le_bytes(bytes[4 * i..4 * i + 4].try_into().unwrap()))
+        .collect()
+}
+
+fn push_vals(vals: &[f32], nat: bool, out: &mut Vec<u8>) {
+    if nat {
+        pack_nat(vals, out);
+    } else {
+        push_f32s(vals, out);
+    }
+}
+
+fn val_bytes(count: usize, nat: bool) -> usize {
+    if nat {
+        (count * super::NAT_BITS + 7) / 8
+    } else {
+        count * 4
+    }
+}
+
+/// Serialize a message. Produces exactly `msg.wire_bytes()` bytes.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let (rows, cols) = msg.shape();
+    let mut out = Vec::with_capacity(msg.wire_bytes());
+    let (tag, nat, aux) = match &msg.payload {
+        Payload::Zero { .. } => (TAG_ZERO, false, 0usize),
+        Payload::Dense { nat, .. } => (TAG_DENSE, *nat, 0),
+        Payload::Sparse { nat, .. } => (TAG_SPARSE, *nat, 0),
+        Payload::LowRank { q, nat, .. } => (TAG_LOWRANK, *nat, q.cols),
+        Payload::Sign { .. } => (TAG_SIGN, false, 0),
+        Payload::Quant { levels, .. } => (TAG_QUANT, false, *levels as usize),
+    };
+    out.push(tag | if nat { NAT_FLAG } else { 0 });
+    push_u24(&mut out, rows);
+    push_u24(&mut out, cols);
+    out.extend_from_slice(&(aux as u16).to_le_bytes());
+    match &msg.payload {
+        Payload::Zero { .. } => {}
+        Payload::Dense { m, nat } => push_vals(&m.data, *nat, &mut out),
+        Payload::Sparse { rows, cols, idx, vals, nat } => {
+            let iw = Message::index_width(rows * cols);
+            for &i in idx {
+                if iw == 2 {
+                    out.extend_from_slice(&(i as u16).to_le_bytes());
+                } else {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+            }
+            push_vals(vals, *nat, &mut out);
+        }
+        Payload::LowRank { q, b, nat } => {
+            push_vals(&q.data, *nat, &mut out);
+            push_vals(&b.data, *nat, &mut out);
+        }
+        Payload::Sign { scale, bits, .. } => {
+            out.extend_from_slice(&scale.to_le_bytes());
+            out.extend_from_slice(bits);
+        }
+        Payload::Quant { scale, levels, codes, .. } => {
+            out.extend_from_slice(&scale.to_le_bytes());
+            pack_bits(codes, crate::compress::quantize::code_bits(*levels), &mut out);
+        }
+    }
+    debug_assert_eq!(out.len(), msg.wire_bytes(), "codec size mismatch");
+    out
+}
+
+/// Deserialize. Inverse of [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<Message, String> {
+    if bytes.len() < HEADER_BYTES {
+        return Err("message shorter than header".into());
+    }
+    let tag = bytes[0] & !NAT_FLAG;
+    let nat = bytes[0] & NAT_FLAG != 0;
+    let rows = read_u24(&bytes[1..4]);
+    let cols = read_u24(&bytes[4..7]);
+    let aux = u16::from_le_bytes(bytes[7..9].try_into().unwrap()) as usize;
+    let body = &bytes[HEADER_BYTES..];
+    // all paths validate body length before slicing, so corrupt/truncated
+    // input yields Err, never a panic (fuzzed in rust/tests/compressors.rs)
+    let need = |n: usize| -> Result<(), String> {
+        if body.len() == n {
+            Ok(())
+        } else {
+            Err(format!("body is {} bytes, expected {n}", body.len()))
+        }
+    };
+    let payload = match tag {
+        TAG_ZERO => {
+            need(0)?;
+            Payload::Zero { rows, cols }
+        }
+        TAG_DENSE => {
+            let count = rows * cols;
+            need(val_bytes(count, nat))?;
+            let vals = if nat {
+                unpack_nat(body, count)
+            } else {
+                read_f32s(body, count)
+            };
+            Payload::Dense { m: Matrix::from_vec(rows, cols, vals), nat }
+        }
+        TAG_SPARSE => {
+            let iw = Message::index_width(rows * cols);
+            // count derived from total length: len = k*iw + val_bytes(k)
+            let k = derive_sparse_count(body.len(), iw, nat)?;
+            if k > rows * cols {
+                return Err("sparse count exceeds matrix size".into());
+            }
+            let mut idx = Vec::with_capacity(k);
+            for i in 0..k {
+                let v = if iw == 2 {
+                    u16::from_le_bytes(body[2 * i..2 * i + 2].try_into().unwrap()) as u32
+                } else {
+                    u32::from_le_bytes(body[4 * i..4 * i + 4].try_into().unwrap())
+                };
+                if v as usize >= rows * cols {
+                    return Err(format!("sparse index {v} out of range"));
+                }
+                idx.push(v);
+            }
+            let vb = &body[k * iw..];
+            let vals = if nat { unpack_nat(vb, k) } else { read_f32s(vb, k) };
+            Payload::Sparse { rows, cols, idx, vals, nat }
+        }
+        TAG_LOWRANK => {
+            let r = aux;
+            if r == 0 || r > rows.min(cols).max(1) {
+                return Err(format!("implausible rank {r} for {rows}x{cols}"));
+            }
+            let qn = rows * r;
+            need(val_bytes(qn, nat) + val_bytes(r * cols, nat))?;
+            let qb = val_bytes(qn, nat);
+            let q_vals = if nat {
+                unpack_nat(&body[..qb], qn)
+            } else {
+                read_f32s(&body[..qb], qn)
+            };
+            let bn = r * cols;
+            let b_vals = if nat {
+                unpack_nat(&body[qb..], bn)
+            } else {
+                read_f32s(&body[qb..], bn)
+            };
+            Payload::LowRank {
+                q: Matrix::from_vec(rows, r, q_vals),
+                b: Matrix::from_vec(r, cols, b_vals),
+                nat,
+            }
+        }
+        TAG_SIGN => {
+            let d = rows * cols;
+            need(4 + (d + 7) / 8)?;
+            let scale = f32::from_le_bytes(body[..4].try_into().unwrap());
+            Payload::Sign { rows, cols, scale, bits: body[4..].to_vec() }
+        }
+        TAG_QUANT => {
+            let levels = aux as u8;
+            if levels == 0 {
+                return Err("quant levels must be >= 1".into());
+            }
+            let d = rows * cols;
+            let width = crate::compress::quantize::code_bits(levels);
+            need(4 + (d * width + 7) / 8)?;
+            let scale = f32::from_le_bytes(body[..4].try_into().unwrap());
+            let codes = unpack_bits(&body[4..], width, d);
+            if codes.iter().any(|&c| c > 2 * levels as u16) {
+                return Err("quant code out of range".into());
+            }
+            Payload::Quant { rows, cols, scale, levels, codes }
+        }
+        t => return Err(format!("unknown payload tag {t}")),
+    };
+    Ok(Message { payload })
+}
+
+fn derive_sparse_count(body_len: usize, iw: usize, nat: bool) -> Result<usize, String> {
+    if nat {
+        // len = k*iw + ceil(9k/8); solve by scanning (k is at most len/iw)
+        for k in (0..=body_len / iw).rev() {
+            if k * iw + (k * super::NAT_BITS + 7) / 8 == body_len {
+                return Ok(k);
+            }
+        }
+        Err("corrupt sparse+nat body length".into())
+    } else {
+        if body_len % (iw + 4) != 0 {
+            return Err("corrupt sparse body length".into());
+        }
+        Ok(body_len / (iw + 4))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::parse_spec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_payloads() {
+        let mut rng = Rng::new(101);
+        let x = Matrix::randn(17, 23, 1.0, &mut rng);
+        for spec in ["id", "nat", "top:0.2", "top:0.2+nat", "rank:0.3",
+                     "rank:0.3+nat", "drop:0.5", "svdtop:2", "coltop:0.3",
+                     "sign", "qsgd:3", "qsgd:127", "randk:0.2"] {
+            let mut c = parse_spec(spec).unwrap();
+            let msg = c.compress(&x, &mut rng);
+            let bytes = encode(&msg);
+            assert_eq!(bytes.len(), msg.wire_bytes(), "{spec}: size");
+            let back = decode(&bytes).unwrap();
+            assert_eq!(back, msg, "{spec}: roundtrip");
+        }
+    }
+
+    #[test]
+    fn nat_packing_roundtrip() {
+        let vals: Vec<f32> = vec![0.0, 1.0, -2.0, 0.5, -0.25, 4.0, 8.0];
+        let mut out = Vec::new();
+        pack_nat(&vals, &mut out);
+        assert_eq!(out.len(), (vals.len() * 9 + 7) / 8);
+        assert_eq!(unpack_nat(&out, vals.len()), vals);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[9, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! Contractive compressors (paper Definition 1 and §D) with exact wire-byte
+//! accounting.
+//!
+//! A compressor maps a residual matrix to a [`Message`]: the decoded value
+//! used by the EF21 recursions *plus* the exact number of bytes the message
+//! occupies on the wire (`codec` implements the actual serialization; the
+//! two are tested to agree). Families follow the paper's notation:
+//! 𝔹(α) — contractive w.r.t. the layer norm ‖·‖, 𝔹⋆(α) — w.r.t. the dual
+//! norm, 𝔹₂(α) — w.r.t. the Euclidean norm.
+
+pub mod codec;
+pub mod natural;
+pub mod simple;
+pub mod sparse;
+pub mod lowrank;
+pub mod quantize;
+
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Which norm family the contraction inequality (Def. 1) is guaranteed in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormFamily {
+    /// 𝔹₂(α): Euclidean — TopK, Natural, RankK, dropout, damping.
+    Euclidean,
+    /// 𝔹(α) in a layer norm (e.g. TopK-SVD in Schatten norms).
+    Primal,
+    /// 𝔹⋆(α) in the dual norm.
+    Dual,
+}
+
+/// Serialized-message payload. `nat == true` means values were Natural-
+/// quantized (exact powers of two) and travel at 9 bits each.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Nothing transmitted (decodes to zeros).
+    Zero { rows: usize, cols: usize },
+    /// Full matrix.
+    Dense { m: Matrix, nat: bool },
+    /// Sparse entries by flat index.
+    Sparse {
+        rows: usize,
+        cols: usize,
+        idx: Vec<u32>,
+        vals: Vec<f32>,
+        nat: bool,
+    },
+    /// Low-rank factors `q · b` (q: m×r, b: r×n).
+    LowRank { q: Matrix, b: Matrix, nat: bool },
+    /// Scaled sign (1-bit SGD / signSGD): `scale · sign(x)`, one bit per
+    /// entry on the wire.
+    Sign { rows: usize, cols: usize, scale: f32, bits: Vec<u8> },
+    /// Uniform `levels`-level quantization: value = scale · (code − levels)
+    /// / levels; codes are bit-packed at ⌈log2(2·levels+1)⌉ bits.
+    Quant {
+        rows: usize,
+        cols: usize,
+        scale: f32,
+        levels: u8,
+        codes: Vec<u16>,
+    },
+}
+
+/// Bits per Natural-compressed value: 1 sign + 8 exponent.
+pub const NAT_BITS: usize = 9;
+/// Fixed per-message header: payload tag (1B) + rows/cols (2×3B) + aux (2B).
+pub const HEADER_BYTES: usize = 9;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub payload: Payload,
+}
+
+impl Message {
+    pub fn shape(&self) -> (usize, usize) {
+        match &self.payload {
+            Payload::Zero { rows, cols } => (*rows, *cols),
+            Payload::Dense { m, .. } => (m.rows, m.cols),
+            Payload::Sparse { rows, cols, .. } => (*rows, *cols),
+            Payload::LowRank { q, b, .. } => (q.rows, b.cols),
+            Payload::Sign { rows, cols, .. } => (*rows, *cols),
+            Payload::Quant { rows, cols, .. } => (*rows, *cols),
+        }
+    }
+
+    /// Decode to the dense matrix the receiving EF21 state adds in.
+    pub fn decode(&self) -> Matrix {
+        match &self.payload {
+            Payload::Zero { rows, cols } => Matrix::zeros(*rows, *cols),
+            Payload::Dense { m, .. } => m.clone(),
+            Payload::Sparse { rows, cols, idx, vals, .. } => {
+                let mut out = Matrix::zeros(*rows, *cols);
+                for (&i, &v) in idx.iter().zip(vals) {
+                    out.data[i as usize] = v;
+                }
+                out
+            }
+            Payload::LowRank { q, b, .. } => crate::linalg::matmul::matmul(q, b),
+            Payload::Sign { rows, cols, scale, bits } => {
+                let mut out = Matrix::zeros(*rows, *cols);
+                for (i, v) in out.data.iter_mut().enumerate() {
+                    let bit = (bits[i / 8] >> (i % 8)) & 1;
+                    *v = if bit == 1 { *scale } else { -*scale };
+                }
+                out
+            }
+            Payload::Quant { rows, cols, scale, levels, codes } => {
+                let mut out = Matrix::zeros(*rows, *cols);
+                let l = *levels as f32;
+                for (v, &c) in out.data.iter_mut().zip(codes) {
+                    *v = scale * (c as f32 - l) / l;
+                }
+                out
+            }
+        }
+    }
+
+    /// Add the decoded value into `dst` without materializing it
+    /// (hot-path variant of [`Message::decode`]).
+    pub fn add_into(&self, dst: &mut Matrix) {
+        match &self.payload {
+            Payload::Zero { .. } => {}
+            Payload::Dense { m, .. } => dst.axpy(1.0, m),
+            Payload::Sparse { idx, vals, .. } => {
+                for (&i, &v) in idx.iter().zip(vals) {
+                    dst.data[i as usize] += v;
+                }
+            }
+            Payload::LowRank { q, b, .. } => {
+                let qb = crate::linalg::matmul::matmul(q, b);
+                dst.axpy(1.0, &qb);
+            }
+            Payload::Sign { .. } | Payload::Quant { .. } => {
+                dst.axpy(1.0, &self.decode());
+            }
+        }
+    }
+
+    /// Number of index bytes per sparse entry for a matrix of `numel`
+    /// elements (u16 when addressable, else u32).
+    pub fn index_width(numel: usize) -> usize {
+        if numel <= u16::MAX as usize + 1 {
+            2
+        } else {
+            4
+        }
+    }
+
+    /// Exact wire size in bytes (header + payload). `codec::encode` produces
+    /// exactly this many bytes — asserted in tests.
+    pub fn wire_bytes(&self) -> usize {
+        let body = match &self.payload {
+            Payload::Zero { .. } => 0,
+            Payload::Dense { m, nat } => value_bytes(m.numel(), *nat),
+            Payload::Sparse { rows, cols, idx, nat, .. } => {
+                let iw = Self::index_width(rows * cols);
+                idx.len() * iw + value_bytes(idx.len(), *nat)
+            }
+            Payload::LowRank { q, b, nat } => {
+                value_bytes(q.numel(), *nat) + value_bytes(b.numel(), *nat)
+            }
+            // 4B scale + 1 bit/entry
+            Payload::Sign { rows, cols, .. } => 4 + (rows * cols + 7) / 8,
+            // 4B scale + packed codes at ceil(log2(2L+1)) bits
+            Payload::Quant { rows, cols, levels, .. } => {
+                4 + (rows * cols * quantize::code_bits(*levels) + 7) / 8
+            }
+        };
+        HEADER_BYTES + body
+    }
+}
+
+fn value_bytes(count: usize, nat: bool) -> usize {
+    if nat {
+        (count * NAT_BITS + 7) / 8
+    } else {
+        count * 4
+    }
+}
+
+/// A (possibly randomized) contractive compression operator C: S → S.
+pub trait Compressor: Send {
+    /// Compress `x`; the EF21 state uses `msg.decode()`, the byte meter
+    /// uses `msg.wire_bytes()`.
+    fn compress(&mut self, x: &Matrix, rng: &mut Rng) -> Message;
+
+    /// Human-readable spec (round-trips through [`parse_spec`]).
+    fn name(&self) -> String;
+
+    /// Norm family of the contraction guarantee.
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+
+    /// `true` for the identity compressor (lets hot paths skip work).
+    fn is_identity(&self) -> bool {
+        false
+    }
+}
+
+/// Measured contraction ratio `‖C(x)−x‖² / ‖x‖²` (Euclidean); Definition 1
+/// requires its expectation ≤ 1−α.
+pub fn contraction_ratio(x: &Matrix, decoded: &Matrix) -> f64 {
+    let num = decoded.sub(x).norm2_sq();
+    let den = x.norm2_sq();
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Parse a compressor spec string. Grammar:
+///
+/// ```text
+/// spec    := base ("+nat")?
+/// base    := "id" | "nat" | "top:F" | "rank:F" | "drop:P" | "damp:G"
+///          | "svdtop:K" | "coltop:F"
+/// ```
+///
+/// `F` = fraction (0,1], `P` = keep-probability, `G` = damping factor,
+/// `K` = integer rank. Examples: `top:0.15+nat`, `rank:0.1`, `id`.
+pub fn parse_spec(spec: &str) -> Result<Box<dyn Compressor>, String> {
+    let (base, nat) = match spec.strip_suffix("+nat") {
+        Some(b) => (b, true),
+        None => (spec, false),
+    };
+    let mk_err = |m: &str| format!("bad compressor spec {spec:?}: {m}");
+    let parse_f = |s: &str| -> Result<f64, String> {
+        s.parse::<f64>().map_err(|_| mk_err("expected a number"))
+    };
+    let boxed: Box<dyn Compressor> = match base.split_once(':') {
+        None => match base {
+            "id" => {
+                if nat {
+                    return Ok(Box::new(natural::NaturalCompressor::new()));
+                }
+                Box::new(simple::Identity)
+            }
+            "nat" => Box::new(natural::NaturalCompressor::new()),
+            "sign" => Box::new(quantize::ScaledSign),
+            _ => return Err(mk_err("unknown compressor")),
+        },
+        Some(("top", f)) => {
+            let frac = parse_f(f)?;
+            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                return Err(mk_err("top fraction must be in (0,1]"));
+            }
+            Box::new(sparse::TopK::new(frac, nat))
+        }
+        Some(("rank", f)) => {
+            let frac = parse_f(f)?;
+            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                return Err(mk_err("rank fraction must be in (0,1]"));
+            }
+            Box::new(lowrank::RankK::new(frac, nat))
+        }
+        Some(("drop", p)) => Box::new(simple::RandomDropout::new(parse_f(p)?)),
+        Some(("damp", g)) => Box::new(simple::Damping::new(parse_f(g)? as f32)),
+        Some(("svdtop", k)) => {
+            let k: usize = k.parse().map_err(|_| mk_err("expected integer rank"))?;
+            Box::new(lowrank::SvdTopK::new(k))
+        }
+        Some(("coltop", f)) => Box::new(sparse::ColTopK::new(parse_f(f)?)),
+        Some(("randk", f)) => {
+            let frac = parse_f(f)?;
+            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                return Err(mk_err("randk fraction must be in (0,1]"));
+            }
+            Box::new(sparse::RandK::new(frac))
+        }
+        Some(("qsgd", l)) => {
+            let levels: u8 = l.parse().map_err(|_| mk_err("expected integer levels"))?;
+            if levels == 0 {
+                return Err(mk_err("qsgd levels must be >= 1"));
+            }
+            Box::new(quantize::Qsgd::new(levels))
+        }
+        Some(_) => return Err(mk_err("unknown compressor")),
+    };
+    if nat && !matches!(base.split_once(':').map(|x| x.0), Some("top") | Some("rank")) {
+        return Err(mk_err("+nat is supported for top:/rank: only"));
+    }
+    Ok(boxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip() {
+        for s in ["id", "nat", "top:0.15", "top:0.1+nat", "rank:0.2",
+                  "rank:0.05+nat", "drop:0.5", "damp:0.8", "svdtop:3",
+                  "coltop:0.25", "sign", "qsgd:4", "randk:0.3"] {
+            let c = parse_spec(s).unwrap();
+            assert_eq!(c.name(), s, "name roundtrip for {s}");
+        }
+    }
+
+    #[test]
+    fn spec_errors() {
+        for s in ["", "bogus", "top:0", "top:1.5", "top:x", "drop:", "nat+nat",
+                  "qsgd:0", "randk:0", "sign+nat"] {
+            assert!(parse_spec(s).is_err(), "{s} should fail");
+        }
+    }
+
+    #[test]
+    fn sparse_decode_and_bytes() {
+        let msg = Message {
+            payload: Payload::Sparse {
+                rows: 2,
+                cols: 3,
+                idx: vec![0, 4],
+                vals: vec![1.5, -2.0],
+                nat: false,
+            },
+        };
+        let m = msg.decode();
+        assert_eq!(m.at(0, 0), 1.5);
+        assert_eq!(m.at(1, 1), -2.0);
+        assert_eq!(m.norm2_sq(), 1.5f64 * 1.5 + 4.0);
+        // 2 entries * (2B idx + 4B val) + header
+        assert_eq!(msg.wire_bytes(), HEADER_BYTES + 2 * (2 + 4));
+    }
+
+    #[test]
+    fn add_into_matches_decode() {
+        let msg = Message {
+            payload: Payload::LowRank {
+                q: Matrix::from_vec(2, 1, vec![1.0, 2.0]),
+                b: Matrix::from_vec(1, 2, vec![3.0, 4.0]),
+                nat: false,
+            },
+        };
+        let mut dst = Matrix::zeros(2, 2);
+        msg.add_into(&mut dst);
+        assert_eq!(dst, msg.decode());
+    }
+}

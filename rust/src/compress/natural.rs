@@ -1,0 +1,179 @@
+//! Natural compression (Horváth et al. 2022): unbiased randomized rounding
+//! of each value to a signed power of two. Only the sign + exponent travel
+//! (9 bits vs 32 — the mantissa is dropped), giving α = 8/9 w.r.t. ‖·‖₂.
+
+use super::{Compressor, Message, NormFamily, Payload};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Round one value to ±2^e, unbiased: x = ±(1+p)·2^e rounds up to 2^(e+1)
+/// with probability p and down to 2^e with probability 1−p.
+#[inline]
+pub fn nat_round(x: f32, rng: &mut Rng) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return if x.is_finite() { 0.0 } else { x };
+    }
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = (bits >> 23) & 0xff;
+    let frac = bits & 0x007f_ffff;
+    if exp == 0 {
+        // subnormal: round to zero or the smallest normal, unbiased
+        let p = frac as f64 / (1u32 << 23) as f64 / 2.0; // value / 2^-126 halved
+        let up = rng.f64() < p;
+        return if up {
+            f32::from_bits(sign | (1 << 23))
+        } else {
+            0.0
+        };
+    }
+    if exp == 0xfe && frac != 0 {
+        // would overflow the exponent when rounding up; clamp down
+        return f32::from_bits(sign | (exp << 23));
+    }
+    let p = frac as f64 / (1u32 << 23) as f64; // mantissa fraction in [0,1)
+    let up = rng.f64() < p;
+    let new_exp = if up { exp + 1 } else { exp };
+    f32::from_bits(sign | (new_exp << 23))
+}
+
+/// Deterministic variant (round to nearest power of two in log space) —
+/// biased, but useful for tests needing determinism.
+#[inline]
+pub fn nat_round_deterministic(x: f32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return if x.is_finite() { 0.0 } else { x };
+    }
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = (bits >> 23) & 0xff;
+    let frac = bits & 0x007f_ffff;
+    let up = frac as f64 / (1u32 << 23) as f64 >= 0.5;
+    let new_exp = if up && exp < 0xfe { exp + 1 } else { exp };
+    f32::from_bits(sign | (new_exp << 23))
+}
+
+/// Quantize a whole matrix in place; returns the quantized copy.
+pub fn nat_quantize(x: &Matrix, rng: &mut Rng) -> Matrix {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        *v = nat_round(*v, rng);
+    }
+    out
+}
+
+/// 9-bit wire code (sign<<8 | exponent) of a Natural-quantized value.
+#[inline]
+pub fn nat_code(x: f32) -> u16 {
+    if x == 0.0 {
+        return 0;
+    }
+    let bits = x.to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xff) as u16;
+    (sign << 8) | exp
+}
+
+/// Inverse of [`nat_code`].
+#[inline]
+pub fn nat_decode(code: u16) -> f32 {
+    let exp = (code & 0xff) as u32;
+    if exp == 0 {
+        return 0.0;
+    }
+    let sign = ((code >> 8) & 1) as u32;
+    f32::from_bits((sign << 31) | (exp << 23))
+}
+
+/// The Natural compressor as a standalone operator (dense payload).
+pub struct NaturalCompressor;
+
+impl NaturalCompressor {
+    pub fn new() -> Self {
+        NaturalCompressor
+    }
+}
+
+impl Default for NaturalCompressor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for NaturalCompressor {
+    fn compress(&mut self, x: &Matrix, rng: &mut Rng) -> Message {
+        Message { payload: Payload::Dense { m: nat_quantize(x, rng), nat: true } }
+    }
+
+    fn name(&self) -> String {
+        "nat".into()
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_to_powers_of_two() {
+        let mut rng = Rng::new(61);
+        for _ in 0..200 {
+            let x = rng.normal_f32() * 10.0;
+            let y = nat_round(x, &mut rng);
+            if y != 0.0 {
+                let frac = y.to_bits() & 0x007f_ffff;
+                assert_eq!(frac, 0, "mantissa must be zero, got {y} from {x}");
+                assert_eq!(y.signum(), x.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased() {
+        let mut rng = Rng::new(62);
+        let x = 1.37f32;
+        let n = 40_000;
+        let mean: f64 = (0..n).map(|_| nat_round(x, &mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - x as f64).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // |C(x) - x| <= |x| (the rounding never moves past a factor of 2)
+        let mut rng = Rng::new(63);
+        for _ in 0..500 {
+            let x = (rng.f32() - 0.5) * 100.0;
+            let y = nat_round(x, &mut rng);
+            assert!((y - x).abs() <= x.abs() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        let mut rng = Rng::new(64);
+        for _ in 0..200 {
+            let x = nat_round(rng.normal_f32() * 3.0, &mut rng);
+            assert_eq!(nat_decode(nat_code(x)), x);
+        }
+        assert_eq!(nat_decode(nat_code(0.0)), 0.0);
+    }
+
+    #[test]
+    fn contraction_euclidean() {
+        // Def. 1: E||C(x)-x||^2 <= (1-alpha)||x||^2 with alpha = 8/9 for
+        // natural compression -> ratio <= 1/9 + slack
+        let mut rng = Rng::new(65);
+        let x = Matrix::randn(40, 40, 1.0, &mut rng);
+        let mut ratios = Vec::new();
+        for _ in 0..20 {
+            let y = nat_quantize(&x, &mut rng);
+            ratios.push(super::super::contraction_ratio(&x, &y));
+        }
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!(mean <= 1.0 / 9.0 + 0.02, "mean contraction ratio {mean}");
+    }
+}

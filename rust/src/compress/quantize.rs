@@ -1,0 +1,176 @@
+//! Quantizing compressors from the error-feedback literature the paper
+//! builds on (§A.1/§A.2):
+//!
+//! * **ScaledSign** — 1-bit SGD (Seide et al. 2014) / scaled signSGD
+//!   (Karimireddy et al. 2019): `C(x) = (‖x‖₁/d)·sign(x)`. Exactly one bit
+//!   per entry on the wire. Contractive with
+//!   `α = ‖x‖₁² / (d·‖x‖₂²) ∈ (0, 1]` (tight by Cauchy–Schwarz).
+//! * **Qsgd** — uniform L-level symmetric quantization (QSGD family,
+//!   Alistarh et al. 2017), *deterministic* rounding so the operator is
+//!   contractive (the classical unbiased variant is not): entries are
+//!   mapped to `scale·j/L`, `j ∈ {−L..L}`, with `scale = ‖x‖∞`.
+//!   ⌈log₂(2L+1)⌉ bits per entry.
+
+use super::{Compressor, Message, NormFamily, Payload};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Bits per code for an L-level symmetric quantizer (codes 0..=2L).
+pub fn code_bits(levels: u8) -> usize {
+    let states = 2 * levels as usize + 1;
+    usize::BITS as usize - (states - 1).leading_zeros() as usize
+}
+
+/// 1-bit SGD: transmit sign bits + one f32 scale.
+pub struct ScaledSign;
+
+impl ScaledSign {
+    /// The exact contraction parameter for input `x`.
+    pub fn alpha(x: &Matrix) -> f64 {
+        let l1: f64 = x.data.iter().map(|v| v.abs() as f64).sum();
+        let l2sq = x.norm2_sq();
+        if l2sq == 0.0 {
+            1.0
+        } else {
+            (l1 * l1) / (x.numel() as f64 * l2sq)
+        }
+    }
+}
+
+impl Compressor for ScaledSign {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        let d = x.numel();
+        let l1: f64 = x.data.iter().map(|v| v.abs() as f64).sum();
+        let scale = (l1 / d.max(1) as f64) as f32;
+        let mut bits = vec![0u8; (d + 7) / 8];
+        for (i, v) in x.data.iter().enumerate() {
+            if *v >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        Message { payload: Payload::Sign { rows: x.rows, cols: x.cols, scale, bits } }
+    }
+
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
+/// Deterministic L-level quantizer (contractive QSGD variant).
+pub struct Qsgd {
+    pub levels: u8,
+}
+
+impl Qsgd {
+    pub fn new(levels: u8) -> Self {
+        assert!(levels >= 1);
+        Qsgd { levels }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        let scale = x.max_abs();
+        let l = self.levels as f32;
+        let codes: Vec<u16> = if scale == 0.0 {
+            vec![self.levels as u16; x.numel()]
+        } else {
+            x.data
+                .iter()
+                .map(|v| {
+                    // nearest level in {-L..L}, stored shifted to 0..=2L
+                    let q = (v / scale * l).round().clamp(-l, l);
+                    (q + l) as u16
+                })
+                .collect()
+        };
+        Message {
+            payload: Payload::Quant {
+                rows: x.rows,
+                cols: x.cols,
+                scale,
+                levels: self.levels,
+                codes,
+            },
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd:{}", self.levels)
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::contraction_ratio;
+
+    #[test]
+    fn code_bits_values() {
+        assert_eq!(code_bits(1), 2); // 3 states
+        assert_eq!(code_bits(3), 3); // 7 states
+        assert_eq!(code_bits(7), 4); // 15 states
+        assert_eq!(code_bits(127), 8); // 255 states
+    }
+
+    #[test]
+    fn sign_contraction_matches_formula() {
+        let mut rng = Rng::new(71);
+        for _ in 0..20 {
+            let x = Matrix::randn(7, 9, 2.0, &mut rng);
+            let y = ScaledSign.compress(&x, &mut rng).decode();
+            let ratio = contraction_ratio(&x, &y);
+            let alpha = ScaledSign::alpha(&x);
+            assert!((ratio - (1.0 - alpha)).abs() < 1e-5, "{ratio} vs {}", 1.0 - alpha);
+            assert!(ratio < 1.0);
+        }
+    }
+
+    #[test]
+    fn sign_wire_is_one_bit_per_entry() {
+        let mut rng = Rng::new(72);
+        let x = Matrix::randn(16, 16, 1.0, &mut rng);
+        let msg = ScaledSign.compress(&x, &mut rng);
+        assert_eq!(msg.wire_bytes(), crate::compress::HEADER_BYTES + 4 + 256 / 8);
+    }
+
+    #[test]
+    fn qsgd_error_bounded_by_half_step() {
+        let mut rng = Rng::new(73);
+        let x = Matrix::randn(10, 10, 1.0, &mut rng);
+        let mut c = Qsgd::new(4);
+        let y = c.compress(&x, &mut rng).decode();
+        let scale = x.max_abs();
+        let step = scale / 4.0;
+        for (a, b) in x.data.iter().zip(&y.data) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6, "{a} vs {b}");
+        }
+        // contraction follows from the half-step bound
+        assert!(contraction_ratio(&x, &y) < 1.0);
+    }
+
+    #[test]
+    fn qsgd_zero_matrix() {
+        let x = Matrix::zeros(3, 3);
+        let mut rng = Rng::new(74);
+        let y = Qsgd::new(2).compress(&x, &mut rng).decode();
+        assert_eq!(y.data, vec![0.0; 9]);
+    }
+
+    #[test]
+    fn more_levels_lower_error() {
+        let mut rng = Rng::new(75);
+        let x = Matrix::randn(12, 12, 1.0, &mut rng);
+        let e2 = contraction_ratio(&x, &Qsgd::new(2).compress(&x, &mut rng).decode());
+        let e16 = contraction_ratio(&x, &Qsgd::new(16).compress(&x, &mut rng).decode());
+        assert!(e16 < e2 * 0.1, "{e16} vs {e2}");
+    }
+}

@@ -1,0 +1,135 @@
+//! The simple compressors from paper §D: identity, deterministic damping
+//! (Definition 8) and random dropout (Definition 9). Damping/dropout are
+//! contractive for *any* norm — useful theoretical baselines.
+
+use super::{Compressor, Message, NormFamily, Payload};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// The identity compressor 𝓘 — disables compression; EF21-Muon then reduces
+/// exactly to Gluon (and Muon/Scion under the right norms).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        Message { payload: Payload::Dense { m: x.clone(), nat: false } }
+    }
+
+    fn name(&self) -> String {
+        "id".into()
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+}
+
+/// Deterministic damping `C(x) = γ·x` (Def. 8): contractive with
+/// α = 1−(1−γ)² in every norm, but transmits just as many bytes as the
+/// identity — the paper's example of "formally a compressor, practically
+/// useless" (it is here for completeness + tests).
+pub struct Damping {
+    pub gamma: f32,
+}
+
+impl Damping {
+    pub fn new(gamma: f32) -> Self {
+        assert!(gamma > 0.0 && gamma < 2.0, "damping gamma must be in (0,2)");
+        Damping { gamma }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        let g = self.gamma as f64;
+        1.0 - (1.0 - g) * (1.0 - g)
+    }
+}
+
+impl Compressor for Damping {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        Message { payload: Payload::Dense { m: x.scaled(self.gamma), nat: false } }
+    }
+
+    fn name(&self) -> String {
+        format!("damp:{}", self.gamma)
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Primal // contractive in any norm
+    }
+}
+
+/// Random dropout (Def. 9): transmit the whole matrix with probability `p`,
+/// nothing otherwise. Contractive with α = p in every norm; expected cost
+/// p·dense.
+pub struct RandomDropout {
+    pub p: f64,
+}
+
+impl RandomDropout {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "dropout p must be in (0,1]");
+        RandomDropout { p }
+    }
+}
+
+impl Compressor for RandomDropout {
+    fn compress(&mut self, x: &Matrix, rng: &mut Rng) -> Message {
+        if rng.bernoulli(self.p) {
+            Message { payload: Payload::Dense { m: x.clone(), nat: false } }
+        } else {
+            Message { payload: Payload::Zero { rows: x.rows, cols: x.cols } }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("drop:{}", self.p)
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Primal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::contraction_ratio;
+
+    #[test]
+    fn identity_is_exact() {
+        let mut rng = Rng::new(71);
+        let x = Matrix::randn(5, 5, 1.0, &mut rng);
+        let msg = Identity.compress(&x, &mut rng);
+        assert_eq!(msg.decode(), x);
+        assert_eq!(contraction_ratio(&x, &msg.decode()), 0.0);
+    }
+
+    #[test]
+    fn damping_contraction_exact() {
+        let mut rng = Rng::new(72);
+        let x = Matrix::randn(6, 3, 1.0, &mut rng);
+        let mut c = Damping::new(0.7);
+        let y = c.compress(&x, &mut rng).decode();
+        let ratio = contraction_ratio(&x, &y);
+        assert!((ratio - (1.0 - c.alpha())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dropout_expected_contraction() {
+        let mut rng = Rng::new(73);
+        let x = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut c = RandomDropout::new(0.3);
+        let n = 4000;
+        let mean: f64 = (0..n)
+            .map(|_| contraction_ratio(&x, &c.compress(&x, &mut rng).decode()))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.7).abs() < 0.03, "mean ratio {mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn damping_rejects_bad_gamma() {
+        Damping::new(2.5);
+    }
+}

@@ -1,0 +1,255 @@
+//! Sparsifying compressors: TopK (the canonical Euclidean contractive
+//! compressor, Remark 2), optionally composed with Natural compression of
+//! the surviving entries (one of the paper's winning combinations), and the
+//! column-wise Top_pK compressor (Definition 13).
+
+use super::natural::nat_round;
+use super::{Compressor, Message, NormFamily, Payload};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// TopK: keep the K = ⌈frac·mn⌉ largest-magnitude entries.
+/// Contractive w.r.t. ‖·‖₂ with α = K/(mn).
+pub struct TopK {
+    pub frac: f64,
+    pub nat: bool,
+    // scratch index buffer reused across calls (hot-path allocation free)
+    scratch: Vec<u32>,
+}
+
+impl TopK {
+    pub fn new(frac: f64, nat: bool) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        TopK { frac, nat, scratch: Vec::new() }
+    }
+
+    pub fn k_for(&self, numel: usize) -> usize {
+        ((self.frac * numel as f64).ceil() as usize).clamp(1, numel)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, x: &Matrix, rng: &mut Rng) -> Message {
+        let numel = x.numel();
+        let k = self.k_for(numel);
+        self.scratch.clear();
+        self.scratch.extend(0..numel as u32);
+        let data = &x.data;
+        if k < numel {
+            // O(n) selection of the k largest by |value|
+            self.scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+                data[b as usize]
+                    .abs()
+                    .partial_cmp(&data[a as usize].abs())
+                    .unwrap()
+            });
+        }
+        let mut idx: Vec<u32> = self.scratch[..k].to_vec();
+        idx.sort_unstable(); // sorted indices compress better / deterministic
+        let mut vals: Vec<f32> = idx.iter().map(|&i| data[i as usize]).collect();
+        if self.nat {
+            for v in vals.iter_mut() {
+                *v = nat_round(*v, rng);
+            }
+        }
+        Message {
+            payload: Payload::Sparse {
+                rows: x.rows,
+                cols: x.cols,
+                idx,
+                vals,
+                nat: self.nat,
+            },
+        }
+    }
+
+    fn name(&self) -> String {
+        if self.nat {
+            format!("top:{}+nat", self.frac)
+        } else {
+            format!("top:{}", self.frac)
+        }
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
+/// RandK (unscaled random sparsification, §A.1): keep K = ⌈frac·mn⌉
+/// uniformly random entries. Contractive in expectation with α = K/(mn) in
+/// ANY norm whose square is coordinate-separable (ℓ2 in particular); unlike
+/// TopK it is oblivious to the input, so it composes with secure
+/// aggregation — the classical cheap baseline TopK is compared against.
+pub struct RandK {
+    pub frac: f64,
+    scratch: Vec<u32>,
+}
+
+impl RandK {
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        RandK { frac, scratch: Vec::new() }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&mut self, x: &Matrix, rng: &mut Rng) -> Message {
+        let numel = x.numel();
+        let k = ((self.frac * numel as f64).ceil() as usize).clamp(1, numel);
+        // partial Fisher–Yates: first k entries of a random permutation
+        self.scratch.clear();
+        self.scratch.extend(0..numel as u32);
+        for i in 0..k {
+            let j = i + rng.below(numel - i);
+            self.scratch.swap(i, j);
+        }
+        let mut idx: Vec<u32> = self.scratch[..k].to_vec();
+        idx.sort_unstable();
+        let vals: Vec<f32> = idx.iter().map(|&i| x.data[i as usize]).collect();
+        Message {
+            payload: Payload::Sparse { rows: x.rows, cols: x.cols, idx, vals, nat: false },
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("randk:{}", self.frac)
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
+/// Column-wise Top_pK (Definition 13): keep the ⌈frac·n⌉ columns with the
+/// largest ℓ2 norm. Contractive w.r.t. any ℓ_{2,q} mixed norm.
+pub struct ColTopK {
+    pub frac: f64,
+}
+
+impl ColTopK {
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        ColTopK { frac }
+    }
+}
+
+impl Compressor for ColTopK {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        let kcols = ((self.frac * x.cols as f64).ceil() as usize).clamp(1, x.cols);
+        let mut col_norms: Vec<(f64, usize)> = (0..x.cols)
+            .map(|j| {
+                let n = (0..x.rows)
+                    .map(|i| (x.at(i, j) as f64).powi(2))
+                    .sum::<f64>();
+                (n, j)
+            })
+            .collect();
+        col_norms.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut keep: Vec<usize> = col_norms[..kcols].iter().map(|&(_, j)| j).collect();
+        keep.sort_unstable();
+        let mut idx = Vec::with_capacity(kcols * x.rows);
+        let mut vals = Vec::with_capacity(kcols * x.rows);
+        for i in 0..x.rows {
+            for &j in &keep {
+                idx.push((i * x.cols + j) as u32);
+                vals.push(x.at(i, j));
+            }
+        }
+        Message {
+            payload: Payload::Sparse {
+                rows: x.rows,
+                cols: x.cols,
+                idx,
+                vals,
+                nat: false,
+            },
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("coltop:{}", self.frac)
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Primal // contractive in ℓ_{p,q} mixed norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::contraction_ratio;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let x = Matrix::from_vec(2, 3, vec![0.1, -5.0, 2.0, 0.05, 3.0, -0.2]);
+        let mut c = TopK::new(0.5, false); // k = 3
+        let mut rng = Rng::new(0);
+        let y = c.compress(&x, &mut rng).decode();
+        assert_eq!(y.data, vec![0.0, -5.0, 2.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_contraction_alpha() {
+        // exact TopK bound: ||C(x)-x||^2 <= (1 - k/n) ||x||^2
+        let mut rng = Rng::new(81);
+        for frac in [0.1, 0.3, 0.9] {
+            let x = Matrix::randn(20, 30, 1.0, &mut rng);
+            let mut c = TopK::new(frac, false);
+            let y = c.compress(&x, &mut rng).decode();
+            let k = c.k_for(600) as f64;
+            assert!(contraction_ratio(&x, &y) <= 1.0 - k / 600.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn topk_ties_keep_exactly_k() {
+        // all-equal magnitudes: selection must still return exactly k
+        let x = Matrix::from_vec(4, 4, vec![1.0; 16]);
+        let mut c = TopK::new(0.25, false);
+        let mut rng = Rng::new(82);
+        let msg = c.compress(&x, &mut rng);
+        if let Payload::Sparse { idx, .. } = &msg.payload {
+            assert_eq!(idx.len(), 4);
+        } else {
+            panic!("expected sparse payload");
+        }
+    }
+
+    #[test]
+    fn topk_nat_quantizes_survivors() {
+        let mut rng = Rng::new(83);
+        let x = Matrix::randn(10, 10, 1.0, &mut rng);
+        let mut c = TopK::new(0.2, true);
+        let msg = c.compress(&x, &mut rng);
+        if let Payload::Sparse { vals, nat, .. } = &msg.payload {
+            assert!(*nat);
+            for v in vals {
+                if *v != 0.0 {
+                    assert_eq!(v.to_bits() & 0x007f_ffff, 0);
+                }
+            }
+        } else {
+            panic!("expected sparse payload");
+        }
+    }
+
+    #[test]
+    fn coltop_keeps_whole_columns() {
+        let mut rng = Rng::new(84);
+        let mut x = Matrix::randn(5, 8, 0.1, &mut rng);
+        // boost columns 2 and 6
+        for i in 0..5 {
+            x.set(i, 2, 10.0);
+            x.set(i, 6, -9.0);
+        }
+        let mut c = ColTopK::new(0.25); // 2 columns
+        let y = c.compress(&x, &mut rng).decode();
+        for i in 0..5 {
+            assert_eq!(y.at(i, 2), 10.0);
+            assert_eq!(y.at(i, 6), -9.0);
+            assert_eq!(y.at(i, 0), 0.0);
+        }
+    }
+}

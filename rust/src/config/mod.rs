@@ -1,0 +1,178 @@
+//! Training configuration: JSON config files + CLI overrides (flags win).
+//!
+//! Every experiment in `rust/benches` and `examples/` is a `TrainConfig`;
+//! the same struct drives the `efmuon train` subcommand.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Full configuration of one distributed training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Directory with `manifest.json` + HLO artifacts.
+    pub artifacts: String,
+    /// Number of workers `n` (the paper uses 4 GPUs → 4 workers).
+    pub workers: usize,
+    /// Optimizer steps.
+    pub steps: usize,
+    /// Worker (w2s) compressor spec, e.g. `rank:0.15+nat` (see
+    /// [`crate::compress::parse_spec`]).
+    pub worker_comp: String,
+    /// Server (s2w) compressor spec; the paper fixes this to `id` and
+    /// focuses on w2s (broadcast assumed cheap).
+    pub server_comp: String,
+    /// Momentum β (paper uses 0.9).
+    pub beta: f32,
+    /// Base radius / learning rate for hidden layers.
+    pub lr: f64,
+    /// Radius multiplier for the embed group.
+    pub embed_mult: f32,
+    /// Radius multiplier for the vector (LayerNorm gain) group.
+    pub vector_mult: f32,
+    /// Warmup steps for the nanoGPT-style scheduler.
+    pub warmup: usize,
+    /// Final LR fraction of the cosine schedule.
+    pub min_lr_frac: f64,
+    /// Synthetic corpus size in tokens.
+    pub corpus_tokens: usize,
+    /// Evaluate every `eval_every` steps.
+    pub eval_every: usize,
+    /// Number of held-out eval batches.
+    pub eval_batches: usize,
+    /// Use the PJRT NS artifact (Pallas kernel) for spectral LMOs when a
+    /// matching shape exists; falls back to native NS otherwise.
+    pub use_ns_artifact: bool,
+    /// Run the real wire codec (encode+decode) on every message instead of
+    /// analytic byte counting — slower, bit-exact transport simulation.
+    pub full_codec: bool,
+    pub seed: u64,
+    /// Optional JSONL metrics path.
+    pub log_path: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts: "artifacts".into(),
+            workers: 4,
+            steps: 200,
+            worker_comp: "id".into(),
+            server_comp: "id".into(),
+            beta: 0.9,
+            lr: 0.02,
+            embed_mult: 1.0,
+            vector_mult: 0.1,
+            warmup: 20,
+            min_lr_frac: 0.1,
+            corpus_tokens: 2_000_000,
+            eval_every: 25,
+            eval_batches: 4,
+            use_ns_artifact: true,
+            full_codec: false,
+            seed: 0,
+            log_path: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply CLI flag overrides on top of `self`.
+    pub fn override_from_args(mut self, a: &Args) -> Self {
+        self.artifacts = a.str("artifacts", &self.artifacts);
+        self.workers = a.usize("workers", self.workers);
+        self.steps = a.usize("steps", self.steps);
+        self.worker_comp = a.str("comp", &self.worker_comp);
+        self.server_comp = a.str("server-comp", &self.server_comp);
+        self.beta = a.f64("beta", self.beta as f64) as f32;
+        self.lr = a.f64("lr", self.lr);
+        self.embed_mult = a.f64("embed-mult", self.embed_mult as f64) as f32;
+        self.vector_mult = a.f64("vector-mult", self.vector_mult as f64) as f32;
+        self.warmup = a.usize("warmup", self.warmup);
+        self.min_lr_frac = a.f64("min-lr-frac", self.min_lr_frac);
+        self.corpus_tokens = a.usize("corpus-tokens", self.corpus_tokens);
+        self.eval_every = a.usize("eval-every", self.eval_every);
+        self.eval_batches = a.usize("eval-batches", self.eval_batches);
+        self.use_ns_artifact = a.bool("ns-artifact", self.use_ns_artifact);
+        self.full_codec = a.bool("full-codec", self.full_codec);
+        self.seed = a.u64("seed", self.seed);
+        if let Some(p) = a.opt_str("log") {
+            self.log_path = Some(p);
+        }
+        self
+    }
+
+    /// Load overrides from a JSON config file (missing keys keep defaults).
+    pub fn from_json(text: &str) -> Result<TrainConfig, String> {
+        let j = Json::parse(text)?;
+        let mut c = TrainConfig::default();
+        let obj = j.as_obj().ok_or("config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifacts" => c.artifacts = v.as_str().ok_or("artifacts: string")?.into(),
+                "workers" => c.workers = v.as_usize().ok_or("workers: int")?,
+                "steps" => c.steps = v.as_usize().ok_or("steps: int")?,
+                "worker_comp" => c.worker_comp = v.as_str().ok_or("worker_comp: string")?.into(),
+                "server_comp" => c.server_comp = v.as_str().ok_or("server_comp: string")?.into(),
+                "beta" => c.beta = v.as_f64().ok_or("beta: number")? as f32,
+                "lr" => c.lr = v.as_f64().ok_or("lr: number")?,
+                "embed_mult" => c.embed_mult = v.as_f64().ok_or("embed_mult: number")? as f32,
+                "vector_mult" => c.vector_mult = v.as_f64().ok_or("vector_mult: number")? as f32,
+                "warmup" => c.warmup = v.as_usize().ok_or("warmup: int")?,
+                "min_lr_frac" => c.min_lr_frac = v.as_f64().ok_or("min_lr_frac: number")?,
+                "corpus_tokens" => c.corpus_tokens = v.as_usize().ok_or("corpus_tokens: int")?,
+                "eval_every" => c.eval_every = v.as_usize().ok_or("eval_every: int")?,
+                "eval_batches" => c.eval_batches = v.as_usize().ok_or("eval_batches: int")?,
+                "use_ns_artifact" => c.use_ns_artifact = v.as_bool().ok_or("use_ns_artifact: bool")?,
+                "full_codec" => c.full_codec = v.as_bool().ok_or("full_codec: bool")?,
+                "seed" => c.seed = v.as_f64().ok_or("seed: number")? as u64,
+                "log_path" => c.log_path = v.as_str().map(|s| s.to_string()),
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Parse `--config file.json` (if given) then CLI overrides.
+    pub fn from_args(a: &Args) -> Result<TrainConfig, String> {
+        let base = match a.opt_str("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| format!("reading config {path}: {e}"))?;
+                TrainConfig::from_json(&text)?
+            }
+            None => TrainConfig::default(),
+        };
+        Ok(base.override_from_args(a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_overrides() {
+        let c = TrainConfig::from_json(
+            r#"{"workers": 8, "worker_comp": "rank:0.1+nat", "lr": 0.05}"#,
+        )
+        .unwrap();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.worker_comp, "rank:0.1+nat");
+        assert_eq!(c.lr, 0.05);
+        assert_eq!(c.steps, TrainConfig::default().steps);
+        assert!(TrainConfig::from_json(r#"{"bogus": 1}"#).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let a = Args::parse(
+            ["--steps", "7", "--comp", "top:0.2", "--seed", "42"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::from_args(&a).unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.worker_comp, "top:0.2");
+        assert_eq!(c.seed, 42);
+    }
+}

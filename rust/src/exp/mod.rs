@@ -1,0 +1,662 @@
+//! Experiment drivers — one function per paper table/figure (see DESIGN.md
+//! per-experiment index). The bench targets in `rust/benches/` and the
+//! `efmuon` CLI subcommands are thin wrappers around these.
+
+use anyhow::Result;
+
+use crate::compress::Message;
+use crate::config::TrainConfig;
+use crate::funcs::{CoshObjective, Objective, Quadratics};
+use crate::linalg::matrix::Matrix;
+use crate::lmo::LmoKind;
+use crate::metrics::render_table;
+use crate::opt::ef21::Ef21MuonSeq;
+use crate::opt::{LayerGeometry, Schedule, ScheduleKind};
+use crate::train::{train, TrainReport};
+use crate::util::rng::Rng;
+use crate::util::stats::linfit;
+
+/// The compressor configurations evaluated in the paper's Table 2 /
+/// Figures 1–2 (compression levels as reported there).
+pub fn paper_compressor_specs() -> Vec<&'static str> {
+    vec![
+        "id",
+        "nat",
+        "rank:0.2",
+        "rank:0.15",
+        "rank:0.15+nat",
+        "rank:0.1",
+        "rank:0.1+nat",
+        "rank:0.05",
+        "top:0.2",
+        "top:0.15",
+        "top:0.15+nat",
+        "top:0.1",
+        "top:0.1+nat",
+        "top:0.05",
+    ]
+}
+
+/// A compact default sweep for the figures (most competitive configs, as
+/// Figure 1 does).
+pub fn figure_specs() -> Vec<&'static str> {
+    vec!["id", "nat", "top:0.15", "top:0.15+nat", "rank:0.15", "rank:0.15+nat"]
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: communication cost per round, normalized to the identity
+// ---------------------------------------------------------------------------
+
+/// One Table 2 row.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub spec: String,
+    pub bytes_per_round: usize,
+    pub relative: f64,
+}
+
+/// Exact per-round w2s bytes for each compressor over a set of layer
+/// shapes (one message per layer, as in Algorithm 3).
+pub fn table2_rows(shapes: &[(usize, usize)], specs: &[&str]) -> Result<Vec<CostRow>> {
+    let mut rng = Rng::new(42);
+    let layers: Vec<Matrix> = shapes
+        .iter()
+        .map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng))
+        .collect();
+    let dense: usize = {
+        let cs = crate::opt::layer_compressors("id", shapes).map_err(anyhow::Error::msg)?;
+        total_bytes(cs, &layers, &mut rng)
+    };
+    specs
+        .iter()
+        .map(|spec| {
+            let cs =
+                crate::opt::layer_compressors(spec, shapes).map_err(anyhow::Error::msg)?;
+            let bytes = total_bytes(cs, &layers, &mut Rng::new(42));
+            Ok(CostRow {
+                spec: spec.to_string(),
+                bytes_per_round: bytes,
+                relative: bytes as f64 / dense as f64,
+            })
+        })
+        .collect()
+}
+
+fn total_bytes(
+    mut cs: Vec<Box<dyn crate::compress::Compressor>>,
+    layers: &[Matrix],
+    rng: &mut Rng,
+) -> usize {
+    cs.iter_mut()
+        .zip(layers)
+        .map(|(c, l)| c.compress(l, rng).wire_bytes())
+        .sum()
+}
+
+/// Render Table 2 as text.
+pub fn table2_text(rows: &[CostRow]) -> String {
+    render_table(
+        &["Compressor", "Bytes/round", "Relative Cost"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.spec.clone(),
+                    r.bytes_per_round.to_string(),
+                    format!("{:.4}", r.relative),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figures 1 & 2: loss vs tokens / bytes, and the trade-off scatter
+// ---------------------------------------------------------------------------
+
+/// Run the full compressor sweep (Figure 1 left+right, Figure 2 rows).
+pub fn figure_sweep(base: &TrainConfig, specs: &[&str]) -> Result<Vec<TrainReport>> {
+    let mut out = Vec::new();
+    for spec in specs {
+        let mut cfg = base.clone();
+        cfg.worker_comp = spec.to_string();
+        eprintln!("[fig] training with {spec} ...");
+        let report = train(&cfg)?;
+        eprintln!(
+            "[fig] {spec}: final eval loss {:.4} ({} steps, {:.1}s)",
+            report.final_eval_loss, report.steps, report.wall_seconds
+        );
+        out.push(report);
+    }
+    Ok(out)
+}
+
+/// Figure 1-left rows: (spec, tokens, eval_loss) triples.
+pub fn fig1_left_rows(reports: &[TrainReport]) -> Vec<(String, u64, f32)> {
+    let mut rows = Vec::new();
+    for r in reports {
+        for p in &r.curve {
+            rows.push((r.config_comp.clone(), p.tokens_processed, p.eval_loss));
+        }
+    }
+    rows
+}
+
+/// Figure 1-right / Figure 2 rows: per-spec (tokens, relative bytes) to
+/// reach the target loss.
+#[derive(Debug, Clone)]
+pub struct TradeoffRow {
+    pub spec: String,
+    pub reached: bool,
+    pub tokens_to_target: u64,
+    pub relative_bytes_to_target: f64,
+    pub final_loss: f32,
+}
+
+pub fn tradeoff_rows(reports: &[TrainReport], target: f32) -> Vec<TradeoffRow> {
+    reports
+        .iter()
+        .map(|r| TradeoffRow {
+            spec: r.config_comp.clone(),
+            reached: r.tokens_to_loss(target).is_some(),
+            tokens_to_target: r.tokens_to_loss(target).unwrap_or(0),
+            relative_bytes_to_target: r.relative_bytes_to_loss(target).unwrap_or(f64::NAN),
+            final_loss: r.final_eval_loss,
+        })
+        .collect()
+}
+
+/// Communication savings vs the uncompressed baseline at the target loss
+/// (the paper's headline "up to 7×" number).
+pub fn savings_vs_id(rows: &[TradeoffRow]) -> Vec<(String, f64)> {
+    let id_bytes = rows
+        .iter()
+        .find(|r| r.spec == "id" && r.reached)
+        .map(|r| r.relative_bytes_to_target);
+    match id_bytes {
+        None => vec![],
+        Some(base) => rows
+            .iter()
+            .filter(|r| r.reached && r.spec != "id")
+            .map(|r| (r.spec.clone(), base / r.relative_bytes_to_target))
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: empirical convergence-rate validation
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RateRow {
+    pub setting: String,
+    pub theory_slope: f64,
+    pub fitted_slope: f64,
+    pub r2: f64,
+}
+
+/// Fit `log(min-grad-dual-norm) ~ slope · log(K)` over a K-sweep of
+/// EF21-Muon runs, deterministic (theory −1/2) and stochastic (−1/4).
+pub fn rate_validation(seed: u64) -> Result<Vec<RateRow>> {
+    let mut rows = Vec::new();
+    let ks: Vec<usize> = vec![64, 128, 256, 512, 1024, 2048];
+
+    // -- deterministic, smooth (Theorem 3): O(1/sqrt(K))
+    {
+        let mut rng = Rng::new(seed);
+        let obj = Quadratics::new(4, 20, 0.8, 0.0, &mut rng);
+        let pts = rate_points(&obj, &ks, 1.0, false, 0.35, seed)?;
+        let (x, y): (Vec<f64>, Vec<f64>) = pts.into_iter().unzip();
+        let (_, slope, r2) = linfit(&x, &y);
+        rows.push(RateRow {
+            setting: "deterministic smooth (Thm 3)".into(),
+            theory_slope: -0.5,
+            fitted_slope: slope,
+            r2,
+        });
+    }
+
+    // -- deterministic, (L0,L1)-smooth (Theorem 4): O(1/sqrt(K))
+    {
+        let mut rng = Rng::new(seed + 1);
+        let obj = CoshObjective::new(4, 10, &mut rng);
+        let pts = rate_points(&obj, &ks, 1.0, false, 0.6, seed)?;
+        let (x, y): (Vec<f64>, Vec<f64>) = pts.into_iter().unzip();
+        let (_, slope, r2) = linfit(&x, &y);
+        rows.push(RateRow {
+            setting: "deterministic (L0,L1)-smooth (Thm 4)".into(),
+            theory_slope: -0.5,
+            fitted_slope: slope,
+            r2,
+        });
+    }
+
+    // -- stochastic, smooth (Theorem 5): O(1/K^{1/4})
+    {
+        let mut rng = Rng::new(seed + 2);
+        let obj = Quadratics::new(4, 20, 0.8, 0.4, &mut rng);
+        let pts = rate_points(&obj, &ks, 0.35, true, 0.8, seed)?;
+        let (x, y): (Vec<f64>, Vec<f64>) = pts.into_iter().unzip();
+        let (_, slope, r2) = linfit(&x, &y);
+        rows.push(RateRow {
+            setting: "stochastic smooth (Thm 5)".into(),
+            theory_slope: -0.25,
+            fitted_slope: slope,
+            r2,
+        });
+    }
+
+    Ok(rows)
+}
+
+/// For each K, run EF21-Muon with the theory schedule (t ∝ K^-1/2, β ∝
+/// K^-1/2 in the stochastic case) and return (ln K, ln min_k ‖∇f‖⋆).
+fn rate_points(
+    obj: &dyn Objective,
+    ks: &[usize],
+    eta: f64,
+    stochastic: bool,
+    beta_pow: f64,
+    seed: u64,
+) -> Result<Vec<(f64, f64)>> {
+    let geometry =
+        vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; obj.layer_shapes().len()];
+    let mut pts = Vec::new();
+    for &k in ks {
+        let beta = if stochastic {
+            (1.0 / (k as f64).powf(beta_pow)).min(1.0) as f32
+        } else {
+            1.0
+        };
+        let sched = Schedule {
+            base: eta,
+            warmup: 0,
+            total: k,
+            min_frac: 1.0,
+            kind: if stochastic { ScheduleKind::Theory34 } else { ScheduleKind::InvSqrtTotal },
+        };
+        let mut opt = Ef21MuonSeq::new(
+            obj,
+            geometry.clone(),
+            "top:0.25",
+            "id",
+            beta,
+            sched,
+            stochastic,
+            seed,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let trace = opt.run(obj, k);
+        let min_grad = trace
+            .iter()
+            .map(|s| s.grad_norm2.sqrt())
+            .fold(f64::INFINITY, f64::min);
+        pts.push(((k as f64).ln(), min_grad.max(1e-12).ln()));
+    }
+    Ok(pts)
+}
+
+pub fn rates_text(rows: &[RateRow]) -> String {
+    render_table(
+        &["Setting", "Theory slope", "Fitted slope", "R²"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.setting.clone(),
+                    format!("{:+.2}", r.theory_slope),
+                    format!("{:+.3}", r.fitted_slope),
+                    format!("{:.3}", r.r2),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Layer-wise (L⁰,L¹)-smoothness probe (paper §B / Riabinin et al. evidence)
+// ---------------------------------------------------------------------------
+
+/// Estimated layer-wise smoothness constants along a trajectory.
+#[derive(Debug, Clone)]
+pub struct SmoothnessEstimate {
+    pub layer: usize,
+    /// intercept of ‖Δ∇ᵢf‖/‖ΔXᵢ‖ vs ‖∇ᵢf‖ — the L⁰ᵢ estimate
+    pub l0: f64,
+    /// slope — the L¹ᵢ estimate (>0 indicates generalized smoothness)
+    pub l1: f64,
+    pub r2: f64,
+}
+
+/// Probe Assumption 8 empirically: run EF21-Muon on `obj`, record
+/// (‖∇ᵢf(X^k)‖, ‖∇ᵢf(X^{k+1})−∇ᵢf(X^k)‖/‖Xᵢ^{k+1}−Xᵢ^k‖) pairs per layer,
+/// regress. The paper argues deep nets have L¹ᵢ > 0 (smoothness grows with
+/// gradient norm); the cosh objective reproduces this, quadratics give
+/// L¹ ≈ 0.
+pub fn smoothness_probe(
+    obj: &dyn Objective,
+    kind: LmoKind,
+    lr: f64,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<SmoothnessEstimate>> {
+    let p = obj.layer_shapes().len();
+    let geometry = vec![LayerGeometry { lmo: kind, radius_mult: 1.0 }; p];
+    let mut opt = Ef21MuonSeq::new(
+        obj,
+        geometry,
+        "id",
+        "id",
+        1.0,
+        Schedule::constant(lr),
+        false,
+        seed,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let mut xs: Vec<Vec<f64>> = vec![Vec::new(); p];
+    let mut ys: Vec<Vec<f64>> = vec![Vec::new(); p];
+    let mut prev_x = opt.params().clone();
+    let mut prev_g = obj.grad(&prev_x);
+    for _ in 0..steps {
+        opt.step(obj);
+        let x = opt.params().clone();
+        let g = obj.grad(&x);
+        for i in 0..p {
+            let dx = x[i].sub(&prev_x[i]).norm2();
+            let dg = g[i].sub(&prev_g[i]).norm2();
+            if dx > 1e-12 {
+                xs[i].push(prev_g[i].norm2());
+                ys[i].push(dg / dx);
+            }
+        }
+        prev_x = x;
+        prev_g = g;
+    }
+    Ok((0..p)
+        .map(|i| {
+            let (l0, l1, r2) = linfit(&xs[i], &ys[i]);
+            SmoothnessEstimate { layer: i, l0, l1, r2 }
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (paper §G.3 learning rate, §G.4 compression level)
+// ---------------------------------------------------------------------------
+
+/// G.3: sweep the base radius for a fixed compressor; returns
+/// (lr, final eval loss).
+pub fn lr_ablation(base: &TrainConfig, lrs: &[f64]) -> Result<Vec<(f64, f32)>> {
+    let mut out = Vec::new();
+    for &lr in lrs {
+        let mut cfg = base.clone();
+        cfg.lr = lr;
+        let r = train(&cfg)?;
+        eprintln!("[G3] lr={lr}: final eval loss {:.4}", r.final_eval_loss);
+        out.push((lr, r.final_eval_loss));
+    }
+    Ok(out)
+}
+
+/// G.4: sweep compression level for a compressor family ("top" or "rank");
+/// returns (level, final loss, relative bytes per round).
+pub fn level_ablation(
+    base: &TrainConfig,
+    family: &str,
+    levels: &[f64],
+) -> Result<Vec<(f64, f32, f64)>> {
+    let manifest = crate::model::Manifest::load(&base.artifacts).map_err(anyhow::Error::msg)?;
+    let shapes = manifest.layer_shapes();
+    let mut out = Vec::new();
+    for &lv in levels {
+        let spec = format!("{family}:{lv}");
+        let rows = table2_rows(&shapes, &[&spec])?;
+        let mut cfg = base.clone();
+        cfg.worker_comp = spec.clone();
+        let r = train(&cfg)?;
+        eprintln!("[G4] {spec}: final eval loss {:.4}", r.final_eval_loss);
+        out.push((lv, r.final_eval_loss, rows[0].relative));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Report persistence (benches hand results to each other through results/)
+// ---------------------------------------------------------------------------
+
+/// Serialize sweep reports to JSON (consumed by [`load_reports`]).
+pub fn save_reports(path: &str, reports: &[TrainReport]) -> Result<()> {
+    use crate::util::json::Json;
+    let arr: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let curve: Vec<Json> = r
+                .curve
+                .iter()
+                .map(|p| {
+                    Json::Obj(
+                        [
+                            ("step".to_string(), Json::Num(p.step as f64)),
+                            ("tokens".to_string(), Json::Num(p.tokens_processed as f64)),
+                            ("w2s".to_string(), Json::Num(p.w2s_bytes_per_worker as f64)),
+                            ("loss".to_string(), Json::Num(p.eval_loss as f64)),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    )
+                })
+                .collect();
+            Json::Obj(
+                [
+                    ("comp".to_string(), Json::Str(r.config_comp.clone())),
+                    ("steps".to_string(), Json::Num(r.steps as f64)),
+                    ("final_loss".to_string(), Json::Num(r.final_eval_loss as f64)),
+                    ("model_bytes".to_string(), Json::Num(r.model_bytes as f64)),
+                    ("tokens_per_step".to_string(), Json::Num(r.tokens_per_step as f64)),
+                    ("wall_seconds".to_string(), Json::Num(r.wall_seconds)),
+                    ("curve".to_string(), Json::Arr(curve)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, Json::Arr(arr).to_string())?;
+    Ok(())
+}
+
+/// Load reports saved by [`save_reports`].
+pub fn load_reports(path: &str) -> Result<Vec<TrainReport>> {
+    use crate::train::EvalPoint;
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("expected array"))?;
+    arr.iter()
+        .map(|r| {
+            let get = |k: &str| -> Result<f64> {
+                r.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("missing {k}"))
+            };
+            let curve = r
+                .get("curve")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing curve"))?
+                .iter()
+                .map(|p| EvalPoint {
+                    step: p.get("step").and_then(|v| v.as_usize()).unwrap_or(0),
+                    tokens_processed: p.get("tokens").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                    w2s_bytes_per_worker: p.get("w2s").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                    eval_loss: p.get("loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) as f32,
+                })
+                .collect();
+            Ok(TrainReport {
+                config_comp: r
+                    .get("comp")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                steps: get("steps")? as usize,
+                final_eval_loss: get("final_loss")? as f32,
+                curve,
+                train_losses: vec![],
+                total_w2s_bytes_per_worker: 0,
+                total_s2w_bytes: 0,
+                model_bytes: get("model_bytes")? as usize,
+                tokens_per_step: get("tokens_per_step")? as usize,
+                wall_seconds: get("wall_seconds")?,
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Divergence demo (paper §2 / §A.2, Beznosikov Example 1)
+// ---------------------------------------------------------------------------
+
+pub mod divergence {
+    use std::io::Write;
+
+    use anyhow::Result;
+
+    use crate::funcs::{Objective, ThreeQuadratics};
+    use crate::lmo::LmoKind;
+    use crate::opt::dcgd::{Ef14, NaiveDcgd};
+    use crate::opt::ef21::Ef21MuonSeq;
+    use crate::opt::{LayerGeometry, Schedule};
+    use crate::util::rng::Rng;
+
+    /// Loss traces for (naive DCGD, EF14, EF21-Muon) on the
+    /// three-quadratics, all with Top1 compression and the same stepsize.
+    pub fn traces(steps: usize) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let obj = ThreeQuadratics::new();
+        let mut rng = Rng::new(1);
+        let x0 = obj.init(&mut rng);
+        let lr = 0.1;
+        let spec = "top:0.3"; // Top1 of 3 coordinates (k = ceil(0.9) = 1)
+
+        let mut naive = NaiveDcgd::new(&obj, spec, lr, 5).map_err(anyhow::Error::msg)?;
+        let mut x = x0.clone();
+        let t_naive: Vec<f64> = (0..steps)
+            .map(|_| {
+                naive.step(&obj, &mut x);
+                obj.loss(&x)
+            })
+            .collect();
+
+        let mut ef14 = Ef14::new(&obj, spec, lr, 5).map_err(anyhow::Error::msg)?;
+        let mut y = x0.clone();
+        let t_ef14: Vec<f64> = (0..steps)
+            .map(|_| {
+                ef14.step(&obj, &mut y);
+                obj.loss(&y)
+            })
+            .collect();
+
+        let geometry = vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }];
+        let mut ef21 = Ef21MuonSeq::new(
+            &obj,
+            geometry,
+            spec,
+            "id",
+            1.0,
+            Schedule::constant(lr),
+            false,
+            5,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let t_ef21: Vec<f64> = ef21.run(&obj, steps).iter().map(|s| s.loss).collect();
+
+        Ok((t_naive, t_ef14, t_ef21))
+    }
+
+    /// Print the demo to `out`; returns (naive diverged, ef21 converged).
+    pub fn run_demo(steps: usize, out: &mut impl Write) -> Result<(bool, bool)> {
+        let (naive, ef14, ef21) = traces(steps)?;
+        writeln!(out, "{:>6} {:>14} {:>14} {:>14}", "step", "naive-DCGD", "EF14", "EF21-Muon")?;
+        for k in (0..steps).step_by((steps / 12).max(1)) {
+            writeln!(
+                out,
+                "{k:>6} {:>14.4e} {:>14.4e} {:>14.4e}",
+                naive[k], ef14[k], ef21[k]
+            )?;
+        }
+        let f0 = 0.5; // loss at x0 = (1,1,1): (1/3)*3*(1/2 * 1) = 0.5
+        let diverged = *naive.last().unwrap() > 1e3 * f0;
+        let converged = *ef21.last().unwrap() < 0.1 * f0;
+        writeln!(
+            out,
+            "\nnaive DCGD diverged: {diverged}; EF21-Muon converged: {converged} \
+             (paper §2: biased compression without error feedback explodes)"
+        )?;
+        Ok((diverged, converged))
+    }
+}
+
+/// Quick helper for benches: bytes of one dense round (id compressor).
+pub fn dense_round_bytes(shapes: &[(usize, usize)]) -> usize {
+    shapes
+        .iter()
+        .map(|&(m, n)| m * n * 4 + crate::compress::HEADER_BYTES)
+        .sum()
+}
+
+/// Measured per-message overhead sanity check used in tests.
+pub fn message_overhead(msg: &Message) -> usize {
+    msg.wire_bytes().saturating_sub(match &msg.payload {
+        crate::compress::Payload::Dense { m, .. } => m.numel() * 4,
+        _ => 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_id_is_one() {
+        let shapes = vec![(64, 64), (64, 256), (64, 1)];
+        let rows = table2_rows(&shapes, &["id", "nat", "top:0.1", "rank:0.1"]).unwrap();
+        assert!((rows[0].relative - 1.0).abs() < 1e-12);
+        // natural ~ 9/32
+        assert!((rows[1].relative - 9.0 / 32.0).abs() < 0.02, "{}", rows[1].relative);
+        // all compressed strictly cheaper than dense
+        for r in &rows[1..] {
+            assert!(r.relative < 1.0, "{}: {}", r.spec, r.relative);
+        }
+    }
+
+    #[test]
+    fn table2_ordering_matches_paper_shape() {
+        // the paper's qualitative ordering: rank+nat < rank < top at the
+        // same level; nat halves(ish) whatever it composes with
+        let shapes = vec![(128, 384), (128, 128), (128, 512)];
+        let rows = table2_rows(
+            &shapes,
+            &["rank:0.15", "rank:0.15+nat", "top:0.15", "top:0.15+nat"],
+        )
+        .unwrap();
+        let get = |s: &str| rows.iter().find(|r| r.spec == s).unwrap().relative;
+        assert!(get("rank:0.15+nat") < get("rank:0.15"));
+        assert!(get("top:0.15+nat") < get("top:0.15"));
+        assert!(get("rank:0.15") < get("top:0.15"));
+    }
+
+    #[test]
+    fn rate_fits_match_theory() {
+        let rows = rate_validation(123).unwrap();
+        let det = &rows[0];
+        // deterministic quadratics under the theory schedule: slope should
+        // be ≈ -0.5 (generous tolerance: small-K effects)
+        assert!(
+            det.fitted_slope < -0.3 && det.fitted_slope > -0.9,
+            "slope {}",
+            det.fitted_slope
+        );
+        assert!(det.r2 > 0.8, "r2 {}", det.r2);
+    }
+}

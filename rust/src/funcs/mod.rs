@@ -1,0 +1,514 @@
+//! Synthetic distributed objectives — fast, PJRT-free gradient sources used
+//! by optimizer unit tests, the Table 1 rate-validation bench, and the
+//! divergence demo (paper §2 / §A.2).
+//!
+//! Everything implements [`Objective`]: `n` heterogeneous local functions
+//! `f_j` over a layer-structured parameter space, with exact gradients and
+//! bounded-variance stochastic gradients (Assumption 5).
+
+use crate::linalg::matrix::{layers, Layers, Matrix};
+use crate::util::rng::Rng;
+
+/// A finite-sum objective `f = (1/n) Σ f_j` over layer-structured params.
+pub trait Objective: Send {
+    fn num_workers(&self) -> usize;
+    fn layer_shapes(&self) -> Vec<(usize, usize)>;
+    /// Global loss `f(x)`.
+    fn loss(&self, x: &Layers) -> f64;
+    /// Exact local gradient `∇f_j(x)`.
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers;
+    /// Stochastic local gradient (unbiased, bounded variance).
+    fn stoch_grad_j(&self, j: usize, x: &Layers, _rng: &mut Rng) -> Layers {
+        self.grad_j(j, x)
+    }
+    /// Known optimum value, if any (for convergence assertions).
+    fn opt_value(&self) -> Option<f64> {
+        None
+    }
+    /// A sensible starting point.
+    fn init(&self, rng: &mut Rng) -> Layers {
+        self.layer_shapes()
+            .iter()
+            .map(|&(m, n)| Matrix::randn(m, n, 1.0, rng))
+            .collect()
+    }
+
+    /// Exact global gradient (averaged locals).
+    fn grad(&self, x: &Layers) -> Layers {
+        let n = self.num_workers();
+        let mut acc = self.grad_j(0, x);
+        for j in 1..n {
+            layers::axpy(&mut acc, 1.0, &self.grad_j(j, x));
+        }
+        for m in acc.iter_mut() {
+            m.scale(1.0 / n as f32);
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Heterogeneous diagonal quadratics:
+/// `f_j(x) = ½ Σᵢ aᵢⱼ xᵢ² − bⱼᵀx`, strongly convex, known minimum.
+pub struct Quadratics {
+    pub a: Vec<Vec<f32>>, // per worker, per coord (positive)
+    pub b: Vec<Vec<f32>>,
+    pub noise: f32,
+    dim: usize,
+}
+
+impl Quadratics {
+    pub fn new(n_workers: usize, dim: usize, hetero: f32, noise: f32, rng: &mut Rng) -> Self {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..n_workers {
+            a.push((0..dim).map(|_| 0.5 + rng.f32() * (1.0 + hetero)).collect());
+            b.push((0..dim).map(|_| rng.normal_f32() * hetero).collect());
+        }
+        Quadratics { a, b, noise, dim }
+    }
+
+    /// Coordinates of the global minimizer x* = (Σa)⁻¹ Σb.
+    pub fn minimizer(&self) -> Vec<f32> {
+        (0..self.dim)
+            .map(|i| {
+                let sa: f32 = self.a.iter().map(|aj| aj[i]).sum();
+                let sb: f32 = self.b.iter().map(|bj| bj[i]).sum();
+                sb / sa
+            })
+            .collect()
+    }
+}
+
+impl Objective for Quadratics {
+    fn num_workers(&self) -> usize {
+        self.a.len()
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.dim, 1)]
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        let xv = &x[0].data;
+        let n = self.num_workers();
+        let mut total = 0.0f64;
+        for j in 0..n {
+            for i in 0..self.dim {
+                total += 0.5 * self.a[j][i] as f64 * (xv[i] as f64).powi(2)
+                    - self.b[j][i] as f64 * xv[i] as f64;
+            }
+        }
+        total / n as f64
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        let xv = &x[0].data;
+        let g: Vec<f32> = (0..self.dim)
+            .map(|i| self.a[j][i] * xv[i] - self.b[j][i])
+            .collect();
+        vec![Matrix::col_vec(&g)]
+    }
+
+    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+        let mut g = self.grad_j(j, x);
+        for v in g[0].data.iter_mut() {
+            *v += self.noise * rng.normal_f32();
+        }
+        g
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        let xs = self.minimizer();
+        Some(self.loss(&vec![Matrix::col_vec(&xs)]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Beznosikov et al. (2020) Example 1 — three strongly-convex quadratics on
+/// which *naive* biased compression (Top1 DCGD) diverges exponentially while
+/// error feedback converges. `f_j(x) = ⟨a_j, x⟩²/2` with
+/// `a₁=(-3,2,2), a₂=(2,-3,2), a₃=(2,2,-3)`: at `x = t·(1,1,1)` each local
+/// gradient's largest-magnitude coordinate points *away* from the optimum.
+pub struct ThreeQuadratics {
+    a: [[f32; 3]; 3],
+}
+
+impl ThreeQuadratics {
+    pub fn new() -> Self {
+        ThreeQuadratics {
+            a: [[-3.0, 2.0, 2.0], [2.0, -3.0, 2.0], [2.0, 2.0, -3.0]],
+        }
+    }
+}
+
+impl Default for ThreeQuadratics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Objective for ThreeQuadratics {
+    fn num_workers(&self) -> usize {
+        3
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(3, 1)]
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        let xv = &x[0].data;
+        let mut total = 0.0f64;
+        for aj in &self.a {
+            let dot: f64 = aj.iter().zip(xv).map(|(a, b)| *a as f64 * *b as f64).sum();
+            total += 0.5 * dot * dot;
+        }
+        total / 3.0
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        let xv = &x[0].data;
+        let aj = &self.a[j];
+        let dot: f32 = aj.iter().zip(xv).map(|(a, b)| a * b).sum();
+        vec![Matrix::col_vec(&[aj[0] * dot, aj[1] * dot, aj[2] * dot])]
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn init(&self, _rng: &mut Rng) -> Layers {
+        vec![Matrix::col_vec(&[1.0, 1.0, 1.0])]
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Synthetic heterogeneous logistic regression: each worker holds its own
+/// sample set drawn around a shifted ground-truth separator; stochastic
+/// gradients are minibatch gradients.
+pub struct Logistic {
+    pub xs: Vec<Matrix>,   // per worker: samples × dim
+    pub ys: Vec<Vec<f32>>, // labels ±1
+    pub l2: f32,
+    pub minibatch: usize,
+    dim: usize,
+}
+
+impl Logistic {
+    pub fn new(
+        n_workers: usize,
+        samples_per: usize,
+        dim: usize,
+        hetero: f32,
+        l2: f32,
+        rng: &mut Rng,
+    ) -> Self {
+        let truth: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n_workers {
+            let shift: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * hetero).collect();
+            let mut x = Matrix::zeros(samples_per, dim);
+            let mut y = Vec::with_capacity(samples_per);
+            for s in 0..samples_per {
+                let mut dot = 0.0f32;
+                for d in 0..dim {
+                    let v = rng.normal_f32() + shift[d];
+                    x.set(s, d, v);
+                    dot += v * truth[d];
+                }
+                let label = if dot + 0.3 * rng.normal_f32() > 0.0 { 1.0 } else { -1.0 };
+                y.push(label);
+            }
+            xs.push(x);
+            ys.push(y);
+        }
+        Logistic { xs, ys, l2, minibatch: samples_per.max(4) / 4, dim }
+    }
+
+    fn grad_over(&self, j: usize, x: &Layers, rows: &[usize]) -> Layers {
+        let w = &x[0].data;
+        let mut g = vec![0.0f32; self.dim];
+        for &s in rows {
+            let row = self.xs[j].row(s);
+            let dot: f32 = row.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+            let y = self.ys[j][s];
+            // d/dw log(1+exp(-y w.x)) = -y sigmoid(-y w.x) x
+            let z = (-y * dot) as f64;
+            let sig = 1.0 / (1.0 + (-z).exp());
+            let coef = (-y as f64 * sig) as f32;
+            for d in 0..self.dim {
+                g[d] += coef * row[d];
+            }
+        }
+        let scale = 1.0 / rows.len() as f32;
+        for (d, gv) in g.iter_mut().enumerate() {
+            *gv = *gv * scale + self.l2 * w[d];
+        }
+        vec![Matrix::col_vec(&g)]
+    }
+}
+
+impl Objective for Logistic {
+    fn num_workers(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.dim, 1)]
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        let w = &x[0].data;
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for j in 0..self.xs.len() {
+            for s in 0..self.ys[j].len() {
+                let row = self.xs[j].row(s);
+                let dot: f64 = row
+                    .iter()
+                    .zip(w.iter())
+                    .map(|(a, b)| (*a as f64) * (*b as f64))
+                    .sum();
+                let y = self.ys[j][s] as f64;
+                total += (1.0 + (-y * dot).exp()).ln();
+                count += 1;
+            }
+        }
+        let reg: f64 =
+            0.5 * self.l2 as f64 * w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        total / count as f64 + reg
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        let rows: Vec<usize> = (0..self.ys[j].len()).collect();
+        self.grad_over(j, x, &rows)
+    }
+
+    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+        let n = self.ys[j].len();
+        let rows: Vec<usize> = (0..self.minibatch.max(1)).map(|_| rng.below(n)).collect();
+        self.grad_over(j, x, &rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// `f_j(x) = Σᵢ cosh(cⱼ·xᵢ)/cⱼ` — the classic (L⁰,L¹)-smooth family
+/// (Hessian grows with ‖∇f‖, violating global L-smoothness; Zhang et al.
+/// 2020). Used to validate the generalized-smooth theorems (4/6/17/24).
+pub struct CoshObjective {
+    pub c: Vec<f32>,
+    dim: usize,
+}
+
+impl CoshObjective {
+    pub fn new(n_workers: usize, dim: usize, rng: &mut Rng) -> Self {
+        CoshObjective {
+            c: (0..n_workers).map(|_| 0.5 + rng.f32()).collect(),
+            dim,
+        }
+    }
+}
+
+impl Objective for CoshObjective {
+    fn num_workers(&self) -> usize {
+        self.c.len()
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        vec![(self.dim, 1)]
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        let n = self.c.len() as f64;
+        self.c
+            .iter()
+            .map(|&c| {
+                x[0].data
+                    .iter()
+                    .map(|&v| ((c as f64) * v as f64).cosh() / c as f64)
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        let c = self.c[j];
+        let g: Vec<f32> = x[0]
+            .data
+            .iter()
+            .map(|&v| ((c as f64 * v as f64).sinh()) as f32)
+            .collect();
+        vec![Matrix::col_vec(&g)]
+    }
+
+    fn opt_value(&self) -> Option<f64> {
+        // min at x = 0: (1/n) Σ d/c_j
+        Some(
+            self.c.iter().map(|&c| self.dim as f64 / c as f64).sum::<f64>()
+                / self.c.len() as f64,
+        )
+    }
+
+    fn init(&self, _rng: &mut Rng) -> Layers {
+        vec![Matrix::col_vec(&vec![1.5; self.dim])]
+    }
+}
+
+/// Matrix-valued quadratic `f_j(X) = ½‖AⱼX − Bⱼ‖_F²` over an (m×n) layer —
+/// exercises the *matrix* LMO geometry (spectral/NS path) with cheap exact
+/// gradients `Aⱼᵀ(AⱼX − Bⱼ)`.
+pub struct MatrixQuadratic {
+    pub a: Vec<Matrix>,
+    pub b: Vec<Matrix>,
+    pub noise: f32,
+    shape: (usize, usize),
+}
+
+impl MatrixQuadratic {
+    pub fn new(n_workers: usize, m: usize, n: usize, noise: f32, rng: &mut Rng) -> Self {
+        let a: Vec<Matrix> = (0..n_workers)
+            .map(|_| {
+                // well-conditioned: I + small random
+                let mut r = Matrix::randn(m, m, 0.2 / (m as f32).sqrt(), rng);
+                for i in 0..m {
+                    r.set(i, i, r.at(i, i) + 1.0);
+                }
+                r
+            })
+            .collect();
+        let b = (0..n_workers).map(|_| Matrix::randn(m, n, 1.0, rng)).collect();
+        MatrixQuadratic { a, b, noise, shape: (m, n) }
+    }
+}
+
+impl Objective for MatrixQuadratic {
+    fn num_workers(&self) -> usize {
+        self.a.len()
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        vec![self.shape]
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        let n = self.a.len() as f64;
+        self.a
+            .iter()
+            .zip(&self.b)
+            .map(|(a, b)| {
+                let r = crate::linalg::matmul::matmul(a, &x[0]).sub(b);
+                0.5 * r.norm2_sq()
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        let r = crate::linalg::matmul::matmul(&self.a[j], &x[0]).sub(&self.b[j]);
+        vec![crate::linalg::matmul::matmul_at(&self.a[j], &r)]
+    }
+
+    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+        let mut g = self.grad_j(j, x);
+        for v in g[0].data.iter_mut() {
+            *v += self.noise * rng.normal_f32();
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(obj: &dyn Objective, x: &Layers, tol: f64) {
+        let g = obj.grad(x);
+        let eps = 1e-3f32;
+        for li in 0..x.len() {
+            for e in [0, x[li].numel() - 1] {
+                let mut xp = x.clone();
+                xp[li].data[e] += eps;
+                let mut xm = x.clone();
+                xm[li].data[e] -= eps;
+                let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps as f64);
+                let an = g[li].data[e] as f64;
+                assert!(
+                    (fd - an).abs() < tol * (1.0 + an.abs()),
+                    "layer {li} elem {e}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quadratics_gradient() {
+        let mut rng = Rng::new(201);
+        let q = Quadratics::new(4, 10, 1.0, 0.0, &mut rng);
+        let x = q.init(&mut rng);
+        finite_diff_check(&q, &x, 1e-3);
+        // minimum is a stationary point
+        let xs = vec![Matrix::col_vec(&q.minimizer())];
+        let g = q.grad(&xs);
+        assert!(g[0].norm2() < 1e-4);
+    }
+
+    #[test]
+    fn three_quadratics_geometry() {
+        let t = ThreeQuadratics::new();
+        let x = vec![Matrix::col_vec(&[1.0, 1.0, 1.0])];
+        // each local gradient = a_j * <a_j, 1> = a_j (since <a_j, 1> = 1)
+        let g0 = t.grad_j(0, &x);
+        assert_eq!(g0[0].data, vec![-3.0, 2.0, 2.0]);
+        // largest-magnitude coordinate is the NEGATIVE one -> Top1 points
+        // away from the optimum; this is what breaks naive DCGD
+        finite_diff_check(&t, &x, 1e-3);
+        assert_eq!(t.opt_value(), Some(0.0));
+    }
+
+    #[test]
+    fn logistic_gradient() {
+        let mut rng = Rng::new(202);
+        let l = Logistic::new(3, 20, 6, 0.5, 0.01, &mut rng);
+        let x = l.init(&mut rng);
+        finite_diff_check(&l, &x, 1e-2);
+    }
+
+    #[test]
+    fn cosh_gradient_and_min() {
+        let mut rng = Rng::new(203);
+        let c = CoshObjective::new(3, 5, &mut rng);
+        let x = c.init(&mut rng);
+        finite_diff_check(&c, &x, 1e-2);
+        let zero = vec![Matrix::zeros(5, 1)];
+        assert!((c.loss(&zero) - c.opt_value().unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matrix_quadratic_gradient() {
+        let mut rng = Rng::new(204);
+        let mq = MatrixQuadratic::new(2, 6, 4, 0.0, &mut rng);
+        let x = mq.init(&mut rng);
+        finite_diff_check(&mq, &x, 1e-2);
+    }
+
+    #[test]
+    fn stoch_grad_unbiased() {
+        let mut rng = Rng::new(205);
+        let q = Quadratics::new(2, 4, 0.5, 0.3, &mut rng);
+        let x = q.init(&mut rng);
+        let exact = q.grad_j(0, &x);
+        let n = 5000;
+        let mut acc = Matrix::zeros(4, 1);
+        for _ in 0..n {
+            acc.axpy(1.0 / n as f32, &q.stoch_grad_j(0, &x, &mut rng)[0]);
+        }
+        assert!(acc.max_abs_diff(&exact[0]) < 0.05);
+    }
+}

@@ -1,0 +1,37 @@
+//! # EF21-Muon
+//!
+//! Production-grade reproduction of *"Error Feedback for Muon and Friends"*
+//! (Gruntkowska, Tovmasyan, Gaponov, Richtárik, 2025): the first
+//! communication-efficient, non-Euclidean, LMO-based distributed optimizer
+//! with convergence guarantees.
+//!
+//! Three-layer architecture (Python never on the request path):
+//! - **L3 (this crate)** — distributed coordinator: leader/worker protocol,
+//!   EF21 (w2s) + EF21-P (s2w) error-feedback state machines, compressor
+//!   zoo with exact wire-byte accounting, LMO engines, data pipeline,
+//!   metrics, CLI.
+//! - **L2 (JAX)** — MicroGPT forward/backward, AOT-lowered once to HLO text
+//!   (`python/compile/aot.py`).
+//! - **L1 (Pallas)** — tiled matmul + Newton–Schulz kernels inside the L2
+//!   graphs; executed through the PJRT CPU client by [`runtime`].
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod util;
+pub mod linalg;
+pub mod lmo;
+pub mod compress;
+pub mod opt;
+pub mod funcs;
+pub mod model;
+pub mod data;
+pub mod runtime;
+pub mod dist;
+pub mod train;
+pub mod config;
+pub mod metrics;
+pub mod exp;
+
+pub use linalg::matrix::Matrix;
+pub use util::rng::Rng;

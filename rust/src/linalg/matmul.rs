@@ -1,0 +1,213 @@
+//! Blocked dense matmul — the L3-native analogue of the L1 Pallas kernel.
+//!
+//! The kernel computes `C = A · B` with the `ikj` loop order over
+//! cache-blocked tiles: the inner loop runs contiguously over a row of `B`
+//! and a row of `C`, which auto-vectorizes well. This mirrors the Pallas
+//! BlockSpec schedule at L1 (see DESIGN.md §Hardware-Adaptation): the block
+//! sizes play the role of the VMEM tiles.
+//!
+//! Used by the server hot path: Newton–Schulz spectral LMOs and RankK
+//! power-iteration compressors.
+
+use super::matrix::Matrix;
+
+/// Tile sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
+const BM: usize = 32;
+const BK: usize = 64;
+const BN: usize = 256;
+
+/// `C = A · B` into a fresh matrix.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B`, writing into a caller-provided buffer (no allocation).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul out shape");
+    c.fill(0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let ad = &a.data;
+    let bd = &b.data;
+    let cd = &mut c.data;
+    for i0 in (0..m).step_by(BM) {
+        let i1 = (i0 + BM).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for j0 in (0..n).step_by(BN) {
+                let j1 = (j0 + BN).min(n);
+                // §Perf note: a 4-way k-unroll was tried here and REVERTED
+                // (bounds-check noise beat the ILP win; see EXPERIMENTS.md
+                // §Perf iteration log). The simple ikj form vectorizes
+                // cleanly under target-cpu=native.
+                for i in i0..i1 {
+                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let aik = ad[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[kk * n + j0..kk * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` without materializing the transpose (rows of `B` are
+/// contiguous, so this is a sequence of dot products).
+pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_bt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` into a caller-provided buffer.
+///
+/// §Perf: for sizeable inputs the dot-product form (horizontal adds) loses
+/// badly to the vectorized `ikj` kernel, so we pay one explicit transpose
+/// and dispatch to [`matmul_into`] — 2-3× faster on NS-sized Gram matrices.
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_bt out shape");
+    let k = a.cols;
+    if a.rows * b.rows * k >= 32 * 32 * 32 {
+        let bt = b.transpose();
+        matmul_into(a, &bt, c);
+        return;
+    }
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..b.rows {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            // simple 4-way unrolled dot product
+            let mut idx = 0;
+            while idx + 4 <= k {
+                acc += arow[idx] * brow[idx]
+                    + arow[idx + 1] * brow[idx + 1]
+                    + arow[idx + 2] * brow[idx + 2]
+                    + arow[idx + 3] * brow[idx + 3];
+                idx += 4;
+            }
+            while idx < k {
+                acc += arow[idx] * brow[idx];
+                idx += 1;
+            }
+            c.data[i * b.rows + j] = acc;
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without materializing the transpose.
+pub fn matmul_at(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at inner dim");
+    let (m, n) = (a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for kk in 0..a.rows {
+        let arow = &a.data[kk * a.cols..(kk + 1) * a.cols];
+        let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Matrix–vector product `A·x` (x as column-major slice).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows)
+        .map(|i| {
+            a.row(i)
+                .iter()
+                .zip(x)
+                .map(|(u, v)| u * v)
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// `Aᵀ·x`.
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows, x.len());
+    let mut out = vec![0.0f32; a.cols];
+    for i in 0..a.rows {
+        let xi = x[i];
+        for (o, v) in out.iter_mut().zip(a.row(i)) {
+            *o += xi * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(5);
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (33, 65, 17), (70, 40, 90)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn bt_at_variants() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(9, 13, 1.0, &mut rng);
+        let b = Matrix::randn(11, 13, 1.0, &mut rng);
+        assert!(matmul_bt(&a, &b).max_abs_diff(&matmul(&a, &b.transpose())) < 1e-4);
+        let c = Matrix::randn(9, 4, 1.0, &mut rng);
+        assert!(matmul_at(&a, &c).max_abs_diff(&matmul(&a.transpose(), &c)) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_variants() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let y = matvec(&a, &x);
+        let expect = matmul(&a, &Matrix::col_vec(&x));
+        for i in 0..6 {
+            assert!((y[i] - expect.at(i, 0)).abs() < 1e-5);
+        }
+        let z = matvec_t(&a, &matvec(&a, &x));
+        let expect2 = matmul_at(&a, &expect);
+        for i in 0..4 {
+            assert!((z[i] - expect2.at(i, 0)).abs() < 1e-4);
+        }
+    }
+}

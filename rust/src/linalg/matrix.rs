@@ -1,0 +1,247 @@
+//! Row-major f32 matrix. Vectors (LayerNorm gains etc.) are represented as
+//! single-column matrices so every parameter group flows through one type.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries (optionally scaled).
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal_f32() * scale;
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(data: &[f32]) -> Self {
+        Matrix { rows: data.len(), cols: 1, data: data.to_vec() }
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on big layers
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    // -- in-place arithmetic (hot path: no allocation) ----------------------
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        self.data.iter_mut().for_each(|x| *x *= a);
+    }
+
+    /// `self += a * other`
+    pub fn axpy(&mut self, a: f32, other: &Matrix) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += a * y;
+        }
+    }
+
+    /// `self = a*self + b*other` (fused polynomial-combine, mirrors the L1
+    /// axpby Pallas kernel).
+    pub fn axpby(&mut self, a: f32, b: f32, other: &Matrix) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    pub fn scaled(&self, a: f32) -> Matrix {
+        let mut out = self.clone();
+        out.scale(a);
+        out
+    }
+
+    /// Frobenius / trace inner product `<self, other>`.
+    pub fn dot(&self, other: &Matrix) -> f64 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn norm2_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.norm2_sq().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Max |a-b| between two matrices.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// Layer-structured parameter collection X = [X_1, …, X_p] (product space S).
+pub type Layers = Vec<Matrix>;
+
+/// Element-wise helpers over whole layer collections.
+pub mod layers {
+    use super::{Layers, Matrix};
+
+    pub fn zeros_like(xs: &Layers) -> Layers {
+        xs.iter().map(|x| Matrix::zeros(x.rows, x.cols)).collect()
+    }
+
+    pub fn clone_all(xs: &Layers) -> Layers {
+        xs.to_vec()
+    }
+
+    pub fn axpy(dst: &mut Layers, a: f32, src: &Layers) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.axpy(a, s);
+        }
+    }
+
+    pub fn sub(a: &Layers, b: &Layers) -> Layers {
+        a.iter().zip(b).map(|(x, y)| x.sub(y)).collect()
+    }
+
+    pub fn norm2_sq(xs: &Layers) -> f64 {
+        xs.iter().map(|x| x.norm2_sq()).sum()
+    }
+
+    pub fn numel(xs: &Layers) -> usize {
+        xs.iter().map(|x| x.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(13, 29, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(5, 7), a.at(7, 5));
+    }
+
+    #[test]
+    fn axpby_matches_manual() {
+        let mut rng = Rng::new(2);
+        let mut a = Matrix::randn(4, 5, 1.0, &mut rng);
+        let b = Matrix::randn(4, 5, 1.0, &mut rng);
+        let expect = a.scaled(2.0).add(&b.scaled(-3.0));
+        a.axpby(2.0, -3.0, &b);
+        assert!(a.max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.dot(&a), 30.0);
+        assert!((a.norm2() - 30f64.sqrt()).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn layer_helpers() {
+        let a = vec![Matrix::identity(2), Matrix::zeros(3, 1)];
+        let z = layers::zeros_like(&a);
+        assert_eq!(layers::numel(&a), 7);
+        assert_eq!(layers::norm2_sq(&z), 0.0);
+        let d = layers::sub(&a, &z);
+        assert_eq!(layers::norm2_sq(&d), 2.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra substrate (built from scratch — no ndarray/BLAS
+//! offline): matrix type, blocked matmul, QR, power iteration, randomized
+//! range finder, one-sided Jacobi SVD, Newton–Schulz orthogonalization, and
+//! the non-Euclidean norm library the paper's geometry lives in.
+
+pub mod matrix;
+pub mod matmul;
+pub mod qr;
+pub mod svd;
+pub mod ns;
+pub mod norms;
+
+pub use matrix::Matrix;

@@ -1,0 +1,218 @@
+//! The paper's norm geometry: primal norms ‖·‖, dual norms ‖·‖⋆, and the
+//! norm-equivalence constants ρ, ρ̄ with ρ‖X‖ ≤ ‖X‖₂ ≤ ρ̄‖X‖ (paper §B).
+//!
+//! Operator norms `‖A‖_{α→β}` are covered for the cases the paper uses:
+//! spectral (2→2), `1→∞` (max |entry|… actually max abs entry = ℓ∞ on the
+//! flattened matrix), `∞→∞` (max row sum), `1→2` (max column ℓ2 norm), and
+//! the Schatten family via exact small-matrix SVD.
+
+use super::matrix::Matrix;
+use super::svd::{jacobi_svd, top_singular};
+use crate::util::rng::Rng;
+
+/// The norms assigned to layer groups (paper Table 3 / §B.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    /// ‖·‖₂→₂ spectral — Muon's choice for hidden layers.
+    Spectral,
+    /// element-wise ℓ∞ — the paper's choice for embedding/output layers.
+    LInf,
+    /// element-wise ℓ1 (dual of ℓ∞).
+    L1,
+    /// Frobenius / Euclidean.
+    Frobenius,
+    /// nuclear (Schatten-1, dual of spectral).
+    Nuclear,
+    /// 1→2 operator norm: max column ℓ2 norm (column-wise Gluon/ colwise
+    /// normalization in Glentis et al.).
+    MaxColL2,
+    /// ∞→∞ operator norm: max row ℓ1 sum (paper §D.1).
+    MaxRowL1,
+}
+
+impl NormKind {
+    /// Dual norm pairing used for gradients (LMO arguments live in the dual).
+    pub fn dual(self) -> NormKind {
+        match self {
+            NormKind::Spectral => NormKind::Nuclear,
+            NormKind::Nuclear => NormKind::Spectral,
+            NormKind::LInf => NormKind::L1,
+            NormKind::L1 => NormKind::LInf,
+            NormKind::Frobenius => NormKind::Frobenius,
+            // duals of the mixed operator norms are the corresponding
+            // ℓ_{p,q} norms; only needed for diagnostics here:
+            NormKind::MaxColL2 => NormKind::MaxColL2,
+            NormKind::MaxRowL1 => NormKind::MaxRowL1,
+        }
+    }
+}
+
+/// Exact ℓ∞ (max abs entry).
+pub fn linf(a: &Matrix) -> f64 {
+    a.max_abs() as f64
+}
+
+/// Exact ℓ1 (sum of abs entries).
+pub fn l1(a: &Matrix) -> f64 {
+    a.data.iter().map(|x| x.abs() as f64).sum()
+}
+
+/// Frobenius.
+pub fn fro(a: &Matrix) -> f64 {
+    a.norm2()
+}
+
+/// Spectral norm via power iteration (iters=100 gives ~1e-3 relative).
+pub fn spectral(a: &Matrix, rng: &mut Rng) -> f64 {
+    top_singular(a, 100, rng).0 as f64
+}
+
+/// Exact spectral norm via Jacobi SVD (small matrices / tests).
+pub fn spectral_exact(a: &Matrix) -> f64 {
+    jacobi_svd(a).1.first().copied().unwrap_or(0.0) as f64
+}
+
+/// Exact nuclear norm (sum of singular values) via Jacobi SVD.
+pub fn nuclear_exact(a: &Matrix) -> f64 {
+    jacobi_svd(a).1.iter().map(|s| *s as f64).sum()
+}
+
+/// Schatten-p norm via exact SVD.
+pub fn schatten(a: &Matrix, p: f64) -> f64 {
+    let (_, s, _) = jacobi_svd(a);
+    s.iter().map(|x| (*x as f64).powf(p)).sum::<f64>().powf(1.0 / p)
+}
+
+/// max column ℓ2 norm (operator 1→2).
+pub fn max_col_l2(a: &Matrix) -> f64 {
+    (0..a.cols)
+        .map(|j| {
+            (0..a.rows)
+                .map(|i| (a.at(i, j) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// max row ℓ1 sum (operator ∞→∞).
+pub fn max_row_l1(a: &Matrix) -> f64 {
+    (0..a.rows)
+        .map(|i| a.row(i).iter().map(|x| x.abs() as f64).sum())
+        .fold(0.0, f64::max)
+}
+
+/// ℓ_{p,q} mixed column norm (paper Definition 13 support).
+pub fn lpq(a: &Matrix, p: f64, q: f64) -> f64 {
+    (0..a.cols)
+        .map(|j| {
+            (0..a.rows)
+                .map(|i| (a.at(i, j).abs() as f64).powf(p))
+                .sum::<f64>()
+                .powf(1.0 / p)
+                .powf(q)
+        })
+        .sum::<f64>()
+        .powf(1.0 / q)
+}
+
+/// Evaluate a [`NormKind`] (exact variants; power iteration where noted).
+pub fn eval(kind: NormKind, a: &Matrix) -> f64 {
+    match kind {
+        NormKind::Spectral => spectral_exact(a),
+        NormKind::LInf => linf(a),
+        NormKind::L1 => l1(a),
+        NormKind::Frobenius => fro(a),
+        NormKind::Nuclear => nuclear_exact(a),
+        NormKind::MaxColL2 => max_col_l2(a),
+        NormKind::MaxRowL1 => max_row_l1(a),
+    }
+}
+
+/// Norm-equivalence constants (ρ, ρ̄) with ρ‖X‖ ≤ ‖X‖₂ ≤ ρ̄‖X‖ for an
+/// m×n matrix (paper Remark 7: for spectral, ρ=1, ρ̄=√rank ≤ √min(m,n)).
+pub fn equivalence_constants(kind: NormKind, m: usize, n: usize) -> (f64, f64) {
+    let r = m.min(n) as f64;
+    let d = (m * n) as f64;
+    match kind {
+        NormKind::Spectral => (1.0, r.sqrt()),
+        NormKind::Nuclear => (1.0 / r.sqrt(), 1.0),
+        NormKind::LInf => (1.0, d.sqrt()),
+        NormKind::L1 => (1.0 / d.sqrt(), 1.0),
+        NormKind::Frobenius => (1.0, 1.0),
+        NormKind::MaxColL2 => (1.0, (n as f64).sqrt()),
+        NormKind::MaxRowL1 => (1.0 / (n as f64).sqrt(), (m as f64).sqrt()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, -2.0, 3.0, 0.0, 4.0, -1.0])
+    }
+
+    #[test]
+    fn elementwise_norms() {
+        let a = sample();
+        assert_eq!(linf(&a), 4.0);
+        assert_eq!(l1(&a), 11.0);
+        assert!((fro(&a) - (31.0f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn operator_norms() {
+        let a = sample();
+        assert!((max_row_l1(&a) - 6.0).abs() < 1e-6); // row 0: 1+2+3
+        let col1 = (4.0f64 + 16.0).sqrt();
+        assert!((max_col_l2(&a) - col1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schatten_consistency() {
+        let a = sample();
+        assert!((schatten(&a, 2.0) - fro(&a)).abs() < 1e-4);
+        assert!((schatten(&a, 1.0) - nuclear_exact(&a)).abs() < 1e-4);
+        // spectral <= fro <= nuclear
+        assert!(spectral_exact(&a) <= fro(&a) + 1e-6);
+        assert!(fro(&a) <= nuclear_exact(&a) + 1e-6);
+    }
+
+    #[test]
+    fn power_iter_matches_exact() {
+        let mut rng = Rng::new(44);
+        let a = Matrix::randn(10, 14, 1.0, &mut rng);
+        let s1 = spectral(&a, &mut rng);
+        let s2 = spectral_exact(&a);
+        assert!((s1 - s2).abs() / s2 < 5e-3, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn equivalence_bounds_hold() {
+        let mut rng = Rng::new(45);
+        for kind in [
+            NormKind::Spectral,
+            NormKind::Nuclear,
+            NormKind::LInf,
+            NormKind::L1,
+            NormKind::Frobenius,
+            NormKind::MaxColL2,
+        ] {
+            let a = Matrix::randn(6, 9, 1.0, &mut rng);
+            let (lo, hi) = equivalence_constants(kind, 6, 9);
+            let nk = eval(kind, &a);
+            let n2 = fro(&a);
+            assert!(lo * nk <= n2 * (1.0 + 1e-4), "{kind:?}: lo");
+            assert!(n2 <= hi * nk * (1.0 + 1e-4), "{kind:?}: hi");
+        }
+    }
+
+    #[test]
+    fn duality_pairs() {
+        assert_eq!(NormKind::Spectral.dual(), NormKind::Nuclear);
+        assert_eq!(NormKind::Nuclear.dual(), NormKind::Spectral);
+        assert_eq!(NormKind::LInf.dual(), NormKind::L1);
+        assert_eq!(NormKind::Frobenius.dual(), NormKind::Frobenius);
+    }
+}

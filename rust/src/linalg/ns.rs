@@ -1,0 +1,122 @@
+//! Newton–Schulz orthogonalization — the native-rust twin of the L1 Pallas
+//! kernel (`python/compile/kernels/ns.py`). Same quintic coefficients, same
+//! normalization, so the two implementations agree to float tolerance and
+//! are cross-checked in `rust/tests/runtime.rs`.
+
+use super::matmul::{matmul, matmul_bt};
+use super::matrix::Matrix;
+
+/// Quintic NS coefficients from the Muon reference implementation.
+pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
+/// Default iteration count (paper §5: "5 Newton–Schulz iterations").
+pub const NS_STEPS: usize = 5;
+
+/// Approximate `U Vᵀ` of `g` via the quintic Newton–Schulz iteration.
+///
+/// Tall inputs are transposed first so the Gram matrix is the small square.
+pub fn newton_schulz(g: &Matrix, steps: usize) -> Matrix {
+    let (a, b, c) = NS_COEFFS;
+    let transpose = g.rows > g.cols;
+    let mut x = if transpose { g.transpose() } else { g.clone() };
+    let nrm = x.norm2() as f32 + 1e-7;
+    x.scale(1.0 / nrm);
+    let mut scratch_poly: Option<Matrix> = None;
+    for _ in 0..steps {
+        let gram = matmul_bt(&x, &x); // A = X Xᵀ (k×k)
+        let gram2 = matmul(&gram, &gram); // A²
+        // poly = b·A + c·A²  (reuse buffer across iterations)
+        let poly = match scratch_poly.take() {
+            Some(mut p) if p.rows == gram.rows => {
+                p.data.copy_from_slice(&gram.data);
+                p.axpby(b, c, &gram2);
+                p
+            }
+            _ => {
+                let mut p = gram.clone();
+                p.axpby(b, c, &gram2);
+                p
+            }
+        };
+        let px = matmul(&poly, &x);
+        x.axpby(a, 1.0, &px); // X = a·X + poly·X
+        scratch_poly = Some(poly);
+    }
+    if transpose {
+        x.transpose()
+    } else {
+        x
+    }
+}
+
+/// Orthogonality residual `‖XXᵀ − I‖_F / √k` — a quality metric for NS
+/// (exactly orthogonal rows give 0; Muon's quintic plateaus ≈ 0.2).
+pub fn orthogonality_residual(x: &Matrix) -> f64 {
+    let wide = if x.rows > x.cols { x.transpose() } else { x.clone() };
+    let gram = matmul_bt(&wide, &wide);
+    let k = gram.rows;
+    let mut acc = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            let target = if i == j { 1.0 } else { 0.0 };
+            let d = gram.at(i, j) as f64 - target;
+            acc += d * d;
+        }
+    }
+    (acc / k as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::jacobi_svd;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn singular_values_near_one() {
+        let mut rng = Rng::new(31);
+        for &(m, n) in &[(16, 16), (8, 24), (24, 8)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let o = newton_schulz(&g, NS_STEPS);
+            let (_, s, _) = jacobi_svd(&o);
+            for &sv in &s {
+                // Muon's quintic pushes singular values into ~[0.7, 1.2]
+                assert!(sv > 0.55 && sv < 1.35, "{m}x{n}: sv={sv}");
+            }
+        }
+    }
+
+    #[test]
+    fn approximates_exact_polar_direction() {
+        // NS(g) should align with UVᵀ: <NS(g), UVᵀ> / (‖·‖‖·‖) ≈ 1
+        let mut rng = Rng::new(32);
+        let g = Matrix::randn(12, 10, 1.0, &mut rng);
+        let (u, s, v) = jacobi_svd(&g);
+        let k = s.len();
+        let uvt = crate::linalg::svd::truncated_reconstruct(&u, &vec![1.0; k], &v, k);
+        let o = newton_schulz(&g, NS_STEPS);
+        let cos = o.dot(&uvt) / (o.norm2() * uvt.norm2());
+        assert!(cos > 0.98, "cos={cos}");
+    }
+
+    #[test]
+    fn zero_input_is_safe() {
+        let g = Matrix::zeros(4, 6);
+        let o = newton_schulz(&g, NS_STEPS);
+        assert!(o.is_finite());
+        assert!(o.norm2() < 1e-3);
+    }
+
+    #[test]
+    fn residual_metric() {
+        let eye = Matrix::identity(5);
+        assert!(orthogonality_residual(&eye) < 1e-6);
+        let mut rng = Rng::new(33);
+        let g = Matrix::randn(10, 10, 1.0, &mut rng);
+        // Muon's quintic pushes singular values into ~[0.7, 1.2] rather than
+        // exactly 1, so the residual plateaus well below a random matrix's
+        // but does not vanish.
+        let o = newton_schulz(&g, NS_STEPS);
+        assert!(orthogonality_residual(&o) < 0.6);
+        assert!(orthogonality_residual(&o) < 0.5 * orthogonality_residual(&g));
+    }
+}

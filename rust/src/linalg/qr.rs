@@ -1,0 +1,96 @@
+//! Thin QR via modified Gram–Schmidt (with one re-orthogonalization pass —
+//! "twice is enough"). Used by the randomized range finder behind the RankK
+//! compressor.
+
+use super::matrix::Matrix;
+
+/// Orthonormalize the columns of `a` in place (thin Q, m×n with m ≥ n
+/// expected; rank-deficient columns are replaced by zeros).
+pub fn mgs_inplace(a: &mut Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    for j in 0..n {
+        // original column norm: used to detect rank deficiency (a column
+        // whose post-orthogonalization norm collapses relative to its input
+        // lies in the span of earlier columns and is zeroed, not normalized)
+        let mut orig = 0.0f64;
+        for row in 0..m {
+            let v = a.data[row * n + j] as f64;
+            orig += v * v;
+        }
+        let orig = orig.sqrt();
+        for _pass in 0..2 {
+            for i in 0..j {
+                // r = q_i . a_j
+                let mut r = 0.0f64;
+                for row in 0..m {
+                    r += a.data[row * n + i] as f64 * a.data[row * n + j] as f64;
+                }
+                let r = r as f32;
+                for row in 0..m {
+                    let qi = a.data[row * n + i];
+                    a.data[row * n + j] -= r * qi;
+                }
+            }
+        }
+        let mut nrm = 0.0f64;
+        for row in 0..m {
+            let v = a.data[row * n + j] as f64;
+            nrm += v * v;
+        }
+        let nrm = nrm.sqrt() as f32;
+        if nrm as f64 > 1e-7 * orig.max(1e-30) && nrm > 1e-20 {
+            let inv = 1.0 / nrm;
+            for row in 0..m {
+                a.data[row * n + j] *= inv;
+            }
+        } else {
+            for row in 0..m {
+                a.data[row * n + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Thin QR returning fresh Q.
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    let mut q = a.clone();
+    mgs_inplace(&mut q);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_at;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(40, 8, 1.0, &mut rng);
+        let q = orthonormalize(&a);
+        let qtq = matmul_at(&q, &q);
+        let eye = Matrix::identity(8);
+        assert!(qtq.max_abs_diff(&eye) < 1e-4);
+    }
+
+    #[test]
+    fn preserves_span() {
+        // Q Qᵀ a_j == a_j for columns in the span
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(20, 5, 1.0, &mut rng);
+        let q = orthonormalize(&a);
+        let proj = crate::linalg::matmul::matmul(&q, &matmul_at(&q, &a));
+        assert!(proj.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // duplicate column -> second copy zeroed, no NaNs
+        let a = Matrix::from_vec(3, 2, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        let q = orthonormalize(&a);
+        assert!(q.is_finite());
+        let col1: f32 = (0..3).map(|i| q.at(i, 1).abs()).sum();
+        assert!(col1 < 1e-6);
+    }
+}

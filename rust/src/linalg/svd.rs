@@ -1,0 +1,229 @@
+//! Spectral machinery:
+//! - power iteration for the leading singular triple (spectral norm, rank-1
+//!   nuclear-norm LMO),
+//! - randomized range finder (Halko–Martinsson–Tropp) for the RankK
+//!   compressor (paper §D, Remark 11 explicitly allows approximate SVD),
+//! - one-sided Jacobi SVD for small matrices (exact singular values for the
+//!   TopK-SVD compressor of Definition 10 and for test oracles).
+
+use super::matmul::{matmul, matmul_at, matmul_bt, matvec, matvec_t};
+use super::matrix::Matrix;
+use super::qr::orthonormalize;
+use crate::util::rng::Rng;
+
+/// Leading singular triple `(sigma, u, v)` of `a` via power iteration on
+/// `AᵀA` (deterministic start + random restart safeguard).
+pub fn top_singular(a: &Matrix, iters: usize, rng: &mut Rng) -> (f32, Vec<f32>, Vec<f32>) {
+    let n = a.cols;
+    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    normalize(&mut v);
+    let mut sigma = 0.0f32;
+    for _ in 0..iters.max(1) {
+        let u = matvec(a, &v);
+        let mut w = matvec_t(a, &u);
+        let nrm = norm(&w);
+        if nrm < 1e-20 {
+            return (0.0, vec![0.0; a.rows], vec![0.0; a.cols]);
+        }
+        w.iter_mut().for_each(|x| *x /= nrm);
+        v = w;
+        sigma = nrm.sqrt();
+    }
+    let mut u = matvec(a, &v);
+    let un = norm(&u);
+    if un > 1e-20 {
+        u.iter_mut().for_each(|x| *x /= un);
+    }
+    (sigma, u, v)
+}
+
+fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+fn normalize(x: &mut [f32]) {
+    let n = norm(x);
+    if n > 1e-20 {
+        x.iter_mut().for_each(|v| *v /= n);
+    }
+}
+
+/// Randomized range finder: orthonormal `Q` (m×r) approximately spanning the
+/// dominant column space of `a`, with `power` subspace iterations.
+pub fn range_finder(a: &Matrix, rank: usize, power: usize, rng: &mut Rng) -> Matrix {
+    let r = rank.min(a.rows).min(a.cols).max(1);
+    let omega = Matrix::randn(a.cols, r, 1.0, rng);
+    let mut y = matmul(a, &omega); // m×r
+    let mut q = orthonormalize(&y);
+    for _ in 0..power {
+        let z = matmul_at(a, &q); // n×r = Aᵀ Q
+        let zq = orthonormalize(&z);
+        y = matmul(a, &zq);
+        q = orthonormalize(&y);
+    }
+    q
+}
+
+/// Low-rank factors `(Q, B)` with `a ≈ Q·B`, `Q` m×r orthonormal, `B` r×n.
+/// This is exactly what the RankK compressor transmits.
+pub fn low_rank_approx(a: &Matrix, rank: usize, power: usize, rng: &mut Rng) -> (Matrix, Matrix) {
+    let q = range_finder(a, rank, power, rng);
+    let b = matmul_at(&q, a); // r×n
+    (q, b)
+}
+
+/// Full SVD of a small matrix via one-sided Jacobi on columns:
+/// returns `(u, s, v)` with `a = u · diag(s) · vᵀ`, singular values
+/// descending. O(n² m) per sweep — fine for the ≤ few-hundred-dim layers
+/// where exact spectra are needed.
+pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    let transpose = a.rows < a.cols;
+    let work = if transpose { a.transpose() } else { a.clone() };
+    let (m, n) = (work.rows, work.cols);
+    let mut u = work; // will become U * diag(s)
+    let mut v = Matrix::identity(n);
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let x = u.data[i * n + p] as f64;
+                    let y = u.data[i * n + q] as f64;
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq * apq;
+                if apq.abs() < 1e-15 * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let x = u.data[i * n + p];
+                    let y = u.data[i * n + q];
+                    u.data[i * n + p] = cf * x - sf * y;
+                    u.data[i * n + q] = sf * x + cf * y;
+                }
+                for i in 0..n {
+                    let x = v.data[i * n + p];
+                    let y = v.data[i * n + q];
+                    v.data[i * n + p] = cf * x - sf * y;
+                    v.data[i * n + q] = sf * x + cf * y;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // extract singular values = column norms of u
+    let mut sv: Vec<(f32, usize)> = (0..n)
+        .map(|j| {
+            let mut s = 0.0f64;
+            for i in 0..m {
+                let x = u.data[i * n + j] as f64;
+                s += x * x;
+            }
+            (s.sqrt() as f32, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let s: Vec<f32> = sv.iter().map(|(x, _)| *x).collect();
+    let mut uu = Matrix::zeros(m, n);
+    let mut vv = Matrix::zeros(n, n);
+    for (newj, (sigma, oldj)) in sv.iter().enumerate() {
+        let inv = if *sigma > 1e-20 { 1.0 / sigma } else { 0.0 };
+        for i in 0..m {
+            uu.data[i * n + newj] = u.data[i * n + oldj] * inv;
+        }
+        for i in 0..n {
+            vv.data[i * n + newj] = v.data[i * n + oldj];
+        }
+    }
+    if transpose {
+        (vv, s, uu)
+    } else {
+        (uu, s, vv)
+    }
+}
+
+/// Reconstruct `u[:, :k] * diag(s[:k]) * v[:, :k]ᵀ` — the TopK-SVD
+/// compressor's decompressed value.
+pub fn truncated_reconstruct(u: &Matrix, s: &[f32], v: &Matrix, k: usize) -> Matrix {
+    let k = k.min(s.len());
+    let mut us = Matrix::zeros(u.rows, k);
+    for i in 0..u.rows {
+        for j in 0..k {
+            us.data[i * k + j] = u.at(i, j) * s[j];
+        }
+    }
+    let mut vk = Matrix::zeros(v.rows, k);
+    for i in 0..v.rows {
+        for j in 0..k {
+            vk.data[i * k + j] = v.at(i, j);
+        }
+    }
+    matmul_bt(&us, &vk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(u: &Matrix, s: &[f32], v: &Matrix) -> Matrix {
+        truncated_reconstruct(u, s, v, s.len())
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(6, 4), (4, 6), (5, 5), (1, 3)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (u, s, v) = jacobi_svd(&a);
+            let r = reconstruct(&u, &s, &v);
+            assert!(r.max_abs_diff(&a) < 1e-3, "{m}x{n}: {}", r.max_abs_diff(&a));
+            // descending
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::randn(12, 8, 1.0, &mut rng);
+        let (_, s, _) = jacobi_svd(&a);
+        let (sigma, _, _) = top_singular(&a, 200, &mut rng);
+        assert!((sigma - s[0]).abs() / s[0] < 1e-3, "{} vs {}", sigma, s[0]);
+    }
+
+    #[test]
+    fn low_rank_exact_when_rank_full() {
+        let mut rng = Rng::new(23);
+        // build an exactly rank-3 matrix
+        let l = Matrix::randn(10, 3, 1.0, &mut rng);
+        let r = Matrix::randn(3, 7, 1.0, &mut rng);
+        let a = matmul(&l, &r);
+        let (q, b) = low_rank_approx(&a, 3, 2, &mut rng);
+        let rec = matmul(&q, &b);
+        assert!(rec.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn low_rank_is_contraction() {
+        let mut rng = Rng::new(24);
+        let a = Matrix::randn(20, 20, 1.0, &mut rng);
+        let (q, b) = low_rank_approx(&a, 5, 2, &mut rng);
+        let rec = matmul(&q, &b);
+        let err = rec.sub(&a).norm2_sq();
+        assert!(err < a.norm2_sq()); // projection never expands
+    }
+}

@@ -1,0 +1,220 @@
+//! Linear minimization oracles over norm balls — the heart of the
+//! Muon/Scion/Gluon family (paper §2, §C).
+//!
+//! `LMO_{B(0,t)}(G) = argmin_{‖Z‖≤t} ⟨G, Z⟩` satisfies
+//! `⟨G, LMO(G)⟩ = −t‖G‖⋆` and relates to the sharp operator via
+//! `‖G‖⋆ · LMO_{B(0,1)}(G) = −G♯` (paper eq. (4)); both identities are
+//! enforced by tests in `rust/tests/lmo.rs`.
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::ns::{newton_schulz, NS_STEPS};
+use crate::linalg::svd::top_singular;
+use crate::util::rng::Rng;
+
+/// Which norm ball the LMO minimizes over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LmoKind {
+    /// Spectral ball → `−t·UVᵀ` (Muon). Approximated by Newton–Schulz.
+    Spectral,
+    /// ℓ∞ ball → `−t·sign(G)` (the paper's embedding/output choice; signSGD
+    /// direction).
+    SignLInf,
+    /// ℓ1 ball → `−t·‖G‖∞·e_{i*j*}` scaled: Top1 direction (paper §D.1).
+    L1Top1,
+    /// Euclidean ball → `−t·G/‖G‖_F` (normalized steepest descent).
+    Euclidean,
+    /// Nuclear ball → `−t·u₁v₁ᵀ` rank-1 direction (paper §D.1).
+    NuclearRank1,
+    /// 1→2 operator-norm ball → column-wise normalization
+    /// (column-wise Gluon; Glentis et al. 2025).
+    ColNorm,
+}
+
+/// How spectral LMOs are computed. `Native` = rust Newton–Schulz;
+/// the PJRT-artifact engine lives in `dist::server` (it needs a runtime
+/// handle) and produces identical numbers — cross-checked in tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpectralEngine {
+    Native,
+    /// exact polar factor via Jacobi SVD (tests/small layers)
+    ExactSvd,
+}
+
+/// Full LMO configuration for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct Lmo {
+    pub kind: LmoKind,
+    pub ns_steps: usize,
+    pub engine: SpectralEngine,
+}
+
+impl Lmo {
+    pub fn new(kind: LmoKind) -> Self {
+        Lmo { kind, ns_steps: NS_STEPS, engine: SpectralEngine::Native }
+    }
+
+    /// `LMO_{B(0,t)}(g)`: the feasible step of radius `t` most aligned with
+    /// `−g`. Returns zeros when `g = 0` (any feasible point is optimal).
+    pub fn step(&self, g: &Matrix, t: f32, rng: &mut Rng) -> Matrix {
+        match self.kind {
+            LmoKind::Spectral => {
+                let o = match self.engine {
+                    SpectralEngine::Native => newton_schulz(g, self.ns_steps),
+                    SpectralEngine::ExactSvd => {
+                        let (u, s, v) = crate::linalg::svd::jacobi_svd(g);
+                        let k = s.len();
+                        crate::linalg::svd::truncated_reconstruct(&u, &vec![1.0; k], &v, k)
+                    }
+                };
+                o.scaled(-t)
+            }
+            LmoKind::SignLInf => {
+                let mut out = g.clone();
+                for v in out.data.iter_mut() {
+                    *v = if *v > 0.0 {
+                        -t
+                    } else if *v < 0.0 {
+                        t
+                    } else {
+                        0.0
+                    };
+                }
+                out
+            }
+            LmoKind::L1Top1 => {
+                let mut best = 0usize;
+                let mut bestv = 0.0f32;
+                for (i, v) in g.data.iter().enumerate() {
+                    if v.abs() > bestv {
+                        bestv = v.abs();
+                        best = i;
+                    }
+                }
+                let mut out = Matrix::zeros(g.rows, g.cols);
+                if bestv > 0.0 {
+                    out.data[best] = -t * g.data[best].signum();
+                }
+                out
+            }
+            LmoKind::Euclidean => {
+                let n = g.norm2() as f32;
+                if n > 1e-20 {
+                    g.scaled(-t / n)
+                } else {
+                    Matrix::zeros(g.rows, g.cols)
+                }
+            }
+            LmoKind::NuclearRank1 => {
+                let (sigma, u, v) = top_singular(g, 100, rng);
+                let mut out = Matrix::zeros(g.rows, g.cols);
+                if sigma > 0.0 {
+                    for i in 0..g.rows {
+                        for j in 0..g.cols {
+                            out.data[i * g.cols + j] = -t * u[i] * v[j];
+                        }
+                    }
+                }
+                out
+            }
+            LmoKind::ColNorm => {
+                // minimize <G,Z> over max-col-l2 ball: each column z_j =
+                // -t * g_j / ||g_j||_2
+                let mut out = Matrix::zeros(g.rows, g.cols);
+                for j in 0..g.cols {
+                    let mut nrm = 0.0f64;
+                    for i in 0..g.rows {
+                        nrm += (g.at(i, j) as f64).powi(2);
+                    }
+                    let nrm = nrm.sqrt() as f32;
+                    if nrm > 1e-20 {
+                        for i in 0..g.rows {
+                            out.set(i, j, -t * g.at(i, j) / nrm);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Dual norm ‖g‖⋆ consistent with this LMO's ball: satisfies
+    /// `⟨g, step(g,t)⟩ = −t‖g‖⋆` exactly for the exact oracles and
+    /// approximately for the NS engine.
+    pub fn dual_norm(&self, g: &Matrix, rng: &mut Rng) -> f64 {
+        match self.kind {
+            // ball: spectral  ⇒ dual of spectral = nuclear
+            LmoKind::Spectral => crate::linalg::norms::nuclear_exact(g),
+            // ball: ℓ∞ ⇒ dual = ℓ1
+            LmoKind::SignLInf => crate::linalg::norms::l1(g),
+            // ball: ℓ1 ⇒ dual = ℓ∞
+            LmoKind::L1Top1 => crate::linalg::norms::linf(g),
+            LmoKind::Euclidean => g.norm2(),
+            // ball: nuclear ⇒ dual = spectral
+            LmoKind::NuclearRank1 => top_singular(g, 100, rng).0 as f64,
+            // ball: max-col-l2 ⇒ dual = sum of column l2 norms
+            LmoKind::ColNorm => (0..g.cols)
+                .map(|j| {
+                    (0..g.rows)
+                        .map(|i| (g.at(i, j) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .sum(),
+        }
+    }
+
+    /// Sharp operator `g♯ = ‖g‖⋆ · (−LMO_{B(0,1)}(g))` (paper §C).
+    pub fn sharp(&self, g: &Matrix, rng: &mut Rng) -> Matrix {
+        let d = self.dual_norm(g, rng) as f32;
+        self.step(g, 1.0, rng).scaled(-d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_lmo_alignment() {
+        let mut rng = Rng::new(51);
+        let g = Matrix::randn(5, 7, 1.0, &mut rng);
+        let lmo = Lmo::new(LmoKind::SignLInf);
+        let z = lmo.step(&g, 2.0, &mut rng);
+        // <g, z> = -t * ||g||_1
+        let lhs = g.dot(&z);
+        assert!((lhs + 2.0 * crate::linalg::norms::l1(&g)).abs() < 1e-3);
+        assert!(z.max_abs() <= 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn top1_lmo() {
+        let g = Matrix::from_vec(2, 2, vec![1.0, -5.0, 2.0, 0.5]);
+        let lmo = Lmo::new(LmoKind::L1Top1);
+        let mut rng = Rng::new(0);
+        let z = lmo.step(&g, 3.0, &mut rng);
+        assert_eq!(z.data, vec![0.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn euclidean_is_normalized_gd() {
+        let mut rng = Rng::new(52);
+        let g = Matrix::randn(3, 3, 2.0, &mut rng);
+        let lmo = Lmo::new(LmoKind::Euclidean);
+        let z = lmo.step(&g, 0.7, &mut rng);
+        assert!((z.norm2() - 0.7).abs() < 1e-5);
+        let cos = g.dot(&z) / (g.norm2() * z.norm2());
+        assert!((cos + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn colnorm_columns_unit() {
+        let mut rng = Rng::new(53);
+        let g = Matrix::randn(6, 4, 1.0, &mut rng);
+        let lmo = Lmo::new(LmoKind::ColNorm);
+        let z = lmo.step(&g, 1.5, &mut rng);
+        for j in 0..4 {
+            let n: f64 = (0..6).map(|i| (z.at(i, j) as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((n - 1.5).abs() < 1e-4);
+        }
+    }
+}

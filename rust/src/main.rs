@@ -1,0 +1,218 @@
+//! `efmuon` — CLI for the EF21-Muon distributed training framework.
+//!
+//! Subcommands:
+//!   train            run distributed EF21-Muon pretraining on the AOT model
+//!   eval             evaluate the loaded init params (artifact smoke test)
+//!   info             print manifest / layer table / geometry
+//!   table2           reproduce Table 2 (per-round communication cost)
+//!   rates            reproduce Table 1 empirically (rate fits)
+//!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
+//!   divergence       the §2 divergence demo (naive DCGD vs EF)
+//!
+//! Every flag of `TrainConfig` is a `--flag value` override; see
+//! `efmuon help`.
+
+use anyhow::{anyhow, Result};
+
+use efmuon::config::TrainConfig;
+use efmuon::exp;
+use efmuon::metrics::render_table;
+use efmuon::model::Manifest;
+use efmuon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "info" => cmd_info(args),
+        "table2" => cmd_table2(args),
+        "rates" => cmd_rates(args),
+        "fig1" | "fig2" => cmd_figures(args),
+        "divergence" => cmd_divergence(args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}; try `efmuon help`")),
+    }
+}
+
+const HELP: &str = "\
+efmuon — EF21-Muon: communication-efficient distributed LMO optimization
+
+USAGE: efmuon <command> [--flag value ...]
+
+COMMANDS:
+  train        distributed EF21-Muon pretraining on the AOT-compiled model
+               flags: --artifacts DIR --workers N --steps K --comp SPEC
+                      --server-comp SPEC --beta B --lr LR --warmup W
+                      --eval-every E --seed S --log out.jsonl --full-codec
+  eval         load artifacts, run one eval pass (smoke test)
+  info         print the manifest: layers, shapes, groups, LMO geometry
+  table2       Table 2 — per-round communication cost per compressor
+  rates        Table 1 — empirical convergence-rate validation
+  fig1/fig2    Figures 1-2 — compressor sweep (loss vs tokens/bytes)
+               flags: --steps K --target LOSS plus all train flags
+  divergence   naive biased compression diverges; EF fixes it (paper §2)
+
+COMPRESSOR SPECS:
+  id | nat | top:F | top:F+nat | rank:F | rank:F+nat | drop:P | damp:G
+  | svdtop:K | coltop:F      (F = fraction, e.g. top:0.15+nat)
+";
+
+fn warn_unknown(args: &Args) {
+    for f in args.unknown() {
+        eprintln!("warning: unused flag --{f}");
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    warn_unknown(args);
+    println!(
+        "training: {} workers, {} steps, w2s={}, s2w={}, lr={}, beta={}",
+        cfg.workers, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.lr, cfg.beta
+    );
+    let report = efmuon::train::train(&cfg)?;
+    println!(
+        "final eval loss {:.4} after {} steps ({:.1}s, {:.2} s/step)",
+        report.final_eval_loss,
+        report.steps,
+        report.wall_seconds,
+        report.wall_seconds / report.steps.max(1) as f64
+    );
+    println!(
+        "w2s bytes/worker: {} ({:.3}x model), s2w: {}",
+        report.total_w2s_bytes_per_worker,
+        report.total_w2s_bytes_per_worker as f64 / report.model_bytes as f64,
+        report.total_s2w_bytes
+    );
+    for p in &report.curve {
+        println!(
+            "  step {:>5}  tokens {:>10}  eval_loss {:.4}",
+            p.step, p.tokens_processed, p.eval_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    warn_unknown(args);
+    let svc = efmuon::dist::service::GradService::spawn_pjrt(
+        cfg.artifacts.clone(),
+        1,
+        200_000,
+        cfg.eval_batches,
+        cfg.seed,
+    )?;
+    let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
+    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
+    let loss = svc.handle().eval(x0)?;
+    println!(
+        "eval loss at init: {loss:.4} (ln V = {:.4})",
+        (manifest.vocab as f64).ln()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    warn_unknown(args);
+    let m = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
+    println!(
+        "preset {}  vocab {}  seq {}  d_model {}  layers {}  batch {}  params {}",
+        m.preset, m.vocab, m.seq_len, m.d_model, m.n_layer, m.batch, m.param_count
+    );
+    let rows: Vec<Vec<String>> = m
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                format!("{}x{}", l.rows, l.cols),
+                format!("{:?}", l.group),
+                format!("{:?}", l.group.geometry().lmo),
+            ]
+        })
+        .collect();
+    println!("{}", render_table(&["layer", "shape", "group", "lmo"], &rows));
+    println!("NS artifacts: {:?}", m.ns_hlo.iter().map(|(s, _)| s).collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    warn_unknown(args);
+    let shapes = match Manifest::load(&cfg.artifacts) {
+        Ok(m) => m.layer_shapes(),
+        Err(_) => {
+            eprintln!("(no artifacts found; using the micro preset layer table)");
+            efmuon::model::micro_preset_shapes()
+        }
+    };
+    let rows = exp::table2_rows(&shapes, &exp::paper_compressor_specs())?;
+    println!("{}", exp::table2_text(&rows));
+    Ok(())
+}
+
+fn cmd_rates(args: &Args) -> Result<()> {
+    let seed = args.u64("seed", 123);
+    warn_unknown(args);
+    let rows = exp::rate_validation(seed)?;
+    println!("{}", exp::rates_text(&rows));
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    let target = args.f64("target", 0.0) as f32;
+    warn_unknown(args);
+    let reports = exp::figure_sweep(&cfg, &exp::figure_specs())?;
+    println!("== Figure 1 (left): eval loss vs tokens ==");
+    for (spec, tokens, loss) in exp::fig1_left_rows(&reports) {
+        println!("{spec:>16} {tokens:>12} {loss:.4}");
+    }
+    let target = if target > 0.0 {
+        target
+    } else {
+        let best = reports
+            .iter()
+            .map(|r| r.final_eval_loss)
+            .fold(f32::INFINITY, f32::min);
+        best * 1.02
+    };
+    println!("\n== Figures 1 (right) & 2: cost to reach loss {target:.4} ==");
+    let rows = exp::tradeoff_rows(&reports, target);
+    for r in &rows {
+        println!(
+            "{:>16} reached={} tokens={} rel_bytes={:.4} final={:.4}",
+            r.spec, r.reached, r.tokens_to_target, r.relative_bytes_to_target, r.final_loss
+        );
+    }
+    println!("\n== communication savings vs uncompressed ==");
+    for (spec, x) in exp::savings_vs_id(&rows) {
+        println!("{spec:>16}  {x:.2}x");
+    }
+    Ok(())
+}
+
+fn cmd_divergence(args: &Args) -> Result<()> {
+    let steps = args.usize("steps", 60);
+    warn_unknown(args);
+    efmuon::exp::divergence::run_demo(steps, &mut std::io::stdout())?;
+    Ok(())
+}

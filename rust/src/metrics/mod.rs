@@ -1,0 +1,119 @@
+//! Experiment telemetry: JSONL event log + CSV emitters for the plots.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::JsonObj;
+
+/// Append-only JSONL writer (one JSON object per line).
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<JsonlWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter { out: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn write(&mut self, obj: &JsonObj) -> std::io::Result<()> {
+        writeln!(self.out, "{}", obj.to_line())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Minimal CSV writer (no quoting needs beyond our numeric tables).
+pub struct CsvWriter {
+    out: BufWriter<File>,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Render a text table (used by the bench harness to print paper tables).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_and_csv() {
+        let dir = std::env::temp_dir().join("efmuon_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = JsonlWriter::create(dir.join("log.jsonl")).unwrap();
+        w.write(&JsonObj::new().put("step", 1usize).put("loss", 2.5)).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(dir.join("log.jsonl")).unwrap();
+        assert_eq!(text.trim(), "{\"step\":1,\"loss\":2.5}");
+
+        let mut c = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        c.row(&["1".into(), "2".into()]).unwrap();
+        c.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("t.csv")).unwrap(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn table_render() {
+        let t = render_table(&["name", "x"], &[vec!["aa".into(), "1".into()]]);
+        assert!(t.contains("name"));
+        assert!(t.contains("aa"));
+        assert!(t.lines().count() == 3);
+    }
+}

@@ -1,0 +1,275 @@
+//! Model description shared with the Python side: the layer table (name,
+//! shape, parameter group) and manifest loading. `python/compile/aot.py`
+//! writes `artifacts/manifest.json` + `init_params.bin`; this module is the
+//! rust end of that contract.
+
+use std::path::{Path, PathBuf};
+
+use crate::linalg::matrix::{Layers, Matrix};
+use crate::lmo::LmoKind;
+use crate::opt::LayerGeometry;
+use crate::util::json::Json;
+
+/// Parameter groups (mirrors python/compile/model.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    /// 2-D matmul weights → spectral LMO (Muon).
+    Hidden,
+    /// embeddings / tied output head → ℓ∞ (sign) LMO, as in the paper.
+    Embed,
+    /// LayerNorm gains → sign LMO with a small radius multiplier.
+    Vector,
+}
+
+impl Group {
+    pub fn parse(s: &str) -> Result<Group, String> {
+        match s {
+            "hidden" => Ok(Group::Hidden),
+            "embed" => Ok(Group::Embed),
+            "vector" => Ok(Group::Vector),
+            other => Err(format!("unknown parameter group {other:?}")),
+        }
+    }
+
+    /// The paper's LMO assignment: spectral for hidden matrices, ℓ∞ for
+    /// embedding/output (following Pethick et al. 2025b), sign for gains.
+    pub fn geometry(self) -> LayerGeometry {
+        match self {
+            Group::Hidden => LayerGeometry { lmo: LmoKind::Spectral, radius_mult: 1.0 },
+            Group::Embed => LayerGeometry { lmo: LmoKind::SignLInf, radius_mult: 1.0 },
+            Group::Vector => LayerGeometry { lmo: LmoKind::SignLInf, radius_mult: 0.1 },
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// true when the JAX-side parameter is rank-1 (shape `[rows]`) — the
+    /// runtime must build rank-1 literals for these even though rust stores
+    /// them as single-column matrices.
+    pub rank1: bool,
+    pub group: Group,
+}
+
+impl LayerInfo {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Parsed `manifest.json` + paths to the artifacts it indexes.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub layers: Vec<LayerInfo>,
+    pub grad_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    /// shape "MxN" → NS artifact path
+    pub ns_hlo: Vec<((usize, usize), PathBuf)>,
+    pub init_params: PathBuf,
+    pub ns_steps: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest in {}: {e}", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let get_usize = |path: &str| -> Result<usize, String> {
+            j.path(path)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("manifest missing {path}"))
+        };
+        let layers = j
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .ok_or("manifest missing layers")?
+            .iter()
+            .map(|l| -> Result<LayerInfo, String> {
+                let name = l
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("layer missing name")?
+                    .to_string();
+                let shape = l.get("shape").and_then(|v| v.as_arr()).ok_or("layer missing shape")?;
+                let (rows, cols, rank1) = match shape.len() {
+                    1 => (shape[0].as_usize().unwrap_or(0), 1, true),
+                    2 => (
+                        shape[0].as_usize().unwrap_or(0),
+                        shape[1].as_usize().unwrap_or(0),
+                        false,
+                    ),
+                    _ => return Err(format!("layer {name}: unsupported rank {}", shape.len())),
+                };
+                let group =
+                    Group::parse(l.get("group").and_then(|v| v.as_str()).ok_or("layer missing group")?)?;
+                Ok(LayerInfo { name, rows, cols, rank1, group })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let arts = j.get("artifacts").ok_or("manifest missing artifacts")?;
+        let art_path = |key: &str| -> Result<PathBuf, String> {
+            Ok(dir.join(
+                arts.get(key)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("manifest missing artifacts.{key}"))?,
+            ))
+        };
+        let mut ns_hlo = Vec::new();
+        if let Some(ns) = arts.get("ns").and_then(|v| v.as_obj()) {
+            for (shape, path) in ns {
+                let (m, n) = shape
+                    .split_once('x')
+                    .ok_or_else(|| format!("bad ns shape key {shape}"))?;
+                let m: usize = m.parse().map_err(|_| "bad ns shape")?;
+                let n: usize = n.parse().map_err(|_| "bad ns shape")?;
+                ns_hlo.push(((m, n), dir.join(path.as_str().ok_or("bad ns path")?)));
+            }
+        }
+        Ok(Manifest {
+            preset: j
+                .get("preset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab: get_usize("config.vocab")?,
+            seq_len: get_usize("config.seq_len")?,
+            d_model: get_usize("config.d_model")?,
+            n_layer: get_usize("config.n_layer")?,
+            batch: get_usize("batch")?,
+            param_count: get_usize("param_count")?,
+            layers,
+            grad_hlo: art_path("grad")?,
+            eval_hlo: art_path("eval")?,
+            init_params: art_path("init_params")?,
+            ns_steps: get_usize("ns_steps").unwrap_or(5),
+            ns_hlo,
+            dir,
+        })
+    }
+
+    /// Load the initial parameters (f32 LE, layer-table order) into layer
+    /// matrices — bit-exact with what JAX used at lowering time.
+    pub fn load_init_params(&self) -> Result<Layers, String> {
+        let bytes = std::fs::read(&self.init_params)
+            .map_err(|e| format!("reading {}: {e}", self.init_params.display()))?;
+        let expect = self.param_count * 4;
+        if bytes.len() != expect {
+            return Err(format!(
+                "init_params.bin is {} bytes, expected {expect}",
+                bytes.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut off = 0usize;
+        for l in &self.layers {
+            let n = l.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                data.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            off += 4 * n;
+            out.push(Matrix::from_vec(l.rows, l.cols, data));
+        }
+        Ok(out)
+    }
+
+    /// Per-layer optimizer geometry (paper's LMO assignment).
+    pub fn geometry(&self) -> Vec<LayerGeometry> {
+        self.layers.iter().map(|l| l.group.geometry()).collect()
+    }
+
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        self.layers.iter().map(|l| (l.rows, l.cols)).collect()
+    }
+
+    /// Total model bytes (f32) — the unit Figure 1-right normalizes by.
+    pub fn model_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+}
+
+/// Layer shapes of the `micro` preset (mirrors python/compile/model.py) —
+/// used by Table 2 when no artifacts have been built yet.
+pub fn micro_preset_shapes() -> Vec<(usize, usize)> {
+    let (vocab, seq, d, ff, n_layer) = (256, 128, 128, 512, 2);
+    let mut shapes = vec![(vocab, d), (seq, d)];
+    for _ in 0..n_layer {
+        shapes.extend_from_slice(&[(d, 1), (d, 3 * d), (d, d), (d, 1), (d, ff), (ff, d)]);
+    }
+    shapes.push((d, 1));
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_shapes_match_layer_count() {
+        let s = micro_preset_shapes();
+        assert_eq!(s.len(), 2 + 2 * 6 + 1);
+    }
+
+    #[test]
+    fn group_parsing() {
+        assert_eq!(Group::parse("hidden").unwrap(), Group::Hidden);
+        assert_eq!(Group::parse("embed").unwrap(), Group::Embed);
+        assert_eq!(Group::parse("vector").unwrap(), Group::Vector);
+        assert!(Group::parse("other").is_err());
+    }
+
+    #[test]
+    fn geometry_assignment() {
+        assert_eq!(Group::Hidden.geometry().lmo, LmoKind::Spectral);
+        assert_eq!(Group::Embed.geometry().lmo, LmoKind::SignLInf);
+        assert!(Group::Vector.geometry().radius_mult < 1.0);
+    }
+
+    #[test]
+    fn manifest_roundtrip_from_json() {
+        let dir = std::env::temp_dir().join("efmuon_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "preset": "nano",
+            "config": {"vocab": 256, "seq_len": 64, "d_model": 64,
+                       "n_layer": 2, "n_head": 2, "d_ff": 256},
+            "batch": 4, "param_count": 3,
+            "layers": [
+                {"name": "wte", "shape": [3, 1], "group": "embed"}
+            ],
+            "artifacts": {"grad": "grad.hlo.txt", "eval": "eval.hlo.txt",
+                          "init_params": "init_params.bin",
+                          "ns": {"64x256": "ns_64x256.hlo.txt"}},
+            "ns_steps": 5
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let floats: [f32; 3] = [1.0, -2.0, 0.5];
+        let mut bytes = Vec::new();
+        for f in floats {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        std::fs::write(dir.join("init_params.bin"), &bytes).unwrap();
+
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.layers[0].group, Group::Embed);
+        assert_eq!(m.ns_hlo[0].0, (64, 256));
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params[0].data, vec![1.0, -2.0, 0.5]);
+        assert_eq!(m.model_bytes(), 12);
+    }
+}

@@ -1,0 +1,129 @@
+//! The cautionary baselines from the paper's motivation (§2, §A.2):
+//!
+//! * **Naive DCGD** — distributed GD with biased compression and *no* error
+//!   feedback: `x ← x − γ·(1/n)Σⱼ Cⱼ(∇fⱼ(x))`. Diverges exponentially on
+//!   the Beznosikov three-quadratics (Example 1) — the whole reason error
+//!   feedback exists.
+//! * **EF14** (Seide et al. 2014) — the classic error-feedback fix.
+
+use crate::compress::Compressor;
+use crate::funcs::Objective;
+use crate::linalg::matrix::{layers, Layers};
+use crate::util::rng::Rng;
+
+/// Distributed compressed GD with NO error feedback.
+pub struct NaiveDcgd {
+    pub lr: f64,
+    pub compressors: Vec<Vec<Box<dyn Compressor>>>, // [worker][layer]
+    pub rng: Rng,
+}
+
+impl NaiveDcgd {
+    pub fn new(obj: &dyn Objective, spec: &str, lr: f64, seed: u64) -> Result<Self, String> {
+        let shapes = obj.layer_shapes();
+        let compressors = (0..obj.num_workers())
+            .map(|_| crate::opt::layer_compressors(spec, &shapes))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(NaiveDcgd { lr, compressors, rng: Rng::new(seed) })
+    }
+
+    pub fn step(&mut self, obj: &dyn Objective, x: &mut Layers) {
+        let n = obj.num_workers();
+        let mut agg = layers::zeros_like(x);
+        for j in 0..n {
+            let g = obj.grad_j(j, x);
+            for (i, gi) in g.iter().enumerate() {
+                let msg = self.compressors[j][i].compress(gi, &mut self.rng);
+                msg.add_into(&mut agg[i]);
+            }
+        }
+        for (xi, ai) in x.iter_mut().zip(&agg) {
+            xi.axpy(-(self.lr as f32) / n as f32, ai);
+        }
+    }
+}
+
+/// EF14 (classic error feedback): each worker accumulates the compression
+/// error `eⱼ` and compresses `eⱼ + γ∇fⱼ`, transmitting the compressed
+/// correction.
+pub struct Ef14 {
+    pub lr: f64,
+    pub compressors: Vec<Vec<Box<dyn Compressor>>>,
+    pub errors: Vec<Layers>,
+    pub rng: Rng,
+}
+
+impl Ef14 {
+    pub fn new(obj: &dyn Objective, spec: &str, lr: f64, seed: u64) -> Result<Self, String> {
+        let shapes = obj.layer_shapes();
+        let n = obj.num_workers();
+        let zeros: Layers = shapes
+            .iter()
+            .map(|&(m, nn)| crate::linalg::matrix::Matrix::zeros(m, nn))
+            .collect();
+        Ok(Ef14 {
+            lr,
+            compressors: (0..n)
+                .map(|_| crate::opt::layer_compressors(spec, &shapes))
+                .collect::<Result<Vec<_>, _>>()?,
+            errors: vec![zeros; n],
+            rng: Rng::new(seed),
+        })
+    }
+
+    pub fn step(&mut self, obj: &dyn Objective, x: &mut Layers) {
+        let n = obj.num_workers();
+        let mut agg = layers::zeros_like(x);
+        for j in 0..n {
+            let g = obj.grad_j(j, x);
+            for (i, gi) in g.iter().enumerate() {
+                // p = e + lr * g
+                let mut p = self.errors[j][i].clone();
+                p.axpy(self.lr as f32, gi);
+                let msg = self.compressors[j][i].compress(&p, &mut self.rng);
+                let sent = msg.decode();
+                // e = p - sent
+                p.axpy(-1.0, &sent);
+                self.errors[j][i] = p;
+                agg[i].axpy(1.0, &sent);
+            }
+        }
+        for (xi, ai) in x.iter_mut().zip(&agg) {
+            xi.axpy(-1.0 / n as f32, ai);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::funcs::ThreeQuadratics;
+
+    /// The paper's §2 story in one test: Top1 DCGD explodes on the
+    /// three-quadratics, EF14 and EF21 do not.
+    #[test]
+    fn naive_dcgd_diverges_ef_fixes_it() {
+        let obj = ThreeQuadratics::new();
+        let mut rng = Rng::new(1);
+        let x0 = obj.init(&mut rng);
+
+        // naive DCGD with Top1 (= top fraction 1/3 of 3 elements)
+        let mut naive = NaiveDcgd::new(&obj, "top:0.3", 0.1, 5).unwrap();
+        let mut x = x0.clone();
+        for _ in 0..60 {
+            naive.step(&obj, &mut x);
+        }
+        let naive_final = obj.loss(&x);
+
+        let mut ef = Ef14::new(&obj, "top:0.3", 0.1, 5).unwrap();
+        let mut y = x0.clone();
+        for _ in 0..60 {
+            ef.step(&obj, &mut y);
+        }
+        let ef_final = obj.loss(&y);
+
+        let f0 = obj.loss(&x0);
+        assert!(naive_final > 1e3 * f0, "naive should explode: {naive_final} vs {f0}");
+        assert!(ef_final < f0, "EF14 should make progress: {ef_final} vs {f0}");
+    }
+}

@@ -1,0 +1,430 @@
+//! EF21-Muon (paper Algorithms 1–3): the layer-wise server and worker state
+//! machines, plus a sequential single-process driver used by tests, the
+//! rate benches and the divergence demo. The threaded leader/worker
+//! deployment in [`crate::dist`] runs *these same state machines* over
+//! channels — the protocol logic lives here, transport lives there.
+//!
+//! Server state:  X (model), W (EF21-P shift), G = (1/n)ΣGⱼ (gradient
+//!                estimator), per-layer LMOs.
+//! Worker state:  W (mirror of the shift), Mⱼ (momentum), Gⱼ (local
+//!                gradient estimator), per-layer compressors.
+//!
+//! One iteration (Algorithm 3):
+//!   server:  Xᵢ ← LMO_{B(Xᵢ,tᵢ)}(Gᵢ);  Sᵢ = C(Xᵢ−Wᵢ);  Wᵢ += Sᵢ;  bcast S
+//!   worker:  Wᵢ += Sᵢ;  Mᵢⱼ ← (1−β)Mᵢⱼ + β∇ᵢf_j(W;ξ);
+//!            Rᵢⱼ = Cⱼ(Mᵢⱼ−Gᵢⱼ);  Gᵢⱼ += Rᵢⱼ;  send R
+//!   server:  Gᵢ += (1/n)ΣⱼRᵢⱼ
+//!
+//! With identity compressors and n=1 this reduces exactly to Gluon
+//! (→ Muon/Scion under spectral/ℓ∞ norms) — asserted in tests.
+
+use crate::compress::{Compressor, Message};
+use crate::funcs::Objective;
+use crate::linalg::matrix::{layers, Layers, Matrix};
+use crate::lmo::Lmo;
+use crate::opt::{layer_compressors, LayerGeometry, Schedule};
+use crate::util::rng::Rng;
+
+/// Server half of EF21-Muon.
+pub struct ServerState {
+    pub x: Layers,
+    pub w: Layers,
+    pub g: Layers,
+    pub lmos: Vec<Lmo>,
+    pub geometry: Vec<LayerGeometry>,
+    pub compressors: Vec<Box<dyn Compressor>>,
+    pub n_workers: usize,
+    pub rng: Rng,
+    /// scratch: decoded aggregate per layer (avoids per-step allocation)
+    agg: Layers,
+}
+
+impl ServerState {
+    pub fn new(
+        x0: Layers,
+        geometry: Vec<LayerGeometry>,
+        server_spec: &str,
+        n_workers: usize,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
+        let compressors = layer_compressors(server_spec, &shapes)?;
+        let lmos = geometry.iter().map(|g| g.lmo_for()).collect();
+        let agg = layers::zeros_like(&x0);
+        Ok(ServerState {
+            w: x0.clone(),
+            g: layers::zeros_like(&x0),
+            x: x0,
+            lmos,
+            geometry,
+            compressors,
+            n_workers,
+            rng: Rng::with_stream(seed, 0x5e7),
+            agg,
+        })
+    }
+
+    /// Override the initial gradient estimator G⁰ (the theory initializes
+    /// it to the average of worker G⁰ⱼ; callers pass that average here).
+    pub fn set_g0(&mut self, g0: Layers) {
+        self.g = g0;
+    }
+
+    /// Algorithm line 4: the LMO-type step `Xᵢ ← LMO_{B(Xᵢ, tᵢ)}(Gᵢ)` with
+    /// per-layer radii `t · radius_mult`.
+    pub fn lmo_step(&mut self, t: f64) {
+        for i in 0..self.x.len() {
+            let ti = (t * self.geometry[i].radius_mult as f64) as f32;
+            let step = self.lmos[i].step(&self.g[i], ti, &mut self.rng);
+            self.x[i].axpy(1.0, &step);
+        }
+    }
+
+    /// Algorithm lines 5–7: compress the shifted model, advance W, return
+    /// the broadcast messages (one per layer).
+    pub fn broadcast(&mut self) -> Vec<Message> {
+        let mut msgs = Vec::with_capacity(self.x.len());
+        for i in 0..self.x.len() {
+            let diff = self.x[i].sub(&self.w[i]);
+            let msg = self.compressors[i].compress(&diff, &mut self.rng);
+            msg.add_into(&mut self.w[i]);
+            msgs.push(msg);
+        }
+        msgs
+    }
+
+    /// Algorithm line 19: absorb the workers' compressed gradient residuals
+    /// `Gᵢ += (1/n) Σⱼ Rᵢⱼ`.
+    pub fn absorb(&mut self, worker_msgs: &[Vec<Message>]) {
+        assert_eq!(worker_msgs.len(), self.n_workers);
+        let inv = 1.0 / self.n_workers as f32;
+        for i in 0..self.g.len() {
+            let agg = &mut self.agg[i];
+            agg.fill(0.0);
+            for msgs in worker_msgs {
+                msgs[i].add_into(agg);
+            }
+            self.g[i].axpy(inv, agg);
+        }
+    }
+
+    /// ‖G‖ dual-norm diagnostics (per layer).
+    pub fn grad_estimator_norms(&mut self) -> Vec<f64> {
+        let mut rng = self.rng.split(0xd1a6);
+        (0..self.g.len())
+            .map(|i| self.lmos[i].dual_norm(&self.g[i], &mut rng))
+            .collect()
+    }
+}
+
+/// Worker half of EF21-Muon.
+pub struct WorkerState {
+    pub id: usize,
+    pub w: Layers,
+    pub m: Layers,
+    pub g: Layers,
+    pub beta: f32,
+    pub compressors: Vec<Box<dyn Compressor>>,
+    pub rng: Rng,
+}
+
+impl WorkerState {
+    pub fn new(
+        id: usize,
+        x0: &Layers,
+        worker_spec: &str,
+        beta: f32,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
+        Ok(WorkerState {
+            id,
+            w: x0.clone(),
+            m: layers::zeros_like(x0),
+            g: layers::zeros_like(x0),
+            beta,
+            compressors: layer_compressors(worker_spec, &shapes)?,
+            rng: Rng::with_stream(seed, 0x1000 + id as u64),
+        })
+    }
+
+    /// Initialization per the theorems: M⁰ⱼ = G⁰ⱼ = ∇fⱼ(X⁰;ξ⁰). Returns the
+    /// initial Gⱼ for the server to average into G⁰.
+    pub fn init_estimators(&mut self, grad0: Layers) -> Layers {
+        self.m = grad0.clone();
+        self.g = grad0.clone();
+        grad0
+    }
+
+    /// Algorithm line 11: apply the server broadcast to the local shift.
+    pub fn apply_broadcast(&mut self, msgs: &[Message]) {
+        for (wi, msg) in self.w.iter_mut().zip(msgs) {
+            msg.add_into(wi);
+        }
+    }
+
+    /// Algorithm lines 12–14: momentum update with the fresh stochastic
+    /// gradient (computed *at the updated* W), compress the shifted
+    /// momentum, advance Gⱼ, return the uplink messages.
+    pub fn local_step(&mut self, grad_at_w: &Layers) -> Vec<Message> {
+        let beta = self.beta;
+        let mut msgs = Vec::with_capacity(self.w.len());
+        for i in 0..self.w.len() {
+            self.m[i].axpby(1.0 - beta, beta, &grad_at_w[i]);
+            let resid = self.m[i].sub(&self.g[i]);
+            let msg = self.compressors[i].compress(&resid, &mut self.rng);
+            msg.add_into(&mut self.g[i]);
+            msgs.push(msg);
+        }
+        msgs
+    }
+}
+
+/// Per-step telemetry from the sequential driver.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm2: f64,
+    /// w2s bytes sent by ONE worker this step (paper reports per-worker).
+    pub w2s_bytes: usize,
+    /// s2w bytes broadcast this step.
+    pub s2w_bytes: usize,
+    pub radius: f64,
+}
+
+/// Sequential single-process EF21-Muon over an [`Objective`] — Algorithm 3
+/// verbatim (Algorithm 2 = `beta == 1.0` + `stochastic == false`).
+pub struct Ef21MuonSeq {
+    pub server: ServerState,
+    pub workers: Vec<WorkerState>,
+    pub schedule: Schedule,
+    pub stochastic: bool,
+    pub step: usize,
+    pub total_w2s_bytes: u64,
+    pub total_s2w_bytes: u64,
+}
+
+impl Ef21MuonSeq {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        obj: &dyn Objective,
+        geometry: Vec<LayerGeometry>,
+        worker_spec: &str,
+        server_spec: &str,
+        beta: f32,
+        schedule: Schedule,
+        stochastic: bool,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut rng = Rng::new(seed);
+        let x0 = obj.init(&mut rng);
+        let n = obj.num_workers();
+        let mut server = ServerState::new(x0.clone(), geometry, server_spec, n, seed)?;
+        let mut workers = Vec::with_capacity(n);
+        let mut g0_avg = layers::zeros_like(&x0);
+        for j in 0..n {
+            let mut wkr = WorkerState::new(j, &x0, worker_spec, beta, seed)?;
+            let grad0 = if stochastic {
+                obj.stoch_grad_j(j, &x0, &mut wkr.rng)
+            } else {
+                obj.grad_j(j, &x0)
+            };
+            let gj = wkr.init_estimators(grad0);
+            layers::axpy(&mut g0_avg, 1.0 / n as f32, &gj);
+            workers.push(wkr);
+        }
+        server.set_g0(g0_avg);
+        Ok(Ef21MuonSeq {
+            server,
+            workers,
+            schedule,
+            stochastic,
+            step: 0,
+            total_w2s_bytes: 0,
+            total_s2w_bytes: 0,
+        })
+    }
+
+    /// One full round of Algorithm 3. Returns telemetry.
+    pub fn step(&mut self, obj: &dyn Objective) -> StepStats {
+        let t = self.schedule.at(self.step);
+        self.server.lmo_step(t);
+        let bcast = self.server.broadcast();
+        let s2w: usize = bcast.iter().map(|m| m.wire_bytes()).sum();
+
+        let mut all_msgs = Vec::with_capacity(self.workers.len());
+        let mut w2s_per_worker = 0usize;
+        for wkr in self.workers.iter_mut() {
+            wkr.apply_broadcast(&bcast);
+            let grad = if self.stochastic {
+                obj.stoch_grad_j(wkr.id, &wkr.w, &mut wkr.rng)
+            } else {
+                obj.grad_j(wkr.id, &wkr.w)
+            };
+            let msgs = wkr.local_step(&grad);
+            w2s_per_worker = msgs.iter().map(|m| m.wire_bytes()).sum();
+            all_msgs.push(msgs);
+        }
+        self.server.absorb(&all_msgs);
+
+        self.total_w2s_bytes += w2s_per_worker as u64;
+        self.total_s2w_bytes += s2w as u64;
+        let loss = obj.loss(&self.server.x);
+        let grad_norm2 = layers::norm2_sq(&obj.grad(&self.server.x));
+        let stats = StepStats {
+            step: self.step,
+            loss,
+            grad_norm2,
+            w2s_bytes: w2s_per_worker,
+            s2w_bytes: s2w,
+            radius: t,
+        };
+        self.step += 1;
+        stats
+    }
+
+    /// Run `k` steps, returning the telemetry trace.
+    pub fn run(&mut self, obj: &dyn Objective, k: usize) -> Vec<StepStats> {
+        (0..k).map(|_| self.step(obj)).collect()
+    }
+
+    pub fn params(&self) -> &Layers {
+        &self.server.x
+    }
+}
+
+/// Invariant check used by property tests: after a full round, every
+/// worker's shift W must equal the server's W bit-for-bit (they apply the
+/// same compressed messages), and likewise the server's G must equal the
+/// average of worker Gⱼ.
+pub fn state_consistency(seq: &Ef21MuonSeq) -> Result<(), String> {
+    for wkr in &seq.workers {
+        for (i, (sw, ww)) in seq.server.w.iter().zip(&wkr.w).enumerate() {
+            if sw.max_abs_diff(ww) > 0.0 {
+                return Err(format!("worker {} layer {i}: W mismatch", wkr.id));
+            }
+        }
+    }
+    let n = seq.workers.len() as f32;
+    for i in 0..seq.server.g.len() {
+        let mut avg = Matrix::zeros(seq.server.g[i].rows, seq.server.g[i].cols);
+        for wkr in &seq.workers {
+            avg.axpy(1.0 / n, &wkr.g[i]);
+        }
+        if avg.max_abs_diff(&seq.server.g[i]) > 1e-5 {
+            return Err(format!(
+                "layer {i}: server G != avg worker G (diff {})",
+                avg.max_abs_diff(&seq.server.g[i])
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::funcs::Quadratics;
+    use crate::lmo::LmoKind;
+
+    fn geom(n_layers: usize, kind: LmoKind) -> Vec<LayerGeometry> {
+        vec![LayerGeometry { lmo: kind, radius_mult: 1.0 }; n_layers]
+    }
+
+    #[test]
+    fn uncompressed_deterministic_converges() {
+        let mut rng = Rng::new(301);
+        let q = Quadratics::new(4, 12, 1.0, 0.0, &mut rng);
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(1, LmoKind::Euclidean),
+            "id",
+            "id",
+            1.0,
+            Schedule::constant(0.05),
+            false,
+            7,
+        )
+        .unwrap();
+        let trace = opt.run(&q, 400);
+        let f0 = trace[0].grad_norm2;
+        let fk = trace.last().unwrap().grad_norm2;
+        assert!(fk < 1e-3 * f0, "grad_norm2 {f0} -> {fk}");
+    }
+
+    #[test]
+    fn compressed_matches_uncompressed_eventually() {
+        let mut rng = Rng::new(302);
+        let q = Quadratics::new(3, 10, 0.5, 0.0, &mut rng);
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(1, LmoKind::Euclidean),
+            "top:0.3",
+            "id",
+            1.0,
+            Schedule::constant(0.03),
+            false,
+            7,
+        )
+        .unwrap();
+        let trace = opt.run(&q, 1200);
+        assert!(trace.last().unwrap().grad_norm2 < 2e-3, "{}", trace.last().unwrap().grad_norm2);
+        // compressed uplink must actually be smaller than dense
+        let dense = 10 * 4 + crate::compress::HEADER_BYTES;
+        assert!(trace[0].w2s_bytes < dense);
+    }
+
+    #[test]
+    fn state_stays_consistent() {
+        let mut rng = Rng::new(303);
+        let q = Quadratics::new(3, 8, 1.0, 0.1, &mut rng);
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(1, LmoKind::SignLInf),
+            "top:0.25",
+            "top:0.5",
+            0.9,
+            Schedule::constant(0.01),
+            true,
+            11,
+        )
+        .unwrap();
+        for _ in 0..25 {
+            opt.step(&q);
+            state_consistency(&opt).unwrap();
+        }
+    }
+
+    #[test]
+    fn reduces_to_gluon_when_uncompressed_single_node() {
+        // EF21-Muon with ID compressors, n=1, beta=1, deterministic ==
+        // Gluon: X^{k+1} = LMO_{B(X^k,t)}(∇f(W^k)) with W == X.
+        let mut rng = Rng::new(304);
+        let q = Quadratics::new(1, 6, 0.0, 0.0, &mut rng);
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(1, LmoKind::SignLInf),
+            "id",
+            "id",
+            1.0,
+            Schedule::constant(0.02),
+            false,
+            3,
+        )
+        .unwrap();
+        // manual Gluon replay
+        let mut x = opt.server.x.clone();
+        let mut g_prev = q.grad_j(0, &x); // G^0 = grad at X^0
+        for _ in 0..5 {
+            opt.step(&q);
+            // Gluon step uses G^k (gradient at previous W = X before step)
+            for v in g_prev[0].data.iter_mut() {
+                *v = -0.02 * v.signum();
+            }
+            x[0].axpy(1.0, &g_prev[0]);
+            assert!(x[0].max_abs_diff(&opt.server.x[0]) < 1e-6);
+            g_prev = q.grad_j(0, &x);
+        }
+    }
+}

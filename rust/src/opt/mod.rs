@@ -1,0 +1,130 @@
+//! Optimizers: the paper's EF21-Muon (Algorithms 1–3) plus the baselines it
+//! is measured against (uncompressed Gluon/Muon/Scion, AdamW, naive DCGD,
+//! EF14, signSGD).
+
+pub mod ef21;
+pub mod baselines;
+pub mod dcgd;
+
+use crate::compress::{parse_spec, Compressor};
+use crate::lmo::{Lmo, LmoKind};
+
+/// Per-layer optimizer geometry: which LMO ball, and a relative radius
+/// multiplier applied on top of the global schedule (the paper tunes
+/// per-group learning rates; Table 4).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerGeometry {
+    pub lmo: LmoKind,
+    pub radius_mult: f32,
+}
+
+impl LayerGeometry {
+    pub fn lmo_for(&self) -> Lmo {
+        Lmo::new(self.lmo)
+    }
+}
+
+/// Build one compressor instance per layer from a spec string, degrading
+/// gracefully on degenerate shapes: RankK on an effectively-1D layer
+/// (LayerNorm gain, single row/column) is no cheaper than dense, so those
+/// layers fall back to TopK at the same fraction — mirroring how the
+/// paper's DDP implementation only low-ranks genuine matrices.
+pub fn layer_compressors(
+    spec: &str,
+    shapes: &[(usize, usize)],
+) -> Result<Vec<Box<dyn Compressor>>, String> {
+    shapes
+        .iter()
+        .map(|&(m, n)| {
+            let is_rank = spec.starts_with("rank:");
+            if is_rank && m.min(n) <= 2 {
+                let frac = spec
+                    .trim_start_matches("rank:")
+                    .trim_end_matches("+nat")
+                    .to_string();
+                let nat = spec.ends_with("+nat");
+                parse_spec(&format!("top:{frac}{}", if nat { "+nat" } else { "" }))
+            } else {
+                parse_spec(spec)
+            }
+        })
+        .collect()
+}
+
+/// Learning-rate / radius schedule (nanoGPT-style warmup + cosine decay,
+/// the same scheduler the paper adopts from Karpathy 2023).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub base: f64,
+    pub warmup: usize,
+    pub total: usize,
+    pub min_frac: f64,
+    pub kind: ScheduleKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Constant,
+    WarmupCosine,
+    /// `t_k = base / sqrt(K+1)` — the theory schedule of Theorems 4/17.
+    InvSqrtTotal,
+    /// `t_k = base / (K+1)^{3/4}` — the stochastic theory schedule (Thm 6).
+    Theory34,
+}
+
+impl Schedule {
+    pub fn constant(base: f64) -> Self {
+        Schedule { base, warmup: 0, total: 0, min_frac: 1.0, kind: ScheduleKind::Constant }
+    }
+
+    pub fn warmup_cosine(base: f64, warmup: usize, total: usize, min_frac: f64) -> Self {
+        Schedule { base, warmup, total, min_frac, kind: ScheduleKind::WarmupCosine }
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        match self.kind {
+            ScheduleKind::Constant => self.base,
+            ScheduleKind::InvSqrtTotal => self.base / ((self.total + 1) as f64).sqrt(),
+            ScheduleKind::Theory34 => self.base / ((self.total + 1) as f64).powf(0.75),
+            ScheduleKind::WarmupCosine => {
+                if self.warmup > 0 && step < self.warmup {
+                    return self.base * (step + 1) as f64 / self.warmup as f64;
+                }
+                if self.total <= self.warmup {
+                    return self.base;
+                }
+                let t = (step - self.warmup) as f64 / (self.total - self.warmup) as f64;
+                let t = t.clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                self.base * (self.min_frac + (1.0 - self.min_frac) * cos)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shapes() {
+        let s = Schedule::warmup_cosine(1.0, 10, 110, 0.1);
+        assert!(s.at(0) < s.at(9)); // warming up
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(109) < 0.12); // decayed to ~min_frac
+        assert!(s.at(50) < s.at(20)); // monotone decay after warmup
+        let c = Schedule::constant(0.5);
+        assert_eq!(c.at(0), 0.5);
+        assert_eq!(c.at(1000), 0.5);
+    }
+
+    #[test]
+    fn compressor_fallback_for_vectors() {
+        let shapes = vec![(64, 64), (64, 1)];
+        let cs = layer_compressors("rank:0.1+nat", &shapes).unwrap();
+        assert_eq!(cs[0].name(), "rank:0.1+nat");
+        assert_eq!(cs[1].name(), "top:0.1+nat");
+        let cs = layer_compressors("top:0.2", &shapes).unwrap();
+        assert_eq!(cs[1].name(), "top:0.2");
+    }
+}

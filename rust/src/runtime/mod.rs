@@ -1,0 +1,211 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos.
+//!
+//! PJRT handles are not `Send`; the distributed coordinator therefore runs
+//! all executions on a dedicated service thread (see [`crate::dist`]) — on
+//! this 1-core testbed that also happens to be the fastest layout.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::matrix::{Layers, Matrix};
+use crate::model::Manifest;
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled HLO module ready to execute.
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedFn> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedFn {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LoadedFn {
+    /// Execute with the given inputs; the artifact was lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple that we
+    /// unpack into one literal per result.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// -- literal ↔ Matrix bridging ----------------------------------------------
+
+/// Matrix → f32 literal. `rank1` emits shape `[rows]` (JAX vector params),
+/// otherwise `[rows, cols]`.
+pub fn matrix_to_literal(m: &Matrix, rank1: bool) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(m.data.as_ptr() as *const u8, m.data.len() * 4)
+    };
+    let dims: Vec<usize> = if rank1 {
+        vec![m.rows]
+    } else {
+        vec![m.rows, m.cols]
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims,
+        bytes,
+    )?)
+}
+
+/// f32 literal → Matrix with the given (rows, cols).
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v: Vec<f32> = lit.to_vec()?;
+    if v.len() != rows * cols {
+        bail!("literal has {} elements, expected {}x{}", v.len(), rows, cols);
+    }
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// i32 token batch → literal of shape [batch, seq].
+pub fn tokens_to_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    if tokens.len() != batch * seq {
+        bail!("token buffer {} != {}x{}", tokens.len(), batch, seq);
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[batch, seq],
+        bytes,
+    )?)
+}
+
+// -- the model service ------------------------------------------------------
+
+/// All compiled artifacts for one model: grad, eval, and the per-shape
+/// Newton–Schulz orthogonalizers (the L1 Pallas kernels live inside these).
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+    grad: LoadedFn,
+    eval: LoadedFn,
+    ns: Vec<((usize, usize), LoadedFn)>,
+}
+
+impl ModelRuntime {
+    /// Load every artifact referenced by `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        let runtime = Runtime::cpu()?;
+        let grad = runtime.load_hlo(&manifest.grad_hlo)?;
+        let eval = runtime.load_hlo(&manifest.eval_hlo)?;
+        let mut ns = Vec::new();
+        for (shape, path) in &manifest.ns_hlo {
+            ns.push((*shape, runtime.load_hlo(path)?));
+        }
+        Ok(ModelRuntime { manifest, runtime, grad, eval, ns })
+    }
+
+    fn pack_inputs(
+        &self,
+        params: &Layers,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<Vec<xla::Literal>> {
+        let b = self.manifest.batch;
+        let t = self.manifest.seq_len;
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for (p, info) in params.iter().zip(&self.manifest.layers) {
+            inputs.push(matrix_to_literal(p, info.rank1)?);
+        }
+        inputs.push(tokens_to_literal(tokens, b, t)?);
+        inputs.push(tokens_to_literal(targets, b, t)?);
+        Ok(inputs)
+    }
+
+    /// Loss + per-layer gradients at `params` on one microbatch — the
+    /// worker-side hot call (L2 graph with the L1 Pallas matmuls inside).
+    pub fn grad(
+        &self,
+        params: &Layers,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Layers)> {
+        let outs = self.grad.call(&self.pack_inputs(params, tokens, targets)?)?;
+        if outs.len() != self.manifest.layers.len() + 1 {
+            bail!(
+                "grad artifact returned {} outputs, expected {}",
+                outs.len(),
+                self.manifest.layers.len() + 1
+            );
+        }
+        let loss: f32 = outs[0].to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(self.manifest.layers.len());
+        for (lit, info) in outs[1..].iter().zip(&self.manifest.layers) {
+            grads.push(literal_to_matrix(lit, info.rows, info.cols)?);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Evaluation loss on one batch.
+    pub fn eval_loss(&self, params: &Layers, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let outs = self.eval.call(&self.pack_inputs(params, tokens, targets)?)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Newton–Schulz orthogonalization via the Pallas-kernel artifact for
+    /// this exact shape; `None` if no artifact was compiled for it.
+    pub fn ns_orthogonalize(&self, g: &Matrix) -> Option<Result<Matrix>> {
+        let fnn = self
+            .ns
+            .iter()
+            .find(|((m, n), _)| *m == g.rows && *n == g.cols)
+            .map(|(_, f)| f)?;
+        Some((|| {
+            let lit = matrix_to_literal(g, false)?;
+            let outs = fnn.call(&[lit])?;
+            literal_to_matrix(&outs[0], g.rows, g.cols)
+        })())
+    }
+
+    pub fn has_ns_for(&self, rows: usize, cols: usize) -> bool {
+        self.ns.iter().any(|((m, n), _)| *m == rows && *n == cols)
+    }
+}

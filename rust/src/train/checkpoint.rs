@@ -1,0 +1,142 @@
+//! Checkpointing: persist/restore model parameters + run metadata so long
+//! pretraining runs survive restarts (and so trained models can be handed
+//! to downstream tools). Format: `<stem>.bin` (f32 LE, layer order) +
+//! `<stem>.json` (metadata incl. shape table for validation).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::matrix::{Layers, Matrix};
+use crate::util::json::{Json, JsonObj};
+
+/// Metadata stored alongside the weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub step: usize,
+    pub eval_loss: f64,
+    pub comp: String,
+    pub seed: u64,
+    pub shapes: Vec<(usize, usize)>,
+}
+
+/// Write `<stem>.bin` + `<stem>.json`.
+pub fn save(stem: impl AsRef<Path>, params: &Layers, meta: &CheckpointMeta) -> Result<()> {
+    let stem = stem.as_ref();
+    if let Some(parent) = stem.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut bytes = Vec::with_capacity(params.iter().map(|p| p.numel() * 4).sum());
+    for p in params {
+        for v in &p.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(stem.with_extension("bin"), &bytes)?;
+    let shapes: Vec<Json> = params
+        .iter()
+        .map(|p| Json::Arr(vec![Json::Num(p.rows as f64), Json::Num(p.cols as f64)]))
+        .collect();
+    let j = JsonObj::new()
+        .put("step", meta.step)
+        .put("eval_loss", meta.eval_loss)
+        .put("comp", meta.comp.as_str())
+        .put("seed", meta.seed)
+        .put("shapes", Json::Arr(shapes))
+        .build();
+    std::fs::write(stem.with_extension("json"), j.to_string())?;
+    Ok(())
+}
+
+/// Read a checkpoint; validates the byte count against the shape table.
+pub fn load(stem: impl AsRef<Path>) -> Result<(Layers, CheckpointMeta)> {
+    let stem = stem.as_ref();
+    let meta_text = std::fs::read_to_string(stem.with_extension("json"))
+        .with_context(|| format!("reading {}", stem.with_extension("json").display()))?;
+    let j = Json::parse(&meta_text).map_err(anyhow::Error::msg)?;
+    let shapes: Vec<(usize, usize)> = j
+        .get("shapes")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing shapes"))?
+        .iter()
+        .map(|s| {
+            let a = s.as_arr().unwrap();
+            (a[0].as_usize().unwrap_or(0), a[1].as_usize().unwrap_or(0))
+        })
+        .collect();
+    let meta = CheckpointMeta {
+        step: j.get("step").and_then(|v| v.as_usize()).unwrap_or(0),
+        eval_loss: j.get("eval_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+        comp: j.get("comp").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        shapes: shapes.clone(),
+    };
+    let bytes = std::fs::read(stem.with_extension("bin"))?;
+    let expect: usize = shapes.iter().map(|(m, n)| m * n * 4).sum();
+    if bytes.len() != expect {
+        bail!("checkpoint is {} bytes, shapes imply {expect}", bytes.len());
+    }
+    let mut params = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for (m, n) in &shapes {
+        let count = m * n;
+        let mut data = Vec::with_capacity(count);
+        for i in 0..count {
+            data.push(f32::from_le_bytes(
+                bytes[off + 4 * i..off + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        off += 4 * count;
+        params.push(Matrix::from_vec(*m, *n, data));
+    }
+    Ok((params, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let params = vec![Matrix::randn(4, 6, 1.0, &mut rng), Matrix::randn(3, 1, 1.0, &mut rng)];
+        let meta = CheckpointMeta {
+            step: 42,
+            eval_loss: 3.25,
+            comp: "rank:0.15+nat".into(),
+            seed: 7,
+            shapes: vec![(4, 6), (3, 1)],
+        };
+        let dir = std::env::temp_dir().join("efmuon_ckpt_test");
+        let stem = dir.join("ck");
+        save(&stem, &params, &meta).unwrap();
+        let (back, meta2) = load(&stem).unwrap();
+        assert_eq!(meta2, meta);
+        assert_eq!(back.len(), 2);
+        for (a, b) in back.iter().zip(&params) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let mut rng = Rng::new(2);
+        let params = vec![Matrix::randn(5, 5, 1.0, &mut rng)];
+        let meta = CheckpointMeta {
+            step: 0,
+            eval_loss: 0.0,
+            comp: "id".into(),
+            seed: 0,
+            shapes: vec![(5, 5)],
+        };
+        let dir = std::env::temp_dir().join("efmuon_ckpt_trunc");
+        let stem = dir.join("ck");
+        save(&stem, &params, &meta).unwrap();
+        // truncate the bin
+        let bin = stem.with_extension("bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(load(&stem).is_err());
+    }
+}

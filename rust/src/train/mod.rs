@@ -1,0 +1,166 @@
+//! End-to-end training orchestration: wire a [`TrainConfig`] into the
+//! distributed coordinator + PJRT grad service, run the schedule, evaluate,
+//! and log. This is the module behind `efmuon train` and the experiment
+//! drivers in [`crate::exp`].
+
+pub mod checkpoint;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::dist::coordinator::{Coordinator, CoordinatorCfg};
+use crate::dist::service::GradService;
+use crate::dist::TransportMode;
+use crate::metrics::JsonlWriter;
+use crate::model::{Group, Manifest};
+use crate::opt::{LayerGeometry, Schedule};
+use crate::util::json::JsonObj;
+
+/// One evaluation point on the loss curve.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub tokens_processed: u64,
+    pub w2s_bytes_per_worker: u64,
+    pub eval_loss: f32,
+}
+
+/// Result of a full training run (the raw material of Figures 1–2).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub config_comp: String,
+    pub steps: usize,
+    pub final_eval_loss: f32,
+    pub curve: Vec<EvalPoint>,
+    pub train_losses: Vec<f32>,
+    pub total_w2s_bytes_per_worker: u64,
+    pub total_s2w_bytes: u64,
+    pub model_bytes: usize,
+    pub tokens_per_step: usize,
+    pub wall_seconds: f64,
+}
+
+impl TrainReport {
+    /// Steps needed to first reach `target` eval loss (None = never).
+    pub fn steps_to_loss(&self, target: f32) -> Option<usize> {
+        self.curve.iter().find(|p| p.eval_loss <= target).map(|p| p.step)
+    }
+
+    /// Tokens needed to first reach `target` eval loss.
+    pub fn tokens_to_loss(&self, target: f32) -> Option<u64> {
+        self.curve
+            .iter()
+            .find(|p| p.eval_loss <= target)
+            .map(|p| p.tokens_processed)
+    }
+
+    /// Per-worker w2s bytes (normalized by model size) to reach `target` —
+    /// the Figure 1-right / Figure 2 y-axis.
+    pub fn relative_bytes_to_loss(&self, target: f32) -> Option<f64> {
+        self.curve
+            .iter()
+            .find(|p| p.eval_loss <= target)
+            .map(|p| p.w2s_bytes_per_worker as f64 / self.model_bytes as f64)
+    }
+}
+
+/// Per-layer geometry with the config's group multipliers applied.
+pub fn geometry_for(manifest: &Manifest, cfg: &TrainConfig) -> Vec<LayerGeometry> {
+    manifest
+        .layers
+        .iter()
+        .map(|l| {
+            let mut g = l.group.geometry();
+            match l.group {
+                Group::Embed => g.radius_mult *= cfg.embed_mult,
+                Group::Vector => g.radius_mult *= cfg.vector_mult / 0.1, // base already 0.1
+                Group::Hidden => {}
+            }
+            g
+        })
+        .collect()
+}
+
+/// Run one full distributed training job per the config.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
+    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
+    let geometry = geometry_for(&manifest, cfg);
+    let tokens_per_step = manifest.batch * manifest.seq_len * cfg.workers;
+
+    let svc = GradService::spawn_pjrt(
+        cfg.artifacts.clone(),
+        cfg.workers,
+        cfg.corpus_tokens,
+        cfg.eval_batches,
+        cfg.seed,
+    )?;
+    let mut coord = Coordinator::spawn(
+        x0,
+        geometry,
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: cfg.workers,
+            worker_comp: cfg.worker_comp.clone(),
+            server_comp: cfg.server_comp.clone(),
+            beta: cfg.beta,
+            schedule: Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac),
+            transport: if cfg.full_codec {
+                TransportMode::Encoded
+            } else {
+                TransportMode::Counted
+            },
+            seed: cfg.seed,
+            use_ns_artifact: cfg.use_ns_artifact,
+        },
+    )?;
+
+    let mut log = match &cfg.log_path {
+        Some(p) => Some(JsonlWriter::create(p)?),
+        None => None,
+    };
+    let timer = crate::util::timer::Timer::start();
+    let mut curve = Vec::new();
+    let mut train_losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let stats = coord.round()?;
+        train_losses.push(stats.train_loss);
+        let do_eval = step % cfg.eval_every.max(1) == 0 || step + 1 == cfg.steps;
+        if do_eval {
+            let eval_loss = coord.eval()?;
+            let point = EvalPoint {
+                step,
+                tokens_processed: (tokens_per_step as u64) * (step as u64 + 1),
+                w2s_bytes_per_worker: coord.meter().w2s(),
+                eval_loss,
+            };
+            if let Some(log) = log.as_mut() {
+                log.write(
+                    &JsonObj::new()
+                        .put("step", step)
+                        .put("train_loss", stats.train_loss)
+                        .put("eval_loss", eval_loss)
+                        .put("tokens", point.tokens_processed)
+                        .put("w2s_bytes", point.w2s_bytes_per_worker)
+                        .put("radius", stats.radius),
+                )?;
+                log.flush()?;
+            }
+            curve.push(point);
+        }
+    }
+
+    Ok(TrainReport {
+        config_comp: cfg.worker_comp.clone(),
+        steps: cfg.steps,
+        final_eval_loss: curve.last().map(|p| p.eval_loss).unwrap_or(f32::NAN),
+        curve,
+        train_losses,
+        total_w2s_bytes_per_worker: coord.meter().w2s(),
+        total_s2w_bytes: coord.meter().s2w(),
+        model_bytes: manifest.model_bytes(),
+        tokens_per_step,
+        wall_seconds: timer.seconds(),
+    })
+}

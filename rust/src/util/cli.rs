@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults; unknown-flag detection.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { positional, flags, seen: Default::default() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn note(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.note(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.note(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.note(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.note(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.note(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.note(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.note(key);
+        self.flags
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// List of flags given on the command line that were never queried —
+    /// almost certainly typos; callers print these as warnings.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = args("train --steps 100 --lr=0.05 --verbose --name run-1 pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.f64("lr", 0.0), 0.05);
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.str("name", ""), "run-1");
+        assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn unknown_flags() {
+        let a = args("--steps 10 --typo 3");
+        let _ = a.usize("steps", 0);
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+}

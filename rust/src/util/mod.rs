@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG, JSON, CLI parsing, timing, stats,
+//! and a lightweight property-testing harness (crates.io is unavailable in
+//! this build environment, so these substrates are built in-tree).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod timer;
+pub mod proptest;

@@ -1,0 +1,109 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! `check(cases, seed, |g| ...)` runs a property against `cases` randomly
+//! generated inputs; on failure it reports the failing case index + seed so
+//! the case can be replayed exactly. Generators produce matrices, shapes,
+//! and scalars via [`Gen`].
+
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Random shape with dims in `[lo, hi]`.
+    pub fn shape(&mut self, lo: usize, hi: usize) -> (usize, usize) {
+        (self.usize_in(lo, hi), self.usize_in(lo, hi))
+    }
+
+    /// Gaussian matrix of a random shape.
+    pub fn matrix(&mut self, lo: usize, hi: usize) -> Matrix {
+        let (m, n) = self.shape(lo, hi);
+        self.matrix_of(m, n)
+    }
+
+    /// Gaussian matrix of the given shape, occasionally spiced with zeros,
+    /// large entries and exact duplicates (adversarial magnitude ties for
+    /// TopK-style selection code).
+    pub fn matrix_of(&mut self, m: usize, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(m, n);
+        for v in a.data.iter_mut() {
+            *v = self.rng.normal_f32();
+        }
+        match self.case % 5 {
+            1 => {
+                // sparse-ish input
+                for v in a.data.iter_mut() {
+                    if self.rng.bernoulli(0.7) {
+                        *v = 0.0;
+                    }
+                }
+            }
+            2 => a.scale(1e4),
+            3 => a.scale(1e-4),
+            4 => {
+                // duplicate magnitudes
+                if a.data.len() >= 2 {
+                    let x = a.data[0].abs();
+                    for (i, v) in a.data.iter_mut().enumerate() {
+                        if i % 3 == 0 {
+                            *v = if i % 2 == 0 { x } else { -x };
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        a
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics with a replayable
+/// message on the first failure (`prop` returns `Err(reason)` to fail).
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let rng = Rng::with_stream(seed.wrapping_add(case as u64), 0x70_72_6f_70);
+        let mut g = Gen { rng, case };
+        if let Err(reason) = prop(&mut g) {
+            panic!("property {name:?} failed at case {case} (seed {seed}): {reason}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes() {
+        check("abs-nonneg", 50, 1, |g| {
+            let m = g.matrix(1, 8);
+            if m.data.iter().all(|v| v.abs() >= 0.0) {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_with_case_info() {
+        check("always-false", 3, 1, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,106 @@
+//! Wall-clock timing + a minimal bench harness (criterion is unavailable
+//! offline). `cargo bench` targets use `harness = false` and drive
+//! [`bench_fn`] directly, reporting median ± MAD.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+    pub fn micros(&self) -> f64 {
+        self.seconds() * 1e6
+    }
+}
+
+/// Timing summary over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} /iter (±{}, min {}, n={})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            fmt_time(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with warmup then `iters` timed repetitions; report median/MAD.
+pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: stats::median(&samples),
+        mad_s: stats::mad(&samples),
+        min_s: min,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_smoke() {
+        let r = bench_fn("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.0);
+        assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn fmt() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,253 @@
+//! Compressor contract tests: Definition 1 contraction in each compressor's
+//! declared norm family, exact wire-codec roundtrips, and the analytic α
+//! formulas from paper §D.
+
+use efmuon::compress::{codec, contraction_ratio, parse_spec, Compressor, NormFamily, Payload};
+use efmuon::linalg::{norms, Matrix};
+use efmuon::util::proptest::check;
+use efmuon::util::rng::Rng;
+
+const ALL_SPECS: &[&str] = &[
+    "id",
+    "nat",
+    "top:0.1",
+    "top:0.25",
+    "top:0.25+nat",
+    "rank:0.2",
+    "rank:0.2+nat",
+    "drop:0.6",
+    "damp:0.7",
+    "svdtop:2",
+    "coltop:0.3",
+    "sign",
+    "qsgd:4",
+    "randk:0.25",
+];
+
+/// E‖C(X)−X‖₂² ≤ (1−α)‖X‖₂² with the analytic α per compressor (where one
+/// exists); for randomized compressors we average over repetitions.
+#[test]
+fn prop_euclidean_contraction() {
+    check("contraction", 20, 21, |g| {
+        let m = g.usize_in(3, 18);
+        let n = g.usize_in(3, 18);
+        let x = g.matrix_of(m, n);
+        if x.norm2_sq() == 0.0 {
+            return Ok(());
+        }
+        let mut rng = Rng::new(1000 + g.case as u64);
+        for spec in ALL_SPECS {
+            let mut c = parse_spec(spec).unwrap();
+            let reps = 30;
+            let mean_ratio: f64 = (0..reps)
+                .map(|_| contraction_ratio(&x, &c.compress(&x, &mut rng).decode()))
+                .sum::<f64>()
+                / reps as f64;
+            // every compressor must satisfy ratio <= 1 (+ sampling slack)
+            if mean_ratio > 1.0 + 0.25 {
+                return Err(format!("{spec}: mean ratio {mean_ratio}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_exact_alpha() {
+    // deterministic TopK: ratio <= 1 - k/d exactly
+    let mut rng = Rng::new(31);
+    for _ in 0..20 {
+        let x = Matrix::randn(11, 13, 1.0, &mut rng);
+        let mut c = parse_spec("top:0.2").unwrap();
+        let y = c.compress(&x, &mut rng).decode();
+        let d = 11.0 * 13.0;
+        let k = (0.2f64 * d).ceil();
+        assert!(contraction_ratio(&x, &y) <= 1.0 - k / d + 1e-9);
+    }
+}
+
+#[test]
+fn dropout_alpha_is_p() {
+    let mut rng = Rng::new(32);
+    let x = Matrix::randn(10, 10, 1.0, &mut rng);
+    let mut c = parse_spec("drop:0.4").unwrap();
+    let n = 6000;
+    let mean: f64 = (0..n)
+        .map(|_| contraction_ratio(&x, &c.compress(&x, &mut rng).decode()))
+        .sum::<f64>()
+        / n as f64;
+    assert!((mean - 0.6).abs() < 0.03, "mean {mean}");
+}
+
+#[test]
+fn natural_alpha_bound() {
+    // Horváth et al: alpha = 8/9 ⇒ ratio <= 1/9
+    let mut rng = Rng::new(33);
+    let x = Matrix::randn(30, 30, 2.0, &mut rng);
+    let mut c = parse_spec("nat").unwrap();
+    let n = 40;
+    let mean: f64 = (0..n)
+        .map(|_| contraction_ratio(&x, &c.compress(&x, &mut rng).decode()))
+        .sum::<f64>()
+        / n as f64;
+    assert!(mean <= 1.0 / 9.0 + 0.01, "mean {mean}");
+}
+
+#[test]
+fn svdtop_contraction_in_schatten_norms() {
+    // Definition 10: contraction w.r.t. spectral, nuclear AND frobenius
+    let mut rng = Rng::new(34);
+    for _ in 0..10 {
+        let x = Matrix::randn(9, 7, 1.0, &mut rng);
+        let mut c = parse_spec("svdtop:3").unwrap();
+        let y = c.compress(&x, &mut rng).decode();
+        let diff = y.sub(&x);
+        assert!(norms::spectral_exact(&diff) <= norms::spectral_exact(&x) + 1e-4);
+        assert!(norms::nuclear_exact(&diff) <= norms::nuclear_exact(&x) + 1e-4);
+        assert!(norms::fro(&diff) <= norms::fro(&x) + 1e-6);
+    }
+}
+
+#[test]
+fn coltop_contraction_in_l2q_norms() {
+    // Definition 13: contraction in mixed l_{2,q} norms (q = 1, 2)
+    let mut rng = Rng::new(35);
+    for _ in 0..10 {
+        let x = Matrix::randn(8, 12, 1.0, &mut rng);
+        let mut c = parse_spec("coltop:0.25").unwrap();
+        let y = c.compress(&x, &mut rng).decode();
+        let diff = y.sub(&x);
+        for q in [1.0, 2.0] {
+            assert!(
+                norms::lpq(&diff, 2.0, q) <= norms::lpq(&x, 2.0, q) + 1e-5,
+                "q={q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_and_size() {
+    check("codec", 30, 22, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let x = g.matrix_of(m, n);
+        let mut rng = Rng::new(2000 + g.case as u64);
+        for spec in ALL_SPECS {
+            let mut c = parse_spec(spec).unwrap();
+            let msg = c.compress(&x, &mut rng);
+            let bytes = codec::encode(&msg);
+            if bytes.len() != msg.wire_bytes() {
+                return Err(format!(
+                    "{spec}: encoded {} != wire_bytes {}",
+                    bytes.len(),
+                    msg.wire_bytes()
+                ));
+            }
+            let back = codec::decode(&bytes).map_err(|e| format!("{spec}: {e}"))?;
+            if back != msg {
+                return Err(format!("{spec}: roundtrip mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn large_matrix_uses_u32_indices() {
+    // numel > 65536 forces 4-byte indices; below, 2-byte
+    let mut rng = Rng::new(36);
+    let small = Matrix::randn(64, 64, 1.0, &mut rng);
+    let large = Matrix::randn(300, 300, 1.0, &mut rng);
+    let mut c = parse_spec("top:0.01").unwrap();
+    let ms = c.compress(&small, &mut rng);
+    let ml = c.compress(&large, &mut rng);
+    if let (Payload::Sparse { idx: is_, .. }, Payload::Sparse { idx: il, .. }) =
+        (&ms.payload, &ml.payload)
+    {
+        let per_small = (ms.wire_bytes() - efmuon::compress::HEADER_BYTES) as f64 / is_.len() as f64;
+        let per_large = (ml.wire_bytes() - efmuon::compress::HEADER_BYTES) as f64 / il.len() as f64;
+        assert!((per_small - 6.0).abs() < 1e-9, "{per_small}");
+        assert!((per_large - 8.0).abs() < 1e-9, "{per_large}");
+    } else {
+        panic!("expected sparse payloads");
+    }
+}
+
+#[test]
+fn families_declared() {
+    assert_eq!(parse_spec("top:0.1").unwrap().family(), NormFamily::Euclidean);
+    assert_eq!(parse_spec("svdtop:1").unwrap().family(), NormFamily::Primal);
+    assert_eq!(parse_spec("damp:0.5").unwrap().family(), NormFamily::Primal);
+    assert!(parse_spec("id").unwrap().is_identity());
+    assert!(!parse_spec("nat").unwrap().is_identity());
+}
+
+#[test]
+fn rank_plus_nat_cheaper_than_rank() {
+    let mut rng = Rng::new(37);
+    let x = Matrix::randn(64, 96, 1.0, &mut rng);
+    let b1 = parse_spec("rank:0.2").unwrap().compress(&x, &mut rng).wire_bytes();
+    let b2 = parse_spec("rank:0.2+nat").unwrap().compress(&x, &mut rng).wire_bytes();
+    assert!(b2 < b1, "{b2} vs {b1}");
+    // 9-bit natural packing: values shrink ~3.5x
+    let ratio = b2 as f64 / b1 as f64;
+    assert!(ratio < 0.4, "ratio {ratio}");
+}
+
+#[test]
+fn decode_never_panics_on_garbage() {
+    // fuzz: random byte strings and truncations of valid messages must
+    // yield Err, never a panic or an out-of-bounds decode
+    let mut rng = Rng::new(99);
+    for _ in 0..2000 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = codec::decode(&bytes); // must not panic
+    }
+    // truncations of a real message
+    let x = Matrix::randn(9, 9, 1.0, &mut rng);
+    let mut c = parse_spec("top:0.2+nat").unwrap();
+    let full = codec::encode(&c.compress(&x, &mut rng));
+    for cut in 0..full.len() {
+        let _ = codec::decode(&full[..cut]); // must not panic
+    }
+}
+
+/// Paper §D.1 "compression via norm selection": LMO directions under
+/// certain norms are *naturally compressed* objects — the nuclear-ball LMO
+/// is rank-1 ((m+n+1) floats instead of m·n), the ℓ1-ball LMO is 1-sparse.
+#[test]
+fn lmo_induced_compression_costs() {
+    use efmuon::lmo::{Lmo, LmoKind};
+    let mut rng = Rng::new(40);
+    let g = Matrix::randn(40, 60, 1.0, &mut rng);
+
+    // nuclear LMO -> exactly rank 1
+    let z = Lmo::new(LmoKind::NuclearRank1).step(&g, 1.0, &mut rng);
+    let (_, s, _) = efmuon::linalg::svd::jacobi_svd(&z);
+    assert!(s[1] < 1e-4 * s[0].max(1e-12), "rank>1: s={:?}", &s[..2]);
+    // factored wire cost beats dense by ~ mn/(m+n)
+    let dense = 40 * 60 * 4;
+    let factored = (40 + 60 + 1) * 4;
+    assert!(factored * 20 < dense);
+
+    // l1 LMO -> exactly one nonzero
+    let z = Lmo::new(LmoKind::L1Top1).step(&g, 1.0, &mut rng);
+    assert_eq!(z.data.iter().filter(|v| **v != 0.0).count(), 1);
+}
+
+#[test]
+fn compressed_value_survives_transport_exactly() {
+    // what the worker's EF21 state adds (msg.decode()) must equal what the
+    // server decodes after the real wire roundtrip — bit for bit
+    let mut rng = Rng::new(38);
+    let x = Matrix::randn(33, 17, 1.0, &mut rng);
+    for spec in ALL_SPECS {
+        let mut c = parse_spec(spec).unwrap();
+        let msg = c.compress(&x, &mut rng);
+        let local = msg.decode();
+        let wire = codec::decode(&codec::encode(&msg)).unwrap().decode();
+        assert_eq!(local.data, wire.data, "{spec}");
+    }
+}

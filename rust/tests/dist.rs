@@ -1,0 +1,150 @@
+//! Distributed-stack integration: threaded coordinator vs the sequential
+//! reference implementation, transport-mode equivalence, byte metering.
+
+use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::service::GradService;
+use efmuon::dist::TransportMode;
+use efmuon::funcs::{Objective, Quadratics};
+use efmuon::lmo::LmoKind;
+use efmuon::opt::ef21::Ef21MuonSeq;
+use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::util::rng::Rng;
+
+fn geom() -> Vec<LayerGeometry> {
+    vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }]
+}
+
+fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coordinator, GradService) {
+    let mut rng = Rng::new(61);
+    let x0 = q.init(&mut rng);
+    let n = q.num_workers();
+    let svc = GradService::spawn_objective(Box::new(q), 5);
+    let coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: spec.into(),
+            server_comp: "id".into(),
+            beta,
+            schedule: Schedule::constant(0.03),
+            transport: mode,
+            seed: 5,
+            use_ns_artifact: false,
+        },
+    )
+    .unwrap();
+    (coord, svc)
+}
+
+#[test]
+fn counted_and_encoded_transport_agree() {
+    // deterministic gradients + same seeds ⇒ identical trajectories under
+    // both transports (the codec must be lossless)
+    let mut rng = Rng::new(62);
+    let mk = || Quadratics::new(3, 10, 0.5, 0.0, &mut Rng::new(62));
+    let _ = &mut rng;
+    let (mut a, _svc_a) = mk_coord(mk(), "top:0.3+nat", TransportMode::Counted, 1.0);
+    let (mut b, _svc_b) = mk_coord(mk(), "top:0.3+nat", TransportMode::Encoded, 1.0);
+    for _ in 0..20 {
+        let sa = a.round().unwrap();
+        let sb = b.round().unwrap();
+        assert_eq!(sa.w2s_bytes_per_worker, sb.w2s_bytes_per_worker);
+    }
+    for (pa, pb) in a.params().iter().zip(b.params()) {
+        assert_eq!(pa.data, pb.data, "trajectory diverged between transports");
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_reference() {
+    // same objective/seed/config: the threaded coordinator must follow the
+    // sequential state machine exactly (deterministic compressors)
+    let mk = || Quadratics::new(4, 8, 0.5, 0.0, &mut Rng::new(63));
+    let q_seq = mk();
+    // NOTE: sequential driver inits x0 via obj.init with seed 5 -> replicate
+    let mut seq = Ef21MuonSeq::new(
+        &q_seq,
+        geom(),
+        "top:0.25",
+        "id",
+        1.0,
+        Schedule::constant(0.03),
+        false,
+        5,
+    )
+    .unwrap();
+
+    let q_dist = mk();
+    let mut rng5 = Rng::new(5);
+    let x0 = q_dist.init(&mut rng5);
+    assert_eq!(x0[0].data, seq.params()[0].data, "identical init required");
+    let n = q_dist.num_workers();
+    let svc = GradService::spawn_objective(Box::new(q_dist), 5);
+    let mut coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: "top:0.25".into(),
+            server_comp: "id".into(),
+            beta: 1.0,
+            schedule: Schedule::constant(0.03),
+            transport: TransportMode::Encoded,
+            seed: 5,
+            use_ns_artifact: false,
+        },
+    )
+    .unwrap();
+
+    for k in 0..25 {
+        let s = seq.step(&q_seq);
+        let d = coord.round().unwrap();
+        assert_eq!(s.w2s_bytes, d.w2s_bytes_per_worker, "step {k}: bytes");
+        let diff = seq.params()[0].max_abs_diff(&coord.params()[0]);
+        assert!(diff < 1e-6, "step {k}: params diverged by {diff}");
+    }
+}
+
+#[test]
+fn byte_meters_accumulate_correctly() {
+    let q = Quadratics::new(3, 100, 0.5, 0.0, &mut Rng::new(64));
+    let (mut coord, _svc) = mk_coord(q, "top:0.1", TransportMode::Counted, 1.0);
+    let mut expect_w2s = 0u64;
+    let mut expect_s2w = 0u64;
+    for _ in 0..10 {
+        let s = coord.round().unwrap();
+        expect_w2s += s.w2s_bytes_per_worker as u64;
+        expect_s2w += s.s2w_bytes as u64;
+    }
+    assert_eq!(coord.meter().w2s(), expect_w2s);
+    assert_eq!(coord.meter().s2w(), expect_s2w);
+    // 3 workers: aggregate = 3x per-worker
+    assert_eq!(
+        coord.meter().w2s_all.load(std::sync::atomic::Ordering::Relaxed),
+        3 * expect_w2s
+    );
+}
+
+#[test]
+fn compressed_run_converges_with_stochastic_gradients() {
+    let q = Quadratics::new(4, 12, 0.5, 0.3, &mut Rng::new(65));
+    let (mut coord, _svc) = mk_coord(q, "rank:0.4", TransportMode::Counted, 0.5);
+    let first = coord.eval().unwrap();
+    for _ in 0..400 {
+        coord.round().unwrap();
+    }
+    let last = coord.eval().unwrap();
+    assert!(last < first, "{first} -> {last}");
+}
+
+#[test]
+fn eval_is_deterministic_given_params() {
+    let q = Quadratics::new(2, 6, 0.5, 0.0, &mut Rng::new(66));
+    let (coord, _svc) = mk_coord(q, "id", TransportMode::Counted, 1.0);
+    let a = coord.eval().unwrap();
+    let b = coord.eval().unwrap();
+    assert_eq!(a, b);
+}

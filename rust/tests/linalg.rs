@@ -1,0 +1,220 @@
+//! Property-based integration tests over the linear-algebra substrate.
+
+use efmuon::linalg::matmul::{matmul, matmul_at, matmul_bt};
+use efmuon::linalg::ns::{newton_schulz, NS_STEPS};
+use efmuon::linalg::qr::orthonormalize;
+use efmuon::linalg::svd::{jacobi_svd, low_rank_approx, top_singular, truncated_reconstruct};
+use efmuon::linalg::{norms, Matrix};
+use efmuon::util::proptest::check;
+use efmuon::util::rng::Rng;
+
+#[test]
+fn prop_matmul_associativity_with_vectors() {
+    // (A·B)·x == A·(B·x) within f32 tolerance
+    check("matmul-assoc", 40, 11, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 24);
+        let a = g.matrix_of(m, k);
+        let b = g.matrix_of(k, n);
+        let x = g.matrix_of(n, 1);
+        let lhs = matmul(&matmul(&a, &b), &x);
+        let rhs = matmul(&a, &matmul(&b, &x));
+        let scale = 1.0 + lhs.max_abs();
+        if lhs.max_abs_diff(&rhs) / scale < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("diff {}", lhs.max_abs_diff(&rhs)))
+        }
+    });
+}
+
+#[test]
+fn prop_transposed_matmul_variants_agree() {
+    check("matmul-transposed", 40, 12, |g| {
+        let a = g.matrix(1, 20);
+        let rows_b = g.usize_in(1, 20);
+        let b = g.matrix_of(rows_b, a.cols);
+        let direct = matmul(&a, &b.transpose());
+        let fused = matmul_bt(&a, &b);
+        if direct.max_abs_diff(&fused) < 1e-3 * (1.0 + direct.max_abs()) {
+            let cols_c = g.usize_in(1, 10);
+            let c = g.matrix_of(a.rows, cols_c);
+            let at1 = matmul(&a.transpose(), &c);
+            let at2 = matmul_at(&a, &c);
+            if at1.max_abs_diff(&at2) < 1e-3 * (1.0 + at1.max_abs()) {
+                return Ok(());
+            }
+        }
+        Err("transposed variants disagree".into())
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_and_ordering() {
+    check("jacobi-svd", 25, 13, |g| {
+        let a = g.matrix(1, 14);
+        let (u, s, v) = jacobi_svd(&a);
+        let r = truncated_reconstruct(&u, &s, &v, s.len());
+        if r.max_abs_diff(&a) > 2e-3 * (1.0 + a.max_abs()) {
+            return Err(format!("reconstruction err {}", r.max_abs_diff(&a)));
+        }
+        for w in s.windows(2) {
+            if w[0] < w[1] - 1e-4 {
+                return Err("singular values not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eckart_young_rank1() {
+    // power-iteration rank-1 approximation residual ≈ sigma_2
+    check("eckart-young", 20, 14, |g| {
+        let a = g.matrix(2, 12);
+        let mut rng = Rng::new(g.case as u64);
+        let (sigma, u, v) = top_singular(&a, 300, &mut rng);
+        let (_, s, _) = jacobi_svd(&a);
+        if s[0] < 1e-4 {
+            return Ok(()); // effectively zero matrix
+        }
+        // degenerate top spectrum makes power iteration slow; skip ties
+        if s.len() > 1 && (s[0] - s[1]).abs() / s[0] < 0.05 {
+            return Ok(());
+        }
+        if (sigma - s[0]).abs() / s[0] > 2e-2 {
+            return Err(format!("sigma {sigma} vs {}", s[0]));
+        }
+        let mut resid = a.clone();
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                resid.data[i * a.cols + j] -= sigma * u[i] * v[j];
+            }
+        }
+        let r = norms::spectral_exact(&resid);
+        let expected = if s.len() > 1 { s[1] as f64 } else { 0.0 };
+        if (r - expected).abs() <= 5e-2 * (1.0 + expected) {
+            Ok(())
+        } else {
+            Err(format!("residual {r} vs sigma2 {expected}"))
+        }
+    });
+}
+
+#[test]
+fn prop_qr_orthonormal() {
+    check("qr", 30, 15, |g| {
+        let m = g.usize_in(2, 30);
+        let n = g.usize_in(1, m.min(10));
+        let a = g.matrix_of(m, n);
+        let q = orthonormalize(&a);
+        let qtq = matmul_at(&q, &q);
+        for i in 0..n {
+            for j in 0..n {
+                let target = if i == j {
+                    // zeroed columns (rank deficiency) give 0 on diagonal
+                    if qtq.at(i, i) < 0.5 { 0.0 } else { 1.0 }
+                } else {
+                    0.0
+                };
+                if (qtq.at(i, j) - target).abs() > 1e-3 {
+                    return Err(format!("QtQ[{i},{j}] = {}", qtq.at(i, j)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_low_rank_projection_never_expands() {
+    check("lowrank-contract", 25, 16, |g| {
+        let a = g.matrix(2, 16);
+        let r = g.usize_in(1, a.rows.min(a.cols));
+        let mut rng = Rng::new(g.case as u64 + 99);
+        let (q, b) = low_rank_approx(&a, r, 2, &mut rng);
+        let rec = matmul(&q, &b);
+        let err = rec.sub(&a).norm2_sq();
+        if err <= a.norm2_sq() * (1.0 + 1e-6) {
+            Ok(())
+        } else {
+            Err(format!("expansion: {err} > {}", a.norm2_sq()))
+        }
+    });
+}
+
+#[test]
+fn prop_ns_bounds_singular_values() {
+    check("newton-schulz", 12, 17, |g| {
+        let m = g.usize_in(4, 24);
+        let n = g.usize_in(4, 24);
+        let a = g.matrix_of(m, n);
+        if a.norm2() < 1e-3 {
+            return Ok(());
+        }
+        let o = newton_schulz(&a, NS_STEPS);
+        if !o.is_finite() {
+            return Err("non-finite output".into());
+        }
+        let (_, s, _) = jacobi_svd(&o);
+        for &sv in &s {
+            // near-zero input singular values stay near zero; others land
+            // in the Muon band
+            if sv > 0.05 && !(0.3..1.7).contains(&sv) {
+                return Err(format!("sv {sv} out of band"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_norm_inequalities() {
+    // spectral <= frobenius <= nuclear <= sqrt(r) * frobenius
+    check("norm-chain", 30, 18, |g| {
+        let a = g.matrix(1, 12);
+        let sp = norms::spectral_exact(&a);
+        let fr = norms::fro(&a);
+        let nu = norms::nuclear_exact(&a);
+        let r = a.rows.min(a.cols) as f64;
+        let tol = 1e-3 * (1.0 + fr);
+        if sp <= fr + tol && fr <= nu + tol && nu <= r.sqrt() * fr + tol {
+            Ok(())
+        } else {
+            Err(format!("chain violated: sp={sp} fr={fr} nu={nu}"))
+        }
+    });
+}
+
+#[test]
+fn prop_dual_norm_holder() {
+    // |<A,B>| <= ||A||_* ||B|| for (nuclear, spectral) and (l1, linf)
+    check("holder", 30, 19, |g| {
+        let m = g.usize_in(1, 10);
+        let n = g.usize_in(1, 10);
+        let a = g.matrix_of(m, n);
+        let b = g.matrix_of(m, n);
+        let inner = a.dot(&b).abs();
+        let tol = 1e-3 * (1.0 + inner);
+        if inner > norms::nuclear_exact(&a) * norms::spectral_exact(&b) + tol {
+            return Err("nuclear/spectral Hölder violated".into());
+        }
+        if inner > norms::l1(&a) * norms::linf(&b) + tol {
+            return Err("l1/linf Hölder violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ns_aligns_with_nuclear_norm() {
+    // <G, NS(G)> ≈ ||G||_nuclear (the LMO pairing identity, NS-approximate)
+    let mut rng = Rng::new(77);
+    let g = Matrix::randn(16, 12, 1.0, &mut rng);
+    let o = newton_schulz(&g, NS_STEPS);
+    let inner = g.dot(&o);
+    let nuc = norms::nuclear_exact(&g);
+    assert!(inner > 0.6 * nuc, "inner {inner} vs nuclear {nuc}");
+    assert!(inner < 1.4 * nuc, "inner {inner} vs nuclear {nuc}");
+}

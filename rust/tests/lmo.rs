@@ -1,0 +1,155 @@
+//! LMO / sharp-operator identities from paper §C, enforced for every oracle:
+//!   ⟨G, LMO_{B(0,t)}(G)⟩ = −t‖G‖⋆          (pairing identity)
+//!   ‖LMO_{B(0,t)}(G)‖ = t                   (the step saturates the ball)
+//!   G♯ = −‖G‖⋆·LMO_{B(0,1)}(G),  ‖G♯‖ = ‖G‖⋆
+
+use efmuon::linalg::{norms, Matrix};
+use efmuon::lmo::{Lmo, LmoKind, SpectralEngine};
+use efmuon::util::proptest::check;
+use efmuon::util::rng::Rng;
+
+fn exact_kinds() -> Vec<(LmoKind, f64)> {
+    // (kind, tolerance multiplier)
+    vec![
+        (LmoKind::SignLInf, 1e-4),
+        (LmoKind::L1Top1, 1e-4),
+        (LmoKind::Euclidean, 1e-4),
+        (LmoKind::ColNorm, 1e-3),
+        (LmoKind::NuclearRank1, 3e-2), // power iteration
+    ]
+}
+
+/// Primal norm of a step, matched to the kind's ball.
+fn ball_norm(kind: LmoKind, z: &Matrix) -> f64 {
+    match kind {
+        LmoKind::Spectral => norms::spectral_exact(z),
+        LmoKind::SignLInf => norms::linf(z),
+        LmoKind::L1Top1 => norms::l1(z),
+        LmoKind::Euclidean => norms::fro(z),
+        LmoKind::NuclearRank1 => norms::nuclear_exact(z),
+        LmoKind::ColNorm => norms::max_col_l2(z),
+    }
+}
+
+#[test]
+fn prop_pairing_identity() {
+    check("lmo-pairing", 25, 41, |g| {
+        let m = g.usize_in(2, 12);
+        let n = g.usize_in(2, 12);
+        let x = g.matrix_of(m, n);
+        if x.norm2() < 1e-3 {
+            return Ok(());
+        }
+        let t = g.f64_in(0.1, 3.0) as f32;
+        let mut rng = Rng::new(g.case as u64 + 5);
+        for (kind, tol) in exact_kinds() {
+            let lmo = Lmo::new(kind);
+            let z = lmo.step(&x, t, &mut rng);
+            let lhs = x.dot(&z);
+            let rhs = -(t as f64) * lmo.dual_norm(&x, &mut rng);
+            let scale = 1.0 + rhs.abs();
+            if (lhs - rhs).abs() / scale > tol.max(1e-4) * 10.0 {
+                return Err(format!("{kind:?}: <G,Z>={lhs} vs -t||G||*={rhs}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_step_saturates_ball() {
+    check("lmo-ball", 25, 42, |g| {
+        let m = g.usize_in(2, 12);
+        let n = g.usize_in(2, 12);
+        let x = g.matrix_of(m, n);
+        if x.norm2() < 1e-3 {
+            return Ok(());
+        }
+        let t = 1.5f32;
+        let mut rng = Rng::new(g.case as u64 + 6);
+        for (kind, tol) in exact_kinds() {
+            // sign LMO with zero entries doesn't saturate exactly; skip the
+            // adversarial sparse cases for the saturation check
+            if kind == LmoKind::SignLInf && x.data.iter().any(|v| *v == 0.0) {
+                continue;
+            }
+            let lmo = Lmo::new(kind);
+            let z = lmo.step(&x, t, &mut rng);
+            let nrm = ball_norm(kind, &z);
+            if (nrm - t as f64).abs() > tol * 30.0 + 1e-3 {
+                return Err(format!("{kind:?}: ||Z|| = {nrm}, want {t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharp_operator_identities() {
+    check("sharp", 20, 43, |g| {
+        let m = g.usize_in(2, 10);
+        let n = g.usize_in(2, 10);
+        let x = g.matrix_of(m, n);
+        if x.norm2() < 1e-3 {
+            return Ok(());
+        }
+        let mut rng = Rng::new(g.case as u64 + 7);
+        for (kind, tol) in exact_kinds() {
+            let lmo = Lmo::new(kind);
+            let sharp = lmo.sharp(&x, &mut rng);
+            let dual = lmo.dual_norm(&x, &mut rng);
+            // ||G#|| = ||G||* (primal norm of sharp equals dual norm)
+            let nrm = ball_norm(kind, &sharp);
+            if (nrm - dual).abs() / (1.0 + dual) > tol * 30.0 {
+                return Err(format!("{kind:?}: ||G#||={nrm} vs ||G||*={dual}"));
+            }
+            // <G, G#> = ||G||*^2
+            let inner = x.dot(&sharp);
+            if (inner - dual * dual).abs() / (1.0 + dual * dual) > tol * 30.0 {
+                return Err(format!("{kind:?}: <G,G#>={inner} vs {}", dual * dual));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spectral_ns_vs_exact_svd_engine() {
+    // the NS engine approximates the exact polar LMO
+    let mut rng = Rng::new(44);
+    for &(m, n) in &[(12, 12), (8, 20), (20, 8)] {
+        let x = Matrix::randn(m, n, 1.0, &mut rng);
+        let ns = Lmo { kind: LmoKind::Spectral, ns_steps: 5, engine: SpectralEngine::Native };
+        let exact = Lmo { kind: LmoKind::Spectral, ns_steps: 5, engine: SpectralEngine::ExactSvd };
+        let a = ns.step(&x, 1.0, &mut rng);
+        let b = exact.step(&x, 1.0, &mut rng);
+        let cos = a.dot(&b) / (a.norm2() * b.norm2());
+        assert!(cos > 0.97, "{m}x{n}: cos {cos}");
+        // pairing identity holds approximately for the NS engine
+        let lhs = x.dot(&a);
+        let rhs = -norms::nuclear_exact(&x);
+        assert!((lhs - rhs).abs() / rhs.abs() < 0.35, "{lhs} vs {rhs}");
+    }
+}
+
+#[test]
+fn spectral_exact_pairing_is_tight() {
+    let mut rng = Rng::new(45);
+    let x = Matrix::randn(9, 6, 1.0, &mut rng);
+    let lmo = Lmo { kind: LmoKind::Spectral, ns_steps: 5, engine: SpectralEngine::ExactSvd };
+    let z = lmo.step(&x, 2.0, &mut rng);
+    let lhs = x.dot(&z);
+    let rhs = -2.0 * norms::nuclear_exact(&x);
+    assert!((lhs - rhs).abs() < 1e-3 * rhs.abs(), "{lhs} vs {rhs}");
+    assert!((norms::spectral_exact(&z) - 2.0).abs() < 1e-3);
+}
+
+#[test]
+fn zero_gradient_gives_zero_step() {
+    let z = Matrix::zeros(4, 4);
+    let mut rng = Rng::new(46);
+    for (kind, _) in exact_kinds() {
+        let step = Lmo::new(kind).step(&z, 1.0, &mut rng);
+        assert!(step.norm2() < 1e-6, "{kind:?}");
+    }
+}

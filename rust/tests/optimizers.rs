@@ -1,0 +1,266 @@
+//! Optimizer integration tests: EF21-Muon convergence across the config
+//! matrix (compressors × geometries × smoothness regimes), protocol-state
+//! invariants under randomized configurations, and the divergence story.
+
+use efmuon::funcs::{CoshObjective, Logistic, MatrixQuadratic, Objective, Quadratics, ThreeQuadratics};
+use efmuon::lmo::LmoKind;
+use efmuon::opt::ef21::{state_consistency, Ef21MuonSeq};
+use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::util::proptest::check;
+use efmuon::util::rng::Rng;
+
+fn geom(kind: LmoKind) -> Vec<LayerGeometry> {
+    vec![LayerGeometry { lmo: kind, radius_mult: 1.0 }]
+}
+
+fn run(
+    obj: &dyn Objective,
+    kind: LmoKind,
+    wspec: &str,
+    sspec: &str,
+    beta: f32,
+    lr: f64,
+    stochastic: bool,
+    steps: usize,
+) -> (f64, f64) {
+    let mut opt = Ef21MuonSeq::new(
+        obj,
+        geom(kind),
+        wspec,
+        sspec,
+        beta,
+        Schedule::constant(lr),
+        stochastic,
+        9,
+    )
+    .unwrap();
+    let trace = opt.run(obj, steps);
+    (trace[0].grad_norm2, trace.last().unwrap().grad_norm2)
+}
+
+#[test]
+fn convergence_matrix_compressors() {
+    let mut rng = Rng::new(51);
+    let q = Quadratics::new(4, 16, 0.7, 0.0, &mut rng);
+    for spec in ["id", "top:0.3", "rank:0.3", "nat", "top:0.3+nat", "drop:0.7"] {
+        let (g0, gk) = run(&q, LmoKind::Euclidean, spec, "id", 1.0, 0.03, false, 900);
+        assert!(gk < 1e-2 * g0, "{spec}: {g0} -> {gk}");
+    }
+}
+
+#[test]
+fn convergence_with_bidirectional_compression() {
+    // EF21-P on the downlink too (Theorem 3 setting)
+    let mut rng = Rng::new(52);
+    let q = Quadratics::new(3, 12, 0.5, 0.0, &mut rng);
+    let (g0, gk) = run(&q, LmoKind::Euclidean, "top:0.3", "top:0.5", 1.0, 0.02, false, 1500);
+    assert!(gk < 5e-2 * g0, "{g0} -> {gk}");
+}
+
+#[test]
+fn convergence_sign_lmo() {
+    // ℓ∞ geometry (the paper's embedding-layer oracle)
+    let mut rng = Rng::new(53);
+    let q = Quadratics::new(3, 10, 0.5, 0.0, &mut rng);
+    let (g0, gk) = run(&q, LmoKind::SignLInf, "top:0.4", "id", 1.0, 0.01, false, 1500);
+    // sign steps with constant radius stall in a neighborhood; still must
+    // shrink the gradient substantially
+    assert!(gk < 0.1 * g0, "{g0} -> {gk}");
+}
+
+#[test]
+fn convergence_spectral_lmo_on_matrix_objective() {
+    // Muon geometry on a matrix-valued problem, with RankK compression
+    let mut rng = Rng::new(54);
+    let mq = MatrixQuadratic::new(3, 12, 8, 0.0, &mut rng);
+    let geometry = vec![LayerGeometry { lmo: LmoKind::Spectral, radius_mult: 1.0 }];
+    let mut opt = Ef21MuonSeq::new(
+        &mq,
+        geometry,
+        "rank:0.4",
+        "id",
+        1.0,
+        Schedule::warmup_cosine(0.05, 10, 600, 0.05),
+        false,
+        5,
+    )
+    .unwrap();
+    let trace = opt.run(&mq, 600);
+    let g0 = trace[0].grad_norm2;
+    let gk = trace.last().unwrap().grad_norm2;
+    assert!(gk < 0.05 * g0, "{g0} -> {gk}");
+}
+
+#[test]
+fn stochastic_momentum_reduces_estimator_variance() {
+    // Role of Momentum (§3): M_j = (1-β)M_j + β∇f_j(·;ξ) reduces the
+    // variance of the gradient estimator vs using raw stochastic gradients
+    // (β = 1). With a small radius (little iterate drift → little momentum
+    // lag) the estimator error must shrink by roughly a factor of β.
+    let mut rng = Rng::new(55);
+    let q = Quadratics::new(4, 16, 0.5, 0.6, &mut rng);
+    let estimator_err = |beta: f32| {
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(LmoKind::Euclidean),
+            "id",
+            "id",
+            beta,
+            Schedule::constant(5e-4), // tiny radius: isolate variance effect
+            true,
+            13,
+        )
+        .unwrap();
+        opt.run(&q, 300);
+        // mean squared error of worker momentum vs exact local gradient
+        let mut err = 0.0f64;
+        for wkr in &opt.workers {
+            let exact = q.grad_j(wkr.id, &wkr.w);
+            err += wkr.m[0].sub(&exact[0]).norm2_sq();
+        }
+        err / opt.workers.len() as f64
+    };
+    let with_momentum = estimator_err(0.1);
+    let without = estimator_err(1.0);
+    assert!(
+        with_momentum < 0.35 * without,
+        "momentum {with_momentum} vs none {without}"
+    );
+}
+
+#[test]
+fn generalized_smooth_objective_converges() {
+    // cosh objective ((L0,L1)-smooth): theory schedule from Thm 4
+    let mut rng = Rng::new(56);
+    let obj = CoshObjective::new(3, 8, &mut rng);
+    let (g0, gk) = run(&obj, LmoKind::SignLInf, "top:0.5", "id", 1.0, 0.01, false, 2000);
+    assert!(gk < 1e-2 * g0, "{g0} -> {gk}");
+}
+
+#[test]
+fn logistic_regression_end_to_end() {
+    let mut rng = Rng::new(57);
+    let obj = Logistic::new(4, 40, 8, 0.6, 0.05, &mut rng);
+    let mut opt = Ef21MuonSeq::new(
+        &obj,
+        geom(LmoKind::Euclidean),
+        "top:0.25",
+        "id",
+        0.8,
+        Schedule::constant(0.05),
+        true,
+        21,
+    )
+    .unwrap();
+    let l0 = obj.loss(&opt.params().clone());
+    let trace = opt.run(&obj, 800);
+    let lk = trace.last().unwrap().loss;
+    assert!(lk < 0.8 * l0, "loss {l0} -> {lk}");
+}
+
+#[test]
+fn prop_protocol_state_invariants() {
+    // across random configs: server W == worker W, server G == avg worker G
+    check("ef21-invariants", 12, 58, |g| {
+        let mut rng = Rng::new(300 + g.case as u64);
+        let q = Quadratics::new(g.usize_in(1, 5), g.usize_in(2, 12), 1.0, 0.2, &mut rng);
+        let specs = ["id", "top:0.3", "rank:0.5", "nat", "drop:0.5"];
+        let wspec = specs[g.usize_in(0, specs.len() - 1)];
+        let sspec = ["id", "top:0.5"][g.usize_in(0, 1)];
+        let beta = g.f64_in(0.1, 1.0) as f32;
+        let mut opt = Ef21MuonSeq::new(
+            &q,
+            geom(LmoKind::Euclidean),
+            wspec,
+            sspec,
+            beta,
+            Schedule::constant(0.01),
+            true,
+            g.case as u64,
+        )
+        .map_err(|e| e.to_string())?;
+        for _ in 0..8 {
+            opt.step(&q);
+            state_consistency(&opt)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_w2s_bytes_monotone_in_sparsity() {
+    check("bytes-monotone", 10, 59, |g| {
+        let mut rng = Rng::new(400 + g.case as u64);
+        let q = Quadratics::new(2, g.usize_in(50, 200), 0.5, 0.0, &mut rng);
+        let frac_lo = g.f64_in(0.05, 0.3);
+        let frac_hi = frac_lo * 2.0;
+        let bytes = |frac: f64| {
+            let mut opt = Ef21MuonSeq::new(
+                &q,
+                geom(LmoKind::Euclidean),
+                &format!("top:{frac}"),
+                "id",
+                1.0,
+                Schedule::constant(0.01),
+                false,
+                7,
+            )
+            .unwrap();
+            opt.step(&q).w2s_bytes
+        };
+        if bytes(frac_lo) < bytes(frac_hi) {
+            Ok(())
+        } else {
+            Err(format!("bytes not monotone at {frac_lo} vs {frac_hi}"))
+        }
+    });
+}
+
+#[test]
+fn smoothness_probe_distinguishes_regimes() {
+    // quadratics are globally L-smooth (L¹ ≈ 0); cosh is (L⁰,L¹)-smooth
+    // with L¹ > 0 — the empirical signature the paper's §B builds on
+    let mut rng = Rng::new(60);
+    let quad = Quadratics::new(2, 8, 0.5, 0.0, &mut rng);
+    let est_q =
+        efmuon::exp::smoothness_probe(&quad, LmoKind::Euclidean, 0.05, 150, 3).unwrap();
+    let cosh = CoshObjective::new(2, 8, &mut rng);
+    let est_c =
+        efmuon::exp::smoothness_probe(&cosh, LmoKind::Euclidean, 0.05, 150, 3).unwrap();
+    // quadratics: slope statistically indistinguishable from 0 (fit noise);
+    // cosh: positive slope — smoothness grows with the gradient norm
+    assert!(
+        est_q[0].l1.abs() < 0.2,
+        "quadratic L1 should be ~0, got {}",
+        est_q[0].l1
+    );
+    assert!(est_c[0].l1 > 0.05, "cosh L1 {} should be positive", est_c[0].l1);
+    assert!(
+        est_c[0].l1 > est_q[0].l1 + 0.05,
+        "cosh L1 {} should exceed quadratic {}",
+        est_c[0].l1,
+        est_q[0].l1
+    );
+    assert!(est_c[0].r2 > 0.5, "cosh fit r2 {}", est_c[0].r2);
+}
+
+#[test]
+fn divergence_demo_story_holds() {
+    let (diverged, converged) = efmuon::exp::divergence::run_demo(60, &mut Vec::new()).unwrap();
+    assert!(diverged, "naive DCGD must diverge on the Beznosikov example");
+    assert!(converged, "EF21-Muon must converge on it");
+}
+
+#[test]
+fn three_quadratics_naive_growth_is_exponential() {
+    // quantitative check of the (1+γ)² per-step growth factor
+    let obj = ThreeQuadratics::new();
+    let (naive, _, _) = efmuon::exp::divergence::traces(40).unwrap();
+    let ratio = naive[30] / naive[20];
+    let expected = (1.1f64).powi(2 * 10);
+    assert!(
+        ratio > 0.5 * expected && ratio < 2.0 * expected,
+        "growth {ratio} vs theory {expected}"
+    );
+    let _ = obj;
+}

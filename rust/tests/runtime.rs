@@ -1,0 +1,138 @@
+//! PJRT runtime integration tests. These require `artifacts/` (built by
+//! `make artifacts`); they become no-ops with a notice when it is missing
+//! so `cargo test` works on a fresh checkout.
+
+use efmuon::linalg::ns::newton_schulz;
+use efmuon::linalg::Matrix;
+use efmuon::model::Manifest;
+use efmuon::runtime::ModelRuntime;
+use efmuon::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    for candidate in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(candidate).join("manifest.json").exists() {
+            return Some(candidate.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn load() -> Option<ModelRuntime> {
+    artifacts_dir().map(|d| ModelRuntime::load(d).expect("load artifacts"))
+}
+
+#[test]
+fn manifest_and_params_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let params = m.load_init_params().unwrap();
+    assert_eq!(params.len(), m.layers.len());
+    let total: usize = params.iter().map(|p| p.numel()).sum();
+    assert_eq!(total, m.param_count);
+    for p in &params {
+        assert!(p.is_finite());
+    }
+    // GPT-2 init: embeddings std 0.02
+    let wte = &params[0];
+    let std = (wte.norm2_sq() / wte.numel() as f64).sqrt();
+    assert!((std - 0.02).abs() < 0.005, "wte std {std}");
+}
+
+#[test]
+fn eval_loss_at_init_is_ln_vocab() {
+    let Some(rt) = load() else { return };
+    let m = &rt.manifest;
+    let params = m.load_init_params().unwrap();
+    let mut rng = Rng::new(1);
+    let corpus = efmuon::data::Corpus::zipf_markov(50_000, m.vocab, 3);
+    let shard = efmuon::data::Shard::new(&corpus, 0, 1, m.seq_len);
+    let (toks, tgts) = shard.sample_batch(m.batch, &mut rng);
+    let loss = rt.eval_loss(&params, &toks, &tgts).unwrap();
+    assert!(
+        (loss as f64 - (m.vocab as f64).ln()).abs() < 0.2,
+        "init loss {loss}"
+    );
+}
+
+#[test]
+fn grad_artifact_descends_and_matches_eval() {
+    let Some(rt) = load() else { return };
+    let m = &rt.manifest;
+    let params = m.load_init_params().unwrap();
+    let mut rng = Rng::new(2);
+    let corpus = efmuon::data::Corpus::zipf_markov(50_000, m.vocab, 3);
+    let shard = efmuon::data::Shard::new(&corpus, 0, 1, m.seq_len);
+    let (toks, tgts) = shard.sample_batch(m.batch, &mut rng);
+
+    let (loss, grads) = rt.grad(&params, &toks, &tgts).unwrap();
+    let eval = rt.eval_loss(&params, &toks, &tgts).unwrap();
+    assert!((loss - eval).abs() < 1e-4, "grad loss {loss} vs eval {eval}");
+    assert_eq!(grads.len(), params.len());
+    for (g, p) in grads.iter().zip(&params) {
+        assert_eq!((g.rows, g.cols), (p.rows, p.cols));
+        assert!(g.is_finite());
+    }
+    // gradient step on the same batch must reduce the loss
+    let stepped: Vec<Matrix> = params
+        .iter()
+        .zip(&grads)
+        .map(|(p, g)| {
+            let mut q = p.clone();
+            q.axpy(-0.5, g);
+            q
+        })
+        .collect();
+    let loss2 = rt.eval_loss(&stepped, &toks, &tgts).unwrap();
+    assert!(loss2 < loss, "{loss} -> {loss2}");
+}
+
+#[test]
+fn pjrt_ns_artifact_matches_native_ns() {
+    // The L1 Pallas kernel (through PJRT) and the rust-native NS must agree:
+    // same coefficients, same normalization.
+    let Some(rt) = load() else { return };
+    let mut rng = Rng::new(3);
+    let shapes: Vec<(usize, usize)> = rt.manifest.ns_hlo.iter().map(|(s, _)| *s).collect();
+    assert!(!shapes.is_empty(), "expected NS artifacts");
+    for (m, n) in shapes {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let via_pjrt = rt.ns_orthogonalize(&g).expect("artifact exists").unwrap();
+        let native = newton_schulz(&g, rt.manifest.ns_steps);
+        let diff = via_pjrt.max_abs_diff(&native);
+        assert!(diff < 5e-3, "{m}x{n}: pallas vs native diff {diff}");
+    }
+}
+
+#[test]
+fn ns_artifact_covers_all_hidden_shapes() {
+    let Some(rt) = load() else { return };
+    for l in &rt.manifest.layers {
+        if l.group == efmuon::model::Group::Hidden {
+            assert!(
+                rt.has_ns_for(l.rows, l.cols),
+                "no NS artifact for hidden layer {} ({}x{})",
+                l.name,
+                l.rows,
+                l.cols
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_is_deterministic() {
+    let Some(rt) = load() else { return };
+    let m = &rt.manifest;
+    let params = m.load_init_params().unwrap();
+    let mut rng = Rng::new(4);
+    let corpus = efmuon::data::Corpus::zipf_markov(30_000, m.vocab, 3);
+    let shard = efmuon::data::Shard::new(&corpus, 0, 1, m.seq_len);
+    let (toks, tgts) = shard.sample_batch(m.batch, &mut rng);
+    let (l1, g1) = rt.grad(&params, &toks, &tgts).unwrap();
+    let (l2, g2) = rt.grad(&params, &toks, &tgts).unwrap();
+    assert_eq!(l1, l2);
+    for (a, b) in g1.iter().zip(&g2) {
+        assert_eq!(a.data, b.data);
+    }
+}

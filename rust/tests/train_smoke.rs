@@ -1,0 +1,81 @@
+//! End-to-end smoke test: full distributed EF21-Muon training through the
+//! PJRT artifacts for a handful of steps. Requires `make artifacts`.
+
+use efmuon::config::TrainConfig;
+use efmuon::train::train;
+
+fn artifacts_dir() -> Option<String> {
+    for candidate in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(candidate).join("manifest.json").exists() {
+            return Some(candidate.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn compressed_training_descends_and_meters_bytes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = TrainConfig {
+        artifacts: dir,
+        workers: 2,
+        steps: 16,
+        worker_comp: "top:0.25+nat".into(),
+        server_comp: "id".into(),
+        beta: 0.9,
+        lr: 0.015,
+        warmup: 3,
+        corpus_tokens: 300_000,
+        eval_every: 4,
+        eval_batches: 2,
+        use_ns_artifact: true,
+        full_codec: true, // exercise the real wire codec end-to-end
+        seed: 7,
+        ..TrainConfig::default()
+    };
+    let report = train(&cfg).unwrap();
+    assert_eq!(report.steps, 16);
+    // loss must drop from ~ln(256)=5.545 within a few steps (compressed
+    // estimators take a few rounds to catch up, so compare best-so-far)
+    let first = report.curve.first().unwrap().eval_loss;
+    let best = report
+        .curve
+        .iter()
+        .map(|p| p.eval_loss)
+        .fold(f32::INFINITY, f32::min);
+    assert!(first > 5.0, "init eval {first}");
+    assert!(best < first - 0.05, "{first} -> best {best}");
+    // compressed uplink must be well below one model per step
+    let per_step = report.total_w2s_bytes_per_worker as f64
+        / report.steps as f64
+        / report.model_bytes as f64;
+    assert!(per_step < 0.25, "w2s per step = {per_step} of model size");
+    // uncompressed downlink ≈ 1 model per step
+    let s2w_per_step =
+        report.total_s2w_bytes as f64 / report.steps as f64 / report.model_bytes as f64;
+    assert!((s2w_per_step - 1.0).abs() < 0.1, "s2w per step = {s2w_per_step}");
+}
+
+#[test]
+fn uncompressed_equals_gluon_costs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = TrainConfig {
+        artifacts: dir,
+        workers: 2,
+        steps: 3,
+        worker_comp: "id".into(),
+        server_comp: "id".into(),
+        corpus_tokens: 300_000,
+        eval_every: 10,
+        eval_batches: 1,
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    let report = train(&cfg).unwrap();
+    let per_step = report.total_w2s_bytes_per_worker as f64
+        / report.steps as f64
+        / report.model_bytes as f64;
+    // dense: one model per step (+ tiny headers)
+    assert!((per_step - 1.0).abs() < 0.01, "{per_step}");
+}
