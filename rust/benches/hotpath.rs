@@ -1,7 +1,11 @@
 //! Hot-path microbenchmarks (the §Perf instrument): per-layer costs of
-//! everything on the request path — compressors, codecs, LMOs (native NS vs
-//! the Pallas/PJRT artifact), matmul throughput, and a full end-to-end
-//! coordinator round on the synthetic backend.
+//! everything on the request path — matmul throughput (single-thread vs
+//! threaded), Newton–Schulz, compressors, codecs, and a full end-to-end
+//! coordinator round (threaded leader/worker vs the sequential reference
+//! driver) on the synthetic backend.
+//!
+//! Emits `BENCH_hotpath.json` at the repo root (name/median_s/GFLOP/s per
+//! entry) so the perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench hotpath [-- --iters 30]`
 
@@ -9,48 +13,80 @@ use efmuon::compress::{codec, parse_spec};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
 use efmuon::dist::TransportMode;
-use efmuon::funcs::{Objective, Quadratics};
-use efmuon::linalg::matmul::matmul;
+use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics};
+use efmuon::linalg::matmul::matmul_into_with_threads;
 use efmuon::linalg::ns::newton_schulz;
 use efmuon::linalg::Matrix;
 use efmuon::lmo::LmoKind;
+use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
 use efmuon::runtime::ModelRuntime;
 use efmuon::util::cli::Args;
+use efmuon::util::json::{Json, JsonObj};
 use efmuon::util::rng::Rng;
-use efmuon::util::timer::bench_fn;
+use efmuon::util::timer::{bench_fn, BenchResult};
+
+/// One emitted benchmark record.
+struct Entry {
+    result: BenchResult,
+    gflops: Option<f64>,
+}
+
+fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
+    let gflops = flops.map(|f| f / result.median_s / 1e9);
+    match gflops {
+        Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
+        None => println!("{}", result.report()),
+    }
+    entries.push(Entry { result, gflops });
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let iters = args.usize("iters", 30);
     let mut rng = Rng::new(0);
-    let mut results = Vec::new();
+    let mut entries: Vec<Entry> = Vec::new();
+    let cores = efmuon::util::threads::num_threads();
+    println!("hot-path bench: {cores} thread(s) available, {iters} iters\n");
 
-    // ---- matmul throughput (512x128x512: the mlp_proj-shaped contraction)
+    // ---- matmul throughput (512x128x512: the mlp_proj-shaped contraction),
+    //      single-thread baseline vs the row-partitioned threaded kernel
     {
         let a = Matrix::randn(512, 128, 1.0, &mut rng);
         let b = Matrix::randn(128, 512, 1.0, &mut rng);
+        let mut c = Matrix::zeros(512, 512);
         let flops = 2.0 * 512.0 * 128.0 * 512.0;
-        let r = bench_fn("matmul 512x128x512 (native)", 3, iters, || {
-            std::hint::black_box(matmul(&a, &b));
+        let r1 = bench_fn("matmul 512x128x512 (1 thread)", 3, iters, || {
+            matmul_into_with_threads(&a, &b, std::hint::black_box(&mut c), 1);
         });
-        println!("{}   [{:.2} GFLOP/s]", r.report(), flops / r.median_s / 1e9);
-        results.push(r);
+        push(&mut entries, r1, Some(flops));
+        let rn = bench_fn(
+            &format!("matmul 512x128x512 ({cores} threads)"),
+            3,
+            iters,
+            || {
+                matmul_into_with_threads(&a, &b, std::hint::black_box(&mut c), cores);
+            },
+        );
+        let speedup = entries[entries.len() - 1].result.median_s / rn.median_s;
+        push(&mut entries, rn, Some(flops));
+        println!("  -> threaded speedup: {speedup:.2}x over 1 thread");
     }
 
-    // ---- Newton–Schulz: native vs Pallas/PJRT artifact
+    // ---- Newton–Schulz: native (workspace arena, threaded matmul inside)
+    //      vs the Pallas/PJRT artifact
     {
         let g = Matrix::randn(128, 512, 1.0, &mut rng);
         let r = bench_fn("newton_schulz 128x512 (native rust)", 2, iters, || {
             std::hint::black_box(newton_schulz(&g, 5));
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
         if let Ok(rt) = ModelRuntime::load("artifacts") {
             if rt.has_ns_for(128, 512) {
                 let r = bench_fn("newton_schulz 128x512 (pallas/pjrt)", 2, iters, || {
                     std::hint::black_box(rt.ns_orthogonalize(&g).unwrap().unwrap());
                 });
-                println!("{}", r.report());
+                push(&mut entries, r, None);
             }
         } else {
             eprintln!("  (no artifacts; skipping PJRT NS bench)");
@@ -66,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         let r = bench_fn(&format!("compress {spec} 128x512"), 2, iters, || {
             std::hint::black_box(c.compress(&x, &mut rng2));
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
     }
 
     // ---- codec roundtrip
@@ -78,7 +114,7 @@ fn main() -> anyhow::Result<()> {
             let bytes = codec::encode(&msg);
             std::hint::black_box(codec::decode(&bytes).unwrap());
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
     }
 
     // ---- full coordinator round on the synthetic backend (protocol
@@ -105,7 +141,61 @@ fn main() -> anyhow::Result<()> {
         let r = bench_fn("coordinator round (4 workers, d=4096)", 3, iters, || {
             coord.round().unwrap();
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
+    }
+
+    // ---- threaded leader/worker vs the sequential reference driver on a
+    //      grad-heavy matrix objective (spectral LMO, RankK uplink): the
+    //      dist deployment overlaps the 4 workers' gradient + compression
+    //      work across OS threads; the sequential driver runs them one
+    //      after another (plus its per-step loss/grad-norm telemetry).
+    {
+        let mk = || MatrixQuadratic::new(4, 192, 192, 0.0, &mut Rng::new(4));
+        let geom = vec![LayerGeometry { lmo: LmoKind::Spectral, radius_mult: 1.0 }];
+        let cfg_iters = iters.min(10);
+
+        let q_seq = mk();
+        let mut seq = Ef21MuonSeq::new(
+            &q_seq,
+            geom.clone(),
+            "rank:0.2",
+            "id",
+            0.9,
+            Schedule::constant(0.01),
+            false,
+            4,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let r_seq = bench_fn("ef21 round, sequential driver (4 workers, 192x192)", 2, cfg_iters, || {
+            std::hint::black_box(seq.step(&q_seq));
+        });
+        push(&mut entries, r_seq, None);
+
+        let q_dist = mk();
+        let x0 = q_dist.init(&mut Rng::new(4));
+        let svc = GradService::spawn_objective(Box::new(q_dist), 4);
+        let mut coord = Coordinator::spawn(
+            x0,
+            geom,
+            svc.handle(),
+            CoordinatorCfg {
+                n_workers: 4,
+                worker_comp: "rank:0.2".into(),
+                server_comp: "id".into(),
+                beta: 0.9,
+                schedule: Schedule::constant(0.01),
+                transport: TransportMode::Counted,
+                seed: 4,
+                use_ns_artifact: false,
+            },
+        )?;
+        let r_dist = bench_fn("ef21 round, threaded coordinator (4 workers, 192x192)", 2, cfg_iters, || {
+            coord.round().unwrap();
+        });
+        let seq_s = entries[entries.len() - 1].result.median_s;
+        let speed = seq_s / r_dist.median_s;
+        push(&mut entries, r_dist, None);
+        println!("  -> threaded coordinator round: {speed:.2}x vs sequential driver");
     }
 
     // ---- PJRT grad step (the dominant cost of a real round)
@@ -119,12 +209,41 @@ fn main() -> anyhow::Result<()> {
         let r = bench_fn("pjrt grad step (micro, batch 8)", 1, iters.min(10), || {
             std::hint::black_box(rt.grad(&params, &toks, &tgts).unwrap());
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
         let r = bench_fn("pjrt eval step (micro, batch 8)", 1, iters.min(10), || {
             std::hint::black_box(rt.eval_loss(&params, &toks, &tgts).unwrap());
         });
-        println!("{}", r.report());
+        push(&mut entries, r, None);
     }
+
+    // ---- machine-readable record at the repo root
+    let out_path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_hotpath.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
+    let arr: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            let mut o = JsonObj::new()
+                .put("name", e.result.name.as_str())
+                .put("median_s", e.result.median_s)
+                .put("mad_s", e.result.mad_s)
+                .put("min_s", e.result.min_s)
+                .put("iters", e.result.iters);
+            if let Some(g) = e.gflops {
+                o = o.put("gflops", g);
+            }
+            o.build()
+        })
+        .collect();
+    let doc = JsonObj::new()
+        .put("bench", "hotpath")
+        .put("threads", cores)
+        .put("entries", Json::Arr(arr))
+        .build();
+    std::fs::write(out_path, doc.to_string())?;
+    println!("\nwrote {out_path} ({} entries)", entries.len());
 
     Ok(())
 }

@@ -1,0 +1,86 @@
+//! Channel transport between the leader and its worker threads.
+//!
+//! A [`Wire`] is one hop's worth of per-layer messages in either transport
+//! mode. `Counted` ships the in-memory [`Message`]s and meters their
+//! analytic `wire_bytes()`; `Encoded` runs the real codec both ways —
+//! `codec::encode` produces *exactly* `wire_bytes()` bytes and round-trips
+//! losslessly (asserted in `rust/tests/compressors.rs`), so the two modes
+//! agree on both bytes and trajectory (asserted in `rust/tests/dist.rs`).
+
+use crate::compress::{codec, Message};
+
+use super::TransportMode;
+
+/// One hop (broadcast or uplink) of per-layer messages on the wire.
+#[derive(Debug, Clone)]
+pub enum Wire {
+    Counted(Vec<Message>),
+    Encoded(Vec<Vec<u8>>),
+}
+
+impl Wire {
+    /// Serialize (or wrap) messages for transport; returns the wire and the
+    /// exact byte count it occupies.
+    pub fn pack(msgs: Vec<Message>, mode: TransportMode) -> (Wire, usize) {
+        match mode {
+            TransportMode::Counted => {
+                let bytes = msgs.iter().map(|m| m.wire_bytes()).sum();
+                (Wire::Counted(msgs), bytes)
+            }
+            TransportMode::Encoded => {
+                let bufs: Vec<Vec<u8>> = msgs.iter().map(codec::encode).collect();
+                let bytes = bufs.iter().map(|b| b.len()).sum();
+                (Wire::Encoded(bufs), bytes)
+            }
+        }
+    }
+
+    /// Deserialize back into per-layer messages.
+    pub fn unpack(self) -> Result<Vec<Message>, String> {
+        match self {
+            Wire::Counted(msgs) => Ok(msgs),
+            Wire::Encoded(bufs) => bufs.iter().map(|b| codec::decode(b)).collect(),
+        }
+    }
+}
+
+/// Leader → worker commands.
+pub enum ToWorker {
+    /// Run one EF21 round: apply this broadcast, compute, reply.
+    Round { broadcast: Wire },
+    /// Exit the worker loop.
+    Stop,
+}
+
+/// Worker → leader replies.
+pub enum FromWorker {
+    /// Initial local gradient estimator `G⁰ⱼ` (server averages these).
+    Init { id: usize, g0: crate::linalg::matrix::Layers },
+    /// One round's uplink: local train loss + compressed residuals.
+    Round { id: usize, loss: f32, bytes: usize, uplink: Wire },
+    /// Irrecoverable worker-side failure.
+    Failed { id: usize, err: String },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::parse_spec;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn both_modes_roundtrip_and_agree_on_bytes() {
+        let mut rng = Rng::new(8);
+        let x = Matrix::randn(16, 32, 1.0, &mut rng);
+        let msg = parse_spec("top:0.2+nat").unwrap().compress(&x, &mut rng);
+        let analytic = msg.wire_bytes();
+
+        let (wc, bc) = Wire::pack(vec![msg.clone()], TransportMode::Counted);
+        let (we, be) = Wire::pack(vec![msg.clone()], TransportMode::Encoded);
+        assert_eq!(bc, analytic);
+        assert_eq!(be, analytic, "codec must emit exactly wire_bytes()");
+        assert_eq!(wc.unpack().unwrap()[0], msg);
+        assert_eq!(we.unpack().unwrap()[0], msg, "codec must be lossless");
+    }
+}

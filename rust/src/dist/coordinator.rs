@@ -1,0 +1,305 @@
+//! The leader: owns the EF21 server state, one OS thread per worker, and
+//! the round loop. Exactly Algorithm 3 — the same [`ServerState`] /
+//! [`WorkerState`] machines as the sequential reference driver, so
+//! `rust/tests/dist.rs` can assert bit-equal trajectories.
+//!
+//! Determinism: worker replies are collected into id-indexed slots and
+//! absorbed in worker order; per-layer LMO RNG streams are pre-split; the
+//! threaded matmul is bit-stable in the thread count. A distributed run is
+//! therefore reproducible from its seed on any machine.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::matrix::{layers, Layers};
+use crate::opt::ef21::{ServerState, WorkerState};
+use crate::opt::{LayerGeometry, Schedule};
+
+use super::comm::{FromWorker, ToWorker, Wire};
+use super::server::SpectralServer;
+use super::service::GradHandle;
+use super::{Meter, TransportMode};
+
+/// Configuration of one distributed EF21-Muon deployment.
+#[derive(Debug, Clone)]
+pub struct CoordinatorCfg {
+    pub n_workers: usize,
+    /// w2s compressor spec (per layer), e.g. `top:0.1+nat`.
+    pub worker_comp: String,
+    /// s2w compressor spec (the paper fixes this to `id`).
+    pub server_comp: String,
+    /// Momentum β.
+    pub beta: f32,
+    /// Radius / learning-rate schedule.
+    pub schedule: Schedule,
+    pub transport: TransportMode,
+    pub seed: u64,
+    /// Route spectral LMOs through the PJRT NS artifact when available.
+    pub use_ns_artifact: bool,
+}
+
+/// Telemetry of one distributed round.
+#[derive(Debug, Clone)]
+pub struct RoundStats {
+    pub step: usize,
+    /// Mean of the workers' local train losses this round.
+    pub train_loss: f32,
+    /// LMO radius used this round.
+    pub radius: f64,
+    /// w2s bytes sent by one worker (the paper's reporting unit).
+    pub w2s_bytes_per_worker: usize,
+    /// s2w broadcast bytes (counted once).
+    pub s2w_bytes: usize,
+}
+
+/// The leader of a threaded EF21-Muon deployment.
+pub struct Coordinator {
+    server: ServerState,
+    schedule: Schedule,
+    transport: TransportMode,
+    spectral: SpectralServer,
+    handle: GradHandle,
+    meter: Meter,
+    step: usize,
+    to_workers: Vec<Sender<ToWorker>>,
+    from_workers: Receiver<FromWorker>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker threads, run the Algorithm-3 initialization
+    /// (`G⁰ = (1/n) Σⱼ ∇fⱼ(X⁰)`), and return the ready leader.
+    pub fn spawn(
+        x0: Layers,
+        geometry: Vec<LayerGeometry>,
+        handle: GradHandle,
+        cfg: CoordinatorCfg,
+    ) -> Result<Coordinator> {
+        if cfg.n_workers == 0 {
+            return Err(anyhow!("n_workers must be >= 1"));
+        }
+        let mut server = ServerState::new(
+            x0.clone(),
+            geometry,
+            &cfg.server_comp,
+            cfg.n_workers,
+            cfg.seed,
+        )
+        .map_err(anyhow::Error::msg)?;
+
+        let (reply_tx, reply_rx) = channel::<FromWorker>();
+        let mut to_workers = Vec::with_capacity(cfg.n_workers);
+        let mut joins = Vec::with_capacity(cfg.n_workers);
+        for j in 0..cfg.n_workers {
+            let state = WorkerState::new(j, &x0, &cfg.worker_comp, cfg.beta, cfg.seed)
+                .map_err(anyhow::Error::msg)?;
+            let (tx, rx) = channel::<ToWorker>();
+            let rtx = reply_tx.clone();
+            let h = handle.for_worker(j);
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("efmuon-worker-{j}"))
+                    .spawn(move || worker_main(state, rx, rtx, h))
+                    .map_err(|e| anyhow!("spawning worker {j}: {e}"))?,
+            );
+            to_workers.push(tx);
+        }
+        drop(reply_tx);
+
+        // initialization: collect G⁰ⱼ into id-slots, average in worker order
+        // (bit-identical to the sequential driver's init loop)
+        let mut g0: Vec<Option<Layers>> = (0..cfg.n_workers).map(|_| None).collect();
+        for _ in 0..cfg.n_workers {
+            match reply_rx.recv() {
+                Ok(FromWorker::Init { id, g0: g }) => g0[id] = Some(g),
+                Ok(FromWorker::Failed { id, err }) => {
+                    return Err(anyhow!("worker {id} failed during init: {err}"))
+                }
+                Ok(FromWorker::Round { id, .. }) => {
+                    return Err(anyhow!("worker {id} sent a round reply before init"))
+                }
+                Err(_) => return Err(anyhow!("worker channel closed during init")),
+            }
+        }
+        let mut g0_avg = layers::zeros_like(&x0);
+        let inv = 1.0 / cfg.n_workers as f32;
+        for g in g0.into_iter() {
+            layers::axpy(&mut g0_avg, inv, &g.expect("all init slots filled"));
+        }
+        server.set_g0(g0_avg);
+
+        Ok(Coordinator {
+            server,
+            schedule: cfg.schedule,
+            transport: cfg.transport,
+            spectral: SpectralServer::new(handle.clone(), cfg.use_ns_artifact),
+            handle,
+            meter: Meter::new(),
+            step: 0,
+            to_workers,
+            from_workers: reply_rx,
+            joins,
+        })
+    }
+
+    /// One full round of Algorithm 3 across the worker threads.
+    pub fn round(&mut self) -> Result<RoundStats> {
+        let n = self.to_workers.len();
+        let t = self.schedule.at(self.step);
+
+        // server: LMO step (per-layer fan-out; PJRT NS artifact when hooked)
+        if self.spectral.enabled() {
+            let spectral = &self.spectral;
+            let hook = move |g: &crate::linalg::Matrix| spectral.orthogonalize(g);
+            self.server.lmo_step_with(t, Some(&hook));
+        } else {
+            self.server.lmo_step(t);
+        }
+
+        // server: compress the shifted model, advance W, broadcast
+        let bcast = self.server.broadcast();
+        let (wire, s2w_bytes) = Wire::pack(bcast, self.transport);
+        for tx in &self.to_workers {
+            tx.send(ToWorker::Round { broadcast: wire.clone() })
+                .map_err(|_| anyhow!("a worker thread has exited"))?;
+        }
+
+        // workers: apply broadcast, grad, momentum, compress — in parallel.
+        // Collect replies into id-slots so absorption order is fixed.
+        let mut slots: Vec<Option<(f32, usize, Wire)>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match self.from_workers.recv() {
+                Ok(FromWorker::Round { id, loss, bytes, uplink }) => {
+                    slots[id] = Some((loss, bytes, uplink))
+                }
+                Ok(FromWorker::Failed { id, err }) => {
+                    return Err(anyhow!("worker {id} failed: {err}"))
+                }
+                Ok(FromWorker::Init { id, .. }) => {
+                    return Err(anyhow!("unexpected re-init from worker {id}"))
+                }
+                Err(_) => return Err(anyhow!("worker channel closed mid-round")),
+            }
+        }
+        let mut all_msgs = Vec::with_capacity(n);
+        let mut loss_acc = 0.0f64;
+        let mut w2s_per_worker = 0usize;
+        let mut w2s_all = 0u64;
+        for slot in slots.into_iter() {
+            let (loss, bytes, uplink) = slot.expect("all round slots filled");
+            loss_acc += loss as f64;
+            w2s_per_worker = bytes;
+            w2s_all += bytes as u64;
+            all_msgs.push(uplink.unpack().map_err(anyhow::Error::msg)?);
+        }
+
+        // server: absorb the averaged residuals (worker order)
+        self.server.absorb(&all_msgs);
+        self.meter
+            .record_round(w2s_per_worker as u64, w2s_all, s2w_bytes as u64);
+
+        let stats = RoundStats {
+            step: self.step,
+            train_loss: (loss_acc / n as f64) as f32,
+            radius: t,
+            w2s_bytes_per_worker: w2s_per_worker,
+            s2w_bytes,
+        };
+        self.step += 1;
+        Ok(stats)
+    }
+
+    /// Evaluation loss at the current server parameters.
+    pub fn eval(&self) -> Result<f32> {
+        self.handle.eval(self.server.x.clone())
+    }
+
+    /// Current model parameters (server X).
+    pub fn params(&self) -> &Layers {
+        &self.server.x
+    }
+
+    /// Cumulative communication meters.
+    pub fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    /// Rounds completed.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Worker-thread main loop: init, then one EF21 local step per command.
+fn worker_main(
+    mut state: WorkerState,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+    mut handle: GradHandle,
+) {
+    let id = state.id;
+    // theory init: M⁰ⱼ = G⁰ⱼ = ∇fⱼ(X⁰) (W starts at X⁰)
+    match handle.grad(id, &state.w) {
+        Ok((_, grad0)) => {
+            let g0 = state.init_estimators(grad0);
+            if tx.send(FromWorker::Init { id, g0 }).is_err() {
+                return;
+            }
+        }
+        Err(e) => {
+            let _ = tx.send(FromWorker::Failed { id, err: format!("{e:#}") });
+            return;
+        }
+    }
+    while let Ok(cmd) = rx.recv() {
+        let broadcast = match cmd {
+            ToWorker::Stop => break,
+            ToWorker::Round { broadcast } => broadcast,
+        };
+        let mode = wire_mode(&broadcast);
+        let msgs = match broadcast.unpack() {
+            Ok(m) => m,
+            Err(e) => {
+                let _ = tx.send(FromWorker::Failed { id, err: format!("bad broadcast: {e}") });
+                break;
+            }
+        };
+        state.apply_broadcast(&msgs);
+        let (loss, grad) = match handle.grad(id, &state.w) {
+            Ok(v) => v,
+            Err(e) => {
+                let _ = tx.send(FromWorker::Failed { id, err: format!("{e:#}") });
+                break;
+            }
+        };
+        let uplink_msgs = state.local_step(&grad);
+        let (uplink, bytes) = Wire::pack(uplink_msgs, mode);
+        if tx
+            .send(FromWorker::Round { id, loss, bytes, uplink })
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// The uplink reuses the broadcast's transport mode.
+fn wire_mode(w: &Wire) -> TransportMode {
+    match w {
+        Wire::Counted(_) => TransportMode::Counted,
+        Wire::Encoded(_) => TransportMode::Encoded,
+    }
+}

@@ -1,0 +1,74 @@
+//! Distributed deployment of EF21-Muon: a threaded leader/worker runtime
+//! that drives the *same* state machines as the sequential reference in
+//! [`crate::opt::ef21`] — the protocol logic lives there, transport and
+//! scheduling live here (DESIGN.md §Dist).
+//!
+//! Topology (one process, one OS thread per role):
+//!
+//! ```text
+//!   caller thread ──► Coordinator::round()
+//!        │   lmo_step (per-layer fan-out) + broadcast
+//!        ├─ comm::Wire ─► worker thread 0 ─┐   apply_broadcast,
+//!        ├─ comm::Wire ─► worker thread 1 ─┤   grad via GradHandle,
+//!        ├─ ...                            │   local_step (compress)
+//!        └─ comm::Wire ─► worker thread n ─┘
+//!        ◄───────── uplink Wire + loss ────┘   absorb, meter
+//! ```
+//!
+//! Gradients come from a [`service::GradService`]: either a synthetic
+//! [`crate::funcs::Objective`] evaluated *inside* each worker thread (fully
+//! parallel), or the PJRT model runtime on a dedicated service thread (PJRT
+//! handles are not `Send`, so all executions serialize there — which is
+//! also the fastest layout for a single XLA CPU client).
+
+pub mod comm;
+pub mod coordinator;
+pub mod server;
+pub mod service;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// How compressed messages travel between leader and workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportMode {
+    /// Pass decoded [`crate::compress::Message`]s through the channel and
+    /// meter `wire_bytes()` analytically (fast; default).
+    Counted,
+    /// Run the real wire codec on every message (encode on send, decode on
+    /// receive) — bit-exact transport simulation; byte meters count the
+    /// actual encoded buffers. Lossless, so trajectories match `Counted`.
+    Encoded,
+}
+
+/// Cumulative communication meters for one coordinator (bytes).
+#[derive(Debug, Default)]
+pub struct Meter {
+    /// w2s bytes sent by ONE worker (the paper's reporting unit).
+    pub w2s_per_worker: AtomicU64,
+    /// w2s bytes summed over ALL workers.
+    pub w2s_all: AtomicU64,
+    /// s2w broadcast bytes (counted once per round, not per worker).
+    pub s2w_total: AtomicU64,
+}
+
+impl Meter {
+    pub fn new() -> Meter {
+        Meter::default()
+    }
+
+    /// Per-worker uplink total.
+    pub fn w2s(&self) -> u64 {
+        self.w2s_per_worker.load(Ordering::Relaxed)
+    }
+
+    /// Broadcast total.
+    pub fn s2w(&self) -> u64 {
+        self.s2w_total.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn record_round(&self, w2s_per_worker: u64, w2s_all: u64, s2w: u64) {
+        self.w2s_per_worker.fetch_add(w2s_per_worker, Ordering::Relaxed);
+        self.w2s_all.fetch_add(w2s_all, Ordering::Relaxed);
+        self.s2w_total.fetch_add(s2w, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,85 @@
+//! Server-side spectral-engine hook: routes the coordinator's spectral LMO
+//! steps through the Pallas/PJRT Newton–Schulz artifact when one exists for
+//! the layer's shape (see `lmo::SpectralEngine` — the native engine lives
+//! there, this one needs a runtime handle, so it lives in `dist`).
+//!
+//! Per-shape support is learned lazily and cached, so on the synthetic
+//! backend (or for shapes without an artifact) the hook costs one probe per
+//! shape and then gets out of the way of the native NS path.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::linalg::matrix::Matrix;
+
+use super::service::GradHandle;
+
+/// Spectral LMO engine backed by the grad service's NS artifacts.
+pub struct SpectralServer {
+    handle: GradHandle,
+    enabled: bool,
+    /// shape → whether the backend has an artifact for it
+    supported: RefCell<BTreeMap<(usize, usize), bool>>,
+}
+
+impl SpectralServer {
+    pub fn new(handle: GradHandle, enabled: bool) -> SpectralServer {
+        SpectralServer { handle, enabled, supported: RefCell::new(BTreeMap::new()) }
+    }
+
+    /// Orthogonalize `g` via the artifact engine; `None` = caller should use
+    /// the native Newton–Schulz (disabled, unsupported shape, or error —
+    /// errors demote to the native path rather than failing the round).
+    pub fn orthogonalize(&self, g: &Matrix) -> Option<Matrix> {
+        if !self.enabled {
+            return None;
+        }
+        let shape = (g.rows, g.cols);
+        if self.supported.borrow().get(&shape) == Some(&false) {
+            return None;
+        }
+        match self.handle.ns_orthogonalize(g) {
+            Ok(Some(o)) => {
+                self.supported.borrow_mut().insert(shape, true);
+                Some(o)
+            }
+            Ok(None) | Err(_) => {
+                self.supported.borrow_mut().insert(shape, false);
+                None
+            }
+        }
+    }
+
+    /// Whether any call so far has actually hit the artifact engine.
+    pub fn engaged(&self) -> bool {
+        self.supported.borrow().values().any(|&v| v)
+    }
+
+    /// `true` when the hook is worth installing at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::service::GradService;
+    use crate::funcs::Quadratics;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn objective_backend_demotes_to_native() {
+        let mut rng = Rng::new(80);
+        let q = Quadratics::new(2, 4, 0.5, 0.0, &mut rng);
+        let svc = GradService::spawn_objective(Box::new(q), 1);
+        let srv = SpectralServer::new(svc.handle(), true);
+        let g = Matrix::randn(4, 4, 1.0, &mut rng);
+        assert!(srv.orthogonalize(&g).is_none());
+        assert!(!srv.engaged());
+        // cached: second probe takes the fast path
+        assert!(srv.orthogonalize(&g).is_none());
+        let off = SpectralServer::new(svc.handle(), false);
+        assert!(off.orthogonalize(&g).is_none());
+    }
+}

@@ -1,0 +1,333 @@
+//! The gradient service: one logical endpoint the worker threads pull
+//! losses/gradients from and the coordinator pulls eval + spectral-engine
+//! results from. Two backends:
+//!
+//! - **Objective** ([`GradService::spawn_objective`]): a synthetic
+//!   [`Objective`] shared via `Arc`. Gradients are computed *inline in the
+//!   calling worker thread* (no service thread, no serialization), each
+//!   worker with its own deterministic RNG stream for stochastic draws.
+//! - **PJRT** ([`GradService::spawn_pjrt`]): the AOT-compiled model
+//!   executed through the XLA runtime. PJRT handles are not `Send`, so a
+//!   dedicated service thread owns the [`ModelRuntime`], the corpus and the
+//!   per-worker data shards; requests serialize over an mpsc channel.
+//!
+//! Handles are cheap to clone; [`GradHandle::for_worker`] derives the
+//! worker-specific gradient RNG stream.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::funcs::Objective;
+use crate::linalg::matrix::{Layers, Matrix};
+use crate::util::rng::Rng;
+
+/// RNG stream tag base for worker `j`'s stochastic-gradient draws — shared
+/// by every site that derives a worker gradient stream so the objective
+/// backend (inline), the lazy-handle fallback and the PJRT service all
+/// sample identically for the same seed.
+const GRAD_STREAM_BASE: u64 = 0x6ead;
+
+fn grad_stream(worker: usize) -> u64 {
+    GRAD_STREAM_BASE + worker as u64
+}
+
+/// Requests served by the PJRT service thread.
+enum Req {
+    /// Local loss + gradient for `worker` at `params`.
+    Grad {
+        worker: usize,
+        params: Layers,
+        reply: Sender<Result<(f32, Layers), String>>,
+    },
+    /// Mean eval loss over the held-out batches at `params`.
+    Eval {
+        params: Layers,
+        reply: Sender<Result<f32, String>>,
+    },
+    /// Newton–Schulz orthogonalization through the Pallas/PJRT artifact;
+    /// `Ok(None)` when no artifact matches the shape.
+    Ns {
+        g: Matrix,
+        reply: Sender<Result<Option<Matrix>, String>>,
+    },
+    Shutdown,
+}
+
+#[derive(Clone)]
+enum HandleInner {
+    Local {
+        obj: Arc<dyn Objective>,
+        seed: u64,
+        /// (worker, stream) for that worker's stochastic-gradient draws,
+        /// installed by [`GradHandle::for_worker`] (or lazily on first use)
+        rng: Option<(usize, Rng)>,
+    },
+    Pjrt {
+        tx: Sender<Req>,
+    },
+}
+
+/// Cheap clonable handle to a [`GradService`].
+#[derive(Clone)]
+pub struct GradHandle {
+    inner: HandleInner,
+}
+
+impl GradHandle {
+    /// Derive the handle a specific worker thread should own: installs that
+    /// worker's deterministic gradient RNG stream (objective backend; the
+    /// PJRT backend keeps per-worker sampling state service-side).
+    pub fn for_worker(&self, worker: usize) -> GradHandle {
+        match &self.inner {
+            HandleInner::Local { obj, seed, .. } => GradHandle {
+                inner: HandleInner::Local {
+                    obj: obj.clone(),
+                    seed: *seed,
+                    rng: Some((worker, Rng::with_stream(*seed, grad_stream(worker)))),
+                },
+            },
+            HandleInner::Pjrt { tx } => GradHandle { inner: HandleInner::Pjrt { tx: tx.clone() } },
+        }
+    }
+
+    /// Local train loss `f_j` + gradient for `worker` at `params`.
+    /// Objective backend: computed inline in the calling thread (workers
+    /// run fully in parallel). PJRT backend: proxied to the service thread.
+    pub fn grad(&mut self, worker: usize, params: &Layers) -> Result<(f32, Layers)> {
+        match &mut self.inner {
+            HandleInner::Local { obj, seed, rng } => {
+                // a handle caches one worker's stream; on a mismatch (handle
+                // not specialized via for_worker, or reused across workers)
+                // re-derive the requested worker's stream from the seed
+                let seed = *seed;
+                match rng {
+                    Some((w, _)) if *w == worker => {}
+                    _ => *rng = Some((worker, Rng::with_stream(seed, grad_stream(worker)))),
+                }
+                let (_, r) = rng.as_mut().expect("just installed");
+                let g = obj.stoch_grad_j(worker, params, r);
+                let loss = obj.loss_j(worker, params) as f32;
+                Ok((loss, g))
+            }
+            HandleInner::Pjrt { tx } => {
+                let (rtx, rrx) = channel();
+                tx.send(Req::Grad { worker, params: params.clone(), reply: rtx })
+                    .map_err(|_| anyhow!("grad service is down"))?;
+                rrx.recv()
+                    .map_err(|_| anyhow!("grad service dropped the request"))?
+                    .map_err(anyhow::Error::msg)
+            }
+        }
+    }
+
+    /// Evaluation loss at `params` (deterministic given params).
+    pub fn eval(&self, params: Layers) -> Result<f32> {
+        match &self.inner {
+            HandleInner::Local { obj, .. } => Ok(obj.loss(&params) as f32),
+            HandleInner::Pjrt { tx } => {
+                let (rtx, rrx) = channel();
+                tx.send(Req::Eval { params, reply: rtx })
+                    .map_err(|_| anyhow!("grad service is down"))?;
+                rrx.recv()
+                    .map_err(|_| anyhow!("grad service dropped the request"))?
+                    .map_err(anyhow::Error::msg)
+            }
+        }
+    }
+
+    /// Orthogonalize through the PJRT NS artifact; `Ok(None)` when the
+    /// backend has no artifact for this shape (callers fall back to the
+    /// native Newton–Schulz).
+    pub fn ns_orthogonalize(&self, g: &Matrix) -> Result<Option<Matrix>> {
+        match &self.inner {
+            HandleInner::Local { .. } => Ok(None),
+            HandleInner::Pjrt { tx } => {
+                let (rtx, rrx) = channel();
+                tx.send(Req::Ns { g: g.clone(), reply: rtx })
+                    .map_err(|_| anyhow!("grad service is down"))?;
+                rrx.recv()
+                    .map_err(|_| anyhow!("grad service dropped the request"))?
+                    .map_err(anyhow::Error::msg)
+            }
+        }
+    }
+}
+
+/// The gradient service (owns the backend; see module docs).
+pub struct GradService {
+    handle: GradHandle,
+    /// PJRT backend only: request sender + service thread join handle.
+    pjrt: Option<(Sender<Req>, JoinHandle<()>)>,
+}
+
+impl GradService {
+    /// Synthetic backend: gradients evaluated inline in worker threads.
+    pub fn spawn_objective(obj: Box<dyn Objective>, seed: u64) -> GradService {
+        let obj: Arc<dyn Objective> = Arc::from(obj);
+        GradService {
+            handle: GradHandle { inner: HandleInner::Local { obj, seed, rng: None } },
+            pjrt: None,
+        }
+    }
+
+    /// PJRT backend: load the AOT artifacts from `artifacts`, build the
+    /// synthetic corpus (`corpus_tokens` tokens) sharded over `workers`,
+    /// pre-sample `eval_batches` held-out batches, and serve requests on a
+    /// dedicated thread. Fails fast if the artifacts are missing or the XLA
+    /// runtime is unavailable.
+    pub fn spawn_pjrt(
+        artifacts: String,
+        workers: usize,
+        corpus_tokens: usize,
+        eval_batches: usize,
+        seed: u64,
+    ) -> Result<GradService> {
+        let (tx, rx) = channel::<Req>();
+        let (init_tx, init_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("efmuon-grad-svc".to_string())
+            .spawn(move || pjrt_service_main(artifacts, workers, corpus_tokens, eval_batches, seed, rx, init_tx))
+            .map_err(|e| anyhow!("spawning grad service: {e}"))?;
+        match init_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = join.join();
+                return Err(anyhow!(e));
+            }
+            Err(_) => {
+                let _ = join.join();
+                return Err(anyhow!("grad service died during init"));
+            }
+        }
+        Ok(GradService {
+            handle: GradHandle { inner: HandleInner::Pjrt { tx: tx.clone() } },
+            pjrt: Some((tx, join)),
+        })
+    }
+
+    /// A clonable handle onto this service.
+    pub fn handle(&self) -> GradHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for GradService {
+    fn drop(&mut self) {
+        if let Some((tx, join)) = self.pjrt.take() {
+            let _ = tx.send(Req::Shutdown);
+            let _ = join.join();
+        }
+    }
+}
+
+/// Service-thread main for the PJRT backend.
+fn pjrt_service_main(
+    artifacts: String,
+    workers: usize,
+    corpus_tokens: usize,
+    eval_batches: usize,
+    seed: u64,
+    rx: Receiver<Req>,
+    init_tx: Sender<Result<(), String>>,
+) {
+    let rt = match crate::runtime::ModelRuntime::load(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = init_tx.send(Err(format!("loading artifacts from {artifacts}: {e:#}")));
+            return;
+        }
+    };
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq_len;
+    let batch = rt.manifest.batch;
+    let corpus = crate::data::Corpus::zipf_markov(corpus_tokens, vocab, seed);
+    // held-out eval stream: disjoint seed, whole-corpus shard, pre-sampled
+    // once so eval is a pure function of the parameters
+    let mut eval_rng = Rng::with_stream(seed, 0xe7a1);
+    let eval_shard = crate::data::Shard::new(&corpus, 0, 1, seq);
+    let eval_set: Vec<(Vec<i32>, Vec<i32>)> = (0..eval_batches.max(1))
+        .map(|_| eval_shard.sample_batch(batch, &mut eval_rng))
+        .collect();
+    let mut worker_rngs: Vec<Rng> = (0..workers.max(1))
+        .map(|j| Rng::with_stream(seed, grad_stream(j)))
+        .collect();
+    let _ = init_tx.send(Ok(()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Grad { worker, params, reply } => {
+                let out = (|| -> Result<(f32, Layers), String> {
+                    if worker >= worker_rngs.len() {
+                        return Err(format!(
+                            "worker {worker} out of range (service sized for {})",
+                            worker_rngs.len()
+                        ));
+                    }
+                    let shard = crate::data::Shard::new(&corpus, worker, worker_rngs.len(), seq);
+                    let (toks, tgts) = shard.sample_batch(batch, &mut worker_rngs[worker]);
+                    rt.grad(&params, &toks, &tgts).map_err(|e| format!("{e:#}"))
+                })();
+                let _ = reply.send(out);
+            }
+            Req::Eval { params, reply } => {
+                let out = (|| -> Result<f32, String> {
+                    let mut acc = 0.0f64;
+                    for (toks, tgts) in &eval_set {
+                        acc += rt
+                            .eval_loss(&params, toks, tgts)
+                            .map_err(|e| format!("{e:#}"))? as f64;
+                    }
+                    Ok((acc / eval_set.len() as f64) as f32)
+                })();
+                let _ = reply.send(out);
+            }
+            Req::Ns { g, reply } => {
+                let out = match rt.ns_orthogonalize(&g) {
+                    None => Ok(None),
+                    Some(Ok(o)) => Ok(Some(o)),
+                    Some(Err(e)) => Err(format!("{e:#}")),
+                };
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::funcs::Quadratics;
+
+    #[test]
+    fn objective_backend_is_inline_and_deterministic() {
+        let mut rng = Rng::new(70);
+        let q = Quadratics::new(3, 6, 0.5, 0.0, &mut rng);
+        let x0 = {
+            let mut r = Rng::new(71);
+            q.init(&mut r)
+        };
+        let svc = GradService::spawn_objective(Box::new(q), 9);
+        let mut h0 = svc.handle().for_worker(0);
+        let mut h0b = svc.handle().for_worker(0);
+        let (l1, g1) = h0.grad(0, &x0).unwrap();
+        let (l2, g2) = h0b.grad(0, &x0).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1[0].data, g2[0].data);
+        let e1 = svc.handle().eval(x0.clone()).unwrap();
+        let e2 = svc.handle().eval(x0.clone()).unwrap();
+        assert_eq!(e1, e2);
+        assert!(svc.handle().ns_orthogonalize(&x0[0]).unwrap().is_none());
+    }
+
+    #[test]
+    fn pjrt_backend_fails_fast_without_artifacts() {
+        let err = GradService::spawn_pjrt("definitely-missing-dir".into(), 1, 10_000, 1, 0)
+            .err()
+            .expect("must fail without artifacts");
+        assert!(format!("{err:#}").contains("definitely-missing-dir"));
+    }
+}

@@ -10,11 +10,18 @@ use crate::linalg::matrix::{layers, Layers, Matrix};
 use crate::util::rng::Rng;
 
 /// A finite-sum objective `f = (1/n) Σ f_j` over layer-structured params.
-pub trait Objective: Send {
+/// `Sync` so the dist worker threads can evaluate their local gradients
+/// concurrently through a shared handle (see `dist::service`).
+pub trait Objective: Send + Sync {
     fn num_workers(&self) -> usize;
     fn layer_shapes(&self) -> Vec<(usize, usize)>;
     /// Global loss `f(x)`.
     fn loss(&self, x: &Layers) -> f64;
+    /// Local loss `f_j(x)` (worker-side telemetry; the default falls back
+    /// to the global loss for objectives without a cheap local form).
+    fn loss_j(&self, _j: usize, x: &Layers) -> f64 {
+        self.loss(x)
+    }
     /// Exact local gradient `∇f_j(x)`.
     fn grad_j(&self, j: usize, x: &Layers) -> Layers;
     /// Stochastic local gradient (unbiased, bounded variance).
@@ -91,16 +98,18 @@ impl Objective for Quadratics {
     }
 
     fn loss(&self, x: &Layers) -> f64 {
-        let xv = &x[0].data;
         let n = self.num_workers();
+        (0..n).map(|j| self.loss_j(j, x)).sum::<f64>() / n as f64
+    }
+
+    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+        let xv = &x[0].data;
         let mut total = 0.0f64;
-        for j in 0..n {
-            for i in 0..self.dim {
-                total += 0.5 * self.a[j][i] as f64 * (xv[i] as f64).powi(2)
-                    - self.b[j][i] as f64 * xv[i] as f64;
-            }
+        for i in 0..self.dim {
+            total += 0.5 * self.a[j][i] as f64 * (xv[i] as f64).powi(2)
+                - self.b[j][i] as f64 * xv[i] as f64;
         }
-        total / n as f64
+        total
     }
 
     fn grad_j(&self, j: usize, x: &Layers) -> Layers {
@@ -399,15 +408,12 @@ impl Objective for MatrixQuadratic {
 
     fn loss(&self, x: &Layers) -> f64 {
         let n = self.a.len() as f64;
-        self.a
-            .iter()
-            .zip(&self.b)
-            .map(|(a, b)| {
-                let r = crate::linalg::matmul::matmul(a, &x[0]).sub(b);
-                0.5 * r.norm2_sq()
-            })
-            .sum::<f64>()
-            / n
+        (0..self.a.len()).map(|j| self.loss_j(j, x)).sum::<f64>() / n
+    }
+
+    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+        let r = crate::linalg::matmul::matmul(&self.a[j], &x[0]).sub(&self.b[j]);
+        0.5 * r.norm2_sq()
     }
 
     fn grad_j(&self, j: usize, x: &Layers) -> Layers {

@@ -6,34 +6,36 @@
 //! BlockSpec schedule at L1 (see DESIGN.md §Hardware-Adaptation): the block
 //! sizes play the role of the VMEM tiles.
 //!
+//! Large products are additionally **row-partitioned across scoped OS
+//! threads** (DESIGN.md §Hot-path threading): each thread owns a contiguous
+//! band of `C` rows, so the result is bit-identical for every thread count
+//! — for any output element the contributions over `k` are reduced by
+//! exactly one thread in block-ascending order. `rust/tests/parallel.rs`
+//! asserts this.
+//!
 //! Used by the server hot path: Newton–Schulz spectral LMOs and RankK
 //! power-iteration compressors.
 
 use super::matrix::Matrix;
+use super::workspace::{with_thread_workspace, Workspace};
+use crate::util::threads::num_threads;
 
 /// Tile sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
 const BM: usize = 32;
 const BK: usize = 64;
 const BN: usize = 256;
 
-/// `C = A · B` into a fresh matrix.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let mut c = Matrix::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
-    c
-}
+/// Minimum FLOP count (2·m·k·n) before the kernel fans out across threads —
+/// below this, thread-spawn latency beats the parallel win.
+const PAR_MIN_FLOPS: usize = 8 << 20;
 
-/// `C = A · B`, writing into a caller-provided buffer (no allocation).
-pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul out shape");
-    c.fill(0.0);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let ad = &a.data;
-    let bd = &b.data;
-    let cd = &mut c.data;
-    for i0 in (0..m).step_by(BM) {
-        let i1 = (i0 + BM).min(m);
+/// Inner kernel: accumulate `rows` rows of `C` starting at absolute row
+/// `row0` of `A`. `cd` holds exactly those rows (caller pre-zeroed). The
+/// per-element accumulation order over `k` is independent of `row0`/`rows`,
+/// which is what makes the row-partitioned parallel variant bit-exact.
+fn mm_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for i0 in (0..rows).step_by(BM) {
+        let i1 = (i0 + BM).min(rows);
         for k0 in (0..k).step_by(BK) {
             let k1 = (k0 + BK).min(k);
             for j0 in (0..n).step_by(BN) {
@@ -45,7 +47,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
                 for i in i0..i1 {
                     let crow = &mut cd[i * n + j0..i * n + j1];
                     for kk in k0..k1 {
-                        let aik = ad[i * k + kk];
+                        let aik = ad[(row0 + i) * k + kk];
                         if aik == 0.0 {
                             continue;
                         }
@@ -60,6 +62,56 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
+/// `C = A · B` into a fresh matrix.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B`, writing into a caller-provided buffer (no allocation).
+/// Fans out across OS threads when the product is large enough; results
+/// are bit-identical at every thread count. Threads already running as a
+/// fan-out lane (per-layer LMO pass) keep nested products single-threaded
+/// so an nt-lane round never oversubscribes to nt × nt threads.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let small = 2 * a.rows * a.cols * b.cols < PAR_MIN_FLOPS;
+    let threads = if small || crate::util::threads::in_parallel_region() {
+        1
+    } else {
+        num_threads()
+    };
+    matmul_into_with_threads(a, b, c, threads);
+}
+
+/// `C = A · B` with an explicit thread count (benches pin `threads = 1`
+/// for the single-core baseline; tests sweep counts to assert bit-equality).
+pub fn matmul_into_with_threads(a: &Matrix, b: &Matrix, c: &mut Matrix, threads: usize) {
+    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul out shape");
+    c.fill(0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if m * k * n == 0 {
+        return;
+    }
+    let ad = &a.data;
+    let bd = &b.data;
+    let cd = &mut c.data;
+    let nt = threads.max(1).min(m);
+    if nt == 1 {
+        mm_rows(ad, bd, cd, 0, m, k, n);
+        return;
+    }
+    let rows_per = (m + nt - 1) / nt;
+    std::thread::scope(|s| {
+        for (ci, chunk) in cd.chunks_mut(rows_per * n).enumerate() {
+            let rows = chunk.len() / n;
+            let row0 = ci * rows_per;
+            s.spawn(move || mm_rows(ad, bd, chunk, row0, rows, k, n));
+        }
+    });
+}
+
 /// `C = A · Bᵀ` without materializing the transpose (rows of `B` are
 /// contiguous, so this is a sequence of dot products).
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
@@ -68,18 +120,29 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = A · Bᵀ` into a caller-provided buffer.
+/// `C = A · Bᵀ` into a caller-provided buffer. The transpose scratch for
+/// the large-input path comes from this thread's shared workspace; callers
+/// already holding an arena should use [`matmul_bt_into_ws`] instead.
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    with_thread_workspace(|ws| matmul_bt_into_ws(a, b, c, ws));
+}
+
+/// `C = A · Bᵀ` with caller-provided scratch (zero allocations after the
+/// workspace warms up).
 ///
 /// §Perf: for sizeable inputs the dot-product form (horizontal adds) loses
 /// badly to the vectorized `ikj` kernel, so we pay one explicit transpose
-/// and dispatch to [`matmul_into`] — 2-3× faster on NS-sized Gram matrices.
-pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+/// — served from the workspace arena, not the allocator — and dispatch to
+/// [`matmul_into`]: 2-3× faster on NS-sized Gram matrices.
+pub fn matmul_bt_into_ws(a: &Matrix, b: &Matrix, c: &mut Matrix, ws: &mut Workspace) {
     assert_eq!(a.cols, b.cols, "matmul_bt inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_bt out shape");
     let k = a.cols;
     if a.rows * b.rows * k >= 32 * 32 * 32 {
-        let bt = b.transpose();
+        let mut bt = ws.take(b.cols, b.rows);
+        b.transpose_into(&mut bt);
         matmul_into(a, &bt, c);
+        ws.give(bt);
         return;
     }
     for i in 0..a.rows {
@@ -107,9 +170,17 @@ pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 /// `C = Aᵀ · B` without materializing the transpose.
 pub fn matmul_at(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_at_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` into a caller-provided buffer (no allocation).
+pub fn matmul_at_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows, b.rows, "matmul_at inner dim");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at out shape");
+    c.fill(0.0);
     let (m, n) = (a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
     for kk in 0..a.rows {
         let arow = &a.data[kk * a.cols..(kk + 1) * a.cols];
         let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
@@ -124,7 +195,6 @@ pub fn matmul_at(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// Matrix–vector product `A·x` (x as column-major slice).
@@ -185,6 +255,22 @@ mod tests {
     }
 
     #[test]
+    fn threaded_bit_identical_to_serial() {
+        let mut rng = Rng::new(15);
+        for &(m, k, n) in &[(70, 40, 90), (257, 63, 31), (5, 301, 2)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut base = Matrix::zeros(m, n);
+            matmul_into_with_threads(&a, &b, &mut base, 1);
+            for nt in [2, 3, 7, 64] {
+                let mut c = Matrix::zeros(m, n);
+                matmul_into_with_threads(&a, &b, &mut c, nt);
+                assert_eq!(c.data, base.data, "{m}x{k}x{n} with {nt} threads");
+            }
+        }
+    }
+
+    #[test]
     fn bt_at_variants() {
         let mut rng = Rng::new(6);
         let a = Matrix::randn(9, 13, 1.0, &mut rng);
@@ -192,6 +278,24 @@ mod tests {
         assert!(matmul_bt(&a, &b).max_abs_diff(&matmul(&a, &b.transpose())) < 1e-4);
         let c = Matrix::randn(9, 4, 1.0, &mut rng);
         assert!(matmul_at(&a, &c).max_abs_diff(&matmul(&a.transpose(), &c)) < 1e-4);
+    }
+
+    #[test]
+    fn bt_workspace_path_is_allocation_free_when_warm(){
+        let mut rng = Rng::new(7);
+        // large enough for the transpose path (>= 32^3 products)
+        let a = Matrix::randn(40, 40, 1.0, &mut rng);
+        let b = Matrix::randn(40, 40, 1.0, &mut rng);
+        let mut c = Matrix::zeros(40, 40);
+        let mut ws = crate::linalg::workspace::Workspace::new();
+        matmul_bt_into_ws(&a, &b, &mut c, &mut ws);
+        let warm = ws.fresh_allocs();
+        assert!(warm >= 1);
+        for _ in 0..5 {
+            matmul_bt_into_ws(&a, &b, &mut c, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm, "bt transpose must reuse the arena");
+        assert!(c.max_abs_diff(&matmul(&a, &b.transpose())) < 1e-3);
     }
 
     #[test]

@@ -75,6 +75,13 @@ impl Matrix {
 
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-provided buffer (hot path: no allocation).
+    pub fn transpose_into(&self, t: &mut Matrix) {
+        debug_assert_eq!((t.rows, t.cols), (self.cols, self.rows));
         // blocked transpose for cache friendliness on big layers
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
@@ -86,7 +93,6 @@ impl Matrix {
                 }
             }
         }
-        t
     }
 
     // -- in-place arithmetic (hot path: no allocation) ----------------------

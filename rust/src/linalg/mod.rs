@@ -4,6 +4,7 @@
 //! the non-Euclidean norm library the paper's geometry lives in.
 
 pub mod matrix;
+pub mod workspace;
 pub mod matmul;
 pub mod qr;
 pub mod svd;
@@ -11,3 +12,4 @@ pub mod ns;
 pub mod norms;
 
 pub use matrix::Matrix;
+pub use workspace::Workspace;

@@ -3,8 +3,9 @@
 //! normalization, so the two implementations agree to float tolerance and
 //! are cross-checked in `rust/tests/runtime.rs`.
 
-use super::matmul::{matmul, matmul_bt};
+use super::matmul::{matmul_bt, matmul_bt_into_ws, matmul_into};
 use super::matrix::Matrix;
+use super::workspace::{with_thread_workspace, Workspace};
 
 /// Quintic NS coefficients from the Muon reference implementation.
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
@@ -14,35 +15,51 @@ pub const NS_STEPS: usize = 5;
 /// Approximate `U Vᵀ` of `g` via the quintic Newton–Schulz iteration.
 ///
 /// Tall inputs are transposed first so the Gram matrix is the small square.
+/// Temporaries come from this thread's shared workspace; hot loops that own
+/// an arena should call [`newton_schulz_ws`] directly.
 pub fn newton_schulz(g: &Matrix, steps: usize) -> Matrix {
+    with_thread_workspace(|ws| newton_schulz_ws(g, steps, ws))
+}
+
+/// [`newton_schulz`] with caller-provided scratch: the 5-iteration quintic
+/// loop performs **zero heap allocations** once `ws` is warm (the returned
+/// matrix itself is drawn from — and can be given back to — the arena).
+/// Results are bit-identical for every thread count and every workspace
+/// state; `rust/tests/parallel.rs` asserts both.
+pub fn newton_schulz_ws(g: &Matrix, steps: usize, ws: &mut Workspace) -> Matrix {
     let (a, b, c) = NS_COEFFS;
     let transpose = g.rows > g.cols;
-    let mut x = if transpose { g.transpose() } else { g.clone() };
+    let mut x = ws.take(if transpose { g.cols } else { g.rows }, if transpose { g.rows } else { g.cols });
+    if transpose {
+        g.transpose_into(&mut x);
+    } else {
+        x.data.copy_from_slice(&g.data);
+    }
     let nrm = x.norm2() as f32 + 1e-7;
     x.scale(1.0 / nrm);
-    let mut scratch_poly: Option<Matrix> = None;
+    let k = x.rows;
+    let n = x.cols;
+    let mut gram = ws.take(k, k); // A = X Xᵀ (k×k)
+    let mut gram2 = ws.take(k, k); // A²
+    let mut poly = ws.take(k, k); // b·A + c·A²
+    let mut px = ws.take(k, n); // poly·X
     for _ in 0..steps {
-        let gram = matmul_bt(&x, &x); // A = X Xᵀ (k×k)
-        let gram2 = matmul(&gram, &gram); // A²
-        // poly = b·A + c·A²  (reuse buffer across iterations)
-        let poly = match scratch_poly.take() {
-            Some(mut p) if p.rows == gram.rows => {
-                p.data.copy_from_slice(&gram.data);
-                p.axpby(b, c, &gram2);
-                p
-            }
-            _ => {
-                let mut p = gram.clone();
-                p.axpby(b, c, &gram2);
-                p
-            }
-        };
-        let px = matmul(&poly, &x);
+        matmul_bt_into_ws(&x, &x, &mut gram, ws);
+        matmul_into(&gram, &gram, &mut gram2);
+        poly.data.copy_from_slice(&gram.data);
+        poly.axpby(b, c, &gram2);
+        matmul_into(&poly, &x, &mut px);
         x.axpby(a, 1.0, &px); // X = a·X + poly·X
-        scratch_poly = Some(poly);
     }
+    ws.give(gram);
+    ws.give(gram2);
+    ws.give(poly);
+    ws.give(px);
     if transpose {
-        x.transpose()
+        let mut out = ws.take(g.rows, g.cols);
+        x.transpose_into(&mut out);
+        ws.give(x);
+        out
     } else {
         x
     }

@@ -1,0 +1,145 @@
+//! Reusable f32-buffer arena for the request hot path.
+//!
+//! The Newton–Schulz quintic loop, the LMO steps and the EF21 server/worker
+//! state machines all need short-lived matrix temporaries every round.
+//! Instead of hitting the allocator per step, they [`take`](Workspace::take)
+//! buffers from a [`Workspace`] and [`give`](Workspace::give) them back;
+//! after the first round every temporary is served from the pool
+//! (asserted by `rust/tests/parallel.rs` via [`Workspace::fresh_allocs`]).
+//!
+//! Each OS thread in the leader/worker deployment owns its workspaces
+//! (`ServerState` keeps one per LMO lane, `WorkerState` one), so no
+//! synchronization is needed. Free functions that predate the arena
+//! (`matmul_bt_into`, `newton_schulz`, `Lmo::step`) route through a
+//! re-entrancy-safe thread-local pool via [`with_thread_workspace`].
+
+use std::cell::RefCell;
+
+use super::matrix::Matrix;
+
+/// A pool of reusable `Vec<f32>` buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    fresh: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out a zero-filled `rows × cols` matrix, reusing the smallest
+    /// pooled buffer whose capacity fits (allocating only on pool miss).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let n = rows * cols;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() >= n {
+                match best {
+                    Some(j) if self.pool[j].capacity() <= b.capacity() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        let mut data = match best {
+            Some(i) => self.pool.swap_remove(i),
+            None => {
+                self.fresh += 1;
+                Vec::with_capacity(n)
+            }
+        };
+        data.clear();
+        data.resize(n, 0.0);
+        Matrix { rows, cols, data }
+    }
+
+    /// Return a matrix's buffer to the pool.
+    pub fn give(&mut self, m: Matrix) {
+        self.pool.push(m.data);
+    }
+
+    /// Number of genuine heap allocations this workspace has performed —
+    /// stays flat once the hot loop is warmed up.
+    pub fn fresh_allocs(&self) -> usize {
+        self.fresh
+    }
+
+    /// Number of buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Merge another workspace's buffers into this pool (used by the
+    /// thread-local wrapper; `fresh` counts stay with their origin).
+    fn absorb(&mut self, other: Workspace) {
+        self.pool.extend(other.pool);
+    }
+}
+
+thread_local! {
+    static THREAD_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with this thread's shared workspace. Re-entrancy safe: the pool
+/// is moved out for the duration of `f`, so a nested call simply starts
+/// from an empty pool and both pools are merged afterwards (no `RefCell`
+/// double-borrow is possible).
+pub fn with_thread_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    let mut ws = THREAD_WS.with(|cell| cell.take());
+    let out = f(&mut ws);
+    THREAD_WS.with(|cell| cell.borrow_mut().absorb(ws));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reused() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(3, 4);
+        assert!(a.data.iter().all(|&v| v == 0.0));
+        a.fill(7.0);
+        ws.give(a);
+        assert_eq!(ws.fresh_allocs(), 1);
+        // same-size re-take must reuse the buffer and re-zero it
+        let b = ws.take(4, 3);
+        assert_eq!(ws.fresh_allocs(), 1);
+        assert!(b.data.iter().all(|&v| v == 0.0));
+        ws.give(b);
+        // a smaller request also reuses
+        let c = ws.take(2, 2);
+        assert_eq!(ws.fresh_allocs(), 1);
+        ws.give(c);
+        // a larger one allocates
+        let d = ws.take(10, 10);
+        assert_eq!(ws.fresh_allocs(), 2);
+        ws.give(d);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut ws = Workspace::new();
+        let small = ws.take(2, 2);
+        let big = ws.take(8, 8);
+        ws.give(big);
+        ws.give(small);
+        let again = ws.take(2, 2);
+        assert!(again.data.capacity() < 64, "should pick the 4-elem buffer");
+        assert_eq!(ws.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn thread_local_is_reentrant() {
+        let x = with_thread_workspace(|ws| {
+            let a = ws.take(4, 4);
+            // nested call while the outer workspace is checked out
+            let inner = with_thread_workspace(|ws2| ws2.take(2, 2).numel());
+            ws.give(a);
+            inner
+        });
+        assert_eq!(x, 4);
+    }
+}

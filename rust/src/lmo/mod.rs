@@ -7,8 +7,9 @@
 //! enforced by tests in `rust/tests/lmo.rs`.
 
 use crate::linalg::matrix::Matrix;
-use crate::linalg::ns::{newton_schulz, NS_STEPS};
+use crate::linalg::ns::{newton_schulz_ws, NS_STEPS};
 use crate::linalg::svd::top_singular;
+use crate::linalg::workspace::{with_thread_workspace, Workspace};
 use crate::util::rng::Rng;
 
 /// Which norm ball the LMO minimizes over.
@@ -55,23 +56,33 @@ impl Lmo {
 
     /// `LMO_{B(0,t)}(g)`: the feasible step of radius `t` most aligned with
     /// `−g`. Returns zeros when `g = 0` (any feasible point is optimal).
+    /// Temporaries come from this thread's shared workspace; per-round hot
+    /// loops that own an arena should call [`Lmo::step_ws`].
     pub fn step(&self, g: &Matrix, t: f32, rng: &mut Rng) -> Matrix {
+        with_thread_workspace(|ws| self.step_ws(g, t, rng, ws))
+    }
+
+    /// [`Lmo::step`] with caller-provided scratch. The returned matrix is
+    /// drawn from the arena, so callers can `ws.give(step)` after applying
+    /// it and the round loop performs no heap allocation once warm.
+    pub fn step_ws(&self, g: &Matrix, t: f32, rng: &mut Rng, ws: &mut Workspace) -> Matrix {
         match self.kind {
             LmoKind::Spectral => {
-                let o = match self.engine {
-                    SpectralEngine::Native => newton_schulz(g, self.ns_steps),
+                let mut o = match self.engine {
+                    SpectralEngine::Native => newton_schulz_ws(g, self.ns_steps, ws),
                     SpectralEngine::ExactSvd => {
                         let (u, s, v) = crate::linalg::svd::jacobi_svd(g);
                         let k = s.len();
                         crate::linalg::svd::truncated_reconstruct(&u, &vec![1.0; k], &v, k)
                     }
                 };
-                o.scaled(-t)
+                o.scale(-t);
+                o
             }
             LmoKind::SignLInf => {
-                let mut out = g.clone();
-                for v in out.data.iter_mut() {
-                    *v = if *v > 0.0 {
+                let mut out = ws.take(g.rows, g.cols);
+                for (o, v) in out.data.iter_mut().zip(&g.data) {
+                    *o = if *v > 0.0 {
                         -t
                     } else if *v < 0.0 {
                         t
@@ -90,7 +101,7 @@ impl Lmo {
                         best = i;
                     }
                 }
-                let mut out = Matrix::zeros(g.rows, g.cols);
+                let mut out = ws.take(g.rows, g.cols);
                 if bestv > 0.0 {
                     out.data[best] = -t * g.data[best].signum();
                 }
@@ -98,15 +109,16 @@ impl Lmo {
             }
             LmoKind::Euclidean => {
                 let n = g.norm2() as f32;
+                let mut out = ws.take(g.rows, g.cols);
                 if n > 1e-20 {
-                    g.scaled(-t / n)
-                } else {
-                    Matrix::zeros(g.rows, g.cols)
+                    out.data.copy_from_slice(&g.data);
+                    out.scale(-t / n);
                 }
+                out
             }
             LmoKind::NuclearRank1 => {
                 let (sigma, u, v) = top_singular(g, 100, rng);
-                let mut out = Matrix::zeros(g.rows, g.cols);
+                let mut out = ws.take(g.rows, g.cols);
                 if sigma > 0.0 {
                     for i in 0..g.rows {
                         for j in 0..g.cols {
@@ -119,7 +131,7 @@ impl Lmo {
             LmoKind::ColNorm => {
                 // minimize <G,Z> over max-col-l2 ball: each column z_j =
                 // -t * g_j / ||g_j||_2
-                let mut out = Matrix::zeros(g.rows, g.cols);
+                let mut out = ws.take(g.rows, g.cols);
                 for j in 0..g.cols {
                     let mut nrm = 0.0f64;
                     for i in 0..g.rows {

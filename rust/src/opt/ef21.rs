@@ -21,9 +21,19 @@
 use crate::compress::{Compressor, Message};
 use crate::funcs::Objective;
 use crate::linalg::matrix::{layers, Layers, Matrix};
-use crate::lmo::Lmo;
+use crate::linalg::workspace::Workspace;
+use crate::lmo::{Lmo, LmoKind, SpectralEngine};
 use crate::opt::{layer_compressors, LayerGeometry, Schedule};
 use crate::util::rng::Rng;
+
+/// Layer collections below this total element count run the LMO pass
+/// sequentially — thread-spawn latency beats the fan-out win.
+const PAR_LAYER_MIN_NUMEL: usize = 1 << 15;
+
+/// Spectral-engine hook: given a layer gradient, optionally return its
+/// orthogonalization from an external engine (the PJRT NS artifact served
+/// by `dist::server`); `None` falls back to the native Newton–Schulz.
+pub type SpectralHook<'a> = &'a dyn Fn(&Matrix) -> Option<Matrix>;
 
 /// Server half of EF21-Muon.
 pub struct ServerState {
@@ -37,6 +47,10 @@ pub struct ServerState {
     pub rng: Rng,
     /// scratch: decoded aggregate per layer (avoids per-step allocation)
     agg: Layers,
+    /// per-lane buffer arenas: lane 0 also serves the broadcast scratch;
+    /// the parallel LMO fan-out hands one lane to each worker thread so
+    /// warmed buffers persist across rounds.
+    ws: Vec<Workspace>,
 }
 
 impl ServerState {
@@ -51,6 +65,7 @@ impl ServerState {
         let compressors = layer_compressors(server_spec, &shapes)?;
         let lmos = geometry.iter().map(|g| g.lmo_for()).collect();
         let agg = layers::zeros_like(&x0);
+        let lanes = crate::util::threads::num_threads().max(1);
         Ok(ServerState {
             w: x0.clone(),
             g: layers::zeros_like(&x0),
@@ -61,6 +76,7 @@ impl ServerState {
             n_workers,
             rng: Rng::with_stream(seed, 0x5e7),
             agg,
+            ws: (0..lanes).map(|_| Workspace::new()).collect(),
         })
     }
 
@@ -71,22 +87,90 @@ impl ServerState {
     }
 
     /// Algorithm line 4: the LMO-type step `Xᵢ ← LMO_{B(Xᵢ, tᵢ)}(Gᵢ)` with
-    /// per-layer radii `t · radius_mult`.
+    /// per-layer radii `t · radius_mult`. Layers are fanned out across OS
+    /// threads when the model is large enough; per-layer RNG streams are
+    /// pre-split deterministically, so the trajectory is bit-identical at
+    /// every thread count.
     pub fn lmo_step(&mut self, t: f64) {
-        for i in 0..self.x.len() {
-            let ti = (t * self.geometry[i].radius_mult as f64) as f32;
-            let step = self.lmos[i].step(&self.g[i], ti, &mut self.rng);
-            self.x[i].axpy(1.0, &step);
+        self.lmo_step_with(t, None);
+    }
+
+    /// [`ServerState::lmo_step`] with an optional external spectral engine
+    /// (the PJRT Newton–Schulz artifact; see `dist::server`). Hooked runs
+    /// stay sequential — the engine serializes on its service thread anyway.
+    pub fn lmo_step_with(&mut self, t: f64, hook: Option<SpectralHook<'_>>) {
+        let p = self.x.len();
+        // derive one RNG per layer up front: consumption is independent of
+        // the threading layout, keeping distributed runs reproducible
+        let mut rngs: Vec<Rng> = (0..p).map(|i| self.rng.split(0x1a0 + i as u64)).collect();
+        let radii: Vec<f32> = (0..p)
+            .map(|i| (t * self.geometry[i].radius_mult as f64) as f32)
+            .collect();
+        let numel: usize = self.x.iter().map(|m| m.numel()).sum();
+        let nt = crate::util::threads::num_threads().min(self.ws.len()).min(p).max(1);
+        if hook.is_some() || nt == 1 || numel < PAR_LAYER_MIN_NUMEL {
+            let ws = &mut self.ws[0];
+            for i in 0..p {
+                let g = &self.g[i];
+                let lmo = &self.lmos[i];
+                let external = match hook {
+                    Some(h)
+                        if lmo.kind == LmoKind::Spectral
+                            && lmo.engine == SpectralEngine::Native =>
+                    {
+                        h(g)
+                    }
+                    _ => None,
+                };
+                let step = match external {
+                    Some(mut o) => {
+                        o.scale(-radii[i]);
+                        o
+                    }
+                    None => lmo.step_ws(g, radii[i], &mut rngs[i], ws),
+                };
+                self.x[i].axpy(1.0, &step);
+                ws.give(step);
+            }
+            return;
         }
+        // parallel fan-out: contiguous layer chunks, one arena lane each
+        let chunk = (p + nt - 1) / nt;
+        let xs = self.x.chunks_mut(chunk);
+        let gs = self.g.chunks(chunk);
+        let ls = self.lmos.chunks(chunk);
+        let ts = radii.chunks(chunk);
+        let rs = rngs.chunks_mut(chunk);
+        let wss = self.ws.iter_mut();
+        std::thread::scope(|s| {
+            for ((((x, g), l), (ti, r)), ws) in xs.zip(gs).zip(ls).zip(ts.zip(rs)).zip(wss) {
+                s.spawn(move || {
+                    // lanes keep nested matmuls single-threaded (no nt×nt
+                    // oversubscription)
+                    crate::util::threads::mark_parallel_region(|| {
+                        for i in 0..x.len() {
+                            let step = l[i].step_ws(&g[i], ti[i], &mut r[i], ws);
+                            x[i].axpy(1.0, &step);
+                            ws.give(step);
+                        }
+                    });
+                });
+            }
+        });
     }
 
     /// Algorithm lines 5–7: compress the shifted model, advance W, return
-    /// the broadcast messages (one per layer).
+    /// the broadcast messages (one per layer). The `X − W` residual scratch
+    /// is served from the lane-0 arena (no per-round allocation).
     pub fn broadcast(&mut self) -> Vec<Message> {
         let mut msgs = Vec::with_capacity(self.x.len());
+        let ws = &mut self.ws[0];
         for i in 0..self.x.len() {
-            let diff = self.x[i].sub(&self.w[i]);
+            let mut diff = ws.take(self.x[i].rows, self.x[i].cols);
+            diff.data.copy_from_slice(&self.x[i].data);
+            diff.axpy(-1.0, &self.w[i]);
             let msg = self.compressors[i].compress(&diff, &mut self.rng);
+            ws.give(diff);
             msg.add_into(&mut self.w[i]);
             msgs.push(msg);
         }
@@ -126,6 +210,8 @@ pub struct WorkerState {
     pub beta: f32,
     pub compressors: Vec<Box<dyn Compressor>>,
     pub rng: Rng,
+    /// per-worker buffer arena (residual scratch in the round loop)
+    ws: Workspace,
 }
 
 impl WorkerState {
@@ -145,6 +231,7 @@ impl WorkerState {
             beta,
             compressors: layer_compressors(worker_spec, &shapes)?,
             rng: Rng::with_stream(seed, 0x1000 + id as u64),
+            ws: Workspace::new(),
         })
     }
 
@@ -171,8 +258,11 @@ impl WorkerState {
         let mut msgs = Vec::with_capacity(self.w.len());
         for i in 0..self.w.len() {
             self.m[i].axpby(1.0 - beta, beta, &grad_at_w[i]);
-            let resid = self.m[i].sub(&self.g[i]);
+            let mut resid = self.ws.take(self.m[i].rows, self.m[i].cols);
+            resid.data.copy_from_slice(&self.m[i].data);
+            resid.axpy(-1.0, &self.g[i]);
             let msg = self.compressors[i].compress(&resid, &mut self.rng);
+            self.ws.give(resid);
             msg.add_into(&mut self.g[i]);
             msgs.push(msg);
         }

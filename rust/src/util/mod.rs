@@ -7,4 +7,5 @@ pub mod json;
 pub mod cli;
 pub mod stats;
 pub mod timer;
+pub mod threads;
 pub mod proptest;

@@ -1,0 +1,79 @@
+//! Hot-path thread-count policy, shared by the threaded matmul kernel and
+//! the per-layer LMO fan-out. Resolution order: programmatic override
+//! ([`set_threads`]) > `EFMUON_THREADS` env var > detected core count.
+//!
+//! The parallel kernels are bit-deterministic in the thread count (each
+//! output row is reduced by exactly one thread in a fixed order), so this
+//! knob trades wall-clock only — never results.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = no override.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// 0 = not yet detected.
+static DETECTED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set while this thread is one lane of an efmuon fan-out (e.g. the
+    /// per-layer LMO pass); nested kernels then stay single-threaded
+    /// instead of oversubscribing nt × nt OS threads.
+    static IN_FANOUT: Cell<bool> = Cell::new(false);
+}
+
+/// `true` when the current thread is already a parallel-fan-out lane.
+pub fn in_parallel_region() -> bool {
+    IN_FANOUT.with(|c| c.get())
+}
+
+/// Run `f` with this thread marked as a fan-out lane (auto-threaded
+/// kernels inside run single-threaded).
+pub fn mark_parallel_region<R>(f: impl FnOnce() -> R) -> R {
+    IN_FANOUT.with(|c| c.set(true));
+    let out = f();
+    IN_FANOUT.with(|c| c.set(false));
+    out
+}
+
+/// Number of worker threads hot-path kernels may fan out to (≥ 1).
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    let d = DETECTED.load(Ordering::Relaxed);
+    if d > 0 {
+        return d;
+    }
+    let n = std::env::var("EFMUON_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    DETECTED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the thread count process-wide (`0` restores auto-detection).
+/// Used by benches to pin single-thread baselines.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_roundtrip() {
+        // NOTE: process-global; keep all assertions in one test.
+        let auto = num_threads();
+        assert!(auto >= 1);
+        set_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_threads(0);
+        assert_eq!(num_threads(), auto);
+    }
+}

@@ -1,0 +1,172 @@
+//! Parallel hot-path kernels: the threaded matmul must agree with the
+//! naive reference on ragged shapes, be bit-identical at every thread
+//! count, and the workspace-arena paths (Newton–Schulz, LMO steps) must be
+//! allocation-free once warm and bit-stable — so distributed runs are
+//! reproducible regardless of the host's core count.
+
+use efmuon::linalg::matmul::{matmul_bt_into_ws, matmul_into_with_threads};
+use efmuon::linalg::ns::{newton_schulz, newton_schulz_ws, NS_STEPS};
+use efmuon::linalg::workspace::Workspace;
+use efmuon::linalg::Matrix;
+use efmuon::lmo::{Lmo, LmoKind};
+use efmuon::util::rng::Rng;
+use efmuon::util::threads;
+
+fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s += a.at(i, k) as f64 * b.at(k, j) as f64;
+            }
+            c.set(i, j, s as f32);
+        }
+    }
+    c
+}
+
+/// Ragged shapes: 1×1, prime dims, tall, wide, and bigger-than-one-tile.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 3, 1),
+    (7, 11, 13),
+    (31, 37, 29),
+    (1, 257, 1),
+    (257, 1, 63),
+    (128, 3, 128),
+    (3, 128, 200),
+    (97, 101, 103),
+    (130, 70, 260),
+];
+
+#[test]
+fn threaded_matmul_matches_naive_on_ragged_shapes() {
+    let mut rng = Rng::new(90);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let want = naive(&a, &b);
+        for nt in [1, 2, 4, 16] {
+            let mut c = Matrix::zeros(m, n);
+            matmul_into_with_threads(&a, &b, &mut c, nt);
+            let diff = c.max_abs_diff(&want);
+            assert!(diff < 1e-3 * (k as f32).sqrt(), "{m}x{k}x{n} nt={nt}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn threaded_matmul_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(91);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut base = Matrix::zeros(m, n);
+        matmul_into_with_threads(&a, &b, &mut base, 1);
+        for nt in [2, 3, 5, 8, 64] {
+            let mut c = Matrix::zeros(m, n);
+            matmul_into_with_threads(&a, &b, &mut c, nt);
+            assert_eq!(
+                c.data, base.data,
+                "{m}x{k}x{n}: thread count {nt} changed bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn matmul_bt_workspace_agrees_with_reference() {
+    let mut rng = Rng::new(92);
+    let mut ws = Workspace::new();
+    for &(m, k) in &[(3usize, 5usize), (40, 40), (64, 129)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(m + 1, k, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, m + 1);
+        matmul_bt_into_ws(&a, &b, &mut c, &mut ws);
+        let want = naive(&a, &b.transpose());
+        assert!(c.max_abs_diff(&want) < 1e-2, "{m}x{k}");
+    }
+}
+
+#[test]
+fn newton_schulz_bit_identical_across_thread_counts() {
+    // The distributed deployment must be reproducible on any host: NS is
+    // the only heavy spectral kernel, so pin its bits across thread counts.
+    // (Process-global override; this test owns all mutations of it.)
+    let mut rng = Rng::new(93);
+    for &(m, n) in &[(16, 16), (8, 64), (96, 24), (128, 512)] {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        threads::set_threads(1);
+        let base = newton_schulz(&g, NS_STEPS);
+        for nt in [2, 4, 8] {
+            threads::set_threads(nt);
+            let o = newton_schulz(&g, NS_STEPS);
+            assert_eq!(o.data, base.data, "{m}x{n}: NS bits changed at {nt} threads");
+        }
+        threads::set_threads(0);
+    }
+}
+
+#[test]
+fn newton_schulz_workspace_is_allocation_free_when_warm() {
+    let mut rng = Rng::new(94);
+    let g = Matrix::randn(64, 96, 1.0, &mut rng);
+    let mut ws = Workspace::new();
+    let first = newton_schulz_ws(&g, NS_STEPS, &mut ws);
+    ws.give(first);
+    let warm = ws.fresh_allocs();
+    for _ in 0..10 {
+        let o = newton_schulz_ws(&g, NS_STEPS, &mut ws);
+        ws.give(o);
+    }
+    assert_eq!(
+        ws.fresh_allocs(),
+        warm,
+        "the 5-iteration quintic loop must not allocate once the arena is warm"
+    );
+}
+
+#[test]
+fn newton_schulz_ws_matches_plain() {
+    let mut rng = Rng::new(95);
+    for &(m, n) in &[(12, 12), (6, 30), (48, 16)] {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let plain = newton_schulz(&g, NS_STEPS);
+        let mut ws = Workspace::new();
+        let via_ws = newton_schulz_ws(&g, NS_STEPS, &mut ws);
+        assert_eq!(plain.data, via_ws.data, "{m}x{n}");
+        // warm arena must not change the numbers either
+        let again = newton_schulz_ws(&g, NS_STEPS, &mut ws);
+        assert_eq!(plain.data, again.data, "{m}x{n} (warm)");
+    }
+}
+
+#[test]
+fn lmo_step_ws_is_allocation_free_and_matches_step() {
+    let mut rng = Rng::new(96);
+    for kind in [
+        LmoKind::Spectral,
+        LmoKind::SignLInf,
+        LmoKind::L1Top1,
+        LmoKind::Euclidean,
+        LmoKind::ColNorm,
+    ] {
+        let lmo = Lmo::new(kind);
+        let g = Matrix::randn(24, 40, 1.0, &mut rng);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let plain = lmo.step(&g, 0.5, &mut r1);
+        let mut ws = Workspace::new();
+        let via = lmo.step_ws(&g, 0.5, &mut r2, &mut ws);
+        assert_eq!(plain.data, via.data, "{kind:?}");
+        ws.give(via);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            let mut rr = Rng::new(7);
+            let s = lmo.step_ws(&g, 0.5, &mut rr, &mut ws);
+            ws.give(s);
+        }
+        assert_eq!(ws.fresh_allocs(), warm, "{kind:?} must reuse the arena");
+    }
+}

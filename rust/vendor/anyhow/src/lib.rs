@@ -1,0 +1,173 @@
+//! Offline, dependency-free shim of the `anyhow` crate exposing exactly the
+//! subset efmuon uses: [`Error`], [`Result`], the [`Context`] trait, and the
+//! `anyhow!` / `bail!` macros. Drop-in: swap this path dependency for the
+//! real crates.io `anyhow` and nothing in the workspace changes.
+
+use std::fmt;
+
+/// A context-chained error value. Like `anyhow::Error` it deliberately does
+/// NOT implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl below coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from anything printable (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Outermost message (no chain).
+    pub fn to_msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // flatten the std source chain into our own
+        let mut msgs = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut tail: Option<Box<Error>> = None;
+        for m in msgs.into_iter().rev() {
+            tail = Some(Box::new(Error { msg: m, source: tail }));
+        }
+        Error { msg: e.to_string(), source: tail }
+    }
+}
+
+/// `anyhow::Result` with the usual defaulted error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`: build an [`Error`] from a message, a format string, or any
+/// `Display` expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!`: early-return an `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_msg(), "gone");
+        let r: Result<()> = Err(io_err()).with_context(|| "reading x");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Err(anyhow!("plain"))
+        }
+        assert_eq!(inner(true).unwrap_err().to_msg(), "failed with code 7");
+        assert_eq!(inner(false).unwrap_err().to_msg(), "plain");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_msg(), "owned");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_msg(), "missing");
+    }
+}

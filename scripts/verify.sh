@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification + hotpath perf smoke (see DESIGN.md §Verification).
+#
+#   scripts/verify.sh            # build + tests + hotpath bench (5 iters)
+#   scripts/verify.sh --no-bench # tier-1 only
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== perf smoke: hotpath bench (--iters 5) =="
+  cargo bench --bench hotpath -- --iters 5
+  echo "== BENCH_hotpath.json =="
+  cat ../BENCH_hotpath.json 2>/dev/null || cat BENCH_hotpath.json
+  echo
+fi
+
+echo "verify: OK"
