@@ -16,7 +16,8 @@ fn main() -> anyhow::Result<()> {
         workers: 4,
         steps: 30,
         worker_comp: "rank:0.15+nat".into(), // the paper's 7x-savings config
-        server_comp: "id".into(),            // broadcast assumed cheap (§5)
+        server_comp: "id".into(),            // paper setting; any spec (e.g.
+                                             // "top:0.25") compresses s2w too
         beta: 0.9,
         lr: 0.02,
         warmup: 5,

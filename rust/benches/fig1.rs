@@ -23,6 +23,10 @@ fn main() -> anyhow::Result<()> {
     let base = TrainConfig {
         workers: args.usize("workers", 4),
         steps,
+        // bidirectional / pipelined variants of the sweep: --server-comp
+        // compresses the EF21-P broadcast, --round-mode async:N pipelines
+        server_comp: args.str("server-comp", "id"),
+        round_mode: args.str("round-mode", "sync"),
         beta: 0.9,
         lr: args.f64("lr", 0.02),
         warmup: steps / 20 + 1,

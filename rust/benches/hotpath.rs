@@ -12,7 +12,7 @@
 use efmuon::compress::{codec, parse_spec};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
-use efmuon::dist::TransportMode;
+use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics};
 use efmuon::linalg::matmul::matmul_into_with_threads;
 use efmuon::linalg::ns::newton_schulz;
@@ -30,6 +30,10 @@ use efmuon::util::timer::{bench_fn, BenchResult};
 struct Entry {
     result: BenchResult,
     gflops: Option<f64>,
+    /// Per-round wire bytes (w2s per worker, s2w broadcast) for the
+    /// coordinator-round entries, so BENCH_hotpath.json tracks both
+    /// communication directions across PRs.
+    comm: Option<(usize, usize)>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -38,7 +42,7 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
         None => println!("{}", result.report()),
     }
-    entries.push(Entry { result, gflops });
+    entries.push(Entry { result, gflops, comm: None });
 }
 
 fn main() -> anyhow::Result<()> {
@@ -134,6 +138,7 @@ fn main() -> anyhow::Result<()> {
                 beta: 0.9,
                 schedule: Schedule::constant(0.01),
                 transport: TransportMode::Encoded,
+                round_mode: RoundMode::Sync,
                 seed: 3,
                 use_ns_artifact: false,
             },
@@ -142,6 +147,61 @@ fn main() -> anyhow::Result<()> {
             coord.round().unwrap();
         });
         push(&mut entries, r, None);
+        let s = coord.round()?;
+        entries.last_mut().unwrap().comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+    }
+
+    // ---- bidirectional compression + async pipelining: the same synthetic
+    //      deployment under (s2w id vs top:0.1) x (sync vs async:1). The
+    //      JSON rows carry per-round wire bytes in both directions; the
+    //      async row measures what one round of lookahead buys in latency.
+    {
+        let mut bench_round = |name: &str, server_comp: &str, mode: RoundMode| -> anyhow::Result<()> {
+            let q = Quadratics::new(4, 4096, 0.5, 0.1, &mut Rng::new(3));
+            let x0 = q.init(&mut Rng::new(3));
+            let svc = GradService::spawn_objective(Box::new(q), 3);
+            let mut coord = Coordinator::spawn(
+                x0,
+                vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
+                svc.handle(),
+                CoordinatorCfg {
+                    n_workers: 4,
+                    worker_comp: "top:0.1".into(),
+                    server_comp: server_comp.into(),
+                    beta: 0.9,
+                    schedule: Schedule::constant(0.01),
+                    transport: TransportMode::Encoded,
+                    round_mode: mode,
+                    seed: 3,
+                    use_ns_artifact: false,
+                },
+            )?;
+            let r = bench_fn(name, 3, iters, || {
+                coord.round().unwrap();
+            });
+            push(&mut entries, r, None);
+            // sample one round's wire bytes (async: the absorbed round may
+            // trail the issued one, so take the drained stats instead)
+            let s = coord.round()?;
+            let drained = coord.drain()?;
+            let w2s = if s.absorbed_step.is_some() {
+                s.w2s_bytes_per_worker
+            } else {
+                drained.first().map(|d| d.w2s_bytes_per_worker).unwrap_or(0)
+            };
+            entries.last_mut().unwrap().comm = Some((w2s, s.s2w_bytes));
+            Ok(())
+        };
+        bench_round("coordinator round s2w=top:0.1 sync (4 workers, d=4096)", "top:0.1", RoundMode::Sync)?;
+        bench_round(
+            "coordinator round s2w=top:0.1 async:1 (4 workers, d=4096)",
+            "top:0.1",
+            RoundMode::Async { lookahead: 1 },
+        )?;
+        let n = entries.len();
+        let sync_s = entries[n - 2].result.median_s;
+        let async_s = entries[n - 1].result.median_s;
+        println!("  -> async:1 round speedup: {:.2}x over sync (>1 = pipelining is faster)", sync_s / async_s);
     }
 
     // ---- threaded leader/worker vs the sequential reference driver on a
@@ -185,6 +245,7 @@ fn main() -> anyhow::Result<()> {
                 beta: 0.9,
                 schedule: Schedule::constant(0.01),
                 transport: TransportMode::Counted,
+                round_mode: RoundMode::Sync,
                 seed: 4,
                 use_ns_artifact: false,
             },
@@ -233,6 +294,9 @@ fn main() -> anyhow::Result<()> {
                 .put("iters", e.result.iters);
             if let Some(g) = e.gflops {
                 o = o.put("gflops", g);
+            }
+            if let Some((w2s, s2w)) = e.comm {
+                o = o.put("w2s_bytes_per_round", w2s).put("s2w_bytes_per_round", s2w);
             }
             o.build()
         })

@@ -18,9 +18,13 @@ pub struct TrainConfig {
     /// Worker (w2s) compressor spec, e.g. `rank:0.15+nat` (see
     /// [`crate::compress::parse_spec`]).
     pub worker_comp: String,
-    /// Server (s2w) compressor spec; the paper fixes this to `id` and
-    /// focuses on w2s (broadcast assumed cheap).
+    /// Server (s2w) compressor spec for the EF21-P broadcast. Any
+    /// contractive spec works end to end (bidirectional compression); `id`
+    /// reproduces the paper's dense-broadcast deployment.
     pub server_comp: String,
+    /// Round scheduling: `sync` | `async` (= `async:1`) | `async:N` —
+    /// see [`crate::dist::RoundMode`]. `async:0` is bit-equal to `sync`.
+    pub round_mode: String,
     /// Momentum β (paper uses 0.9).
     pub beta: f32,
     /// Base radius / learning rate for hidden layers.
@@ -58,6 +62,7 @@ impl Default for TrainConfig {
             steps: 200,
             worker_comp: "id".into(),
             server_comp: "id".into(),
+            round_mode: "sync".into(),
             beta: 0.9,
             lr: 0.02,
             embed_mult: 1.0,
@@ -83,6 +88,7 @@ impl TrainConfig {
         self.steps = a.usize("steps", self.steps);
         self.worker_comp = a.str("comp", &self.worker_comp);
         self.server_comp = a.str("server-comp", &self.server_comp);
+        self.round_mode = a.str("round-mode", &self.round_mode);
         self.beta = a.f64("beta", self.beta as f64) as f32;
         self.lr = a.f64("lr", self.lr);
         self.embed_mult = a.f64("embed-mult", self.embed_mult as f64) as f32;
@@ -113,6 +119,7 @@ impl TrainConfig {
                 "steps" => c.steps = v.as_usize().ok_or("steps: int")?,
                 "worker_comp" => c.worker_comp = v.as_str().ok_or("worker_comp: string")?.into(),
                 "server_comp" => c.server_comp = v.as_str().ok_or("server_comp: string")?.into(),
+                "round_mode" => c.round_mode = v.as_str().ok_or("round_mode: string")?.into(),
                 "beta" => c.beta = v.as_f64().ok_or("beta: number")? as f32,
                 "lr" => c.lr = v.as_f64().ok_or("lr: number")?,
                 "embed_mult" => c.embed_mult = v.as_f64().ok_or("embed_mult: number")? as f32,
@@ -153,11 +160,14 @@ mod tests {
     #[test]
     fn json_overrides() {
         let c = TrainConfig::from_json(
-            r#"{"workers": 8, "worker_comp": "rank:0.1+nat", "lr": 0.05}"#,
+            r#"{"workers": 8, "worker_comp": "rank:0.1+nat", "lr": 0.05,
+                "server_comp": "top:0.5", "round_mode": "async:2"}"#,
         )
         .unwrap();
         assert_eq!(c.workers, 8);
         assert_eq!(c.worker_comp, "rank:0.1+nat");
+        assert_eq!(c.server_comp, "top:0.5");
+        assert_eq!(c.round_mode, "async:2");
         assert_eq!(c.lr, 0.05);
         assert_eq!(c.steps, TrainConfig::default().steps);
         assert!(TrainConfig::from_json(r#"{"bogus": 1}"#).is_err());
@@ -166,13 +176,15 @@ mod tests {
     #[test]
     fn cli_overrides_win() {
         let a = Args::parse(
-            ["--steps", "7", "--comp", "top:0.2", "--seed", "42"]
+            ["--steps", "7", "--comp", "top:0.2", "--seed", "42",
+             "--round-mode", "async:1"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let c = TrainConfig::from_args(&a).unwrap();
         assert_eq!(c.steps, 7);
         assert_eq!(c.worker_comp, "top:0.2");
+        assert_eq!(c.round_mode, "async:1");
         assert_eq!(c.seed, 42);
     }
 }

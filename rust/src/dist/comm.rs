@@ -5,7 +5,15 @@
 //! analytic `wire_bytes()`; `Encoded` runs the real codec both ways —
 //! `codec::encode` produces *exactly* `wire_bytes()` bytes and round-trips
 //! losslessly (asserted in `rust/tests/compressors.rs`), so the two modes
-//! agree on both bytes and trajectory (asserted in `rust/tests/dist.rs`).
+//! agree on both bytes and trajectory (asserted in `rust/tests/dist.rs`
+//! and, per direction, in `rust/tests/scenario.rs`).
+//!
+//! Both hops — the EF21-P s2w broadcast and the EF21 w2s uplink — go
+//! through the same [`Wire::pack`], so byte accounting is symmetric by
+//! construction. Every `Round` hop carries its step number: with
+//! [`super::RoundMode::Async`] several rounds are in flight at once and
+//! replies from different rounds interleave on the shared reply channel,
+//! so the leader routes them into per-round id-slots by `(step, id)`.
 
 use crate::compress::{codec, Message};
 
@@ -42,12 +50,22 @@ impl Wire {
             Wire::Encoded(bufs) => bufs.iter().map(|b| codec::decode(b)).collect(),
         }
     }
+
+    /// The transport mode this wire travels in (the uplink reuses the
+    /// broadcast's mode).
+    pub fn mode(&self) -> TransportMode {
+        match self {
+            Wire::Counted(_) => TransportMode::Counted,
+            Wire::Encoded(_) => TransportMode::Encoded,
+        }
+    }
 }
 
 /// Leader → worker commands.
 pub enum ToWorker {
-    /// Run one EF21 round: apply this broadcast, compute, reply.
-    Round { broadcast: Wire },
+    /// Run one EF21 round: apply this broadcast, compute, reply with the
+    /// same `step` tag.
+    Round { step: usize, broadcast: Wire },
     /// Exit the worker loop.
     Stop,
 }
@@ -56,9 +74,12 @@ pub enum ToWorker {
 pub enum FromWorker {
     /// Initial local gradient estimator `G⁰ⱼ` (server averages these).
     Init { id: usize, g0: crate::linalg::matrix::Layers },
-    /// One round's uplink: local train loss + compressed residuals.
-    Round { id: usize, loss: f32, bytes: usize, uplink: Wire },
-    /// Irrecoverable worker-side failure.
+    /// One round's uplink: local train loss + compressed residuals, tagged
+    /// with the round it answers.
+    Round { id: usize, step: usize, loss: f32, bytes: usize, uplink: Wire },
+    /// Irrecoverable worker-side failure (including panics: the worker's
+    /// panic guard converts an unwind into this message so the leader
+    /// returns a clean `Err` instead of hanging).
     Failed { id: usize, err: String },
 }
 
@@ -80,6 +101,8 @@ mod tests {
         let (we, be) = Wire::pack(vec![msg.clone()], TransportMode::Encoded);
         assert_eq!(bc, analytic);
         assert_eq!(be, analytic, "codec must emit exactly wire_bytes()");
+        assert_eq!(wc.mode(), TransportMode::Counted);
+        assert_eq!(we.mode(), TransportMode::Encoded);
         assert_eq!(wc.unpack().unwrap()[0], msg);
         assert_eq!(we.unpack().unwrap()[0], msg, "codec must be lossless");
     }

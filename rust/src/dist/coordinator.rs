@@ -1,13 +1,30 @@
 //! The leader: owns the EF21 server state, one OS thread per worker, and
 //! the round loop. Exactly Algorithm 3 — the same [`ServerState`] /
 //! [`WorkerState`] machines as the sequential reference driver, so
-//! `rust/tests/dist.rs` can assert bit-equal trajectories.
+//! `rust/tests/dist.rs` and `rust/tests/scenario.rs` can assert bit-equal
+//! trajectories.
+//!
+//! Rounds run under a [`RoundMode`]: synchronous lock-step, or a bounded
+//! pipeline (`Async { lookahead }`) that keeps up to `lookahead` broadcasts
+//! in flight — workers compute round `i` on the previous broadcast while
+//! the leader absorbs round `i-1`'s stragglers. Replies are routed into
+//! per-round id-indexed slots by `(step, id)` and absorbed oldest-round
+//! first, in worker order, so `Async { lookahead: 0 }` is bit-equal to the
+//! synchronous loop.
 //!
 //! Determinism: worker replies are collected into id-indexed slots and
 //! absorbed in worker order; per-layer LMO RNG streams are pre-split; the
 //! threaded matmul is bit-stable in the thread count. A distributed run is
-//! therefore reproducible from its seed on any machine.
+//! therefore reproducible from its seed on any machine — in every round
+//! mode, because reply *arrival* order never influences absorption order.
+//!
+//! Fault model: a worker that fails (gradient error, bad broadcast, or a
+//! panic anywhere in its round — converted to a [`FromWorker::Failed`] by
+//! the worker's panic guard) surfaces as a clean `Err` from
+//! [`Coordinator::round`] / [`Coordinator::run`]; the leader never hangs
+//! on a dead worker.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -20,7 +37,7 @@ use crate::opt::{LayerGeometry, Schedule};
 use super::comm::{FromWorker, ToWorker, Wire};
 use super::server::SpectralServer;
 use super::service::GradHandle;
-use super::{Meter, TransportMode};
+use super::{Meter, RoundMode, TransportMode};
 
 /// Configuration of one distributed EF21-Muon deployment.
 #[derive(Debug, Clone)]
@@ -28,30 +45,63 @@ pub struct CoordinatorCfg {
     pub n_workers: usize,
     /// w2s compressor spec (per layer), e.g. `top:0.1+nat`.
     pub worker_comp: String,
-    /// s2w compressor spec (the paper fixes this to `id`).
+    /// s2w compressor spec (per layer) for the EF21-P broadcast. Any
+    /// contractive spec works end to end — `id` reproduces the paper's
+    /// dense-broadcast deployment, anything else activates bidirectional
+    /// compression (`rust/tests/scenario.rs` locks both down).
     pub server_comp: String,
     /// Momentum β.
     pub beta: f32,
     /// Radius / learning-rate schedule.
     pub schedule: Schedule,
     pub transport: TransportMode,
+    /// Round scheduling: lock-step or pipelined (see [`RoundMode`]).
+    pub round_mode: RoundMode,
     pub seed: u64,
     /// Route spectral LMOs through the PJRT NS artifact when available.
     pub use_ns_artifact: bool,
 }
 
-/// Telemetry of one distributed round.
+/// Telemetry of one [`Coordinator::round`] call.
+///
+/// In sync mode (and async with `lookahead = 0`) the call issues round
+/// `step` *and* absorbs it, so `absorbed_step == Some(step)`. With a
+/// positive lookahead the absorbed round trails the issued one; the first
+/// `lookahead` calls absorb nothing (`absorbed_step == None`,
+/// `train_loss` is NaN, `w2s_bytes_per_worker` is 0).
 #[derive(Debug, Clone)]
 pub struct RoundStats {
+    /// The round whose broadcast this call issued.
     pub step: usize,
-    /// Mean of the workers' local train losses this round.
+    /// The round whose uplinks this call absorbed, if any.
+    pub absorbed_step: Option<usize>,
+    /// Mean of the workers' local train losses in the absorbed round.
     pub train_loss: f32,
-    /// LMO radius used this round.
+    /// LMO radius of round `step` (the issued round for [`Coordinator::round`]
+    /// entries, the absorbed round for [`Coordinator::drain`] entries — in
+    /// both cases the radius belongs to `step`).
     pub radius: f64,
-    /// w2s bytes sent by one worker (the paper's reporting unit).
+    /// w2s bytes sent by one worker in the absorbed round (the paper's
+    /// reporting unit).
     pub w2s_bytes_per_worker: usize,
-    /// s2w broadcast bytes (counted once).
+    /// s2w broadcast bytes of the issued round (counted once).
     pub s2w_bytes: usize,
+}
+
+/// One round in flight: its schedule info plus id-indexed reply slots.
+struct InFlight {
+    step: usize,
+    radius: f64,
+    slots: Vec<Option<(f32, usize, Wire)>>,
+    filled: usize,
+}
+
+/// Telemetry of one absorbed round (internal).
+struct Absorbed {
+    step: usize,
+    radius: f64,
+    train_loss: f32,
+    w2s_bytes_per_worker: usize,
 }
 
 /// The leader of a threaded EF21-Muon deployment.
@@ -59,13 +109,20 @@ pub struct Coordinator {
     server: ServerState,
     schedule: Schedule,
     transport: TransportMode,
+    mode: RoundMode,
     spectral: SpectralServer,
     handle: GradHandle,
     meter: Meter,
     step: usize,
+    pending: VecDeque<InFlight>,
     to_workers: Vec<Sender<ToWorker>>,
     from_workers: Receiver<FromWorker>,
     joins: Vec<JoinHandle<()>>,
+    /// First fatal error, latched: once a worker fails, every further
+    /// `round`/`drain` call fails fast instead of re-entering the protocol
+    /// (a dying worker's command channel may linger briefly during unwind,
+    /// so without the latch a retry could block on a reply that never comes).
+    failed: Option<String>,
 }
 
 impl Coordinator {
@@ -134,22 +191,37 @@ impl Coordinator {
             server,
             schedule: cfg.schedule,
             transport: cfg.transport,
+            mode: cfg.round_mode,
             spectral: SpectralServer::new(handle.clone(), cfg.use_ns_artifact),
             handle,
             meter: Meter::new(),
             step: 0,
+            pending: VecDeque::new(),
             to_workers,
             from_workers: reply_rx,
             joins,
+            failed: None,
         })
     }
 
-    /// One full round of Algorithm 3 across the worker threads.
+    /// One [`Coordinator::round`] call of Algorithm 3: issue this round's
+    /// broadcast, then absorb completed rounds until at most
+    /// `lookahead` remain in flight (sync: exactly this round). After a
+    /// failure, this and every later call fail fast with the original
+    /// error.
     pub fn round(&mut self) -> Result<RoundStats> {
-        let n = self.to_workers.len();
+        self.check_alive()?;
+        let r = self.round_inner();
+        self.latch(r)
+    }
+
+    fn round_inner(&mut self) -> Result<RoundStats> {
         let t = self.schedule.at(self.step);
 
-        // server: LMO step (per-layer fan-out; PJRT NS artifact when hooked)
+        // server: LMO step on the current gradient estimator (per-layer
+        // fan-out; PJRT NS artifact when hooked). With a positive lookahead
+        // the estimator is up to `lookahead` rounds stale — that staleness
+        // is the price of overlapping leader and worker work.
         if self.spectral.enabled() {
             let spectral = &self.spectral;
             let hook = move |g: &crate::linalg::Matrix| spectral.orthogonalize(g);
@@ -158,21 +230,139 @@ impl Coordinator {
             self.server.lmo_step(t);
         }
 
-        // server: compress the shifted model, advance W, broadcast
+        // server: compress the shifted model (EF21-P), advance W, broadcast
         let bcast = self.server.broadcast();
         let (wire, s2w_bytes) = Wire::pack(bcast, self.transport);
         for tx in &self.to_workers {
-            tx.send(ToWorker::Round { broadcast: wire.clone() })
+            tx.send(ToWorker::Round { step: self.step, broadcast: wire.clone() })
                 .map_err(|_| anyhow!("a worker thread has exited"))?;
         }
+        self.meter.record_broadcast(s2w_bytes as u64);
+        let n = self.to_workers.len();
+        self.pending.push_back(InFlight {
+            step: self.step,
+            radius: t,
+            slots: (0..n).map(|_| None).collect(),
+            filled: 0,
+        });
+        let issued = self.step;
+        self.step += 1;
 
-        // workers: apply broadcast, grad, momentum, compress — in parallel.
-        // Collect replies into id-slots so absorption order is fixed.
-        let mut slots: Vec<Option<(f32, usize, Wire)>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
+        // absorb until at most `lookahead` rounds stay in flight
+        let lookahead = self.mode.lookahead();
+        let mut absorbed = None;
+        while self.pending.len() > lookahead {
+            absorbed = Some(self.absorb_oldest()?);
+        }
+        Ok(match absorbed {
+            Some(a) => RoundStats {
+                step: issued,
+                absorbed_step: Some(a.step),
+                train_loss: a.train_loss,
+                radius: t,
+                w2s_bytes_per_worker: a.w2s_bytes_per_worker,
+                s2w_bytes,
+            },
+            None => RoundStats {
+                step: issued,
+                absorbed_step: None,
+                train_loss: f32::NAN,
+                radius: t,
+                w2s_bytes_per_worker: 0,
+                s2w_bytes,
+            },
+        })
+    }
+
+    /// Absorb every still-in-flight round without issuing new broadcasts.
+    /// No-op in sync mode; async callers invoke this before a final eval /
+    /// checkpoint so all issued rounds have landed. Returns one stats entry
+    /// per drained round (`s2w_bytes` is 0 — their broadcasts were metered
+    /// when issued).
+    pub fn drain(&mut self) -> Result<Vec<RoundStats>> {
+        self.check_alive()?;
+        let r = self.drain_inner();
+        self.latch(r)
+    }
+
+    fn drain_inner(&mut self) -> Result<Vec<RoundStats>> {
+        let mut out = Vec::with_capacity(self.pending.len());
+        while !self.pending.is_empty() {
+            let a = self.absorb_oldest()?;
+            out.push(RoundStats {
+                step: a.step,
+                absorbed_step: Some(a.step),
+                train_loss: a.train_loss,
+                radius: a.radius,
+                w2s_bytes_per_worker: a.w2s_bytes_per_worker,
+                s2w_bytes: 0,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Drive `rounds` full rounds and drain the pipeline, so every issued
+    /// round has been absorbed on return. Stats are reported in absorption
+    /// order: the `rounds` per-call entries, then any drained tail.
+    pub fn run(&mut self, rounds: usize) -> Result<Vec<RoundStats>> {
+        let mut out = Vec::with_capacity(rounds + self.mode.lookahead());
+        for _ in 0..rounds {
+            out.push(self.round()?);
+        }
+        out.extend(self.drain()?);
+        Ok(out)
+    }
+
+    /// Fail fast if a previous round already hit a fatal error.
+    fn check_alive(&self) -> Result<()> {
+        match &self.failed {
+            Some(e) => Err(anyhow!("coordinator already failed: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Latch the first fatal error so later calls fail fast.
+    fn latch<T>(&mut self, r: Result<T>) -> Result<T> {
+        if let Err(e) = &r {
+            if self.failed.is_none() {
+                self.failed = Some(format!("{e:#}"));
+            }
+        }
+        r
+    }
+
+    /// Receive replies until the oldest in-flight round is complete, then
+    /// absorb it in worker-id order and return its telemetry.
+    fn absorb_oldest(&mut self) -> Result<Absorbed> {
+        loop {
+            let done = match self.pending.front() {
+                Some(p) => p.filled == p.slots.len(),
+                None => return Err(anyhow!("no round in flight to absorb")),
+            };
+            if done {
+                break;
+            }
             match self.from_workers.recv() {
-                Ok(FromWorker::Round { id, loss, bytes, uplink }) => {
-                    slots[id] = Some((loss, bytes, uplink))
+                Ok(FromWorker::Round { id, step, loss, bytes, uplink }) => {
+                    let front_step = self.pending.front().expect("pending non-empty").step;
+                    if step < front_step {
+                        return Err(anyhow!(
+                            "worker {id} replied for already-absorbed step {step}"
+                        ));
+                    }
+                    let p = match self.pending.get_mut(step - front_step) {
+                        Some(p) => p,
+                        None => {
+                            return Err(anyhow!("worker {id} replied for un-issued step {step}"))
+                        }
+                    };
+                    if id >= p.slots.len() || p.slots[id].is_some() {
+                        return Err(anyhow!(
+                            "duplicate or out-of-range reply from worker {id} at step {step}"
+                        ));
+                    }
+                    p.slots[id] = Some((loss, bytes, uplink));
+                    p.filled += 1;
                 }
                 Ok(FromWorker::Failed { id, err }) => {
                     return Err(anyhow!("worker {id} failed: {err}"))
@@ -183,35 +373,34 @@ impl Coordinator {
                 Err(_) => return Err(anyhow!("worker channel closed mid-round")),
             }
         }
+
+        let p = self.pending.pop_front().expect("pending non-empty");
+        let n = p.slots.len();
         let mut all_msgs = Vec::with_capacity(n);
         let mut loss_acc = 0.0f64;
         let mut w2s_per_worker = 0usize;
         let mut w2s_all = 0u64;
-        for slot in slots.into_iter() {
+        // decode + absorb in worker-id order (determinism contract)
+        for slot in p.slots.into_iter() {
             let (loss, bytes, uplink) = slot.expect("all round slots filled");
             loss_acc += loss as f64;
             w2s_per_worker = bytes;
             w2s_all += bytes as u64;
             all_msgs.push(uplink.unpack().map_err(anyhow::Error::msg)?);
         }
-
-        // server: absorb the averaged residuals (worker order)
         self.server.absorb(&all_msgs);
-        self.meter
-            .record_round(w2s_per_worker as u64, w2s_all, s2w_bytes as u64);
-
-        let stats = RoundStats {
-            step: self.step,
+        self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
+        Ok(Absorbed {
+            step: p.step,
+            radius: p.radius,
             train_loss: (loss_acc / n as f64) as f32,
-            radius: t,
             w2s_bytes_per_worker: w2s_per_worker,
-            s2w_bytes,
-        };
-        self.step += 1;
-        Ok(stats)
+        })
     }
 
-    /// Evaluation loss at the current server parameters.
+    /// Evaluation loss at the current server parameters. In async modes the
+    /// parameters already include every *issued* LMO step; uplinks of
+    /// still-in-flight rounds land only after [`Coordinator::drain`].
     pub fn eval(&self) -> Result<f32> {
         self.handle.eval(self.server.x.clone())
     }
@@ -226,9 +415,14 @@ impl Coordinator {
         &self.meter
     }
 
-    /// Rounds completed.
+    /// Rounds issued (broadcast sent) so far.
     pub fn steps_done(&self) -> usize {
         self.step
+    }
+
+    /// Rounds currently in flight (0 in sync mode between calls).
+    pub fn pending_rounds(&self) -> usize {
+        self.pending.len()
     }
 }
 
@@ -243,6 +437,26 @@ impl Drop for Coordinator {
     }
 }
 
+/// Converts a worker-thread panic into a [`FromWorker::Failed`] reply: the
+/// guard's `Drop` runs during unwinding while the reply channel is still
+/// alive, so the leader gets a clean error instead of waiting forever for
+/// a reply that will never come.
+struct PanicGuard {
+    id: usize,
+    tx: Sender<FromWorker>,
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.tx.send(FromWorker::Failed {
+                id: self.id,
+                err: "worker thread panicked".into(),
+            });
+        }
+    }
+}
+
 /// Worker-thread main loop: init, then one EF21 local step per command.
 fn worker_main(
     mut state: WorkerState,
@@ -251,6 +465,7 @@ fn worker_main(
     mut handle: GradHandle,
 ) {
     let id = state.id;
+    let _guard = PanicGuard { id, tx: tx.clone() };
     // theory init: M⁰ⱼ = G⁰ⱼ = ∇fⱼ(X⁰) (W starts at X⁰)
     match handle.grad(id, &state.w) {
         Ok((_, grad0)) => {
@@ -265,11 +480,11 @@ fn worker_main(
         }
     }
     while let Ok(cmd) = rx.recv() {
-        let broadcast = match cmd {
+        let (step, broadcast) = match cmd {
             ToWorker::Stop => break,
-            ToWorker::Round { broadcast } => broadcast,
+            ToWorker::Round { step, broadcast } => (step, broadcast),
         };
-        let mode = wire_mode(&broadcast);
+        let mode = broadcast.mode();
         let msgs = match broadcast.unpack() {
             Ok(m) => m,
             Err(e) => {
@@ -288,18 +503,10 @@ fn worker_main(
         let uplink_msgs = state.local_step(&grad);
         let (uplink, bytes) = Wire::pack(uplink_msgs, mode);
         if tx
-            .send(FromWorker::Round { id, loss, bytes, uplink })
+            .send(FromWorker::Round { id, step, loss, bytes, uplink })
             .is_err()
         {
             break;
         }
-    }
-}
-
-/// The uplink reuses the broadcast's transport mode.
-fn wire_mode(w: &Wire) -> TransportMode {
-    match w {
-        Wire::Counted(_) => TransportMode::Counted,
-        Wire::Encoded(_) => TransportMode::Encoded,
     }
 }

@@ -7,13 +7,24 @@
 //!
 //! ```text
 //!   caller thread ──► Coordinator::round()
-//!        │   lmo_step (per-layer fan-out) + broadcast
+//!        │   lmo_step (per-layer fan-out) + EF21-P broadcast (s2w comp)
 //!        ├─ comm::Wire ─► worker thread 0 ─┐   apply_broadcast,
 //!        ├─ comm::Wire ─► worker thread 1 ─┤   grad via GradHandle,
-//!        ├─ ...                            │   local_step (compress)
+//!        ├─ ...                            │   local_step (w2s comp)
 //!        └─ comm::Wire ─► worker thread n ─┘
 //!        ◄───────── uplink Wire + loss ────┘   absorb, meter
 //! ```
+//!
+//! Both directions are compressed: the w2s uplink by the workers' EF21
+//! compressors, the s2w broadcast by the server's EF21-P compressor
+//! (`CoordinatorCfg::server_comp`) — and both are metered symmetrically by
+//! the same [`comm::Wire::pack`] in either [`TransportMode`].
+//!
+//! Round scheduling is a [`RoundMode`]: fully synchronous lock-step, or a
+//! bounded pipeline (`Async { lookahead }`) where up to `lookahead`
+//! broadcasts stay in flight, so the workers compute round `i` while the
+//! leader is still absorbing round `i-1`'s stragglers. `lookahead = 0` is
+//! bit-equal to the synchronous loop (asserted in `rust/tests/scenario.rs`).
 //!
 //! Gradients come from a [`service::GradService`]: either a synthetic
 //! [`crate::funcs::Objective`] evaluated *inside* each worker thread (fully
@@ -40,7 +51,58 @@ pub enum TransportMode {
     Encoded,
 }
 
-/// Cumulative communication meters for one coordinator (bytes).
+/// Round scheduling policy of the [`coordinator::Coordinator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Lock-step: broadcast, wait for every worker, absorb, repeat.
+    Sync,
+    /// Pipelined rounds: up to `lookahead` broadcasts stay in flight, so
+    /// workers run ahead on the previous broadcast while the leader absorbs
+    /// stragglers. The leader's LMO step then uses a gradient estimator
+    /// that is up to `lookahead` rounds stale. `lookahead = 0` is bit-equal
+    /// to [`RoundMode::Sync`].
+    Async { lookahead: usize },
+}
+
+impl RoundMode {
+    /// Number of rounds allowed to stay in flight after a broadcast.
+    pub fn lookahead(self) -> usize {
+        match self {
+            RoundMode::Sync => 0,
+            RoundMode::Async { lookahead } => lookahead,
+        }
+    }
+
+    /// Parse a mode spec: `sync` | `async` (= `async:1`) | `async:N`.
+    pub fn parse(s: &str) -> Result<RoundMode, String> {
+        match s {
+            "sync" => Ok(RoundMode::Sync),
+            "async" => Ok(RoundMode::Async { lookahead: 1 }),
+            other => match other.strip_prefix("async:") {
+                Some(n) => n
+                    .parse::<usize>()
+                    .map(|lookahead| RoundMode::Async { lookahead })
+                    .map_err(|_| format!("bad round mode {other:?}: expected async:<lookahead>")),
+                None => Err(format!("bad round mode {other:?}: expected sync | async | async:<n>")),
+            },
+        }
+    }
+
+    /// Round-trips through [`RoundMode::parse`].
+    pub fn spec(self) -> String {
+        match self {
+            RoundMode::Sync => "sync".into(),
+            RoundMode::Async { lookahead } => format!("async:{lookahead}"),
+        }
+    }
+}
+
+/// Cumulative communication meters for one coordinator (bytes). Both
+/// directions are recorded by the same transport packer, so `Counted` and
+/// `Encoded` runs agree on every counter (asserted in
+/// `rust/tests/scenario.rs`). In async modes the broadcast counter leads
+/// the uplink counters by up to `lookahead` rounds until the pipeline is
+/// drained.
 #[derive(Debug, Default)]
 pub struct Meter {
     /// w2s bytes sent by ONE worker (the paper's reporting unit).
@@ -49,6 +111,10 @@ pub struct Meter {
     pub w2s_all: AtomicU64,
     /// s2w broadcast bytes (counted once per round, not per worker).
     pub s2w_total: AtomicU64,
+    /// Rounds whose broadcast has been issued.
+    pub rounds_issued: AtomicU64,
+    /// Rounds whose uplinks have been fully absorbed.
+    pub rounds_absorbed: AtomicU64,
 }
 
 impl Meter {
@@ -66,9 +132,60 @@ impl Meter {
         self.s2w_total.load(Ordering::Relaxed)
     }
 
-    pub(crate) fn record_round(&self, w2s_per_worker: u64, w2s_all: u64, s2w: u64) {
+    /// Rounds issued so far.
+    pub fn rounds_issued(&self) -> u64 {
+        self.rounds_issued.load(Ordering::Relaxed)
+    }
+
+    /// Rounds fully absorbed so far (== issued once the pipeline drains).
+    pub fn rounds_absorbed(&self) -> u64 {
+        self.rounds_absorbed.load(Ordering::Relaxed)
+    }
+
+    /// Record one issued broadcast (s2w direction).
+    pub(crate) fn record_broadcast(&self, s2w: u64) {
+        self.s2w_total.fetch_add(s2w, Ordering::Relaxed);
+        self.rounds_issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one fully-absorbed round of uplinks (w2s direction).
+    pub(crate) fn record_uplinks(&self, w2s_per_worker: u64, w2s_all: u64) {
         self.w2s_per_worker.fetch_add(w2s_per_worker, Ordering::Relaxed);
         self.w2s_all.fetch_add(w2s_all, Ordering::Relaxed);
-        self.s2w_total.fetch_add(s2w, Ordering::Relaxed);
+        self.rounds_absorbed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_mode_parse_roundtrip() {
+        assert_eq!(RoundMode::parse("sync").unwrap(), RoundMode::Sync);
+        assert_eq!(RoundMode::parse("async").unwrap(), RoundMode::Async { lookahead: 1 });
+        assert_eq!(RoundMode::parse("async:0").unwrap(), RoundMode::Async { lookahead: 0 });
+        assert_eq!(RoundMode::parse("async:3").unwrap(), RoundMode::Async { lookahead: 3 });
+        for s in ["sync", "async:0", "async:2"] {
+            assert_eq!(RoundMode::parse(s).unwrap().spec(), s);
+        }
+        for s in ["", "bogus", "async:", "async:x", "sync:1"] {
+            assert!(RoundMode::parse(s).is_err(), "{s} should fail");
+        }
+        assert_eq!(RoundMode::Sync.lookahead(), 0);
+        assert_eq!(RoundMode::Async { lookahead: 4 }.lookahead(), 4);
+    }
+
+    #[test]
+    fn meter_counts_both_directions() {
+        let m = Meter::new();
+        m.record_broadcast(100);
+        m.record_broadcast(100);
+        m.record_uplinks(40, 120);
+        assert_eq!(m.s2w(), 200);
+        assert_eq!(m.w2s(), 40);
+        assert_eq!(m.w2s_all.load(Ordering::Relaxed), 120);
+        assert_eq!(m.rounds_issued(), 2);
+        assert_eq!(m.rounds_absorbed(), 1);
     }
 }

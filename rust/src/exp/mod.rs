@@ -111,6 +111,88 @@ pub fn table2_text(rows: &[CostRow]) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Bidirectional compression: the EF21-P s2w sweep (objective backend)
+// ---------------------------------------------------------------------------
+
+/// Server-compressor specs worth sweeping for the s2w direction.
+pub fn s2w_specs() -> Vec<&'static str> {
+    vec!["id", "nat", "top:0.5", "top:0.25"]
+}
+
+/// One row of the bidirectional-compression comparison.
+#[derive(Debug, Clone)]
+pub struct S2wRow {
+    pub server_spec: String,
+    /// Total s2w broadcast bytes over the run.
+    pub s2w_bytes: u64,
+    /// Total w2s bytes per worker over the run.
+    pub w2s_bytes: u64,
+    pub final_loss: f64,
+}
+
+/// EF21-P server-to-worker sweep on the objective backend (offline, no
+/// artifacts): fixed w2s compressor, varying s2w compressor, identical
+/// seeds. The paper's deployment fixes s2w to `id`; this measures what the
+/// bidirectional path buys — strictly fewer broadcast bytes at matched
+/// final loss (the scenario harness asserts the same on the threaded
+/// coordinator).
+pub fn s2w_savings(server_specs: &[&str], rounds: usize, seed: u64) -> Result<Vec<S2wRow>> {
+    let mut rows = Vec::new();
+    for spec in server_specs {
+        let mut rng = Rng::new(seed);
+        let obj = Quadratics::new(4, 16, 0.6, 0.0, &mut rng);
+        let geometry = vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }];
+        let mut opt = Ef21MuonSeq::new(
+            &obj,
+            geometry,
+            "top:0.3",
+            spec,
+            1.0,
+            Schedule::warmup_cosine(0.05, 0, rounds, 0.02),
+            false,
+            seed,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let trace = opt.run(&obj, rounds);
+        rows.push(S2wRow {
+            server_spec: spec.to_string(),
+            s2w_bytes: opt.total_s2w_bytes,
+            w2s_bytes: opt.total_w2s_bytes,
+            final_loss: trace.last().map(|s| s.loss).unwrap_or(f64::NAN),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the s2w sweep as text.
+pub fn s2w_text(rows: &[S2wRow]) -> String {
+    let dense = rows
+        .iter()
+        .find(|r| r.server_spec == "id")
+        .map(|r| r.s2w_bytes)
+        .unwrap_or(0);
+    render_table(
+        &["s2w compressor", "s2w bytes", "vs dense", "w2s bytes/worker", "final loss"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.server_spec.clone(),
+                    r.s2w_bytes.to_string(),
+                    if dense > 0 {
+                        format!("{:.4}", r.s2w_bytes as f64 / dense as f64)
+                    } else {
+                        "-".into()
+                    },
+                    r.w2s_bytes.to_string(),
+                    format!("{:.6}", r.final_loss),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
 // Figures 1 & 2: loss vs tokens / bytes, and the trade-off scatter
 // ---------------------------------------------------------------------------
 
@@ -644,6 +726,25 @@ mod tests {
         assert!(get("rank:0.15+nat") < get("rank:0.15"));
         assert!(get("top:0.15+nat") < get("top:0.15"));
         assert!(get("rank:0.15") < get("top:0.15"));
+    }
+
+    #[test]
+    fn s2w_sweep_saves_bytes_at_matched_loss() {
+        let rows = s2w_savings(&["id", "top:0.5"], 600, 7).unwrap();
+        let id = &rows[0];
+        let top = &rows[1];
+        // compressed broadcast is strictly cheaper...
+        assert!(top.s2w_bytes < id.s2w_bytes, "{} vs {}", top.s2w_bytes, id.s2w_bytes);
+        // ...at matched final loss (both runs decay the radius to ~0)
+        assert!(
+            (top.final_loss - id.final_loss).abs() < 1e-3,
+            "{} vs {}",
+            top.final_loss,
+            id.final_loss
+        );
+        // w2s direction is unchanged by the server compressor choice:
+        // top:0.3 on a 16-dim layer sends a fixed k per round
+        assert_eq!(top.w2s_bytes, id.w2s_bytes);
     }
 
     #[test]

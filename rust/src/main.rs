@@ -6,6 +6,7 @@
 //!   info             print manifest / layer table / geometry
 //!   table2           reproduce Table 2 (per-round communication cost)
 //!   rates            reproduce Table 1 empirically (rate fits)
+//!   s2w              bidirectional compression: EF21-P broadcast sweep
 //!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
 //!   divergence       the §2 divergence demo (naive DCGD vs EF)
 //!
@@ -40,6 +41,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "info" => cmd_info(args),
         "table2" => cmd_table2(args),
         "rates" => cmd_rates(args),
+        "s2w" => cmd_s2w(args),
         "fig1" | "fig2" => cmd_figures(args),
         "divergence" => cmd_divergence(args),
         "help" | "--help" => {
@@ -58,19 +60,27 @@ USAGE: efmuon <command> [--flag value ...]
 COMMANDS:
   train        distributed EF21-Muon pretraining on the AOT-compiled model
                flags: --artifacts DIR --workers N --steps K --comp SPEC
-                      --server-comp SPEC --beta B --lr LR --warmup W
-                      --eval-every E --seed S --log out.jsonl --full-codec
+                      --server-comp SPEC --round-mode sync|async:N --beta B
+                      --lr LR --warmup W --eval-every E --seed S
+                      --log out.jsonl --full-codec
   eval         load artifacts, run one eval pass (smoke test)
   info         print the manifest: layers, shapes, groups, LMO geometry
   table2       Table 2 — per-round communication cost per compressor
   rates        Table 1 — empirical convergence-rate validation
+  s2w          bidirectional compression — EF21-P server-to-worker sweep on
+               the objective backend (flags: --rounds K --seed S)
   fig1/fig2    Figures 1-2 — compressor sweep (loss vs tokens/bytes)
                flags: --steps K --target LOSS plus all train flags
   divergence   naive biased compression diverges; EF fixes it (paper §2)
 
-COMPRESSOR SPECS:
+COMPRESSOR SPECS (both directions: --comp for w2s, --server-comp for s2w):
   id | nat | top:F | top:F+nat | rank:F | rank:F+nat | drop:P | damp:G
   | svdtop:K | coltop:F      (F = fraction, e.g. top:0.15+nat)
+
+ROUND MODES:
+  sync      lock-step rounds (default)
+  async:N   pipelined: up to N broadcasts in flight; workers run ahead on
+            the previous broadcast (async:0 is bit-equal to sync)
 ";
 
 fn warn_unknown(args: &Args) {
@@ -83,8 +93,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     println!(
-        "training: {} workers, {} steps, w2s={}, s2w={}, lr={}, beta={}",
-        cfg.workers, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.lr, cfg.beta
+        "training: {} workers, {} steps, w2s={}, s2w={}, rounds={}, lr={}, beta={}",
+        cfg.workers, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.round_mode,
+        cfg.lr, cfg.beta
     );
     let report = efmuon::train::train(&cfg)?;
     println!(
@@ -174,6 +185,15 @@ fn cmd_rates(args: &Args) -> Result<()> {
     warn_unknown(args);
     let rows = exp::rate_validation(seed)?;
     println!("{}", exp::rates_text(&rows));
+    Ok(())
+}
+
+fn cmd_s2w(args: &Args) -> Result<()> {
+    let rounds = args.usize("rounds", 600);
+    let seed = args.u64("seed", 7);
+    warn_unknown(args);
+    let rows = exp::s2w_savings(&exp::s2w_specs(), rounds, seed)?;
+    println!("{}", exp::s2w_text(&rows));
     Ok(())
 }
 

@@ -9,6 +9,14 @@
 //! Worker state:  W (mirror of the shift), Mⱼ (momentum), Gⱼ (local
 //!                gradient estimator), per-layer compressors.
 //!
+//! Compression is **bidirectional**: the w2s uplink is compressed by each
+//! worker's EF21 compressor, the s2w broadcast by the server's EF21-P
+//! compressor (`server_spec` — any contractive spec, not just `id`). The
+//! per-worker s2w error-feedback state is the shift Wⱼ each worker holds;
+//! because the broadcast stream is total-ordered and every worker applies
+//! every message, all Wⱼ coincide bit-for-bit with the server's W, so the
+//! server stores that state once ([`state_consistency`] asserts this).
+//!
 //! One iteration (Algorithm 3):
 //!   server:  Xᵢ ← LMO_{B(Xᵢ,tᵢ)}(Gᵢ);  Sᵢ = C(Xᵢ−Wᵢ);  Wᵢ += Sᵢ;  bcast S
 //!   worker:  Wᵢ += Sᵢ;  Mᵢⱼ ← (1−β)Mᵢⱼ + β∇ᵢf_j(W;ξ);
@@ -159,9 +167,14 @@ impl ServerState {
         });
     }
 
-    /// Algorithm lines 5–7: compress the shifted model, advance W, return
-    /// the broadcast messages (one per layer). The `X − W` residual scratch
-    /// is served from the lane-0 arena (no per-round allocation).
+    /// Algorithm lines 5–7 (the EF21-P s2w half): compress the shifted
+    /// model `C(X − W)`, advance the shift `W += C(X − W)`, return the
+    /// broadcast messages (one per layer). With a non-`id` server
+    /// compressor the broadcast is strictly cheaper than dense and the
+    /// compression error is re-absorbed next round through the shift —
+    /// the same error-feedback recursion as the uplink, mirrored. The
+    /// `X − W` residual scratch is served from the lane-0 arena (no
+    /// per-round allocation).
     pub fn broadcast(&mut self) -> Vec<Message> {
         let mut msgs = Vec::with_capacity(self.x.len());
         let ws = &mut self.ws[0];

@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::dist::coordinator::{Coordinator, CoordinatorCfg};
 use crate::dist::service::GradService;
-use crate::dist::TransportMode;
+use crate::dist::{RoundMode, TransportMode};
 use crate::metrics::JsonlWriter;
 use crate::model::{Group, Manifest};
 use crate::opt::{LayerGeometry, Schedule};
@@ -110,6 +110,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             } else {
                 TransportMode::Counted
             },
+            round_mode: RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?,
             seed: cfg.seed,
             use_ns_artifact: cfg.use_ns_artifact,
         },
@@ -125,26 +126,46 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     for step in 0..cfg.steps {
         let stats = coord.round()?;
-        train_losses.push(stats.train_loss);
-        let do_eval = step % cfg.eval_every.max(1) == 0 || step + 1 == cfg.steps;
+        // async modes: the first `lookahead` calls absorb no round yet, so
+        // there is no train loss to record for them
+        if stats.absorbed_step.is_some() {
+            train_losses.push(stats.train_loss);
+        }
+        let last = step + 1 == cfg.steps;
+        if last {
+            // land every in-flight round before the final eval (no-op when
+            // synchronous)
+            for s in coord.drain()? {
+                train_losses.push(s.train_loss);
+            }
+        }
+        let do_eval = step % cfg.eval_every.max(1) == 0 || last;
         if do_eval {
             let eval_loss = coord.eval()?;
+            // pair tokens with the byte meter: both count *absorbed* rounds
+            // (== step+1 in sync mode; in async modes eval_loss runs at most
+            // `lookahead` issued-but-unabsorbed LMO steps ahead of them)
+            let absorbed = coord.meter().rounds_absorbed();
             let point = EvalPoint {
                 step,
-                tokens_processed: (tokens_per_step as u64) * (step as u64 + 1),
+                tokens_processed: (tokens_per_step as u64) * absorbed,
                 w2s_bytes_per_worker: coord.meter().w2s(),
                 eval_loss,
             };
             if let Some(log) = log.as_mut() {
-                log.write(
-                    &JsonObj::new()
-                        .put("step", step)
-                        .put("train_loss", stats.train_loss)
-                        .put("eval_loss", eval_loss)
-                        .put("tokens", point.tokens_processed)
-                        .put("w2s_bytes", point.w2s_bytes_per_worker)
-                        .put("radius", stats.radius),
-                )?;
+                let mut o = JsonObj::new()
+                    .put("step", step)
+                    .put("eval_loss", eval_loss)
+                    .put("tokens", point.tokens_processed)
+                    .put("w2s_bytes", point.w2s_bytes_per_worker)
+                    .put("radius", stats.radius);
+                // async modes: no train loss has landed yet in the first
+                // `lookahead` rounds — omit the key rather than emit NaN
+                // (which would not be valid JSON)
+                if let Some(l) = train_losses.last().copied() {
+                    o = o.put("train_loss", l);
+                }
+                log.write(&o)?;
                 log.flush()?;
             }
             curve.push(point);

@@ -1,0 +1,226 @@
+//! Property tests over every compressor spec the codec grammar can parse
+//! (see `compress::parse_spec`), on ragged layer shapes — wide, tall,
+//! single-row/column and 1×1, with adversarial value patterns from
+//! `util::proptest::Gen` (zeros, huge/tiny scales, magnitude ties):
+//!
+//! 1. wire-codec exactness: `decode(encode(msg)) == msg` and
+//!    `len == wire_bytes()` for every spec;
+//! 2. lossless chain: for lossless specs the full
+//!    compress→encode→decode→decode chain reproduces the input bit-for-bit;
+//! 3. contraction bounds (Definition 1): per-instance analytic bounds for
+//!    the deterministic compressors, in-expectation bounds (mean over
+//!    repetitions) for the randomized ones.
+
+use efmuon::compress::quantize::ScaledSign;
+use efmuon::compress::{codec, contraction_ratio, parse_spec};
+use efmuon::linalg::Matrix;
+use efmuon::util::proptest::{check, Gen};
+use efmuon::util::rng::Rng;
+
+/// Every spec family × representative parameters of the codec grammar.
+const ALL_SPECS: &[&str] = &[
+    "id",
+    "nat",
+    "top:0.15",
+    "top:0.3+nat",
+    "top:1",
+    "rank:0.3",
+    "rank:0.3+nat",
+    "rank:1",
+    "drop:0.35",
+    "damp:0.6",
+    "damp:1",
+    "svdtop:1",
+    "svdtop:2",
+    "coltop:0.2",
+    "coltop:1",
+    "sign",
+    "qsgd:1",
+    "qsgd:7",
+    "qsgd:127",
+    "randk:0.2",
+    "randk:1",
+];
+
+/// Specs whose compression is the identity map (the codec round-trip is
+/// exact for *every* spec; for these the whole chain is lossless).
+const LOSSLESS_SPECS: &[&str] = &["id", "damp:1", "top:1", "randk:1"];
+
+/// A ragged shape: mostly random dims, with forced extremes (vectors,
+/// single cells, wide/tall strips) cycled in by case index.
+fn ragged_shape(g: &mut Gen) -> (usize, usize) {
+    const EXTREMES: &[(usize, usize)] = &[(1, 1), (1, 29), (23, 1), (2, 31), (31, 2)];
+    if g.case % 3 == 0 {
+        EXTREMES[g.case / 3 % EXTREMES.len()]
+    } else {
+        (g.usize_in(1, 20), g.usize_in(1, 20))
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_every_spec_ragged() {
+    check("codec-ragged", 15, 71, |g| {
+        let (m, n) = ragged_shape(g);
+        let x = g.matrix_of(m, n);
+        let mut rng = Rng::new(4000 + g.case as u64);
+        for spec in ALL_SPECS {
+            let mut c = parse_spec(spec).unwrap();
+            let msg = c.compress(&x, &mut rng);
+            let bytes = codec::encode(&msg);
+            if bytes.len() != msg.wire_bytes() {
+                return Err(format!(
+                    "{spec} on {m}x{n}: encoded {} bytes != wire_bytes {}",
+                    bytes.len(),
+                    msg.wire_bytes()
+                ));
+            }
+            let back = codec::decode(&bytes).map_err(|e| format!("{spec} on {m}x{n}: {e}"))?;
+            if back != msg {
+                return Err(format!("{spec} on {m}x{n}: codec roundtrip mismatch"));
+            }
+            if back.shape() != (m, n) {
+                return Err(format!("{spec} on {m}x{n}: shape {:?}", back.shape()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossless_chain_is_exact() {
+    check("lossless-chain", 15, 72, |g| {
+        let (m, n) = ragged_shape(g);
+        let x = g.matrix_of(m, n);
+        let mut rng = Rng::new(5000 + g.case as u64);
+        for spec in LOSSLESS_SPECS {
+            let mut c = parse_spec(spec).unwrap();
+            let msg = c.compress(&x, &mut rng);
+            let wire = codec::decode(&codec::encode(&msg))
+                .map_err(|e| format!("{spec}: {e}"))?;
+            let decoded = wire.decode();
+            if decoded.data != x.data {
+                return Err(format!("{spec} on {m}x{n}: chain is not bit-exact"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Per-instance contraction bound `‖C(x)−x‖² ≤ bound·‖x‖²` for the
+/// deterministic compressors (tight analytic α where one exists).
+fn det_ratio_bound(spec: &str, x: &Matrix) -> Option<f64> {
+    let numel = x.numel() as f64;
+    let frac_k = |f: f64, d: f64| ((f * d).ceil()).clamp(1.0, d);
+    match spec {
+        "id" | "damp:1" | "top:1" => Some(0.0),
+        "damp:0.6" => Some(0.16 + 1e-4), // (1-γ)²
+        "top:0.15" => Some(1.0 - frac_k(0.15, numel) / numel),
+        // TopK then Natural on survivors: dropped mass + per-entry rounding
+        // error (≤ the entry itself) never exceeds the input energy
+        "top:0.3+nat" => Some(1.0),
+        "coltop:0.2" => {
+            let cols = x.cols as f64;
+            Some(1.0 - frac_k(0.2, cols) / cols)
+        }
+        "coltop:1" => Some(0.0 + 1e-9),
+        "sign" => Some(1.0 - ScaledSign::alpha(x) + 1e-3),
+        // orthogonal projection / truncated SVD: residual ≤ input (f32 slack)
+        "rank:0.3" | "rank:1" | "svdtop:1" | "svdtop:2" => Some(1.0 + 1e-3),
+        // nearest-level rounding with 0 on the grid: per-entry error ≤ |v|
+        "qsgd:1" | "qsgd:7" | "qsgd:127" => Some(1.0),
+        _ => None,
+    }
+}
+
+#[test]
+fn prop_deterministic_contraction_bounds() {
+    check("det-contraction", 15, 73, |g| {
+        let (m, n) = ragged_shape(g);
+        let x = g.matrix_of(m, n);
+        let mut rng = Rng::new(6000 + g.case as u64);
+        for spec in ALL_SPECS {
+            let bound = match det_ratio_bound(spec, &x) {
+                Some(b) => b,
+                None => continue,
+            };
+            let mut c = parse_spec(spec).unwrap();
+            let ratio = contraction_ratio(&x, &c.compress(&x, &mut rng).decode());
+            if ratio > bound + 1e-6 {
+                return Err(format!("{spec} on {m}x{n}: ratio {ratio} > bound {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qsgd_error_within_half_step() {
+    check("qsgd-halfstep", 15, 74, |g| {
+        let (m, n) = ragged_shape(g);
+        let x = g.matrix_of(m, n);
+        let mut rng = Rng::new(6500 + g.case as u64);
+        for (spec, levels) in [("qsgd:1", 1.0f32), ("qsgd:7", 7.0), ("qsgd:127", 127.0)] {
+            let mut c = parse_spec(spec).unwrap();
+            let y = c.compress(&x, &mut rng).decode();
+            let scale = x.max_abs();
+            let half = scale / levels / 2.0;
+            for (a, b) in x.data.iter().zip(&y.data) {
+                if (a - b).abs() > half + 1e-5 * scale.max(1.0) {
+                    return Err(format!("{spec} on {m}x{n}: |{a} - {b}| > half-step {half}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// In-expectation bounds for the randomized compressors: mean contraction
+/// ratio over repeated draws vs the analytic α (generous sampling slack —
+/// the property must be robust, not a statistics exam).
+#[test]
+fn prop_randomized_contraction_in_expectation() {
+    check("rand-contraction", 10, 75, |g| {
+        let (m, n) = ragged_shape(g);
+        let x = g.matrix_of(m, n);
+        if x.norm2_sq() == 0.0 {
+            return Ok(()); // ratio is defined as 0 on zero input
+        }
+        let numel = x.numel() as f64;
+        let mut rng = Rng::new(7000 + g.case as u64);
+        let mean = |spec: &str, reps: usize, rng: &mut Rng| -> f64 {
+            let mut c = parse_spec(spec).unwrap();
+            (0..reps)
+                .map(|_| contraction_ratio(&x, &c.compress(&x, rng).decode()))
+                .sum::<f64>()
+                / reps as f64
+        };
+
+        // Natural: E ratio ≤ 1/8 (Horváth et al.; the worst single value,
+        // v = (4/3)·2^k, attains exactly 1/8) + sampling slack
+        let nat = mean("nat", 40, &mut rng);
+        if nat > 1.0 / 8.0 + 0.08 {
+            return Err(format!("nat on {m}x{n}: mean ratio {nat}"));
+        }
+
+        // Dropout: E ratio = 1 − p exactly
+        let drop = mean("drop:0.35", 200, &mut rng);
+        if (drop - 0.65).abs() > 0.15 {
+            return Err(format!("drop:0.35 on {m}x{n}: mean ratio {drop}"));
+        }
+
+        // RandK: E ratio = 1 − k/d in any coordinate-separable norm
+        let k = (0.2 * numel).ceil().clamp(1.0, numel);
+        let randk = mean("randk:0.2", 80, &mut rng);
+        if randk > 1.0 - k / numel + 0.2 {
+            return Err(format!("randk:0.2 on {m}x{n}: mean ratio {randk}"));
+        }
+
+        // RankK+Natural: no tight closed form (rounding enters through both
+        // factors); must still contract on average, with headroom
+        let rknat = mean("rank:0.3+nat", 30, &mut rng);
+        if rknat > 1.0 + 0.2 {
+            return Err(format!("rank:0.3+nat on {m}x{n}: mean ratio {rknat}"));
+        }
+        Ok(())
+    });
+}

@@ -1,10 +1,15 @@
 //! Distributed-stack integration: threaded coordinator vs the sequential
-//! reference implementation, transport-mode equivalence, byte metering.
+//! reference implementation, transport-mode equivalence, byte metering,
+//! async round pipelining, and fault injection (a worker that panics
+//! mid-round must surface a clean `Err`, never a hang).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
-use efmuon::dist::TransportMode;
+use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics};
+use efmuon::linalg::matrix::Layers;
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
@@ -30,6 +35,7 @@ fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coord
             beta,
             schedule: Schedule::constant(0.03),
             transport: mode,
+            round_mode: RoundMode::Sync,
             seed: 5,
             use_ns_artifact: false,
         },
@@ -51,6 +57,7 @@ fn counted_and_encoded_transport_agree() {
         let sa = a.round().unwrap();
         let sb = b.round().unwrap();
         assert_eq!(sa.w2s_bytes_per_worker, sb.w2s_bytes_per_worker);
+        assert_eq!(sa.s2w_bytes, sb.s2w_bytes);
     }
     for (pa, pb) in a.params().iter().zip(b.params()) {
         assert_eq!(pa.data, pb.data, "trajectory diverged between transports");
@@ -93,6 +100,7 @@ fn threaded_matches_sequential_reference() {
             beta: 1.0,
             schedule: Schedule::constant(0.03),
             transport: TransportMode::Encoded,
+            round_mode: RoundMode::Sync,
             seed: 5,
             use_ns_artifact: false,
         },
@@ -103,6 +111,7 @@ fn threaded_matches_sequential_reference() {
         let s = seq.step(&q_seq);
         let d = coord.round().unwrap();
         assert_eq!(s.w2s_bytes, d.w2s_bytes_per_worker, "step {k}: bytes");
+        assert_eq!(d.absorbed_step, Some(k), "sync absorbs the issued round");
         let diff = seq.params()[0].max_abs_diff(&coord.params()[0]);
         assert!(diff < 1e-6, "step {k}: params diverged by {diff}");
     }
@@ -121,6 +130,8 @@ fn byte_meters_accumulate_correctly() {
     }
     assert_eq!(coord.meter().w2s(), expect_w2s);
     assert_eq!(coord.meter().s2w(), expect_s2w);
+    assert_eq!(coord.meter().rounds_issued(), 10);
+    assert_eq!(coord.meter().rounds_absorbed(), 10);
     // 3 workers: aggregate = 3x per-worker
     assert_eq!(
         coord.meter().w2s_all.load(std::sync::atomic::Ordering::Relaxed),
@@ -147,4 +158,205 @@ fn eval_is_deterministic_given_params() {
     let a = coord.eval().unwrap();
     let b = coord.eval().unwrap();
     assert_eq!(a, b);
+}
+
+// ---------------------------------------------------------------------------
+// Async pipelined rounds
+// ---------------------------------------------------------------------------
+
+fn mk_async(lookahead: usize, seed_obj: u64) -> (Coordinator, GradService) {
+    let q = Quadratics::new(3, 10, 0.5, 0.0, &mut Rng::new(seed_obj));
+    let x0 = q.init(&mut Rng::new(61));
+    let n = q.num_workers();
+    let svc = GradService::spawn_objective(Box::new(q), 5);
+    let coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: "top:0.3".into(),
+            server_comp: "top:0.5".into(),
+            beta: 1.0,
+            schedule: Schedule::constant(0.03),
+            transport: TransportMode::Counted,
+            round_mode: RoundMode::Async { lookahead },
+            seed: 5,
+            use_ns_artifact: false,
+        },
+    )
+    .unwrap();
+    (coord, svc)
+}
+
+#[test]
+fn async_pipeline_fills_and_drains() {
+    let (mut coord, _svc) = mk_async(2, 67);
+    // the first two calls only issue (nothing absorbed yet)
+    let s0 = coord.round().unwrap();
+    assert_eq!(s0.absorbed_step, None);
+    assert!(s0.train_loss.is_nan());
+    assert_eq!(s0.w2s_bytes_per_worker, 0);
+    assert_eq!(coord.pending_rounds(), 1);
+    let s1 = coord.round().unwrap();
+    assert_eq!(s1.absorbed_step, None);
+    assert_eq!(coord.pending_rounds(), 2);
+    // from the third call on, the absorbed round trails the issued by 2
+    let s2 = coord.round().unwrap();
+    assert_eq!(s2.step, 2);
+    assert_eq!(s2.absorbed_step, Some(0));
+    assert!(s2.train_loss.is_finite());
+    assert!(s2.w2s_bytes_per_worker > 0);
+    assert_eq!(coord.pending_rounds(), 2);
+    // drain lands the two in-flight rounds in order
+    let drained = coord.drain().unwrap();
+    assert_eq!(drained.len(), 2);
+    assert_eq!(drained[0].absorbed_step, Some(1));
+    assert_eq!(drained[1].absorbed_step, Some(2));
+    assert_eq!(coord.pending_rounds(), 0);
+    assert_eq!(coord.meter().rounds_issued(), 3);
+    assert_eq!(coord.meter().rounds_absorbed(), 3);
+}
+
+#[test]
+fn async_runs_are_deterministic() {
+    // reply arrival order must not influence the trajectory: two identical
+    // async runs produce bit-identical parameters and meters
+    let run = || -> (Vec<f32>, u64, u64) {
+        let (mut coord, _svc) = mk_async(1, 68);
+        coord.run(30).unwrap();
+        (
+            coord.params()[0].data.clone(),
+            coord.meter().w2s(),
+            coord.meter().s2w(),
+        )
+    };
+    let (pa, wa, sa) = run();
+    let (pb, wb, sb) = run();
+    assert_eq!(pa, pb, "async trajectory must be deterministic");
+    assert_eq!(wa, wb);
+    assert_eq!(sa, sb);
+}
+
+#[test]
+fn run_reports_every_round_once() {
+    let (mut coord, _svc) = mk_async(1, 69);
+    let stats = coord.run(12).unwrap();
+    // 12 per-call entries + 1 drained tail entry
+    assert_eq!(stats.len(), 13);
+    let absorbed: Vec<usize> = stats.iter().filter_map(|s| s.absorbed_step).collect();
+    assert_eq!(absorbed, (0..12).collect::<Vec<_>>(), "each round absorbed exactly once");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Wraps [`Quadratics`] and panics inside gradient evaluation for one
+/// worker once that worker has been called `panic_after` times — simulating
+/// a crash mid-round (or mid-init for `panic_after = 0`).
+struct PanicObjective {
+    inner: Quadratics,
+    panic_worker: usize,
+    panic_after: usize,
+    calls: AtomicUsize,
+}
+
+impl PanicObjective {
+    fn new(panic_worker: usize, panic_after: usize, seed: u64) -> Self {
+        PanicObjective {
+            inner: Quadratics::new(3, 8, 0.5, 0.0, &mut Rng::new(seed)),
+            panic_worker,
+            panic_after,
+            calls: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Objective for PanicObjective {
+    fn num_workers(&self) -> usize {
+        self.inner.num_workers()
+    }
+
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        self.inner.layer_shapes()
+    }
+
+    fn loss(&self, x: &Layers) -> f64 {
+        self.inner.loss(x)
+    }
+
+    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+        self.inner.loss_j(j, x)
+    }
+
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        if j == self.panic_worker {
+            let seen = self.calls.fetch_add(1, Ordering::SeqCst);
+            if seen >= self.panic_after {
+                panic!("injected fault in worker {j}");
+            }
+        }
+        self.inner.grad_j(j, x)
+    }
+
+    fn init(&self, rng: &mut Rng) -> Layers {
+        self.inner.init(rng)
+    }
+}
+
+fn mk_fault_coord(obj: PanicObjective, mode: RoundMode) -> anyhow::Result<(Coordinator, GradService)> {
+    let x0 = obj.init(&mut Rng::new(70));
+    let n = obj.num_workers();
+    let svc = GradService::spawn_objective(Box::new(obj), 5);
+    let coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: "top:0.3".into(),
+            server_comp: "id".into(),
+            beta: 1.0,
+            schedule: Schedule::constant(0.03),
+            transport: TransportMode::Counted,
+            round_mode: mode,
+            seed: 5,
+            use_ns_artifact: false,
+        },
+    )?;
+    Ok((coord, svc))
+}
+
+#[test]
+fn worker_panic_mid_round_surfaces_clean_error() {
+    // worker 1: 1 init call + 2 good rounds, then panics in round 2. The
+    // leader must return Err from run() — not hang on the dead worker, not
+    // poison the channel for the survivors.
+    let obj = PanicObjective::new(1, 3, 71);
+    let (mut coord, _svc) = mk_fault_coord(obj, RoundMode::Sync).unwrap();
+    let err = coord.run(10).expect_err("run must fail once worker 1 dies");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1"), "error should name the worker: {msg}");
+    // the coordinator stays usable as a value (Drop joins cleanly) and
+    // further rounds keep failing fast instead of hanging
+    assert!(coord.round().is_err());
+}
+
+#[test]
+fn worker_panic_mid_round_surfaces_in_async_mode() {
+    let obj = PanicObjective::new(2, 4, 72);
+    let (mut coord, _svc) = mk_fault_coord(obj, RoundMode::Async { lookahead: 1 }).unwrap();
+    let err = coord.run(10).expect_err("async run must fail once worker 2 dies");
+    assert!(format!("{err:#}").contains("worker 2"));
+}
+
+#[test]
+fn worker_panic_during_init_fails_spawn() {
+    let obj = PanicObjective::new(0, 0, 73);
+    let err = match mk_fault_coord(obj, RoundMode::Sync) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn must fail when a worker dies during init"),
+    };
+    assert!(format!("{err:#}").contains("worker 0"), "{err:#}");
 }

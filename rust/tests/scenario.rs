@@ -1,0 +1,250 @@
+//! Deterministic scenario harness for the bidirectional-compression +
+//! async-round matrix: every scenario is one distributed deployment shape
+//! (workers × w2s compressor × s2w compressor), driven across
+//! {sync, async:0, async:1} × {Counted, Encoded} on the objective backend.
+//!
+//! Locked-down invariants:
+//!   (a) sync ≡ async:0 — bit-equal trajectories and identical meters;
+//!   (b) Counted ≡ Encoded — identical wire bytes in BOTH directions and
+//!       bit-equal trajectories (the codec is lossless and exact);
+//!   (c) the threaded coordinator reproduces the sequential reference
+//!       driver (the PR-1 golden trajectory) for every scenario, including
+//!       non-`id` server compressors;
+//!   (d) a non-`id` `server_comp` spends strictly fewer s2w wire bytes
+//!       than `id` at matched final loss (the ISSUE-2 acceptance bar).
+
+use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::service::GradService;
+use efmuon::dist::{RoundMode, TransportMode};
+use efmuon::funcs::{Objective, Quadratics};
+use efmuon::lmo::LmoKind;
+use efmuon::opt::ef21::Ef21MuonSeq;
+use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::util::rng::Rng;
+
+/// One deployment shape of the scenario table.
+#[derive(Clone, Copy)]
+struct Scenario {
+    name: &'static str,
+    workers: usize,
+    dim: usize,
+    w2s: &'static str,
+    s2w: &'static str,
+}
+
+/// The scenario table: worker counts × w2s compressors × s2w compressors.
+/// Kept deterministic (noise 0, beta 1) so bit-equality assertions hold.
+const SCENARIOS: &[Scenario] = &[
+    Scenario { name: "dense-both", workers: 2, dim: 8, w2s: "id", s2w: "id" },
+    Scenario { name: "w2s-only", workers: 3, dim: 10, w2s: "top:0.3", s2w: "id" },
+    Scenario { name: "s2w-only", workers: 2, dim: 12, w2s: "id", s2w: "top:0.5" },
+    Scenario { name: "bidir-top", workers: 3, dim: 10, w2s: "top:0.3", s2w: "top:0.5" },
+    Scenario { name: "bidir-mixed", workers: 4, dim: 12, w2s: "rank:0.4", s2w: "top:0.25" },
+    Scenario { name: "bidir-nat", workers: 2, dim: 9, w2s: "top:0.3+nat", s2w: "nat" },
+];
+
+const ROUNDS: usize = 15;
+const SEED: u64 = 5;
+
+fn geom() -> Vec<LayerGeometry> {
+    vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }]
+}
+
+fn objective(sc: &Scenario) -> Quadratics {
+    // the objective seed is derived from the scenario shape so every run of
+    // the same scenario sees the identical function
+    let seed = 900 + sc.workers as u64 * 31 + sc.dim as u64;
+    Quadratics::new(sc.workers, sc.dim, 0.5, 0.0, &mut Rng::new(seed))
+}
+
+/// Everything one run produces that the invariants compare.
+struct RunTrace {
+    /// Final server parameters (flattened layer 0).
+    params: Vec<f32>,
+    /// Per issued round: s2w broadcast bytes.
+    s2w: Vec<usize>,
+    /// Per absorbed round (in absorption order): w2s bytes per worker.
+    w2s: Vec<usize>,
+    /// Cumulative meters at the end.
+    meter_w2s: u64,
+    meter_s2w: u64,
+    eval: f32,
+}
+
+fn run_scenario(sc: &Scenario, mode: RoundMode, transport: TransportMode, rounds: usize) -> RunTrace {
+    run_scenario_sched(sc, mode, transport, rounds, Schedule::constant(0.03))
+}
+
+fn run_scenario_sched(
+    sc: &Scenario,
+    mode: RoundMode,
+    transport: TransportMode,
+    rounds: usize,
+    schedule: Schedule,
+) -> RunTrace {
+    let q = objective(sc);
+    let x0 = q.init(&mut Rng::new(SEED));
+    let n = q.num_workers();
+    let svc = GradService::spawn_objective(Box::new(q), SEED);
+    let mut coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: sc.w2s.into(),
+            server_comp: sc.s2w.into(),
+            beta: 1.0,
+            schedule,
+            transport,
+            round_mode: mode,
+            seed: SEED,
+            use_ns_artifact: false,
+        },
+    )
+    .unwrap();
+    let stats = coord.run(rounds).unwrap();
+    let mut s2w = Vec::new();
+    let mut w2s = Vec::new();
+    for s in &stats {
+        // per-call entries carry the issued broadcast's bytes; drained-tail
+        // entries carry 0 (their broadcast was metered when issued)
+        if s.s2w_bytes > 0 {
+            s2w.push(s.s2w_bytes);
+        }
+        if s.absorbed_step.is_some() {
+            w2s.push(s.w2s_bytes_per_worker);
+        }
+    }
+    RunTrace {
+        params: coord.params()[0].data.clone(),
+        s2w,
+        w2s,
+        meter_w2s: coord.meter().w2s(),
+        meter_s2w: coord.meter().s2w(),
+        eval: coord.eval().unwrap(),
+    }
+}
+
+/// (a) `RoundMode::Sync` and `RoundMode::Async { lookahead: 0 }` must be
+/// bit-equal: same trajectory, same wire bytes, same meters.
+#[test]
+fn sync_equals_async0_bitwise() {
+    for sc in SCENARIOS {
+        let sync = run_scenario(sc, RoundMode::Sync, TransportMode::Counted, ROUNDS);
+        let async0 =
+            run_scenario(sc, RoundMode::Async { lookahead: 0 }, TransportMode::Counted, ROUNDS);
+        assert_eq!(sync.params, async0.params, "{}: trajectory", sc.name);
+        assert_eq!(sync.s2w, async0.s2w, "{}: s2w bytes", sc.name);
+        assert_eq!(sync.w2s, async0.w2s, "{}: w2s bytes", sc.name);
+        assert_eq!(sync.meter_w2s, async0.meter_w2s, "{}: w2s meter", sc.name);
+        assert_eq!(sync.meter_s2w, async0.meter_s2w, "{}: s2w meter", sc.name);
+    }
+}
+
+/// (b) `Counted` and `Encoded` transports must agree on wire bytes in both
+/// directions and on the trajectory — for sync and pipelined rounds alike.
+#[test]
+fn counted_equals_encoded_both_directions() {
+    for sc in SCENARIOS {
+        for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+            let c = run_scenario(sc, mode, TransportMode::Counted, ROUNDS);
+            let e = run_scenario(sc, mode, TransportMode::Encoded, ROUNDS);
+            let tag = format!("{} / {}", sc.name, mode.spec());
+            assert_eq!(c.s2w, e.s2w, "{tag}: s2w bytes per round");
+            assert_eq!(c.w2s, e.w2s, "{tag}: w2s bytes per round");
+            assert_eq!(c.meter_s2w, e.meter_s2w, "{tag}: s2w meter");
+            assert_eq!(c.meter_w2s, e.meter_w2s, "{tag}: w2s meter");
+            assert_eq!(c.params, e.params, "{tag}: trajectory");
+        }
+    }
+}
+
+/// (c) The threaded sync coordinator reproduces the sequential reference
+/// driver — the golden trajectory the dist stack was locked to in PR 1 —
+/// for every scenario, including active EF21-P server compressors.
+#[test]
+fn coordinator_matches_sequential_golden() {
+    for sc in SCENARIOS {
+        let q_seq = objective(sc);
+        let mut seq = Ef21MuonSeq::new(
+            &q_seq,
+            geom(),
+            sc.w2s,
+            sc.s2w,
+            1.0,
+            Schedule::constant(0.03),
+            false,
+            SEED,
+        )
+        .unwrap();
+        let mut golden_w2s = Vec::new();
+        let mut golden_s2w = Vec::new();
+        for _ in 0..ROUNDS {
+            let s = seq.step(&q_seq);
+            golden_w2s.push(s.w2s_bytes);
+            golden_s2w.push(s.s2w_bytes);
+        }
+
+        let dist = run_scenario(sc, RoundMode::Sync, TransportMode::Encoded, ROUNDS);
+        assert_eq!(dist.w2s, golden_w2s, "{}: w2s bytes vs golden", sc.name);
+        assert_eq!(dist.s2w, golden_s2w, "{}: s2w bytes vs golden", sc.name);
+        let max_diff: f32 = seq.params()[0]
+            .data
+            .iter()
+            .zip(&dist.params)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(
+            max_diff < 1e-6,
+            "{}: trajectory diverged from golden by {max_diff}",
+            sc.name
+        );
+    }
+}
+
+/// (d) Acceptance: with everything else matched, a non-`id` `server_comp`
+/// spends strictly fewer s2w wire bytes than `id` while reaching the same
+/// final loss (within 1e-3) on the objective backend.
+#[test]
+fn compressed_s2w_saves_bytes_at_matched_loss() {
+    let dense = Scenario { name: "accept-id", workers: 3, dim: 12, w2s: "top:0.3", s2w: "id" };
+    let comp = Scenario { name: "accept-top", workers: 3, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
+    // decaying radius: both runs converge to the optimum's neighborhood, so
+    // their final losses match to well under the 1e-3 bar
+    let rounds = 600;
+    let sched = Schedule::warmup_cosine(0.05, 0, rounds, 0.02);
+    let a = run_scenario_sched(&dense, RoundMode::Sync, TransportMode::Counted, rounds, sched.clone());
+    let b = run_scenario_sched(&comp, RoundMode::Sync, TransportMode::Counted, rounds, sched);
+    assert!(
+        b.meter_s2w < a.meter_s2w,
+        "compressed s2w must be strictly cheaper: {} vs {}",
+        b.meter_s2w,
+        a.meter_s2w
+    );
+    let gap = (a.eval - b.eval).abs();
+    assert!(
+        gap < 1e-3,
+        "final losses must match within 1e-3: id={} top={} (gap {gap})",
+        a.eval,
+        b.eval
+    );
+    // the w2s direction is untouched by the server compressor choice
+    assert_eq!(a.meter_w2s, b.meter_w2s);
+}
+
+/// Pipelined rounds converge too: async:1 lands within a small tolerance
+/// of the sync final loss once the radius decays (staleness costs a bit of
+/// transient, not the limit), and the pipeline drains fully.
+#[test]
+fn async_converges_near_sync() {
+    let sc = Scenario { name: "async-conv", workers: 3, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
+    let rounds = 600;
+    let sched = Schedule::warmup_cosine(0.05, 0, rounds, 0.02);
+    let sync = run_scenario_sched(&sc, RoundMode::Sync, TransportMode::Counted, rounds, sched.clone());
+    let pipe = run_scenario_sched(&sc, RoundMode::Async { lookahead: 1 }, TransportMode::Counted, rounds, sched);
+    // every issued round was absorbed by the end (run() drains)
+    assert_eq!(pipe.w2s.len(), rounds);
+    let gap = (sync.eval - pipe.eval).abs();
+    assert!(gap < 1e-2, "async:1 final loss {} vs sync {} (gap {gap})", pipe.eval, sync.eval);
+}

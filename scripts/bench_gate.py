@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Tier-2 perf gate for the hotpath bench (see DESIGN.md §Verification).
+
+Compares the round-time entries of a fresh BENCH_hotpath.json against a
+stored baseline and fails (exit 1) when any matched entry's median time
+regressed past the threshold (default 1.05 = +5%, the ISSUE-2 bar).
+
+Bench numbers are machine-specific, so the baseline is self-priming and
+untracked: the first run on a machine copies the current results into the
+baseline file (established from the PR-1-era bench set); later runs gate
+against it. Delete the baseline to re-prime after an intentional change.
+
+Usage: bench_gate.py CURRENT BASELINE [--threshold 1.05]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+# only the end-to-end round entries gate the build; kernel microbenches are
+# tracked but too noisy at --iters 5 to fail a verify run on
+GATED_SUBSTRINGS = ("round",)
+
+
+def load_entries(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {
+        e["name"]: e
+        for e in doc.get("entries", [])
+        if isinstance(e, dict) and "name" in e and "median_s" in e
+    }
+
+
+def prime(current_path, baseline_path):
+    # atomic: a verify run killed mid-copy must not leave a truncated
+    # baseline that wedges every later gate run
+    tmp = baseline_path + ".tmp"
+    shutil.copyfile(current_path, tmp)
+    os.replace(tmp, baseline_path)
+    print(f"bench gate: primed baseline {baseline_path} from {current_path}")
+
+
+def adopt(current_path, baseline_path, names):
+    """Append current entries for `names` to the baseline (atomically)."""
+    with open(current_path) as f:
+        current_doc = json.load(f)
+    with open(baseline_path) as f:
+        baseline_doc = json.load(f)
+    by_name = {e.get("name"): e for e in current_doc.get("entries", [])}
+    baseline_doc.setdefault("entries", []).extend(by_name[n] for n in names)
+    tmp = baseline_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(baseline_doc, f)
+    os.replace(tmp, baseline_path)
+    for n in sorted(names):
+        print(f"    ADOPTED  {n} (new round entry; gated from the next run)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=1.05)
+    args = ap.parse_args()
+
+    try:
+        current = load_entries(args.current)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read current results: {e}", file=sys.stderr)
+        return 1
+
+    try:
+        baseline = load_entries(args.baseline)
+    except OSError:
+        prime(args.current, args.baseline)
+        return 0
+    except ValueError as e:
+        # corrupt baseline (e.g. an interrupted legacy copy): re-prime
+        print(f"bench gate: baseline unreadable ({e}); re-priming", file=sys.stderr)
+        prime(args.current, args.baseline)
+        return 0
+
+    gated = [
+        name
+        for name in current
+        if name in baseline and any(s in name for s in GATED_SUBSTRINGS)
+    ]
+    # round entries that appeared since the baseline was primed (e.g. a PR
+    # added a bench): adopt them into the baseline now so the NEXT run gates
+    # them instead of ignoring them forever
+    fresh = [
+        name
+        for name in current
+        if name not in baseline and any(s in name for s in GATED_SUBSTRINGS)
+    ]
+    if fresh:
+        adopt(args.current, args.baseline, fresh)
+    if not gated:
+        print("bench gate: no overlapping round entries to compare; passing")
+        return 0
+
+    failed = []
+    for name in sorted(gated):
+        cur = current[name]["median_s"]
+        base = baseline[name]["median_s"]
+        ratio = cur / base if base > 0 else float("inf")
+        verdict = "OK" if ratio <= args.threshold else "REGRESSED"
+        print(f"  {verdict:>9}  {ratio:6.3f}x  {name}  ({base:.6f}s -> {cur:.6f}s)")
+        if ratio > args.threshold:
+            failed.append(name)
+
+    if failed:
+        print(
+            f"bench gate: {len(failed)} entr{'y' if len(failed) == 1 else 'ies'} "
+            f"regressed past {args.threshold:.2f}x; delete {args.baseline} to "
+            "re-prime after an intentional change",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"bench gate: OK ({len(gated)} round entries within {args.threshold:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verification + hotpath perf smoke (see DESIGN.md §Verification).
+# Tier-1 verification + tier-2 scenario/perf gates (DESIGN.md §Verification).
 #
-#   scripts/verify.sh            # build + tests + hotpath bench (5 iters)
+#   scripts/verify.sh            # tier-1 + scenario harness + hotpath bench
+#                                # + round-time regression gate
 #   scripts/verify.sh --no-bench # tier-1 only
+#
+# The perf gate compares the hotpath round times against BENCH_baseline.json
+# at the repo root (self-priming: first run on a machine creates it) and
+# fails on a >5% median regression. EFMUON_BENCH_TOLERANCE overrides the
+# 1.05 threshold.
 set -euo pipefail
 
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -14,11 +21,23 @@ echo "== tier-1: cargo test -q =="
 cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+  # tier-1 already ran scenario.rs in debug; the release rerun is deliberate:
+  # it shares the release build with the bench below (no extra codegen of the
+  # library) and exercises the timing-sensitive pipeline at release speed
+  echo "== tier-2: scenario harness (release) =="
+  cargo test --release -q --test scenario
+
   echo "== perf smoke: hotpath bench (--iters 5) =="
   cargo bench --bench hotpath -- --iters 5
-  echo "== BENCH_hotpath.json =="
-  cat ../BENCH_hotpath.json 2>/dev/null || cat BENCH_hotpath.json
+  BENCH=../BENCH_hotpath.json
+  [[ -f "$BENCH" ]] || BENCH=BENCH_hotpath.json
+  echo "== $BENCH =="
+  cat "$BENCH"
   echo
+
+  echo "== tier-2: round-time regression gate =="
+  python3 "$SCRIPT_DIR/bench_gate.py" "$BENCH" "$SCRIPT_DIR/../BENCH_baseline.json" \
+    --threshold "${EFMUON_BENCH_TOLERANCE:-1.05}"
 fi
 
 echo "verify: OK"
