@@ -10,10 +10,11 @@
 //! Run: `cargo bench --bench hotpath [-- --iters 30]`
 
 use efmuon::compress::{codec, parse_spec};
+use efmuon::dist::cluster::{Cluster, ClusterCfg};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
-use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics};
+use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics, Stacked};
 use efmuon::linalg::matmul::matmul_into_with_threads;
 use efmuon::linalg::ns::newton_schulz;
 use efmuon::linalg::Matrix;
@@ -257,6 +258,65 @@ fn main() -> anyhow::Result<()> {
         let speed = seq_s / r_dist.median_s;
         push(&mut entries, r_dist, None);
         println!("  -> threaded coordinator round: {speed:.2}x vs sequential driver");
+    }
+
+    // ---- multi-coordinator layer sharding: the same 4-layer separable
+    //      workload under 1 / 2 / 4 shard coordinators. Each shard leader
+    //      runs on its own OS thread with its own worker pool, so the
+    //      cluster round's wall time trends toward the max over shards
+    //      instead of the sum over layers; wire bytes are aggregated
+    //      per-shard sums (identical across shard counts — sharding
+    //      repartitions the work, not the algorithm).
+    {
+        let cfg_iters = iters.min(10);
+        let mut shard_times: Vec<(usize, f64)> = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let mut rng4 = Rng::new(4);
+            let parts: Vec<Box<dyn Objective>> = (0..4)
+                .map(|_| {
+                    Box::new(MatrixQuadratic::new(4, 192, 192, 0.0, &mut rng4))
+                        as Box<dyn Objective>
+                })
+                .collect();
+            let stack = Stacked::new(parts).map_err(anyhow::Error::msg)?;
+            let x0 = stack.init(&mut Rng::new(4));
+            let svc = GradService::spawn_objective(Box::new(stack), 4);
+            let mut cluster = Cluster::spawn(
+                x0,
+                vec![LayerGeometry { lmo: LmoKind::Spectral, radius_mult: 1.0 }; 4],
+                svc.handle(),
+                ClusterCfg {
+                    shards,
+                    workers_per_shard: 4,
+                    worker_comp: "rank:0.2".into(),
+                    server_comp: "id".into(),
+                    beta: 0.9,
+                    schedule: Schedule::constant(0.01),
+                    transport: TransportMode::Counted,
+                    round_mode: RoundMode::Sync,
+                    seed: 4,
+                    use_ns_artifact: false,
+                },
+            )?;
+            let name = format!("cluster round ({shards} shard(s), 4x192x192, 4 workers)");
+            let r = bench_fn(&name, 2, cfg_iters, || {
+                cluster.round().unwrap();
+            });
+            shard_times.push((shards, r.median_s));
+            push(&mut entries, r, None);
+            // sample one round's aggregated per-shard wire bytes (sync mode:
+            // the absorbed round is the issued one)
+            let s = cluster.round()?;
+            entries.last_mut().unwrap().comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+        }
+        if let Some(&(_, base)) = shard_times.first() {
+            for &(shards, t) in &shard_times[1..] {
+                println!(
+                    "  -> cluster {shards}-shard round speedup: {:.2}x over 1 shard",
+                    base / t
+                );
+            }
+        }
     }
 
     // ---- PJRT grad step (the dominant cost of a real round)

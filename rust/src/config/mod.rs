@@ -13,6 +13,11 @@ pub struct TrainConfig {
     pub artifacts: String,
     /// Number of workers `n` (the paper uses 4 GPUs → 4 workers).
     pub workers: usize,
+    /// Shard coordinators the model's layers are partitioned across (see
+    /// [`crate::dist::cluster`]). `1` = the single-leader deployment;
+    /// `N > 1` runs N concurrent leaders, each with its own `workers`-sized
+    /// worker pool, reduced by a root coordinator.
+    pub shards: usize,
     /// Optimizer steps.
     pub steps: usize,
     /// Worker (w2s) compressor spec, e.g. `rank:0.15+nat` (see
@@ -59,6 +64,7 @@ impl Default for TrainConfig {
         TrainConfig {
             artifacts: "artifacts".into(),
             workers: 4,
+            shards: 1,
             steps: 200,
             worker_comp: "id".into(),
             server_comp: "id".into(),
@@ -85,6 +91,7 @@ impl TrainConfig {
     pub fn override_from_args(mut self, a: &Args) -> Self {
         self.artifacts = a.str("artifacts", &self.artifacts);
         self.workers = a.usize("workers", self.workers);
+        self.shards = a.usize("shards", self.shards);
         self.steps = a.usize("steps", self.steps);
         self.worker_comp = a.str("comp", &self.worker_comp);
         self.server_comp = a.str("server-comp", &self.server_comp);
@@ -116,6 +123,7 @@ impl TrainConfig {
             match k.as_str() {
                 "artifacts" => c.artifacts = v.as_str().ok_or("artifacts: string")?.into(),
                 "workers" => c.workers = v.as_usize().ok_or("workers: int")?,
+                "shards" => c.shards = v.as_usize().ok_or("shards: int")?,
                 "steps" => c.steps = v.as_usize().ok_or("steps: int")?,
                 "worker_comp" => c.worker_comp = v.as_str().ok_or("worker_comp: string")?.into(),
                 "server_comp" => c.server_comp = v.as_str().ok_or("server_comp: string")?.into(),
@@ -161,10 +169,11 @@ mod tests {
     fn json_overrides() {
         let c = TrainConfig::from_json(
             r#"{"workers": 8, "worker_comp": "rank:0.1+nat", "lr": 0.05,
-                "server_comp": "top:0.5", "round_mode": "async:2"}"#,
+                "server_comp": "top:0.5", "round_mode": "async:2", "shards": 3}"#,
         )
         .unwrap();
         assert_eq!(c.workers, 8);
+        assert_eq!(c.shards, 3);
         assert_eq!(c.worker_comp, "rank:0.1+nat");
         assert_eq!(c.server_comp, "top:0.5");
         assert_eq!(c.round_mode, "async:2");
@@ -177,12 +186,13 @@ mod tests {
     fn cli_overrides_win() {
         let a = Args::parse(
             ["--steps", "7", "--comp", "top:0.2", "--seed", "42",
-             "--round-mode", "async:1"]
+             "--round-mode", "async:1", "--shards", "2"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let c = TrainConfig::from_args(&a).unwrap();
         assert_eq!(c.steps, 7);
+        assert_eq!(c.shards, 2);
         assert_eq!(c.worker_comp, "top:0.2");
         assert_eq!(c.round_mode, "async:1");
         assert_eq!(c.seed, 42);

@@ -1,0 +1,844 @@
+//! Multi-coordinator layer sharding: a [`Cluster`] partitions the model's
+//! layers across `S` shard [`Coordinator`]s — balanced by parameter count,
+//! each shard with its own worker pool, [`Meter`] and [`RoundMode`]
+//! pipeline — driven by a root reducer that advances every shard
+//! concurrently and rolls per-shard losses, wire bytes and round counters
+//! up into a [`ClusterMeter`] / [`ClusterRoundStats`].
+//!
+//! The EF21-Muon protocol is layer-wise by construction (per-layer LMOs,
+//! compressor state and smoothness constants), so partitioning layers
+//! across independent leaders changes the *schedule*, not the algorithm:
+//! each shard runs the unmodified Algorithm-3 state machines over its
+//! slice. Because the shards advance on their own OS threads, a cluster
+//! round's wall time is the max over shards instead of the sum over layers
+//! — the scaling win the `BENCH_hotpath.json` cluster entries measure.
+//!
+//! ```text
+//!   caller ──► Cluster::round()            (root reducer, lock-step)
+//!      ├─► shard thread 0 ─► Coordinator(layers₀) ─► workers 0..n
+//!      ├─► shard thread 1 ─► Coordinator(layers₁) ─► workers 0..n
+//!      └─► shard thread S-1 ──────────────────────► ...   (concurrent)
+//!      ◄── RoundStats + shift W + Meter snapshot per shard ── barrier
+//!      seal ParamBoard epoch k+1  ──► rollup ClusterRoundStats
+//! ```
+//!
+//! **Cross-shard gradient coupling.** Worker `j` of shard `s` is the same
+//! logical data worker `j` as every other shard's — one local function
+//! `f_j` per worker, sliced by layer. Its gradient requests go through a
+//! sharded [`GradHandle`](super::service::GradHandle) that assembles the
+//! full model from the shard's own (fresh) layers plus the [`ParamBoard`]
+//! snapshot of every other shard's broadcast shift W, sealed once per
+//! round by the root reducer. For layer-separable objectives — the regime
+//! the paper's layer-wise analysis covers — the board is inert and the
+//! sharded run is *exact*; for coupled models (the PJRT transformer) the
+//! cross-shard view lags by one round, the standard block-synchronous
+//! approximation. Snapshots are keyed by round, so trajectories are
+//! deterministic in every round mode: a worker still computing round `k`
+//! reads epoch `k` even after the root has sealed `k+1`.
+//!
+//! With `shards = 1` the cluster is the single-leader deployment
+//! bit-for-bit (the board is never consulted; asserted against the golden
+//! trajectories in `rust/tests/scenario.rs`).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::matrix::Layers;
+use crate::opt::{LayerGeometry, Schedule};
+use crate::util::json::{Json, JsonObj};
+
+use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
+use super::service::GradHandle;
+use super::{MeterSnapshot, RoundMode, TransportMode};
+
+// ---------------------------------------------------------------------------
+// Layer partitioning
+// ---------------------------------------------------------------------------
+
+/// Partition `shapes` (layer shapes, by global index) across `shards`
+/// leaders, balanced by parameter count: greedy longest-first assignment to
+/// the least-loaded shard. Guarantees every layer is owned by exactly one
+/// shard, every shard owns at least one layer, and the heaviest and
+/// lightest shard loads differ by at most one max-layer's parameter count
+/// (the property test in `rust/tests/cluster.rs` pins this on ragged shape
+/// sets). Within a shard, layer ids are ascending.
+pub fn partition_layers(
+    shapes: &[(usize, usize)],
+    shards: usize,
+) -> Result<Vec<Vec<usize>>, String> {
+    if shards == 0 {
+        return Err("shards must be >= 1".into());
+    }
+    if shards > shapes.len() {
+        return Err(format!(
+            "cannot shard {} layer(s) across {shards} coordinators (at most one shard per layer)",
+            shapes.len()
+        ));
+    }
+    // longest-processing-time order: numel descending, index ascending for
+    // deterministic ties
+    let mut order: Vec<usize> = (0..shapes.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(shapes[i].0 * shapes[i].1), i));
+    let mut owned: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    let mut load = vec![0usize; shards];
+    for i in order {
+        let s = (0..shards).min_by_key(|&s| (load[s], s)).expect("shards >= 1");
+        load[s] += shapes[i].0 * shapes[i].1;
+        owned[s].push(i);
+    }
+    for ids in owned.iter_mut() {
+        ids.sort_unstable();
+    }
+    Ok(owned)
+}
+
+// ---------------------------------------------------------------------------
+// The cross-shard parameter board
+// ---------------------------------------------------------------------------
+
+/// Round-sealed snapshots of the full model's broadcast shift W, published
+/// by the root reducer and read by each shard's sharded
+/// [`GradHandle`](super::service::GradHandle) when it assembles full-model
+/// parameters for a gradient request. Epoch `k` is sealed *before* any
+/// round-`k` work starts and is immutable afterwards, so reads are
+/// deterministic regardless of thread timing — including pipelined round
+/// modes, where a worker may still be computing round `k` after the root
+/// has sealed `k+1`.
+pub struct ParamBoard {
+    /// (epoch, snapshot), epochs strictly increasing.
+    snaps: Mutex<VecDeque<(usize, Arc<Layers>)>>,
+    /// How many trailing epochs to retain (≥ lookahead + 2, so the oldest
+    /// possibly-in-flight round's snapshot is always available).
+    keep: usize,
+    /// Full-model layer count (shards owning every layer skip the board).
+    layers: usize,
+}
+
+impl ParamBoard {
+    /// A board whose epoch 0 is `x0` (the init gradient's view).
+    pub fn new(x0: Layers, keep: usize) -> ParamBoard {
+        ParamBoard {
+            layers: x0.len(),
+            snaps: Mutex::new(VecDeque::from([(0usize, Arc::new(x0))])),
+            keep: keep.max(2),
+        }
+    }
+
+    /// Layer count of the full model the board snapshots.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Seal `full` as the snapshot round `epoch` reads. Idempotent per
+    /// epoch; epochs must be sealed in increasing order.
+    pub fn seal(&self, epoch: usize, full: Layers) {
+        let mut s = self.snaps.lock().expect("board lock");
+        if s.iter().any(|(e, _)| *e == epoch) {
+            return;
+        }
+        debug_assert!(s.back().map(|(e, _)| *e < epoch).unwrap_or(true));
+        s.push_back((epoch, Arc::new(full)));
+        while s.len() > self.keep {
+            s.pop_front();
+        }
+    }
+
+    /// The snapshot sealed for `epoch`: the newest sealed epoch `<= epoch`
+    /// (the oldest retained one if `epoch` predates the retention window).
+    pub fn read(&self, epoch: usize) -> Arc<Layers> {
+        let s = self.snaps.lock().expect("board lock");
+        s.iter()
+            .rev()
+            .find(|(e, _)| *e <= epoch)
+            .or_else(|| s.front())
+            .map(|(_, a)| a.clone())
+            .expect("board never empty")
+    }
+
+    /// The newest sealed snapshot (init / eval-time view).
+    pub fn read_latest(&self) -> Arc<Layers> {
+        let s = self.snaps.lock().expect("board lock");
+        s.back().map(|(_, a)| a.clone()).expect("board never empty")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration & rollups
+// ---------------------------------------------------------------------------
+
+/// Configuration of one multi-coordinator deployment. Everything except
+/// `shards`/`workers_per_shard` mirrors [`CoordinatorCfg`] and is applied
+/// uniformly to every shard.
+#[derive(Debug, Clone)]
+pub struct ClusterCfg {
+    /// Number of shard coordinators `S` (1 = the single-leader deployment).
+    pub shards: usize,
+    /// Worker threads per shard. Worker `j` of every shard is the same
+    /// logical data worker `j` (one `f_j` per worker, sliced by layer).
+    pub workers_per_shard: usize,
+    pub worker_comp: String,
+    pub server_comp: String,
+    pub beta: f32,
+    pub schedule: Schedule,
+    pub transport: TransportMode,
+    pub round_mode: RoundMode,
+    pub seed: u64,
+    pub use_ns_artifact: bool,
+}
+
+impl ClusterCfg {
+    fn coordinator_cfg(&self) -> CoordinatorCfg {
+        CoordinatorCfg {
+            n_workers: self.workers_per_shard,
+            worker_comp: self.worker_comp.clone(),
+            server_comp: self.server_comp.clone(),
+            beta: self.beta,
+            schedule: self.schedule.clone(),
+            transport: self.transport,
+            round_mode: self.round_mode,
+            seed: self.seed,
+            use_ns_artifact: self.use_ns_artifact,
+        }
+    }
+}
+
+/// Root-reducer rollup of one cluster round: aggregated wire bytes (sums
+/// over shards), mean absorbed train loss, and the per-shard entries it was
+/// reduced from.
+#[derive(Debug, Clone)]
+pub struct ClusterRoundStats {
+    /// The round whose broadcasts this call issued (every shard's).
+    pub step: usize,
+    /// The round whose uplinks were absorbed, if any (lock-step drive: the
+    /// same round on every shard).
+    pub absorbed_step: Option<usize>,
+    /// Mean over shards of the absorbed per-shard train losses (each itself
+    /// a mean over that shard's workers). NaN while the pipelines fill.
+    pub train_loss: f32,
+    /// LMO radius of the issued round (shared schedule — same on every
+    /// shard).
+    pub radius: f64,
+    /// w2s bytes one logical full-model worker sent in the absorbed round:
+    /// the sum over shards of their per-worker uplink bytes.
+    pub w2s_bytes_per_worker: usize,
+    /// s2w broadcast bytes of the issued round, summed over shards.
+    pub s2w_bytes: usize,
+    /// The per-shard stats this rollup reduces.
+    pub per_shard: Vec<RoundStats>,
+}
+
+/// Cluster-wide communication rollup: one [`MeterSnapshot`] per shard plus
+/// aggregate views (byte counters sum; round counters take the min — the
+/// rounds *every* shard has completed, which in lock-step drive is simply
+/// the common value).
+#[derive(Debug, Clone)]
+pub struct ClusterMeter {
+    pub per_shard: Vec<MeterSnapshot>,
+}
+
+impl ClusterMeter {
+    /// Aggregate of all shard meters.
+    pub fn totals(&self) -> MeterSnapshot {
+        let mut t = MeterSnapshot::default();
+        for (i, m) in self.per_shard.iter().enumerate() {
+            t.absorb_shard(m, i == 0);
+        }
+        t
+    }
+
+    /// w2s bytes one logical full-model worker has sent (sum over shards).
+    pub fn w2s(&self) -> u64 {
+        self.totals().w2s_per_worker
+    }
+
+    /// w2s bytes summed over all workers of all shards.
+    pub fn w2s_all(&self) -> u64 {
+        self.totals().w2s_all
+    }
+
+    /// s2w broadcast bytes summed over shards.
+    pub fn s2w(&self) -> u64 {
+        self.totals().s2w_total
+    }
+
+    /// Rounds every shard has issued.
+    pub fn rounds_issued(&self) -> u64 {
+        self.totals().rounds_issued
+    }
+
+    /// Rounds every shard has fully absorbed.
+    pub fn rounds_absorbed(&self) -> u64 {
+        self.totals().rounds_absorbed
+    }
+
+    /// JSON form: totals plus the per-shard snapshots.
+    pub fn to_json(&self) -> Json {
+        JsonObj::new()
+            .put("totals", self.totals().to_json())
+            .put(
+                "per_shard",
+                Json::Arr(self.per_shard.iter().map(|m| m.to_json()).collect()),
+            )
+            .build()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The cluster
+// ---------------------------------------------------------------------------
+
+/// Commands the root reducer sends to a shard thread.
+enum ToShard {
+    Round,
+    Drain,
+    Params,
+    Stop,
+}
+
+/// Replies a shard thread sends to the root reducer.
+enum FromShard {
+    Ready {
+        shard: usize,
+    },
+    Round {
+        shard: usize,
+        stats: Box<RoundStats>,
+        /// The shard's broadcast shift W after this round's issue — the
+        /// cross-shard view the root seals into the board.
+        shift: Layers,
+        meter: MeterSnapshot,
+    },
+    Drained {
+        shard: usize,
+        stats: Vec<RoundStats>,
+        meter: MeterSnapshot,
+    },
+    Params {
+        shard: usize,
+        params: Layers,
+    },
+    Failed {
+        shard: usize,
+        err: String,
+    },
+}
+
+/// The root reducer of a multi-coordinator deployment: owns one OS thread
+/// per shard (each running a full [`Coordinator`] over its layer slice),
+/// drives them lock-step (shard-internal [`RoundMode`] pipelines still
+/// overlap leader and worker work *within* each shard), seals the
+/// [`ParamBoard`] once per round, and reduces per-shard telemetry.
+pub struct Cluster {
+    partition: Vec<Vec<usize>>,
+    board: Arc<ParamBoard>,
+    /// Full-model broadcast shift, incrementally overwritten from shard
+    /// replies; cloned into the board at each seal.
+    shift_full: Layers,
+    /// Latest meter snapshot per shard.
+    meters: Vec<MeterSnapshot>,
+    handle: GradHandle,
+    to_shards: Vec<Sender<ToShard>>,
+    from_shards: Receiver<FromShard>,
+    joins: Vec<JoinHandle<()>>,
+    step: usize,
+    /// First fatal error, latched (same contract as [`Coordinator`]).
+    failed: Option<String>,
+}
+
+impl Cluster {
+    /// Partition the layers, spawn one shard coordinator per partition cell
+    /// (each on its own OS thread, with its own worker pool), and wait for
+    /// every shard's Algorithm-3 initialization to finish.
+    pub fn spawn(
+        x0: Layers,
+        geometry: Vec<LayerGeometry>,
+        handle: GradHandle,
+        cfg: ClusterCfg,
+    ) -> Result<Cluster> {
+        if geometry.len() != x0.len() {
+            return Err(anyhow!(
+                "geometry has {} entries for {} layers",
+                geometry.len(),
+                x0.len()
+            ));
+        }
+        let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
+        let partition = partition_layers(&shapes, cfg.shards).map_err(anyhow::Error::msg)?;
+        let board = Arc::new(ParamBoard::new(
+            x0.clone(),
+            cfg.round_mode.lookahead() + 3,
+        ));
+
+        let (reply_tx, reply_rx) = channel::<FromShard>();
+        let mut to_shards = Vec::with_capacity(cfg.shards);
+        let mut joins = Vec::with_capacity(cfg.shards);
+        for (s, ids) in partition.iter().enumerate() {
+            let x0_s: Layers = ids.iter().map(|&i| x0[i].clone()).collect();
+            let geom_s: Vec<LayerGeometry> = ids.iter().map(|&i| geometry[i]).collect();
+            let shard_handle = handle.for_shard(board.clone(), ids.clone());
+            let ccfg = cfg.coordinator_cfg();
+            let (tx, rx) = channel::<ToShard>();
+            let rtx = reply_tx.clone();
+            // a lone shard's board is never read (the sharded handle's
+            // owns-all-layers fast path skips it), so don't ship shifts
+            let ship_shift = cfg.shards > 1;
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("efmuon-shard-{s}"))
+                    .spawn(move || shard_main(s, x0_s, geom_s, shard_handle, ccfg, ship_shift, rx, rtx))
+                    .map_err(|e| anyhow!("spawning shard {s}: {e}"))?,
+            );
+            to_shards.push(tx);
+        }
+        drop(reply_tx);
+
+        // barrier: every shard's Coordinator::spawn (worker init) must land
+        for _ in 0..cfg.shards {
+            match reply_rx.recv() {
+                Ok(FromShard::Ready { .. }) => {}
+                Ok(FromShard::Failed { shard, err }) => {
+                    return Err(anyhow!("shard {shard} failed during init: {err}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard reply during init")),
+                Err(_) => return Err(anyhow!("shard channel closed during init")),
+            }
+        }
+
+        Ok(Cluster {
+            meters: vec![MeterSnapshot::default(); partition.len()],
+            partition,
+            board,
+            shift_full: x0,
+            handle,
+            to_shards,
+            from_shards: reply_rx,
+            joins,
+            step: 0,
+            failed: None,
+        })
+    }
+
+    /// The layer partition: `partition()[s]` is the ascending list of
+    /// global layer ids shard `s` owns.
+    pub fn partition(&self) -> &[Vec<usize>] {
+        &self.partition
+    }
+
+    /// Number of shard coordinators.
+    pub fn shards(&self) -> usize {
+        self.partition.len()
+    }
+
+    /// Rounds issued (every shard's broadcast sent) so far.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// One lock-step cluster round: every shard runs one
+    /// [`Coordinator::round`] concurrently; the root waits for all of them,
+    /// seals the next board epoch from the returned shifts, and reduces the
+    /// per-shard stats. After a failure, this and every later call fail
+    /// fast with the original error.
+    pub fn round(&mut self) -> Result<ClusterRoundStats> {
+        self.check_alive()?;
+        let r = self.round_inner();
+        self.latch(r)
+    }
+
+    fn round_inner(&mut self) -> Result<ClusterRoundStats> {
+        self.send_all(|| ToShard::Round)?;
+        let n = self.shards();
+        let mut slots: Vec<Option<RoundStats>> = (0..n).map(|_| None).collect();
+        let mut filled = 0;
+        while filled < n {
+            match self.from_shards.recv() {
+                Ok(FromShard::Round { shard, stats, shift, meter }) => {
+                    if shard >= n || slots[shard].is_some() {
+                        return Err(anyhow!("duplicate or out-of-range reply from shard {shard}"));
+                    }
+                    for (m, &li) in shift.into_iter().zip(&self.partition[shard]) {
+                        self.shift_full[li] = m;
+                    }
+                    self.meters[shard] = meter;
+                    slots[shard] = Some(*stats);
+                    filled += 1;
+                }
+                Ok(FromShard::Failed { shard, err }) => {
+                    return Err(anyhow!("shard {shard} failed: {err}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard reply during round")),
+                Err(_) => return Err(anyhow!("shard channel closed mid-round")),
+            }
+        }
+        // every shard finished round `step`: seal the view round `step + 1`
+        // reads (immutable afterwards — in-flight pipelined grads of older
+        // rounds keep reading their own sealed epochs). A 1-shard cluster
+        // skips the seal entirely: its board is never read, and the clone
+        // would be pure overhead on the golden-matched deployment.
+        if n > 1 {
+            self.board.seal(self.step + 1, self.shift_full.clone());
+        }
+        let per_shard: Vec<RoundStats> = slots.into_iter().map(|s| s.expect("filled")).collect();
+        let stats = rollup(self.step, per_shard);
+        self.step += 1;
+        Ok(stats)
+    }
+
+    /// Drain every shard's pipeline (no-op in sync mode): all issued rounds
+    /// land on every shard. Returns one rollup per drained round, in
+    /// absorption order.
+    pub fn drain(&mut self) -> Result<Vec<ClusterRoundStats>> {
+        self.check_alive()?;
+        let r = self.drain_inner();
+        self.latch(r)
+    }
+
+    fn drain_inner(&mut self) -> Result<Vec<ClusterRoundStats>> {
+        self.send_all(|| ToShard::Drain)?;
+        let n = self.shards();
+        let mut slots: Vec<Option<Vec<RoundStats>>> = (0..n).map(|_| None).collect();
+        let mut filled = 0;
+        while filled < n {
+            match self.from_shards.recv() {
+                Ok(FromShard::Drained { shard, stats, meter }) => {
+                    if shard >= n || slots[shard].is_some() {
+                        return Err(anyhow!("duplicate or out-of-range reply from shard {shard}"));
+                    }
+                    self.meters[shard] = meter;
+                    slots[shard] = Some(stats);
+                    filled += 1;
+                }
+                Ok(FromShard::Failed { shard, err }) => {
+                    return Err(anyhow!("shard {shard} failed: {err}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard reply during drain")),
+                Err(_) => return Err(anyhow!("shard channel closed mid-drain")),
+            }
+        }
+        let per_shard: Vec<Vec<RoundStats>> = slots.into_iter().map(|s| s.expect("filled")).collect();
+        // lock-step drive: every shard drains the same number of rounds
+        let len = per_shard[0].len();
+        if per_shard.iter().any(|v| v.len() != len) {
+            return Err(anyhow!("shards drained unequal round counts (pipeline skew)"));
+        }
+        Ok((0..len)
+            .map(|k| {
+                let entries: Vec<RoundStats> = per_shard.iter().map(|v| v[k].clone()).collect();
+                let step = entries[0].step;
+                rollup(step, entries)
+            })
+            .collect())
+    }
+
+    /// Drive `rounds` lock-step cluster rounds and drain every shard
+    /// pipeline, so all issued rounds have been absorbed on return.
+    pub fn run(&mut self, rounds: usize) -> Result<Vec<ClusterRoundStats>> {
+        let mut out = Vec::with_capacity(rounds + 1);
+        for _ in 0..rounds {
+            out.push(self.round()?);
+        }
+        out.extend(self.drain()?);
+        Ok(out)
+    }
+
+    /// Assembled full-model parameters (every shard's server X).
+    pub fn params(&mut self) -> Result<Layers> {
+        self.check_alive()?;
+        let r = self.params_inner();
+        self.latch(r)
+    }
+
+    fn params_inner(&mut self) -> Result<Layers> {
+        self.send_all(|| ToShard::Params)?;
+        let n = self.shards();
+        let mut full = self.shift_full.clone();
+        let mut filled = 0;
+        while filled < n {
+            match self.from_shards.recv() {
+                Ok(FromShard::Params { shard, params }) => {
+                    if shard >= n {
+                        return Err(anyhow!("out-of-range params reply from shard {shard}"));
+                    }
+                    for (m, &li) in params.into_iter().zip(&self.partition[shard]) {
+                        full[li] = m;
+                    }
+                    filled += 1;
+                }
+                Ok(FromShard::Failed { shard, err }) => {
+                    return Err(anyhow!("shard {shard} failed: {err}"))
+                }
+                Ok(_) => return Err(anyhow!("unexpected shard reply during params")),
+                Err(_) => return Err(anyhow!("shard channel closed during params")),
+            }
+        }
+        Ok(full)
+    }
+
+    /// Evaluation loss at the assembled full-model parameters, through the
+    /// root's own (un-sharded) gradient handle. Like [`Coordinator::eval`],
+    /// does not drain the pipelines; `efmuon train` drains before the
+    /// *final* eval so the reported loss reflects fully-absorbed rounds.
+    pub fn eval(&mut self) -> Result<f32> {
+        let params = self.params()?;
+        self.handle.eval(params)
+    }
+
+    /// Cluster-wide communication rollup (latest per-shard snapshots).
+    pub fn meter(&self) -> ClusterMeter {
+        ClusterMeter { per_shard: self.meters.clone() }
+    }
+
+    fn send_all(&self, mut cmd: impl FnMut() -> ToShard) -> Result<()> {
+        for (s, tx) in self.to_shards.iter().enumerate() {
+            tx.send(cmd()).map_err(|_| anyhow!("shard {s} thread has exited"))?;
+        }
+        Ok(())
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        match &self.failed {
+            Some(e) => Err(anyhow!("cluster already failed: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    fn latch<T>(&mut self, r: Result<T>) -> Result<T> {
+        if let Err(e) = &r {
+            if self.failed.is_none() {
+                self.failed = Some(format!("{e:#}"));
+            }
+        }
+        r
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.to_shards {
+            let _ = tx.send(ToShard::Stop);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Reduce one lock-step round's per-shard stats.
+fn rollup(step: usize, per_shard: Vec<RoundStats>) -> ClusterRoundStats {
+    let s2w_bytes = per_shard.iter().map(|s| s.s2w_bytes).sum();
+    let w2s_bytes_per_worker = per_shard.iter().map(|s| s.w2s_bytes_per_worker).sum();
+    let absorbed: Vec<&RoundStats> =
+        per_shard.iter().filter(|s| s.absorbed_step.is_some()).collect();
+    let train_loss = if absorbed.is_empty() {
+        f32::NAN
+    } else {
+        (absorbed.iter().map(|s| s.train_loss as f64).sum::<f64>() / absorbed.len() as f64) as f32
+    };
+    ClusterRoundStats {
+        step,
+        absorbed_step: per_shard[0].absorbed_step,
+        train_loss,
+        radius: per_shard[0].radius,
+        w2s_bytes_per_worker,
+        s2w_bytes,
+        per_shard,
+    }
+}
+
+/// Converts a shard-thread panic into a [`FromShard::Failed`] reply while
+/// the channel is still open (same contract as the worker panic guard).
+struct PanicGuard {
+    shard: usize,
+    tx: Sender<FromShard>,
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.tx.send(FromShard::Failed {
+                shard: self.shard,
+                err: "shard thread panicked".into(),
+            });
+        }
+    }
+}
+
+/// Shard-thread main loop: spawn the shard's [`Coordinator`] (worker init
+/// included), then serve root commands until `Stop` or a fatal error.
+/// `ship_shift` is false on 1-shard clusters: no other shard will ever
+/// read the board, so round replies carry an empty shift instead of a
+/// full-model clone.
+#[allow(clippy::too_many_arguments)]
+fn shard_main(
+    shard: usize,
+    x0: Layers,
+    geometry: Vec<LayerGeometry>,
+    handle: GradHandle,
+    cfg: CoordinatorCfg,
+    ship_shift: bool,
+    rx: Receiver<ToShard>,
+    tx: Sender<FromShard>,
+) {
+    let _guard = PanicGuard { shard, tx: tx.clone() };
+    let mut coord = match Coordinator::spawn(x0, geometry, handle, cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
+            return;
+        }
+    };
+    if tx.send(FromShard::Ready { shard }).is_err() {
+        return;
+    }
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ToShard::Stop => break,
+            ToShard::Round => match coord.round() {
+                Ok(stats) => {
+                    let reply = FromShard::Round {
+                        shard,
+                        stats: Box::new(stats),
+                        shift: if ship_shift { coord.shift().clone() } else { Vec::new() },
+                        meter: coord.meter().snapshot(),
+                    };
+                    if tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
+                    break;
+                }
+            },
+            ToShard::Drain => match coord.drain() {
+                Ok(stats) => {
+                    let reply = FromShard::Drained {
+                        shard,
+                        stats,
+                        meter: coord.meter().snapshot(),
+                    };
+                    if tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
+                    break;
+                }
+            },
+            ToShard::Params => {
+                let reply = FromShard::Params { shard, params: coord.params().clone() };
+                if tx.send(reply).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Build a [`Meter`]-compatible rollup check (used in tests): true when the
+/// cluster totals equal the sum/min composition of the given snapshots.
+pub fn totals_consistent(meter: &ClusterMeter) -> bool {
+    let t = meter.totals();
+    let sum =
+        |f: fn(&MeterSnapshot) -> u64| -> u64 { meter.per_shard.iter().map(f).sum() };
+    let min = |f: fn(&MeterSnapshot) -> u64| -> u64 {
+        meter.per_shard.iter().map(f).min().unwrap_or(0)
+    };
+    t.w2s_per_worker == sum(|m| m.w2s_per_worker)
+        && t.w2s_all == sum(|m| m.w2s_all)
+        && t.s2w_total == sum(|m| m.s2w_total)
+        && t.rounds_issued == min(|m| m.rounds_issued)
+        && t.rounds_absorbed == min(|m| m.rounds_absorbed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+
+    #[test]
+    fn partition_single_shard_keeps_order() {
+        let shapes = vec![(4, 4), (2, 2), (8, 1)];
+        let p = partition_layers(&shapes, 1).unwrap();
+        assert_eq!(p, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn partition_balances_by_numel() {
+        // loads: 16, 16, 4, 4 over two shards -> 20 / 20
+        let shapes = vec![(4, 4), (4, 4), (2, 2), (2, 2)];
+        let p = partition_layers(&shapes, 2).unwrap();
+        let load = |ids: &Vec<usize>| -> usize {
+            ids.iter().map(|&i| shapes[i].0 * shapes[i].1).sum()
+        };
+        assert_eq!(load(&p[0]), 20);
+        assert_eq!(load(&p[1]), 20);
+        // coverage: every layer exactly once
+        let mut all: Vec<usize> = p.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partition_rejects_degenerate_shard_counts() {
+        let shapes = vec![(4, 4), (2, 2)];
+        assert!(partition_layers(&shapes, 0).is_err());
+        let err = partition_layers(&shapes, 3).unwrap_err();
+        assert!(err.contains("2 layer"), "{err}");
+    }
+
+    #[test]
+    fn board_seals_and_reads_by_epoch() {
+        let mk = |v: f32| vec![Matrix::from_vec(1, 1, vec![v])];
+        let b = ParamBoard::new(mk(0.0), 3);
+        assert_eq!(b.read(0)[0].data, vec![0.0]);
+        b.seal(1, mk(1.0));
+        b.seal(2, mk(2.0));
+        // epoch reads are exact; re-seals are idempotent
+        b.seal(2, mk(99.0));
+        assert_eq!(b.read(0)[0].data, vec![0.0]);
+        assert_eq!(b.read(1)[0].data, vec![1.0]);
+        assert_eq!(b.read(2)[0].data, vec![2.0]);
+        // future epochs fall back to the newest sealed snapshot
+        assert_eq!(b.read(7)[0].data, vec![2.0]);
+        assert_eq!(b.read_latest()[0].data, vec![2.0]);
+        // retention: keep=3 keeps {1,2,3} after sealing 3; epoch-0 reads
+        // degrade to the oldest retained snapshot
+        b.seal(3, mk(3.0));
+        assert_eq!(b.read(0)[0].data, vec![1.0]);
+    }
+
+    #[test]
+    fn cluster_meter_rollup() {
+        let m0 = MeterSnapshot {
+            w2s_per_worker: 10,
+            w2s_all: 30,
+            s2w_total: 5,
+            rounds_issued: 4,
+            rounds_absorbed: 3,
+        };
+        let m1 = MeterSnapshot {
+            w2s_per_worker: 7,
+            w2s_all: 21,
+            s2w_total: 9,
+            rounds_issued: 4,
+            rounds_absorbed: 4,
+        };
+        let cm = ClusterMeter { per_shard: vec![m0, m1] };
+        let t = cm.totals();
+        assert_eq!(t.w2s_per_worker, 17);
+        assert_eq!(t.w2s_all, 51);
+        assert_eq!(t.s2w_total, 14);
+        assert_eq!(t.rounds_issued, 4);
+        assert_eq!(t.rounds_absorbed, 3);
+        assert!(totals_consistent(&cm));
+        let j = cm.to_json();
+        assert!(j.get("totals").is_some());
+        assert_eq!(j.get("per_shard").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    }
+}

@@ -410,6 +410,13 @@ impl Coordinator {
         &self.server.x
     }
 
+    /// Current broadcast shift (server W). Every worker's local W coincides
+    /// with this bit-for-bit once it has applied the issued broadcasts; the
+    /// cluster's parameter board publishes it as the cross-shard view.
+    pub fn shift(&self) -> &Layers {
+        &self.server.w
+    }
+
     /// Cumulative communication meters.
     pub fn meter(&self) -> &Meter {
         &self.meter
@@ -493,7 +500,11 @@ fn worker_main(
             }
         };
         state.apply_broadcast(&msgs);
-        let (loss, grad) = match handle.grad(id, &state.w) {
+        // the round index doubles as the data/board epoch: sharded handles
+        // read the cross-shard parameter snapshot sealed for this round, and
+        // the PJRT service keys batch sampling on (worker, step) so cluster
+        // deployments replaying the same round sample the same data
+        let (loss, grad) = match handle.grad_at(id, &state.w, step) {
             Ok(v) => v,
             Err(e) => {
                 let _ = tx.send(FromWorker::Failed { id, err: format!("{e:#}") });

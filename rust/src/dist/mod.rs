@@ -31,13 +31,33 @@
 //! parallel), or the PJRT model runtime on a dedicated service thread (PJRT
 //! handles are not `Send`, so all executions serialize there — which is
 //! also the fastest layout for a single XLA CPU client).
+//!
+//! Above the single leader sits [`cluster::Cluster`]: the model's layers are
+//! partitioned across several shard coordinators (each the exact topology
+//! above, with its own worker pool, [`Meter`] and [`RoundMode`] pipeline),
+//! driven by a root reducer that advances all shards concurrently and rolls
+//! their telemetry up into a [`cluster::ClusterMeter`]:
+//!
+//! ```text
+//!   caller thread ──► Cluster::round()  (root reducer)
+//!        ├─► shard thread 0: Coordinator over layers(0) ─► worker pool 0
+//!        ├─► shard thread 1: Coordinator over layers(1) ─► worker pool 1
+//!        └─► ...                                            (concurrent)
+//!        ◄── per-shard RoundStats + Meter snapshots ── barrier + rollup
+//! ```
+//!
+//! With one shard the cluster *is* the single-leader deployment above,
+//! bit-for-bit (asserted in `rust/tests/scenario.rs`).
 
+pub mod cluster;
 pub mod comm;
 pub mod coordinator;
 pub mod server;
 pub mod service;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{Json, JsonObj};
 
 /// How compressed messages travel between leader and workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,16 +93,29 @@ impl RoundMode {
         }
     }
 
-    /// Parse a mode spec: `sync` | `async` (= `async:1`) | `async:N`.
+    /// Largest accepted `async:N` lookahead. Every in-flight round pins one
+    /// broadcast plus per-worker reply slots, so an absurd lookahead (say
+    /// `async:18446744073709551615`) is always a typo, never a deployment —
+    /// reject it with a clear error instead of OOMing rounds later.
+    pub const MAX_LOOKAHEAD: usize = 1024;
+
+    /// Parse a mode spec: `sync` | `async` (= `async:1`) | `async:N`
+    /// (`N <= MAX_LOOKAHEAD`).
     pub fn parse(s: &str) -> Result<RoundMode, String> {
         match s {
             "sync" => Ok(RoundMode::Sync),
             "async" => Ok(RoundMode::Async { lookahead: 1 }),
             other => match other.strip_prefix("async:") {
-                Some(n) => n
-                    .parse::<usize>()
-                    .map(|lookahead| RoundMode::Async { lookahead })
-                    .map_err(|_| format!("bad round mode {other:?}: expected async:<lookahead>")),
+                Some(n) => match n.parse::<usize>() {
+                    Ok(lookahead) if lookahead > Self::MAX_LOOKAHEAD => Err(format!(
+                        "bad round mode {other:?}: lookahead {lookahead} exceeds the \
+                         max of {} (each in-flight round holds a broadcast plus \
+                         per-worker reply slots)",
+                        Self::MAX_LOOKAHEAD
+                    )),
+                    Ok(lookahead) => Ok(RoundMode::Async { lookahead }),
+                    Err(_) => Err(format!("bad round mode {other:?}: expected async:<lookahead>")),
+                },
                 None => Err(format!("bad round mode {other:?}: expected sync | async | async:<n>")),
             },
         }
@@ -127,6 +160,11 @@ impl Meter {
         self.w2s_per_worker.load(Ordering::Relaxed)
     }
 
+    /// Uplink total summed over ALL workers.
+    pub fn w2s_all(&self) -> u64 {
+        self.w2s_all.load(Ordering::Relaxed)
+    }
+
     /// Broadcast total.
     pub fn s2w(&self) -> u64 {
         self.s2w_total.load(Ordering::Relaxed)
@@ -154,6 +192,73 @@ impl Meter {
         self.w2s_all.fetch_add(w2s_all, Ordering::Relaxed);
         self.rounds_absorbed.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// A point-in-time copy of every counter (plain integers — cheap to
+    /// ship across threads; the cluster rollup aggregates these).
+    pub fn snapshot(&self) -> MeterSnapshot {
+        MeterSnapshot {
+            w2s_per_worker: self.w2s(),
+            w2s_all: self.w2s_all(),
+            s2w_total: self.s2w(),
+            rounds_issued: self.rounds_issued(),
+            rounds_absorbed: self.rounds_absorbed(),
+        }
+    }
+}
+
+/// Serializable point-in-time copy of a [`Meter`] (see [`Meter::snapshot`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MeterSnapshot {
+    pub w2s_per_worker: u64,
+    pub w2s_all: u64,
+    pub s2w_total: u64,
+    pub rounds_issued: u64,
+    pub rounds_absorbed: u64,
+}
+
+impl MeterSnapshot {
+    /// Accumulate another snapshot's byte counters; round counters take the
+    /// minimum (the rounds *every* summed meter has completed).
+    pub fn absorb_shard(&mut self, other: &MeterSnapshot, first: bool) {
+        self.w2s_per_worker += other.w2s_per_worker;
+        self.w2s_all += other.w2s_all;
+        self.s2w_total += other.s2w_total;
+        if first {
+            self.rounds_issued = other.rounds_issued;
+            self.rounds_absorbed = other.rounds_absorbed;
+        } else {
+            self.rounds_issued = self.rounds_issued.min(other.rounds_issued);
+            self.rounds_absorbed = self.rounds_absorbed.min(other.rounds_absorbed);
+        }
+    }
+
+    /// JSON form (metrics logs, `BENCH_hotpath.json` rollups).
+    pub fn to_json(&self) -> Json {
+        JsonObj::new()
+            .put("w2s_per_worker", self.w2s_per_worker)
+            .put("w2s_all", self.w2s_all)
+            .put("s2w_total", self.s2w_total)
+            .put("rounds_issued", self.rounds_issued)
+            .put("rounds_absorbed", self.rounds_absorbed)
+            .build()
+    }
+
+    /// Parse the form emitted by [`MeterSnapshot::to_json`].
+    pub fn from_json(j: &Json) -> Result<MeterSnapshot, String> {
+        let get = |k: &str| -> Result<u64, String> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("meter snapshot: missing {k}"))
+        };
+        Ok(MeterSnapshot {
+            w2s_per_worker: get("w2s_per_worker")?,
+            w2s_all: get("w2s_all")?,
+            s2w_total: get("s2w_total")?,
+            rounds_issued: get("rounds_issued")?,
+            rounds_absorbed: get("rounds_absorbed")?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +282,23 @@ mod tests {
     }
 
     #[test]
+    fn round_mode_parse_caps_lookahead() {
+        // the cap itself is accepted; one past it (and absurd values that
+        // would silently allocate unbounded pipeline state) are rejected
+        // with an error that names the limit
+        let max = RoundMode::MAX_LOOKAHEAD;
+        assert_eq!(
+            RoundMode::parse(&format!("async:{max}")).unwrap(),
+            RoundMode::Async { lookahead: max }
+        );
+        for s in [format!("async:{}", max + 1), format!("async:{}", u64::MAX)] {
+            let err = RoundMode::parse(&s).expect_err("absurd lookahead must fail");
+            assert!(err.contains("exceeds the max"), "unhelpful error: {err}");
+            assert!(err.contains("1024"), "error should name the limit: {err}");
+        }
+    }
+
+    #[test]
     fn meter_counts_both_directions() {
         let m = Meter::new();
         m.record_broadcast(100);
@@ -184,8 +306,25 @@ mod tests {
         m.record_uplinks(40, 120);
         assert_eq!(m.s2w(), 200);
         assert_eq!(m.w2s(), 40);
-        assert_eq!(m.w2s_all.load(Ordering::Relaxed), 120);
+        assert_eq!(m.w2s_all(), 120);
         assert_eq!(m.rounds_issued(), 2);
         assert_eq!(m.rounds_absorbed(), 1);
+    }
+
+    #[test]
+    fn meter_snapshot_roundtrips_through_json() {
+        let m = Meter::new();
+        m.record_broadcast(100);
+        m.record_uplinks(40, 120);
+        let snap = m.snapshot();
+        assert_eq!(snap.w2s_per_worker, 40);
+        assert_eq!(snap.w2s_all, 120);
+        assert_eq!(snap.s2w_total, 100);
+        assert_eq!(snap.rounds_issued, 1);
+        assert_eq!(snap.rounds_absorbed, 1);
+        let j = snap.to_json();
+        let back = MeterSnapshot::from_json(&j).unwrap();
+        assert_eq!(back, snap);
+        assert!(MeterSnapshot::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 }

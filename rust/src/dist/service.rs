@@ -12,7 +12,12 @@
 //!   per-worker data shards; requests serialize over an mpsc channel.
 //!
 //! Handles are cheap to clone; [`GradHandle::for_worker`] derives the
-//! worker-specific gradient RNG stream.
+//! worker-specific gradient RNG stream, and [`GradHandle::for_shard`] wraps
+//! any backend into a layer-sliced view for the multi-coordinator cluster
+//! (`dist::cluster`): the sharded handle assembles full-model parameters
+//! from the shard's own layers plus the cluster parameter board's sealed
+//! per-round snapshot of every other shard, forwards the request, and
+//! projects the returned gradient back onto the shard's layers.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -24,6 +29,8 @@ use crate::funcs::Objective;
 use crate::linalg::matrix::{Layers, Matrix};
 use crate::util::rng::Rng;
 
+use super::cluster::ParamBoard;
+
 /// RNG stream tag base for worker `j`'s stochastic-gradient draws — shared
 /// by every site that derives a worker gradient stream so the objective
 /// backend (inline), the lazy-handle fallback and the PJRT service all
@@ -34,11 +41,27 @@ fn grad_stream(worker: usize) -> u64 {
     GRAD_STREAM_BASE + worker as u64
 }
 
+/// Round index passed by [`GradHandle::grad`] (the un-keyed entry point:
+/// initialization and offline callers). Sharded handles read the *newest*
+/// sealed board snapshot for it, and the PJRT service derives a batch
+/// stream disjoint from every real round's.
+const INIT_STEP: usize = usize::MAX;
+
+/// PJRT batch stream for `(worker, step)`: batch sampling is a pure
+/// function of (seed, worker, round), so replaying a round — or running the
+/// same round from several shard coordinators of one cluster — draws the
+/// same data.
+fn batch_rng(seed: u64, worker: usize, step: usize) -> Rng {
+    let step_mix = (step as u64).wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15);
+    Rng::with_stream(seed.wrapping_add(step_mix), grad_stream(worker))
+}
+
 /// Requests served by the PJRT service thread.
 enum Req {
-    /// Local loss + gradient for `worker` at `params`.
+    /// Local loss + gradient for `worker` at `params` in round `step`.
     Grad {
         worker: usize,
+        step: usize,
         params: Layers,
         reply: Sender<Result<(f32, Layers), String>>,
     },
@@ -68,6 +91,13 @@ enum HandleInner {
     Pjrt {
         tx: Sender<Req>,
     },
+    /// A layer-sliced view for one cluster shard (see [`GradHandle::for_shard`]).
+    Sharded {
+        inner: Box<GradHandle>,
+        board: Arc<ParamBoard>,
+        /// Global layer ids this shard owns (ascending).
+        layer_ids: Arc<Vec<usize>>,
+    },
 }
 
 /// Cheap clonable handle to a [`GradService`].
@@ -90,13 +120,48 @@ impl GradHandle {
                 },
             },
             HandleInner::Pjrt { tx } => GradHandle { inner: HandleInner::Pjrt { tx: tx.clone() } },
+            HandleInner::Sharded { inner, board, layer_ids } => GradHandle {
+                inner: HandleInner::Sharded {
+                    inner: Box::new(inner.for_worker(worker)),
+                    board: board.clone(),
+                    layer_ids: layer_ids.clone(),
+                },
+            },
         }
     }
 
-    /// Local train loss `f_j` + gradient for `worker` at `params`.
-    /// Objective backend: computed inline in the calling thread (workers
-    /// run fully in parallel). PJRT backend: proxied to the service thread.
+    /// Derive a layer-sliced handle for one cluster shard: `grad`/`eval`
+    /// see only the layers in `layer_ids`, and the missing layers are
+    /// filled in from `board`'s sealed per-round snapshots. Worker ids are
+    /// global — shard `s`'s worker `j` is the *same* logical data worker
+    /// `j` as every other shard's (one `f_j` per worker, sliced by layer),
+    /// so its RNG/batch streams match the single-coordinator deployment.
+    pub fn for_shard(&self, board: Arc<ParamBoard>, layer_ids: Vec<usize>) -> GradHandle {
+        GradHandle {
+            inner: HandleInner::Sharded {
+                inner: Box::new(self.clone()),
+                board,
+                layer_ids: Arc::new(layer_ids),
+            },
+        }
+    }
+
+    /// Local train loss `f_j` + gradient for `worker` at `params`, without
+    /// a round index: initialization and offline callers. Sharded handles
+    /// read the newest sealed board snapshot; the PJRT backend samples from
+    /// a dedicated init batch stream.
     pub fn grad(&mut self, worker: usize, params: &Layers) -> Result<(f32, Layers)> {
+        self.grad_at(worker, params, INIT_STEP)
+    }
+
+    /// Local train loss `f_j` + gradient for `worker` at `params` in round
+    /// `step`. Objective backend: computed inline in the calling thread
+    /// (workers run fully in parallel; `step` does not perturb the RNG
+    /// stream). PJRT backend: proxied to the service thread, batches keyed
+    /// by `(worker, step)`. Sharded backend: assembles the full model from
+    /// `params` (own layers) + the board snapshot sealed for `step` (other
+    /// shards' layers), forwards, and projects the gradient back.
+    pub fn grad_at(&mut self, worker: usize, params: &Layers, step: usize) -> Result<(f32, Layers)> {
         match &mut self.inner {
             HandleInner::Local { obj, seed, rng } => {
                 // a handle caches one worker's stream; on a mismatch (handle
@@ -114,16 +179,56 @@ impl GradHandle {
             }
             HandleInner::Pjrt { tx } => {
                 let (rtx, rrx) = channel();
-                tx.send(Req::Grad { worker, params: params.clone(), reply: rtx })
+                tx.send(Req::Grad { worker, step, params: params.clone(), reply: rtx })
                     .map_err(|_| anyhow!("grad service is down"))?;
                 rrx.recv()
                     .map_err(|_| anyhow!("grad service dropped the request"))?
                     .map_err(anyhow::Error::msg)
             }
+            HandleInner::Sharded { inner, board, layer_ids } => {
+                let ids: Arc<Vec<usize>> = layer_ids.clone();
+                // a shard owning every layer (the 1-shard cluster) needs no
+                // assembly: skip the snapshot clone so the golden-matched
+                // deployment is cost-identical to the unsharded one
+                if ids.len() == board.layers() {
+                    return inner.grad_layers_at(worker, params, ids.as_slice(), step);
+                }
+                let full = assemble(board.as_ref(), ids.as_slice(), params, step)?;
+                inner.grad_layers_at(worker, &full, ids.as_slice(), step)
+            }
         }
     }
 
-    /// Evaluation loss at `params` (deterministic given params).
+    /// Loss + gradient restricted to `layer_ids`, at full-model `params`.
+    /// Objective backend: routes through
+    /// [`Objective::stoch_grad_j_layers`], so layer-separable objectives
+    /// only pay for the requested layers (the cluster's per-shard gradient
+    /// cost). Other backends compute the full gradient and project.
+    fn grad_layers_at(
+        &mut self,
+        worker: usize,
+        params: &Layers,
+        layer_ids: &[usize],
+        step: usize,
+    ) -> Result<(f32, Layers)> {
+        if let HandleInner::Local { obj, seed, rng } = &mut self.inner {
+            let seed = *seed;
+            match rng {
+                Some((w, _)) if *w == worker => {}
+                _ => *rng = Some((worker, Rng::with_stream(seed, grad_stream(worker)))),
+            }
+            let (_, r) = rng.as_mut().expect("just installed");
+            let g = obj.stoch_grad_j_layers(worker, params, layer_ids, r);
+            let loss = obj.loss_j(worker, params) as f32;
+            return Ok((loss, g));
+        }
+        let (loss, g_full) = self.grad_at(worker, params, step)?;
+        Ok((loss, layer_ids.iter().map(|&li| g_full[li].clone()).collect()))
+    }
+
+    /// Evaluation loss at `params` (deterministic given params). Sharded
+    /// handles evaluate the full model with the newest board snapshot
+    /// standing in for the other shards' layers.
     pub fn eval(&self, params: Layers) -> Result<f32> {
         match &self.inner {
             HandleInner::Local { obj, .. } => Ok(obj.loss(&params) as f32),
@@ -134,6 +239,13 @@ impl GradHandle {
                 rrx.recv()
                     .map_err(|_| anyhow!("grad service dropped the request"))?
                     .map_err(anyhow::Error::msg)
+            }
+            HandleInner::Sharded { inner, board, layer_ids } => {
+                if layer_ids.len() == board.layers() {
+                    return inner.eval(params);
+                }
+                let full = assemble(board.as_ref(), layer_ids.as_slice(), &params, INIT_STEP)?;
+                inner.eval(full)
             }
         }
     }
@@ -152,8 +264,35 @@ impl GradHandle {
                     .map_err(|_| anyhow!("grad service dropped the request"))?
                     .map_err(anyhow::Error::msg)
             }
+            HandleInner::Sharded { inner, .. } => inner.ns_orthogonalize(g),
         }
     }
+}
+
+/// Substitute a shard's own layers into the board's full-model snapshot for
+/// `step` (the newest sealed snapshot for `INIT_STEP`).
+fn assemble(
+    board: &ParamBoard,
+    layer_ids: &[usize],
+    own: &Layers,
+    step: usize,
+) -> Result<Layers> {
+    if own.len() != layer_ids.len() {
+        return Err(anyhow!(
+            "sharded handle: got {} layers for a {}-layer shard",
+            own.len(),
+            layer_ids.len()
+        ));
+    }
+    let snap = if step == INIT_STEP { board.read_latest() } else { board.read(step) };
+    let mut full: Layers = (*snap).clone();
+    for (m, &li) in own.iter().zip(layer_ids) {
+        if li >= full.len() {
+            return Err(anyhow!("sharded handle: layer id {li} out of range"));
+        }
+        full[li] = m.clone();
+    }
+    Ok(full)
 }
 
 /// The gradient service (owns the backend; see module docs).
@@ -251,24 +390,26 @@ fn pjrt_service_main(
     let eval_set: Vec<(Vec<i32>, Vec<i32>)> = (0..eval_batches.max(1))
         .map(|_| eval_shard.sample_batch(batch, &mut eval_rng))
         .collect();
-    let mut worker_rngs: Vec<Rng> = (0..workers.max(1))
-        .map(|j| Rng::with_stream(seed, grad_stream(j)))
-        .collect();
+    let workers = workers.max(1);
     let _ = init_tx.send(Ok(()));
 
     while let Ok(req) = rx.recv() {
         match req {
             Req::Shutdown => break,
-            Req::Grad { worker, params, reply } => {
+            Req::Grad { worker, step, params, reply } => {
                 let out = (|| -> Result<(f32, Layers), String> {
-                    if worker >= worker_rngs.len() {
+                    if worker >= workers {
                         return Err(format!(
-                            "worker {worker} out of range (service sized for {})",
-                            worker_rngs.len()
+                            "worker {worker} out of range (service sized for {workers})"
                         ));
                     }
-                    let shard = crate::data::Shard::new(&corpus, worker, worker_rngs.len(), seq);
-                    let (toks, tgts) = shard.sample_batch(batch, &mut worker_rngs[worker]);
+                    // batches are a pure function of (seed, worker, step):
+                    // every shard coordinator of a cluster replays the same
+                    // data for the same logical round, and requests arriving
+                    // in any order sample identically
+                    let shard = crate::data::Shard::new(&corpus, worker, workers, seq);
+                    let mut rng = batch_rng(seed, worker, step);
+                    let (toks, tgts) = shard.sample_batch(batch, &mut rng);
                     rt.grad(&params, &toks, &tgts).map_err(|e| format!("{e:#}"))
                 })();
                 let _ = reply.send(out);

@@ -6,7 +6,10 @@ use anyhow::Result;
 
 use crate::compress::Message;
 use crate::config::TrainConfig;
-use crate::funcs::{CoshObjective, Objective, Quadratics};
+use crate::dist::cluster::{Cluster, ClusterCfg};
+use crate::dist::service::GradService;
+use crate::dist::{RoundMode, TransportMode};
+use crate::funcs::{CoshObjective, MatrixQuadratic, Objective, Quadratics, Stacked};
 use crate::linalg::matrix::Matrix;
 use crate::lmo::LmoKind;
 use crate::metrics::render_table;
@@ -15,6 +18,7 @@ use crate::opt::{LayerGeometry, Schedule, ScheduleKind};
 use crate::train::{train, TrainReport};
 use crate::util::rng::Rng;
 use crate::util::stats::linfit;
+use crate::util::timer::Timer;
 
 /// The compressor configurations evaluated in the paper's Table 2 /
 /// Figures 1–2 (compression levels as reported there).
@@ -186,6 +190,135 @@ pub fn s2w_text(rows: &[S2wRow]) -> String {
                     },
                     r.w2s_bytes.to_string(),
                     format!("{:.6}", r.final_loss),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Multi-coordinator shard scaling (dist::cluster) — the `efmuon shards`
+// sweep
+// ---------------------------------------------------------------------------
+
+/// One row of the shard-scaling sweep.
+#[derive(Debug, Clone)]
+pub struct ShardScalingRow {
+    pub shards: usize,
+    /// Median-free mean wall time of one lock-step cluster round (ms).
+    pub round_ms: f64,
+    /// Speedup of this row's round time over the 1-shard row.
+    pub speedup_vs_1: f64,
+    pub final_loss: f32,
+    /// Cluster totals over the run (sums over shards).
+    pub w2s_bytes: u64,
+    pub w2s_all_bytes: u64,
+    pub s2w_bytes: u64,
+}
+
+/// Shard-scaling sweep on a layer-separable synthetic workload: a
+/// [`Stacked`] objective of `parts` grad-heavy [`MatrixQuadratic`] layers
+/// (`dim`×`dim`, `workers` data workers), driven by a [`Cluster`] at each
+/// shard count. Layer separability makes sharding *exact* here, so losses
+/// and wire bytes are invariant in the shard count (deterministic `top`
+/// compressors) while the per-round wall time drops toward the max over
+/// shards. Shard counts exceeding the layer count are skipped.
+pub fn shard_scaling_with(
+    parts: usize,
+    dim: usize,
+    workers: usize,
+    shard_counts: &[usize],
+    rounds: usize,
+    seed: u64,
+) -> Result<Vec<ShardScalingRow>> {
+    let mut rows = Vec::new();
+    let mut base_ms = None;
+    for &s in shard_counts {
+        if s == 0 || s > parts {
+            eprintln!("[shards] skipping shards={s} (workload has {parts} layers)");
+            continue;
+        }
+        let mut rng = Rng::new(seed);
+        let stack: Vec<Box<dyn Objective>> = (0..parts)
+            .map(|_| {
+                Box::new(MatrixQuadratic::new(workers, dim, dim, 0.0, &mut rng))
+                    as Box<dyn Objective>
+            })
+            .collect();
+        let obj = Stacked::new(stack).map_err(anyhow::Error::msg)?;
+        let x0 = obj.init(&mut Rng::new(seed));
+        let geometry =
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; parts];
+        let svc = GradService::spawn_objective(Box::new(obj), seed);
+        let mut cluster = Cluster::spawn(
+            x0,
+            geometry,
+            svc.handle(),
+            ClusterCfg {
+                shards: s,
+                workers_per_shard: workers,
+                worker_comp: "top:0.2".into(),
+                server_comp: "top:0.5".into(),
+                beta: 0.9,
+                schedule: Schedule::constant(0.02),
+                transport: TransportMode::Counted,
+                round_mode: RoundMode::Sync,
+                seed,
+                use_ns_artifact: false,
+            },
+        )?;
+        for _ in 0..rounds.min(3) {
+            cluster.round()?; // warmup: arenas, caches, thread ramp-up
+        }
+        let timer = Timer::start();
+        for _ in 0..rounds {
+            cluster.round()?;
+        }
+        let secs = timer.seconds();
+        cluster.drain()?;
+        let final_loss = cluster.eval()?;
+        let m = cluster.meter();
+        let round_ms = secs * 1e3 / rounds.max(1) as f64;
+        let speedup_vs_1 = match base_ms {
+            None => {
+                base_ms = Some(round_ms);
+                1.0
+            }
+            Some(b) => b / round_ms,
+        };
+        rows.push(ShardScalingRow {
+            shards: s,
+            round_ms,
+            speedup_vs_1,
+            final_loss,
+            w2s_bytes: m.w2s(),
+            w2s_all_bytes: m.w2s_all(),
+            s2w_bytes: m.s2w(),
+        });
+    }
+    Ok(rows)
+}
+
+/// The default `efmuon shards` workload: 4 layers of 192×192, 4 workers.
+pub fn shard_scaling(shard_counts: &[usize], rounds: usize, seed: u64) -> Result<Vec<ShardScalingRow>> {
+    shard_scaling_with(4, 192, 4, shard_counts, rounds, seed)
+}
+
+/// Render the shard-scaling sweep as text.
+pub fn shards_text(rows: &[ShardScalingRow]) -> String {
+    render_table(
+        &["shards", "round ms", "speedup", "final loss", "w2s/worker", "w2s all", "s2w"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.shards.to_string(),
+                    format!("{:.3}", r.round_ms),
+                    format!("{:.2}x", r.speedup_vs_1),
+                    format!("{:.6}", r.final_loss),
+                    r.w2s_bytes.to_string(),
+                    r.w2s_all_bytes.to_string(),
+                    r.s2w_bytes.to_string(),
                 ]
             })
             .collect::<Vec<_>>(),
@@ -745,6 +878,30 @@ mod tests {
         // w2s direction is unchanged by the server compressor choice:
         // top:0.3 on a 16-dim layer sends a fixed k per round
         assert_eq!(top.w2s_bytes, id.w2s_bytes);
+    }
+
+    #[test]
+    fn shard_scaling_is_loss_and_byte_invariant() {
+        // layer-separable workload + deterministic top compressors:
+        // sharding repartitions the work without changing the algorithm, so
+        // every shard count spends identical wire bytes and lands on the
+        // same loss; counts beyond the layer count are skipped
+        let rows = shard_scaling_with(3, 24, 2, &[1, 2, 3, 5], 6, 13).unwrap();
+        assert_eq!(rows.len(), 3, "shards=5 must be skipped on a 3-layer stack");
+        let base = &rows[0];
+        assert_eq!(base.shards, 1);
+        assert_eq!(base.w2s_all_bytes, 2 * base.w2s_bytes, "2 workers");
+        for r in &rows[1..] {
+            assert_eq!(r.w2s_bytes, base.w2s_bytes, "shards={}", r.shards);
+            assert_eq!(r.s2w_bytes, base.s2w_bytes, "shards={}", r.shards);
+            assert!(
+                (r.final_loss - base.final_loss).abs() < 1e-6,
+                "shards={}: loss {} vs {}",
+                r.shards,
+                r.final_loss,
+                base.final_loss
+            );
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   table2           reproduce Table 2 (per-round communication cost)
 //!   rates            reproduce Table 1 empirically (rate fits)
 //!   s2w              bidirectional compression: EF21-P broadcast sweep
+//!   shards           multi-coordinator layer sharding: scaling sweep
 //!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
 //!   divergence       the §2 divergence demo (naive DCGD vs EF)
 //!
@@ -42,6 +43,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "table2" => cmd_table2(args),
         "rates" => cmd_rates(args),
         "s2w" => cmd_s2w(args),
+        "shards" => cmd_shards(args),
         "fig1" | "fig2" => cmd_figures(args),
         "divergence" => cmd_divergence(args),
         "help" | "--help" => {
@@ -59,16 +61,19 @@ USAGE: efmuon <command> [--flag value ...]
 
 COMMANDS:
   train        distributed EF21-Muon pretraining on the AOT-compiled model
-               flags: --artifacts DIR --workers N --steps K --comp SPEC
-                      --server-comp SPEC --round-mode sync|async:N --beta B
-                      --lr LR --warmup W --eval-every E --seed S
-                      --log out.jsonl --full-codec
+               flags: --artifacts DIR --workers N --shards S --steps K
+                      --comp SPEC --server-comp SPEC
+                      --round-mode sync|async:N --beta B --lr LR --warmup W
+                      --eval-every E --seed S --log out.jsonl --full-codec
   eval         load artifacts, run one eval pass (smoke test)
   info         print the manifest: layers, shapes, groups, LMO geometry
   table2       Table 2 — per-round communication cost per compressor
   rates        Table 1 — empirical convergence-rate validation
   s2w          bidirectional compression — EF21-P server-to-worker sweep on
                the objective backend (flags: --rounds K --seed S)
+  shards       multi-coordinator layer sharding — scaling sweep of the
+               cluster root reducer on the objective backend
+               (flags: --max-shards M --rounds K --seed S)
   fig1/fig2    Figures 1-2 — compressor sweep (loss vs tokens/bytes)
                flags: --steps K --target LOSS plus all train flags
   divergence   naive biased compression diverges; EF fixes it (paper §2)
@@ -81,6 +86,12 @@ ROUND MODES:
   sync      lock-step rounds (default)
   async:N   pipelined: up to N broadcasts in flight; workers run ahead on
             the previous broadcast (async:0 is bit-equal to sync)
+
+SHARDING:
+  --shards S partitions the model's layers across S concurrent shard
+  coordinators (balanced by parameter count), each with its own worker
+  pool, reduced by a root coordinator; --shards 1 is bit-identical to the
+  single-leader deployment.
 ";
 
 fn warn_unknown(args: &Args) {
@@ -93,8 +104,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     println!(
-        "training: {} workers, {} steps, w2s={}, s2w={}, rounds={}, lr={}, beta={}",
-        cfg.workers, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.round_mode,
+        "training: {} workers, {} shard(s), {} steps, w2s={}, s2w={}, rounds={}, lr={}, beta={}",
+        cfg.workers, cfg.shards, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.round_mode,
         cfg.lr, cfg.beta
     );
     let report = efmuon::train::train(&cfg)?;
@@ -194,6 +205,24 @@ fn cmd_s2w(args: &Args) -> Result<()> {
     warn_unknown(args);
     let rows = exp::s2w_savings(&exp::s2w_specs(), rounds, seed)?;
     println!("{}", exp::s2w_text(&rows));
+    Ok(())
+}
+
+fn cmd_shards(args: &Args) -> Result<()> {
+    let rounds = args.usize("rounds", 40);
+    let seed = args.u64("seed", 11);
+    let max = args.usize("max-shards", 4);
+    warn_unknown(args);
+    let counts: Vec<usize> = [1usize, 2, 3, 4, 6, 8]
+        .into_iter()
+        .filter(|&s| s <= max)
+        .collect();
+    let rows = exp::shard_scaling(&counts, rounds, seed)?;
+    println!("{}", exp::shards_text(&rows));
+    println!(
+        "\n(layer-separable workload: bytes and losses are invariant in the shard\n\
+         count; `round ms` falling toward max-over-shards is the scaling win)"
+    );
     Ok(())
 }
 

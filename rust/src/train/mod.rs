@@ -8,6 +8,7 @@ pub mod checkpoint;
 use anyhow::Result;
 
 use crate::config::TrainConfig;
+use crate::dist::cluster::{Cluster, ClusterCfg};
 use crate::dist::coordinator::{Coordinator, CoordinatorCfg};
 use crate::dist::service::GradService;
 use crate::dist::{RoundMode, TransportMode};
@@ -81,8 +82,19 @@ pub fn geometry_for(manifest: &Manifest, cfg: &TrainConfig) -> Vec<LayerGeometry
         .collect()
 }
 
-/// Run one full distributed training job per the config.
+/// Run one full distributed training job per the config. `shards = 1`
+/// drives the single [`Coordinator`] (the exact deployment of every prior
+/// PR); `shards > 1` partitions the model's layers across a
+/// [`Cluster`] of concurrent shard coordinators.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    if cfg.shards == 0 {
+        // reject rather than silently reinterpret as 1 (the same hardening
+        // contract as RoundMode::parse)
+        return Err(anyhow::anyhow!("shards must be >= 1 (got 0); use --shards 1 for the single-leader deployment"));
+    }
+    if cfg.shards > 1 {
+        return train_cluster(cfg);
+    }
     let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
     let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
     let geometry = geometry_for(&manifest, cfg);
@@ -184,4 +196,132 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         tokens_per_step,
         wall_seconds: timer.seconds(),
     })
+}
+
+/// The `shards > 1` training path: the model's layers are partitioned
+/// across a [`Cluster`] of concurrent shard coordinators. The final eval
+/// drains all shard pipelines so the reported loss reflects fully-absorbed
+/// rounds on every shard.
+///
+/// NOTE: this loop deliberately mirrors [`train`]'s cadence (round →
+/// absorbed-loss → drain at the last step only → eval → log); a change to
+/// one driver's loop logic almost certainly belongs in the other too
+/// (extracting a shared driver is tracked in ROADMAP.md).
+fn train_cluster(cfg: &TrainConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
+    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
+    let geometry = geometry_for(&manifest, cfg);
+    // the logical data workers are shared across shards (shard s's worker j
+    // is data worker j), so tokens per cluster round match the
+    // single-coordinator deployment
+    let tokens_per_step = manifest.batch * manifest.seq_len * cfg.workers;
+
+    let svc = GradService::spawn_pjrt(
+        cfg.artifacts.clone(),
+        cfg.workers,
+        cfg.corpus_tokens,
+        cfg.eval_batches,
+        cfg.seed,
+    )?;
+    let mut cluster = Cluster::spawn(
+        x0,
+        geometry,
+        svc.handle(),
+        ClusterCfg {
+            shards: cfg.shards,
+            workers_per_shard: cfg.workers,
+            worker_comp: cfg.worker_comp.clone(),
+            server_comp: cfg.server_comp.clone(),
+            beta: cfg.beta,
+            schedule: Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac),
+            transport: if cfg.full_codec {
+                TransportMode::Encoded
+            } else {
+                TransportMode::Counted
+            },
+            round_mode: RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?,
+            seed: cfg.seed,
+            use_ns_artifact: cfg.use_ns_artifact,
+        },
+    )?;
+
+    let mut log = match &cfg.log_path {
+        Some(p) => Some(JsonlWriter::create(p)?),
+        None => None,
+    };
+    let timer = crate::util::timer::Timer::start();
+    let mut curve = Vec::new();
+    let mut train_losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let stats = cluster.round()?;
+        if stats.absorbed_step.is_some() {
+            train_losses.push(stats.train_loss);
+        }
+        let last = step + 1 == cfg.steps;
+        if last {
+            // the final eval drains all shard pipelines: every issued round
+            // lands on every shard first (no-op when synchronous). Same
+            // cadence as the single-coordinator path — mid-run evals never
+            // drain, so the observation frequency (eval_every) can never
+            // perturb the optimization trajectory.
+            for s in cluster.drain()? {
+                train_losses.push(s.train_loss);
+            }
+        }
+        let do_eval = step % cfg.eval_every.max(1) == 0 || last;
+        if do_eval {
+            let eval_loss = cluster.eval()?;
+            let meter = cluster.meter();
+            let point = EvalPoint {
+                step,
+                tokens_processed: (tokens_per_step as u64) * meter.rounds_absorbed(),
+                w2s_bytes_per_worker: meter.w2s(),
+                eval_loss,
+            };
+            if let Some(log) = log.as_mut() {
+                let mut o = JsonObj::new()
+                    .put("step", step)
+                    .put("shards", cfg.shards)
+                    .put("eval_loss", eval_loss)
+                    .put("tokens", point.tokens_processed)
+                    .put("w2s_bytes", point.w2s_bytes_per_worker)
+                    .put("s2w_bytes", meter.s2w())
+                    .put("radius", stats.radius)
+                    .put("meter", meter.to_json());
+                if let Some(l) = train_losses.last().copied() {
+                    o = o.put("train_loss", l);
+                }
+                log.write(&o)?;
+                log.flush()?;
+            }
+            curve.push(point);
+        }
+    }
+
+    let meter = cluster.meter();
+    Ok(TrainReport {
+        config_comp: cfg.worker_comp.clone(),
+        steps: cfg.steps,
+        final_eval_loss: curve.last().map(|p| p.eval_loss).unwrap_or(f32::NAN),
+        curve,
+        train_losses,
+        total_w2s_bytes_per_worker: meter.w2s(),
+        total_s2w_bytes: meter.s2w(),
+        model_bytes: manifest.model_bytes(),
+        tokens_per_step,
+        wall_seconds: timer.seconds(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_shards_is_rejected_before_anything_loads() {
+        let cfg = TrainConfig { shards: 0, ..TrainConfig::default() };
+        let err = train(&cfg).expect_err("shards=0 must be rejected");
+        assert!(format!("{err:#}").contains("shards must be >= 1"), "{err:#}");
+    }
 }

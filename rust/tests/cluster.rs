@@ -1,0 +1,266 @@
+//! Cluster-layer integration: the balanced layer-partition property on
+//! ragged shape sets, root-reducer rollups, pipelined cluster rounds, and
+//! fault propagation (a worker dying inside one shard must surface as a
+//! clean `Err` from the root, naming the shard — never a hang).
+//!
+//! The trajectory-level invariants (1-shard golden match, multi-shard ≡
+//! independent coordinators, shard-count invariance) live in the scenario
+//! harness (`rust/tests/scenario.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use efmuon::dist::cluster::{partition_layers, Cluster, ClusterCfg};
+use efmuon::dist::service::GradService;
+use efmuon::dist::{RoundMode, TransportMode};
+use efmuon::funcs::{Objective, Quadratics, Stacked};
+use efmuon::linalg::matrix::Layers;
+use efmuon::lmo::LmoKind;
+use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::util::proptest::check;
+use efmuon::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Partition properties (ISSUE-3 satellite)
+// ---------------------------------------------------------------------------
+
+/// Every balanced partition covers all layers exactly once, leaves no
+/// shard empty, keeps ids ascending within a shard, and spreads the load
+/// so the heaviest and lightest shards differ by at most one max-layer —
+/// on ragged randomly-shaped layer sets.
+#[test]
+fn partition_covers_and_balances_on_ragged_shapes() {
+    check("partition-balanced", 200, 42, |g| {
+        let n_layers = g.usize_in(1, 24);
+        let shapes: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| g.shape(1, 40)).collect();
+        let shards = g.usize_in(1, n_layers);
+        let p = partition_layers(&shapes, shards).map_err(|e| e.to_string())?;
+
+        if p.len() != shards {
+            return Err(format!("expected {shards} shards, got {}", p.len()));
+        }
+        // coverage: every layer exactly once
+        let mut seen: Vec<usize> = p.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..n_layers).collect();
+        if seen != expect {
+            return Err(format!("partition does not cover layers exactly once: {seen:?}"));
+        }
+        for (s, ids) in p.iter().enumerate() {
+            if ids.is_empty() {
+                return Err(format!("shard {s} is empty"));
+            }
+            if ids.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("shard {s} ids not ascending: {ids:?}"));
+            }
+        }
+        // balance: max load - min load <= max single-layer numel
+        let numel = |i: usize| shapes[i].0 * shapes[i].1;
+        let loads: Vec<usize> =
+            p.iter().map(|ids| ids.iter().map(|&i| numel(i)).sum()).collect();
+        let max_layer = (0..n_layers).map(numel).max().unwrap_or(0);
+        let (lo, hi) = (
+            *loads.iter().min().expect("non-empty"),
+            *loads.iter().max().expect("non-empty"),
+        );
+        if hi - lo > max_layer {
+            return Err(format!(
+                "load spread {} exceeds max layer {max_layer} (loads {loads:?}, shapes {shapes:?})",
+                hi - lo
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_rejects_more_shards_than_layers() {
+    let shapes = vec![(3, 3), (2, 2)];
+    let err = partition_layers(&shapes, 5).unwrap_err();
+    assert!(err.contains("cannot shard"), "{err}");
+    assert!(partition_layers(&shapes, 0).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Cluster behavior on the objective backend
+// ---------------------------------------------------------------------------
+
+fn three_layer_stack(workers: usize, seed: u64) -> Box<dyn Objective> {
+    Box::new(
+        Stacked::new(vec![
+            Box::new(Quadratics::new(workers, 9, 0.5, 0.0, &mut Rng::new(seed)))
+                as Box<dyn Objective>,
+            Box::new(Quadratics::new(workers, 7, 0.5, 0.0, &mut Rng::new(seed + 1))),
+            Box::new(Quadratics::new(workers, 5, 0.5, 0.0, &mut Rng::new(seed + 2))),
+        ])
+        .unwrap(),
+    )
+}
+
+fn spawn_cluster(
+    obj: Box<dyn Objective>,
+    shards: usize,
+    workers: usize,
+    mode: RoundMode,
+) -> anyhow::Result<(Cluster, GradService)> {
+    let x0 = obj.init(&mut Rng::new(7));
+    let n_layers = obj.layer_shapes().len();
+    let svc = GradService::spawn_objective(obj, 7);
+    let cluster = Cluster::spawn(
+        x0,
+        vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; n_layers],
+        svc.handle(),
+        ClusterCfg {
+            shards,
+            workers_per_shard: workers,
+            worker_comp: "top:0.3".into(),
+            server_comp: "top:0.5".into(),
+            beta: 1.0,
+            schedule: Schedule::constant(0.03),
+            transport: TransportMode::Counted,
+            round_mode: mode,
+            seed: 7,
+            use_ns_artifact: false,
+        },
+    )?;
+    Ok((cluster, svc))
+}
+
+/// The root rollup: aggregated bytes are per-shard sums, round counters
+/// advance in lock-step, and converging losses show the cluster actually
+/// optimizes.
+#[test]
+fn cluster_rollup_and_convergence() {
+    let (mut cluster, _svc) = spawn_cluster(three_layer_stack(2, 900), 2, 2, RoundMode::Sync).unwrap();
+    assert_eq!(cluster.shards(), 2);
+    let first = cluster.eval().unwrap();
+    let mut expect_w2s = 0u64;
+    let mut expect_s2w = 0u64;
+    for k in 0..60 {
+        let s = cluster.round().unwrap();
+        assert_eq!(s.step, k);
+        assert_eq!(s.absorbed_step, Some(k), "sync cluster absorbs what it issues");
+        assert_eq!(s.per_shard.len(), 2);
+        // the rollup is exactly the per-shard sums
+        assert_eq!(
+            s.w2s_bytes_per_worker,
+            s.per_shard.iter().map(|p| p.w2s_bytes_per_worker).sum::<usize>()
+        );
+        assert_eq!(s.s2w_bytes, s.per_shard.iter().map(|p| p.s2w_bytes).sum::<usize>());
+        assert!(s.train_loss.is_finite());
+        expect_w2s += s.w2s_bytes_per_worker as u64;
+        expect_s2w += s.s2w_bytes as u64;
+    }
+    let m = cluster.meter();
+    assert_eq!(m.w2s(), expect_w2s);
+    assert_eq!(m.s2w(), expect_s2w);
+    assert_eq!(m.rounds_issued(), 60);
+    assert_eq!(m.rounds_absorbed(), 60);
+    assert_eq!(m.w2s_all(), 2 * expect_w2s, "2 workers per shard");
+    let last = cluster.eval().unwrap();
+    assert!(last < first, "cluster must optimize: {first} -> {last}");
+    assert_eq!(cluster.steps_done(), 60);
+}
+
+/// Pipelined cluster rounds: the first `lookahead` calls absorb nothing on
+/// any shard, drain lands every in-flight round everywhere, and the meters
+/// agree that issued == absorbed afterwards.
+#[test]
+fn cluster_pipeline_fills_and_drains() {
+    let (mut cluster, _svc) =
+        spawn_cluster(three_layer_stack(2, 901), 3, 2, RoundMode::Async { lookahead: 2 }).unwrap();
+    let s0 = cluster.round().unwrap();
+    assert_eq!(s0.absorbed_step, None);
+    assert!(s0.train_loss.is_nan());
+    assert_eq!(s0.w2s_bytes_per_worker, 0);
+    let s1 = cluster.round().unwrap();
+    assert_eq!(s1.absorbed_step, None);
+    let s2 = cluster.round().unwrap();
+    assert_eq!(s2.absorbed_step, Some(0), "lookahead 2: round 2 absorbs round 0");
+    assert!(s2.train_loss.is_finite());
+    let drained = cluster.drain().unwrap();
+    assert_eq!(drained.len(), 2);
+    assert_eq!(drained[0].absorbed_step, Some(1));
+    assert_eq!(drained[1].absorbed_step, Some(2));
+    let m = cluster.meter();
+    assert_eq!(m.rounds_issued(), 3);
+    assert_eq!(m.rounds_absorbed(), 3);
+}
+
+/// Wraps a [`Stacked`] objective and panics in one worker's gradient after
+/// a call budget — inside whichever shard owns the part being evaluated.
+struct PanicStack {
+    inner: Box<dyn Objective>,
+    panic_worker: usize,
+    panic_after: usize,
+    calls: AtomicUsize,
+}
+
+impl Objective for PanicStack {
+    fn num_workers(&self) -> usize {
+        self.inner.num_workers()
+    }
+    fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        self.inner.layer_shapes()
+    }
+    fn loss(&self, x: &Layers) -> f64 {
+        self.inner.loss(x)
+    }
+    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+        self.inner.loss_j(j, x)
+    }
+    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+        if j == self.panic_worker
+            && self.calls.fetch_add(1, Ordering::SeqCst) >= self.panic_after
+        {
+            panic!("injected fault in worker {j}");
+        }
+        self.inner.grad_j(j, x)
+    }
+    fn init(&self, rng: &mut Rng) -> Layers {
+        self.inner.init(rng)
+    }
+}
+
+/// A worker panic inside one shard surfaces as a clean `Err` from the root
+/// (naming a shard), the cluster latches, and later calls fail fast
+/// instead of hanging on the dead shard.
+#[test]
+fn shard_worker_panic_surfaces_clean_root_error() {
+    let obj = PanicStack {
+        inner: three_layer_stack(3, 902),
+        panic_worker: 1,
+        panic_after: 8,
+        calls: AtomicUsize::new(0),
+    };
+    let (mut cluster, _svc) = spawn_cluster(Box::new(obj), 2, 3, RoundMode::Sync).unwrap();
+    let mut failed = None;
+    for _ in 0..50 {
+        if let Err(e) = cluster.round() {
+            failed = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    let msg = failed.expect("the injected fault must surface within 50 rounds");
+    assert!(msg.contains("shard"), "error should name the shard: {msg}");
+    // latched: every later call fails fast
+    let again = cluster.round().expect_err("latched cluster must fail fast");
+    assert!(format!("{again:#}").contains("already failed"));
+    assert!(cluster.eval().is_err());
+}
+
+/// A worker panic during shard init fails `Cluster::spawn` itself.
+#[test]
+fn shard_worker_panic_during_init_fails_spawn() {
+    let obj = PanicStack {
+        inner: three_layer_stack(3, 903),
+        panic_worker: 0,
+        panic_after: 0,
+        calls: AtomicUsize::new(0),
+    };
+    let err = match spawn_cluster(Box::new(obj), 2, 3, RoundMode::Sync) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn must fail when a shard's worker dies during init"),
+    };
+    assert!(format!("{err:#}").contains("shard"), "{err:#}");
+}

@@ -133,10 +133,14 @@ fn byte_meters_accumulate_correctly() {
     assert_eq!(coord.meter().rounds_issued(), 10);
     assert_eq!(coord.meter().rounds_absorbed(), 10);
     // 3 workers: aggregate = 3x per-worker
-    assert_eq!(
-        coord.meter().w2s_all.load(std::sync::atomic::Ordering::Relaxed),
-        3 * expect_w2s
-    );
+    assert_eq!(coord.meter().w2s_all(), 3 * expect_w2s);
+    // the serializable snapshot mirrors every counter
+    let snap = coord.meter().snapshot();
+    assert_eq!(snap.w2s_per_worker, expect_w2s);
+    assert_eq!(snap.w2s_all, 3 * expect_w2s);
+    assert_eq!(snap.s2w_total, expect_s2w);
+    assert_eq!(snap.rounds_issued, 10);
+    assert_eq!(snap.rounds_absorbed, 10);
 }
 
 #[test]

@@ -1,7 +1,8 @@
 //! Deterministic scenario harness for the bidirectional-compression +
-//! async-round matrix: every scenario is one distributed deployment shape
-//! (workers × w2s compressor × s2w compressor), driven across
-//! {sync, async:0, async:1} × {Counted, Encoded} on the objective backend.
+//! async-round + layer-sharding matrix: every scenario is one distributed
+//! deployment shape (workers × w2s compressor × s2w compressor), driven
+//! across {sync, async:0, async:1} × {Counted, Encoded} × {1..S shards}
+//! on the objective backend.
 //!
 //! Locked-down invariants:
 //!   (a) sync ≡ async:0 — bit-equal trajectories and identical meters;
@@ -11,12 +12,22 @@
 //!       driver (the PR-1 golden trajectory) for every scenario, including
 //!       non-`id` server compressors;
 //!   (d) a non-`id` `server_comp` spends strictly fewer s2w wire bytes
-//!       than `id` at matched final loss (the ISSUE-2 acceptance bar).
+//!       than `id` at matched final loss (the ISSUE-2 acceptance bar);
+//!   (e) a 1-shard `Cluster` is bit-identical to the single `Coordinator`
+//!       (trajectory, per-round bytes, meters) for every scenario and
+//!       round mode — the ISSUE-3 golden match;
+//!   (f) a multi-shard `Cluster` over a layer-separable stack reproduces
+//!       independent per-part coordinators bit-for-bit (any compressor,
+//!       including RNG-consuming rank/nat specs);
+//!   (g) for deterministic compressors, the trajectory is invariant in the
+//!       shard count across every round mode and transport.
 
+use efmuon::dist::cluster::{totals_consistent, Cluster, ClusterCfg};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
-use efmuon::funcs::{Objective, Quadratics};
+use efmuon::funcs::{Objective, Quadratics, Stacked};
+use efmuon::linalg::matrix::Layers;
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
@@ -57,9 +68,14 @@ fn objective(sc: &Scenario) -> Quadratics {
     Quadratics::new(sc.workers, sc.dim, 0.5, 0.0, &mut Rng::new(seed))
 }
 
+/// All layers' data, concatenated (the trajectory fingerprint).
+fn flatten(layers: &Layers) -> Vec<f32> {
+    layers.iter().flat_map(|m| m.data.iter().copied()).collect()
+}
+
 /// Everything one run produces that the invariants compare.
 struct RunTrace {
-    /// Final server parameters (flattened layer 0).
+    /// Final server parameters (all layers, flattened).
     params: Vec<f32>,
     /// Per issued round: s2w broadcast bytes.
     s2w: Vec<usize>,
@@ -117,13 +133,98 @@ fn run_scenario_sched(
         }
     }
     RunTrace {
-        params: coord.params()[0].data.clone(),
+        params: flatten(coord.params()),
         s2w,
         w2s,
         meter_w2s: coord.meter().w2s(),
         meter_s2w: coord.meter().s2w(),
         eval: coord.eval().unwrap(),
     }
+}
+
+/// Run a [`Cluster`] over an arbitrary objective and collect the same
+/// trace the coordinator runs produce (per-round byte streams filter the
+/// drained-tail entries identically).
+#[allow(clippy::too_many_arguments)]
+fn run_cluster_obj(
+    obj: Box<dyn Objective>,
+    workers: usize,
+    n_layers: usize,
+    w2s: &str,
+    s2w: &str,
+    shards: usize,
+    mode: RoundMode,
+    transport: TransportMode,
+    rounds: usize,
+    schedule: Schedule,
+) -> (RunTrace, Vec<Vec<usize>>) {
+    let x0 = obj.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(obj, SEED);
+    let mut cluster = Cluster::spawn(
+        x0,
+        vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; n_layers],
+        svc.handle(),
+        ClusterCfg {
+            shards,
+            workers_per_shard: workers,
+            worker_comp: w2s.into(),
+            server_comp: s2w.into(),
+            beta: 1.0,
+            schedule,
+            transport,
+            round_mode: mode,
+            seed: SEED,
+            use_ns_artifact: false,
+        },
+    )
+    .unwrap();
+    let stats = cluster.run(rounds).unwrap();
+    let mut s2wv = Vec::new();
+    let mut w2sv = Vec::new();
+    for s in &stats {
+        if s.s2w_bytes > 0 {
+            s2wv.push(s.s2w_bytes);
+        }
+        if s.absorbed_step.is_some() {
+            w2sv.push(s.w2s_bytes_per_worker);
+        }
+    }
+    let meter = cluster.meter();
+    assert!(totals_consistent(&meter), "cluster meter rollup inconsistent");
+    let partition = cluster.partition().to_vec();
+    let trace = RunTrace {
+        params: flatten(&cluster.params().unwrap()),
+        s2w: s2wv,
+        w2s: w2sv,
+        meter_w2s: meter.w2s(),
+        meter_s2w: meter.s2w(),
+        eval: cluster.eval().unwrap(),
+    };
+    (trace, partition)
+}
+
+/// The scenario objective boxed for the cluster runner.
+fn run_cluster_scenario(
+    sc: &Scenario,
+    shards: usize,
+    mode: RoundMode,
+    transport: TransportMode,
+    rounds: usize,
+) -> RunTrace {
+    let q = objective(sc);
+    run_cluster_obj(
+        Box::new(q),
+        sc.workers,
+        1,
+        sc.w2s,
+        sc.s2w,
+        shards,
+        mode,
+        transport,
+        rounds,
+        Schedule::constant(0.03),
+    )
+    .0
 }
 
 /// (a) `RoundMode::Sync` and `RoundMode::Async { lookahead: 0 }` must be
@@ -231,6 +332,205 @@ fn compressed_s2w_saves_bytes_at_matched_loss() {
     );
     // the w2s direction is untouched by the server compressor choice
     assert_eq!(a.meter_w2s, b.meter_w2s);
+}
+
+// ---------------------------------------------------------------------------
+// The shards axis (ISSUE 3): multi-coordinator layer sharding
+// ---------------------------------------------------------------------------
+
+/// (e) Golden match: a 1-shard [`Cluster`] must be bit-identical to the
+/// single [`Coordinator`] — trajectory, per-round wire bytes in both
+/// directions, cumulative meters, and eval — for every scenario and round
+/// mode. This is the ISSUE-3 acceptance bar: the cluster layer adds
+/// topology, never arithmetic.
+#[test]
+fn cluster_one_shard_matches_coordinator_bitwise() {
+    for sc in SCENARIOS {
+        for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+            let coord = run_scenario(sc, mode, TransportMode::Counted, ROUNDS);
+            let clus = run_cluster_scenario(sc, 1, mode, TransportMode::Counted, ROUNDS);
+            let tag = format!("{} / {}", sc.name, mode.spec());
+            assert_eq!(coord.params, clus.params, "{tag}: trajectory");
+            assert_eq!(coord.s2w, clus.s2w, "{tag}: s2w bytes per round");
+            assert_eq!(coord.w2s, clus.w2s, "{tag}: w2s bytes per round");
+            assert_eq!(coord.meter_w2s, clus.meter_w2s, "{tag}: w2s meter");
+            assert_eq!(coord.meter_s2w, clus.meter_s2w, "{tag}: s2w meter");
+            assert_eq!(coord.eval, clus.eval, "{tag}: eval");
+        }
+    }
+}
+
+/// Two-part layer-separable stack used by the multi-shard scenarios. Each
+/// part gets its own seed so an identical standalone copy can be built for
+/// the independent-coordinator comparison.
+fn stacked_parts(workers: usize) -> Vec<Quadratics> {
+    vec![
+        Quadratics::new(workers, 12, 0.5, 0.0, &mut Rng::new(2100)),
+        Quadratics::new(workers, 10, 0.5, 0.0, &mut Rng::new(2101)),
+    ]
+}
+
+/// (f) A 2-shard cluster over a layer-separable stack must reproduce two
+/// *independent* single-part coordinators bit-for-bit — per-shard
+/// trajectories, per-round bytes, and meters — including RNG-consuming
+/// compressors (rank + nat), because each shard derives exactly the
+/// per-layer/per-worker streams a standalone deployment of its slice
+/// would.
+#[test]
+fn cluster_shards_match_independent_coordinators() {
+    let workers = 3;
+    for (w2s, s2w) in [("top:0.3", "top:0.5"), ("rank:0.4+nat", "nat")] {
+        let stack = Stacked::new(
+            stacked_parts(workers)
+                .into_iter()
+                .map(|q| Box::new(q) as Box<dyn Objective>)
+                .collect(),
+        )
+        .unwrap();
+        let x0_full = stack.init(&mut Rng::new(SEED));
+        let shapes = stack.layer_shapes();
+
+        let svc = GradService::spawn_objective(Box::new(stack), SEED);
+        let mut cluster = Cluster::spawn(
+            x0_full.clone(),
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; shapes.len()],
+            svc.handle(),
+            ClusterCfg {
+                shards: 2,
+                workers_per_shard: workers,
+                worker_comp: w2s.into(),
+                server_comp: s2w.into(),
+                beta: 1.0,
+                schedule: Schedule::constant(0.03),
+                transport: TransportMode::Counted,
+                round_mode: RoundMode::Sync,
+                seed: SEED,
+                use_ns_artifact: false,
+            },
+        )
+        .unwrap();
+        // sizes 12 > 10: the greedy partition puts layer 0 on shard 0 and
+        // layer 1 on shard 1
+        assert_eq!(cluster.partition(), &[vec![0], vec![1]]);
+        let stats = cluster.run(ROUNDS).unwrap();
+        let full_params = cluster.params().unwrap();
+        let meter = cluster.meter();
+
+        for (shard, part) in stacked_parts(workers).into_iter().enumerate() {
+            let x0_s: Layers = vec![x0_full[shard].clone()];
+            let n = part.num_workers();
+            let svc_s = GradService::spawn_objective(Box::new(part), SEED);
+            let mut coord = Coordinator::spawn(
+                x0_s,
+                vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
+                svc_s.handle(),
+                CoordinatorCfg {
+                    n_workers: n,
+                    worker_comp: w2s.into(),
+                    server_comp: s2w.into(),
+                    beta: 1.0,
+                    schedule: Schedule::constant(0.03),
+                    transport: TransportMode::Counted,
+                    round_mode: RoundMode::Sync,
+                    seed: SEED,
+                    use_ns_artifact: false,
+                },
+            )
+            .unwrap();
+            let solo = coord.run(ROUNDS).unwrap();
+            let tag = format!("{w2s}/{s2w} shard {shard}");
+            for (k, (c, s)) in stats.iter().zip(&solo).enumerate() {
+                assert_eq!(
+                    c.per_shard[shard].w2s_bytes_per_worker, s.w2s_bytes_per_worker,
+                    "{tag}: round {k} w2s bytes"
+                );
+                assert_eq!(
+                    c.per_shard[shard].s2w_bytes, s.s2w_bytes,
+                    "{tag}: round {k} s2w bytes"
+                );
+            }
+            assert_eq!(
+                full_params[shard].data, coord.params()[0].data,
+                "{tag}: trajectory"
+            );
+            assert_eq!(meter.per_shard[shard].w2s_per_worker, coord.meter().w2s(), "{tag}: w2s meter");
+            assert_eq!(meter.per_shard[shard].s2w_total, coord.meter().s2w(), "{tag}: s2w meter");
+            assert_eq!(meter.per_shard[shard].w2s_all, coord.meter().w2s_all(), "{tag}: w2s_all meter");
+        }
+    }
+}
+
+/// (g) The full shards axis: for deterministic compressors over a
+/// layer-separable stack, the trajectory, wire bytes and meters are
+/// invariant in the shard count across every round mode and transport —
+/// and identical reruns are bit-equal (determinism under concurrent shard
+/// threads and pipelined rounds).
+#[test]
+fn cluster_trajectory_invariant_across_shards_modes_transports() {
+    let workers = 2;
+    let mk = || -> Box<dyn Objective> {
+        Box::new(
+            Stacked::new(vec![
+                Box::new(Quadratics::new(workers, 8, 0.5, 0.0, &mut Rng::new(2200)))
+                    as Box<dyn Objective>,
+                Box::new(Quadratics::new(workers, 6, 0.5, 0.0, &mut Rng::new(2201))),
+                Box::new(Quadratics::new(workers, 4, 0.5, 0.0, &mut Rng::new(2202))),
+            ])
+            .unwrap(),
+        )
+    };
+    for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 0 }, RoundMode::Async { lookahead: 1 }] {
+        let (reference, _) = run_cluster_obj(
+            mk(),
+            workers,
+            3,
+            "top:0.3",
+            "top:0.5",
+            1,
+            mode,
+            TransportMode::Counted,
+            ROUNDS,
+            Schedule::constant(0.03),
+        );
+        for shards in [1usize, 2, 3] {
+            for transport in [TransportMode::Counted, TransportMode::Encoded] {
+                let (t, partition) = run_cluster_obj(
+                    mk(),
+                    workers,
+                    3,
+                    "top:0.3",
+                    "top:0.5",
+                    shards,
+                    mode,
+                    transport,
+                    ROUNDS,
+                    Schedule::constant(0.03),
+                );
+                let tag = format!("{} shards / {} / {:?}", shards, mode.spec(), transport);
+                // coverage: the partition owns every layer exactly once
+                let mut owned: Vec<usize> = partition.iter().flatten().copied().collect();
+                owned.sort_unstable();
+                assert_eq!(owned, vec![0, 1, 2], "{tag}: partition coverage");
+                assert_eq!(reference.params, t.params, "{tag}: trajectory");
+                assert_eq!(reference.meter_w2s, t.meter_w2s, "{tag}: w2s meter");
+                assert_eq!(reference.meter_s2w, t.meter_s2w, "{tag}: s2w meter");
+                assert_eq!(reference.eval, t.eval, "{tag}: eval");
+            }
+        }
+        // determinism: an identical rerun is bit-equal (concurrent shard
+        // threads + pipelining never leak scheduling into the trajectory)
+        let (a, _) = run_cluster_obj(
+            mk(), workers, 3, "top:0.3", "top:0.5", 3, mode,
+            TransportMode::Counted, ROUNDS, Schedule::constant(0.03),
+        );
+        let (b, _) = run_cluster_obj(
+            mk(), workers, 3, "top:0.3", "top:0.5", 3, mode,
+            TransportMode::Counted, ROUNDS, Schedule::constant(0.03),
+        );
+        assert_eq!(a.params, b.params, "{}: rerun determinism", mode.spec());
+        assert_eq!(a.w2s, b.w2s);
+        assert_eq!(a.s2w, b.s2w);
+    }
 }
 
 /// Pipelined rounds converge too: async:1 lands within a small tolerance

@@ -25,13 +25,30 @@ GATED_SUBSTRINGS = ("round",)
 
 
 def load_entries(path):
+    """Index a bench file's entries by name.
+
+    Returns (entries, problems): `problems` lists human-readable issues for
+    *gated* (round) entries that are malformed — e.g. a baseline round entry
+    missing its `median_s` key. Malformed non-gated entries are skipped
+    silently (microbenches never gate the build), but a gated entry must
+    never be dropped on the floor: that would silently stop gating it.
+    """
     with open(path) as f:
         doc = json.load(f)
-    return {
-        e["name"]: e
-        for e in doc.get("entries", [])
-        if isinstance(e, dict) and "name" in e and "median_s" in e
-    }
+    entries, problems = {}, []
+    for e in doc.get("entries", []):
+        if not isinstance(e, dict) or "name" not in e:
+            continue
+        name = e["name"]
+        missing = [k for k in ("median_s",) if k not in e]
+        if missing:
+            if any(s in name for s in GATED_SUBSTRINGS):
+                problems.append(
+                    f"{path}: round entry {name!r} is missing {', '.join(missing)}"
+                )
+            continue
+        entries[name] = e
+    return entries, problems
 
 
 def prime(current_path, baseline_path):
@@ -67,13 +84,21 @@ def main():
     args = ap.parse_args()
 
     try:
-        current = load_entries(args.current)
+        current, current_problems = load_entries(args.current)
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read current results: {e}", file=sys.stderr)
         return 1
+    if current_problems:
+        for p in current_problems:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            "bench gate: current results are malformed; rerun the hotpath bench",
+            file=sys.stderr,
+        )
+        return 1
 
     try:
-        baseline = load_entries(args.baseline)
+        baseline, baseline_problems = load_entries(args.baseline)
     except OSError:
         prime(args.current, args.baseline)
         return 0
@@ -82,6 +107,18 @@ def main():
         print(f"bench gate: baseline unreadable ({e}); re-priming", file=sys.stderr)
         prime(args.current, args.baseline)
         return 0
+    if baseline_problems:
+        # a parseable baseline with a broken round entry is not silently
+        # ignorable (that entry would never gate again) and not silently
+        # re-primable (that could hide a real regression): fail readably
+        for p in baseline_problems:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            f"bench gate: baseline has malformed round entries; delete "
+            f"{args.baseline} to re-prime from the current results",
+            file=sys.stderr,
+        )
+        return 1
 
     gated = [
         name
