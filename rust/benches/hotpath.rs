@@ -35,6 +35,11 @@ struct Entry {
     /// coordinator-round entries, so BENCH_hotpath.json tracks both
     /// communication directions across PRs.
     comm: Option<(usize, usize)>,
+    /// Per-round host memory traffic for the cluster-round entries:
+    /// (bytes deep-copied, snapshot assemblies). `bench_gate.py` gates on
+    /// the byte counter — a regression here means the zero-copy gradient
+    /// path started cloning again.
+    cloned: Option<(u64, u64)>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -43,7 +48,7 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
         None => println!("{}", result.report()),
     }
-    entries.push(Entry { result, gflops, comm: None });
+    entries.push(Entry { result, gflops, comm: None, cloned: None });
 }
 
 fn main() -> anyhow::Result<()> {
@@ -305,9 +310,23 @@ fn main() -> anyhow::Result<()> {
             shard_times.push((shards, r.median_s));
             push(&mut entries, r, None);
             // sample one round's aggregated per-shard wire bytes (sync mode:
-            // the absorbed round is the issued one)
+            // the absorbed round is the issued one) and its host memory
+            // traffic: totals() diffs isolate what ONE steady-state round
+            // deep-copies (snapshot assemblies + the root's seal) — the
+            // zero-copy acceptance is assemblies == shards, not workers x
+            // shards, and bytes flat at (shards + 1) x model for multi-shard
+            let m0 = cluster.meter().totals();
             let s = cluster.round()?;
-            entries.last_mut().unwrap().comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+            let m1 = cluster.meter().totals();
+            let per_round_cloned = m1.bytes_cloned - m0.bytes_cloned;
+            let per_round_asm = m1.snap_assembled - m0.snap_assembled;
+            println!(
+                "  -> {shards}-shard round memory traffic: {per_round_cloned} bytes cloned, \
+                 {per_round_asm} snapshot assemblies"
+            );
+            let e = entries.last_mut().unwrap();
+            e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+            e.cloned = Some((per_round_cloned, per_round_asm));
         }
         if let Some(&(_, base)) = shard_times.first() {
             for &(shards, t) in &shard_times[1..] {
@@ -357,6 +376,11 @@ fn main() -> anyhow::Result<()> {
             }
             if let Some((w2s, s2w)) = e.comm {
                 o = o.put("w2s_bytes_per_round", w2s).put("s2w_bytes_per_round", s2w);
+            }
+            if let Some((bytes, asm)) = e.cloned {
+                o = o
+                    .put("bytes_cloned_per_round", bytes)
+                    .put("assemblies_per_round", asm);
             }
             o.build()
         })

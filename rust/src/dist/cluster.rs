@@ -52,7 +52,7 @@ use crate::opt::{LayerGeometry, Schedule};
 use crate::util::json::{Json, JsonObj};
 
 use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
-use super::service::GradHandle;
+use super::service::{GradHandle, SnapCache};
 use super::{MeterSnapshot, RoundMode, TransportMode};
 
 // ---------------------------------------------------------------------------
@@ -109,8 +109,8 @@ pub fn partition_layers(
 /// modes, where a worker may still be computing round `k` after the root
 /// has sealed `k+1`.
 pub struct ParamBoard {
-    /// (epoch, snapshot), epochs strictly increasing.
-    snaps: Mutex<VecDeque<(usize, Arc<Layers>)>>,
+    /// (epoch, snapshot) plus reclaimed buffers, epochs strictly increasing.
+    snaps: Mutex<BoardInner>,
     /// How many trailing epochs to retain (≥ lookahead + 2, so the oldest
     /// possibly-in-flight round's snapshot is always available).
     keep: usize,
@@ -118,12 +118,22 @@ pub struct ParamBoard {
     layers: usize,
 }
 
+struct BoardInner {
+    snaps: VecDeque<(usize, Arc<Layers>)>,
+    /// Buffers reclaimed from evicted unshared epochs, so steady-state
+    /// sealing copies into a pooled buffer instead of allocating.
+    pool: Vec<Layers>,
+}
+
 impl ParamBoard {
     /// A board whose epoch 0 is `x0` (the init gradient's view).
     pub fn new(x0: Layers, keep: usize) -> ParamBoard {
         ParamBoard {
             layers: x0.len(),
-            snaps: Mutex::new(VecDeque::from([(0usize, Arc::new(x0))])),
+            snaps: Mutex::new(BoardInner {
+                snaps: VecDeque::from([(0usize, Arc::new(x0))]),
+                pool: Vec::new(),
+            }),
             keep: keep.max(2),
         }
     }
@@ -137,24 +147,59 @@ impl ParamBoard {
     /// epoch; epochs must be sealed in increasing order.
     pub fn seal(&self, epoch: usize, full: Layers) {
         let mut s = self.snaps.lock().expect("board lock");
-        if s.iter().any(|(e, _)| *e == epoch) {
+        Self::seal_locked(&mut s, epoch, Arc::new(full), self.keep);
+    }
+
+    /// [`ParamBoard::seal`] from a borrow: copies `full` into a buffer
+    /// reclaimed from an evicted epoch (allocating only until the retention
+    /// window fills), so the steady-state root reducer never clones the
+    /// model to seal. Returns the bytes copied (0 when the epoch was
+    /// already sealed).
+    pub fn seal_from(&self, epoch: usize, full: &Layers) -> u64 {
+        let mut s = self.snaps.lock().expect("board lock");
+        if s.snaps.iter().any(|(e, _)| *e == epoch) {
+            return 0;
+        }
+        let snap = match s.pool.pop() {
+            Some(mut buf) => {
+                for (dst, src) in buf.iter_mut().zip(full.iter()) {
+                    dst.data.copy_from_slice(&src.data);
+                }
+                buf
+            }
+            None => full.clone(),
+        };
+        let bytes: u64 = snap.iter().map(|m| m.numel() as u64 * 4).sum();
+        Self::seal_locked(&mut s, epoch, Arc::new(snap), self.keep);
+        bytes
+    }
+
+    fn seal_locked(s: &mut BoardInner, epoch: usize, snap: Arc<Layers>, keep: usize) {
+        if s.snaps.iter().any(|(e, _)| *e == epoch) {
             return;
         }
-        debug_assert!(s.back().map(|(e, _)| *e < epoch).unwrap_or(true));
-        s.push_back((epoch, Arc::new(full)));
-        while s.len() > self.keep {
-            s.pop_front();
+        debug_assert!(s.snaps.back().map(|(e, _)| *e < epoch).unwrap_or(true));
+        s.snaps.push_back((epoch, snap));
+        while s.snaps.len() > keep {
+            let (_, old) = s.snaps.pop_front().expect("non-empty");
+            if let Ok(buf) = Arc::try_unwrap(old) {
+                if s.pool.len() < 2 {
+                    s.pool.push(buf);
+                }
+            }
         }
     }
 
     /// The snapshot sealed for `epoch`: the newest sealed epoch `<= epoch`
     /// (the oldest retained one if `epoch` predates the retention window).
+    /// Hands out an `Arc` share of the sealed snapshot — never a deep copy.
     pub fn read(&self, epoch: usize) -> Arc<Layers> {
         let s = self.snaps.lock().expect("board lock");
-        s.iter()
+        s.snaps
+            .iter()
             .rev()
             .find(|(e, _)| *e <= epoch)
-            .or_else(|| s.front())
+            .or_else(|| s.snaps.front())
             .map(|(_, a)| a.clone())
             .expect("board never empty")
     }
@@ -162,7 +207,7 @@ impl ParamBoard {
     /// The newest sealed snapshot (init / eval-time view).
     pub fn read_latest(&self) -> Arc<Layers> {
         let s = self.snaps.lock().expect("board lock");
-        s.back().map(|(_, a)| a.clone()).expect("board never empty")
+        s.snaps.back().map(|(_, a)| a.clone()).expect("board never empty")
     }
 }
 
@@ -207,7 +252,7 @@ impl ClusterCfg {
 }
 
 /// Root-reducer rollup of one cluster round: aggregated wire bytes (sums
-/// over shards), mean absorbed train loss, and the per-shard entries it was
+/// over shards), the absorbed train loss, and the per-shard entries it was
 /// reduced from.
 #[derive(Debug, Clone)]
 pub struct ClusterRoundStats {
@@ -216,8 +261,11 @@ pub struct ClusterRoundStats {
     /// The round whose uplinks were absorbed, if any (lock-step drive: the
     /// same round on every shard).
     pub absorbed_step: Option<usize>,
-    /// Mean over shards of the absorbed per-shard train losses (each itself
-    /// a mean over that shard's workers). NaN while the pipelines fill.
+    /// The absorbed full-model train loss: for layer-separable objectives
+    /// the *sum* over shards of their own-layer contributions (each itself
+    /// a mean over that shard's workers); for non-separable objectives the
+    /// mean over shards of the full-model losses every shard reported. NaN
+    /// while the pipelines fill.
     pub train_loss: f32,
     /// LMO radius of the issued round (shared schedule — same on every
     /// shard).
@@ -238,15 +286,20 @@ pub struct ClusterRoundStats {
 #[derive(Debug, Clone)]
 pub struct ClusterMeter {
     pub per_shard: Vec<MeterSnapshot>,
+    /// Bytes the root reducer deep-copied sealing board epochs (on top of
+    /// the per-shard assembly bytes already in the shard snapshots).
+    pub root_bytes_cloned: u64,
 }
 
 impl ClusterMeter {
-    /// Aggregate of all shard meters.
+    /// Aggregate of all shard meters (the root's seal copies fold into
+    /// `bytes_cloned`).
     pub fn totals(&self) -> MeterSnapshot {
         let mut t = MeterSnapshot::default();
         for (i, m) in self.per_shard.iter().enumerate() {
             t.absorb_shard(m, i == 0);
         }
+        t.bytes_cloned += self.root_bytes_cloned;
         t
     }
 
@@ -279,6 +332,7 @@ impl ClusterMeter {
     pub fn to_json(&self) -> Json {
         JsonObj::new()
             .put("totals", self.totals().to_json())
+            .put("root_bytes_cloned", self.root_bytes_cloned)
             .put(
                 "per_shard",
                 Json::Arr(self.per_shard.iter().map(|m| m.to_json()).collect()),
@@ -336,10 +390,19 @@ pub struct Cluster {
     partition: Vec<Vec<usize>>,
     board: Arc<ParamBoard>,
     /// Full-model broadcast shift, incrementally overwritten from shard
-    /// replies; cloned into the board at each seal.
+    /// replies; copied into a pooled board buffer at each seal.
     shift_full: Layers,
     /// Latest meter snapshot per shard.
     meters: Vec<MeterSnapshot>,
+    /// Per-shard snapshot caches (shared with the shards' sliced handles);
+    /// read here for the memory-traffic rollup.
+    caches: Vec<Arc<SnapCache>>,
+    /// Bytes the root itself deep-copied sealing board epochs.
+    seal_bytes: u64,
+    /// Layer-separable objective: per-shard train losses are disjoint
+    /// contributions and the rollup sums them; otherwise every shard
+    /// reports the full-model loss and the rollup averages.
+    sum_losses: bool,
     handle: GradHandle,
     to_shards: Vec<Sender<ToShard>>,
     from_shards: Receiver<FromShard>,
@@ -376,10 +439,13 @@ impl Cluster {
         let (reply_tx, reply_rx) = channel::<FromShard>();
         let mut to_shards = Vec::with_capacity(cfg.shards);
         let mut joins = Vec::with_capacity(cfg.shards);
+        let mut caches = Vec::with_capacity(cfg.shards);
         for (s, ids) in partition.iter().enumerate() {
             let x0_s: Layers = ids.iter().map(|&i| x0[i].clone()).collect();
             let geom_s: Vec<LayerGeometry> = ids.iter().map(|&i| geometry[i]).collect();
-            let shard_handle = handle.for_shard(board.clone(), ids.clone());
+            let cache = Arc::new(SnapCache::new(cfg.round_mode.lookahead() + 3));
+            caches.push(cache.clone());
+            let shard_handle = handle.for_shard(board.clone(), ids.clone(), cache);
             let ccfg = cfg.coordinator_cfg();
             let (tx, rx) = channel::<ToShard>();
             let rtx = reply_tx.clone();
@@ -413,6 +479,9 @@ impl Cluster {
             partition,
             board,
             shift_full: x0,
+            caches,
+            seal_bytes: 0,
+            sum_losses: handle.loss_is_layer_separable(),
             handle,
             to_shards,
             from_shards: reply_rx,
@@ -477,13 +546,13 @@ impl Cluster {
         // every shard finished round `step`: seal the view round `step + 1`
         // reads (immutable afterwards — in-flight pipelined grads of older
         // rounds keep reading their own sealed epochs). A 1-shard cluster
-        // skips the seal entirely: its board is never read, and the clone
+        // skips the seal entirely: its board is never read, and the copy
         // would be pure overhead on the golden-matched deployment.
         if n > 1 {
-            self.board.seal(self.step + 1, self.shift_full.clone());
+            self.seal_bytes += self.board.seal_from(self.step + 1, &self.shift_full);
         }
         let per_shard: Vec<RoundStats> = slots.into_iter().map(|s| s.expect("filled")).collect();
-        let stats = rollup(self.step, per_shard);
+        let stats = rollup(self.step, per_shard, self.sum_losses);
         self.step += 1;
         Ok(stats)
     }
@@ -529,7 +598,7 @@ impl Cluster {
             .map(|k| {
                 let entries: Vec<RoundStats> = per_shard.iter().map(|v| v[k].clone()).collect();
                 let step = entries[0].step;
-                rollup(step, entries)
+                rollup(step, entries, self.sum_losses)
             })
             .collect())
     }
@@ -584,12 +653,20 @@ impl Cluster {
     /// *final* eval so the reported loss reflects fully-absorbed rounds.
     pub fn eval(&mut self) -> Result<f32> {
         let params = self.params()?;
-        self.handle.eval(params)
+        self.handle.eval(&params)
     }
 
-    /// Cluster-wide communication rollup (latest per-shard snapshots).
+    /// Cluster-wide communication + memory-traffic rollup: the latest
+    /// per-shard meter snapshots, overlaid with each shard's snapshot-cache
+    /// counters, plus the root's own seal copies.
     pub fn meter(&self) -> ClusterMeter {
-        ClusterMeter { per_shard: self.meters.clone() }
+        let mut per_shard = self.meters.clone();
+        for (m, c) in per_shard.iter_mut().zip(&self.caches) {
+            m.snap_assembled = c.assembled();
+            m.snap_reused = c.reused();
+            m.bytes_cloned = c.bytes_assembled();
+        }
+        ClusterMeter { per_shard, root_bytes_cloned: self.seal_bytes }
     }
 
     fn send_all(&self, mut cmd: impl FnMut() -> ToShard) -> Result<()> {
@@ -627,14 +704,20 @@ impl Drop for Cluster {
     }
 }
 
-/// Reduce one lock-step round's per-shard stats.
-fn rollup(step: usize, per_shard: Vec<RoundStats>) -> ClusterRoundStats {
+/// Reduce one lock-step round's per-shard stats. `sum_losses` is true for
+/// layer-separable objectives: each shard reported only its own layers'
+/// loss contribution, so the full-model train loss is the *sum* over
+/// shards; otherwise every shard reported the full-model loss and the
+/// rollup averages (the legacy non-separable fallback).
+fn rollup(step: usize, per_shard: Vec<RoundStats>, sum_losses: bool) -> ClusterRoundStats {
     let s2w_bytes = per_shard.iter().map(|s| s.s2w_bytes).sum();
     let w2s_bytes_per_worker = per_shard.iter().map(|s| s.w2s_bytes_per_worker).sum();
     let absorbed: Vec<&RoundStats> =
         per_shard.iter().filter(|s| s.absorbed_step.is_some()).collect();
     let train_loss = if absorbed.is_empty() {
         f32::NAN
+    } else if sum_losses {
+        absorbed.iter().map(|s| s.train_loss as f64).sum::<f64>() as f32
     } else {
         (absorbed.iter().map(|s| s.train_loss as f64).sum::<f64>() / absorbed.len() as f64) as f32
     };
@@ -754,6 +837,9 @@ pub fn totals_consistent(meter: &ClusterMeter) -> bool {
         && t.s2w_total == sum(|m| m.s2w_total)
         && t.rounds_issued == min(|m| m.rounds_issued)
         && t.rounds_absorbed == min(|m| m.rounds_absorbed)
+        && t.snap_assembled == sum(|m| m.snap_assembled)
+        && t.snap_reused == sum(|m| m.snap_reused)
+        && t.bytes_cloned == sum(|m| m.bytes_cloned) + meter.root_bytes_cloned
 }
 
 #[cfg(test)]
@@ -814,6 +900,22 @@ mod tests {
     }
 
     #[test]
+    fn board_seal_from_copies_and_pools() {
+        let mk = |v: f32| vec![Matrix::from_vec(1, 1, vec![v])];
+        let b = ParamBoard::new(mk(0.0), 2);
+        assert_eq!(b.seal_from(1, &mk(1.0)), 4, "one f32 layer = 4 bytes copied");
+        assert_eq!(b.seal_from(1, &mk(9.0)), 0, "re-seal is idempotent and free");
+        assert_eq!(b.read(1)[0].data, vec![1.0]);
+        // eviction reclaims unshared snapshots; later seals copy into the
+        // pooled buffer and reads see the fresh content
+        b.seal_from(2, &mk(2.0));
+        b.seal_from(3, &mk(3.0));
+        b.seal_from(4, &mk(4.0));
+        assert_eq!(b.read(3)[0].data, vec![3.0]);
+        assert_eq!(b.read_latest()[0].data, vec![4.0]);
+    }
+
+    #[test]
     fn cluster_meter_rollup() {
         let m0 = MeterSnapshot {
             w2s_per_worker: 10,
@@ -821,6 +923,9 @@ mod tests {
             s2w_total: 5,
             rounds_issued: 4,
             rounds_absorbed: 3,
+            snap_assembled: 4,
+            snap_reused: 8,
+            bytes_cloned: 100,
         };
         let m1 = MeterSnapshot {
             w2s_per_worker: 7,
@@ -828,14 +933,20 @@ mod tests {
             s2w_total: 9,
             rounds_issued: 4,
             rounds_absorbed: 4,
+            snap_assembled: 4,
+            snap_reused: 8,
+            bytes_cloned: 100,
         };
-        let cm = ClusterMeter { per_shard: vec![m0, m1] };
+        let cm = ClusterMeter { per_shard: vec![m0, m1], root_bytes_cloned: 40 };
         let t = cm.totals();
         assert_eq!(t.w2s_per_worker, 17);
         assert_eq!(t.w2s_all, 51);
         assert_eq!(t.s2w_total, 14);
         assert_eq!(t.rounds_issued, 4);
         assert_eq!(t.rounds_absorbed, 3);
+        assert_eq!(t.snap_assembled, 8);
+        assert_eq!(t.snap_reused, 16);
+        assert_eq!(t.bytes_cloned, 240, "per-shard assembly bytes + root seal bytes");
         assert!(totals_consistent(&cm));
         let j = cm.to_json();
         assert!(j.get("totals").is_some());

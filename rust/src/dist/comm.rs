@@ -28,12 +28,29 @@ pub enum Wire {
 
 impl Wire {
     /// Serialize (or wrap) messages for transport; returns the wire and the
-    /// exact byte count it occupies.
+    /// exact byte count it occupies. The hot path hands over ownership —
+    /// `Counted` ships the messages as-is, `Encoded` encodes from the
+    /// borrow and drops them; neither mode ever clones a message.
     pub fn pack(msgs: Vec<Message>, mode: TransportMode) -> (Wire, usize) {
         match mode {
             TransportMode::Counted => {
                 let bytes = msgs.iter().map(|m| m.wire_bytes()).sum();
                 (Wire::Counted(msgs), bytes)
+            }
+            TransportMode::Encoded => Self::pack_ref(&msgs, mode),
+        }
+    }
+
+    /// [`Wire::pack`] from a borrowed slice — the measurement path, where
+    /// one message set is packed under several transport modes for
+    /// comparison. `Encoded` is copy-free (the codec reads the borrow);
+    /// `Counted` must own what it ships, so it clones exactly once here —
+    /// still strictly less copying than cloning per mode at the call site.
+    pub fn pack_ref(msgs: &[Message], mode: TransportMode) -> (Wire, usize) {
+        match mode {
+            TransportMode::Counted => {
+                let bytes = msgs.iter().map(|m| m.wire_bytes()).sum();
+                (Wire::Counted(msgs.to_vec()), bytes)
             }
             TransportMode::Encoded => {
                 let bufs: Vec<Vec<u8>> = msgs.iter().map(codec::encode).collect();
@@ -97,13 +114,21 @@ mod tests {
         let msg = parse_spec("top:0.2+nat").unwrap().compress(&x, &mut rng);
         let analytic = msg.wire_bytes();
 
-        let (wc, bc) = Wire::pack(vec![msg.clone()], TransportMode::Counted);
-        let (we, be) = Wire::pack(vec![msg.clone()], TransportMode::Encoded);
+        // one borrowed slice measured under both transports — no per-mode
+        // message clone at the call site
+        let msgs = std::slice::from_ref(&msg);
+        let (wc, bc) = Wire::pack_ref(msgs, TransportMode::Counted);
+        let (we, be) = Wire::pack_ref(msgs, TransportMode::Encoded);
         assert_eq!(bc, analytic);
         assert_eq!(be, analytic, "codec must emit exactly wire_bytes()");
         assert_eq!(wc.mode(), TransportMode::Counted);
         assert_eq!(we.mode(), TransportMode::Encoded);
         assert_eq!(wc.unpack().unwrap()[0], msg);
         assert_eq!(we.unpack().unwrap()[0], msg, "codec must be lossless");
+
+        // the owning hot-path entry agrees with the borrowed measurement
+        let (wo, bo) = Wire::pack(vec![msg.clone()], TransportMode::Encoded);
+        assert_eq!(bo, analytic);
+        assert_eq!(wo.unpack().unwrap()[0], msg);
     }
 }

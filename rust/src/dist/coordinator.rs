@@ -398,11 +398,13 @@ impl Coordinator {
         })
     }
 
-    /// Evaluation loss at the current server parameters. In async modes the
-    /// parameters already include every *issued* LMO step; uplinks of
-    /// still-in-flight rounds land only after [`Coordinator::drain`].
+    /// Evaluation loss at the current server parameters (borrowed — the
+    /// objective backend never copies the model to evaluate it). In async
+    /// modes the parameters already include every *issued* LMO step;
+    /// uplinks of still-in-flight rounds land only after
+    /// [`Coordinator::drain`].
     pub fn eval(&self) -> Result<f32> {
-        self.handle.eval(self.server.x.clone())
+        self.handle.eval(&self.server.x)
     }
 
     /// Current model parameters (server X).

@@ -202,11 +202,18 @@ impl Meter {
             s2w_total: self.s2w(),
             rounds_issued: self.rounds_issued(),
             rounds_absorbed: self.rounds_absorbed(),
+            // host memory-traffic counters are overlaid by the cluster
+            // layer; a lone coordinator assembles nothing
+            ..MeterSnapshot::default()
         }
     }
 }
 
-/// Serializable point-in-time copy of a [`Meter`] (see [`Meter::snapshot`]).
+/// Serializable point-in-time copy of a [`Meter`] (see [`Meter::snapshot`]),
+/// plus the host memory-traffic counters the cluster layer overlays per
+/// shard: snapshot-cache assemblies/reuses and bytes deep-copied on the
+/// gradient path (`cluster::ClusterMeter`). Plain coordinator meters carry
+/// zeros there — the single-leader hot path assembles nothing.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MeterSnapshot {
     pub w2s_per_worker: u64,
@@ -214,6 +221,13 @@ pub struct MeterSnapshot {
     pub s2w_total: u64,
     pub rounds_issued: u64,
     pub rounds_absorbed: u64,
+    /// Full-model snapshots assembled (one per (shard, round) — the
+    /// snapshot cache's miss count).
+    pub snap_assembled: u64,
+    /// Gradient requests served from an already-assembled snapshot.
+    pub snap_reused: u64,
+    /// Bytes deep-copied on the host gradient/snapshot path.
+    pub bytes_cloned: u64,
 }
 
 impl MeterSnapshot {
@@ -223,6 +237,9 @@ impl MeterSnapshot {
         self.w2s_per_worker += other.w2s_per_worker;
         self.w2s_all += other.w2s_all;
         self.s2w_total += other.s2w_total;
+        self.snap_assembled += other.snap_assembled;
+        self.snap_reused += other.snap_reused;
+        self.bytes_cloned += other.bytes_cloned;
         if first {
             self.rounds_issued = other.rounds_issued;
             self.rounds_absorbed = other.rounds_absorbed;
@@ -240,10 +257,15 @@ impl MeterSnapshot {
             .put("s2w_total", self.s2w_total)
             .put("rounds_issued", self.rounds_issued)
             .put("rounds_absorbed", self.rounds_absorbed)
+            .put("snap_assembled", self.snap_assembled)
+            .put("snap_reused", self.snap_reused)
+            .put("bytes_cloned", self.bytes_cloned)
             .build()
     }
 
-    /// Parse the form emitted by [`MeterSnapshot::to_json`].
+    /// Parse the form emitted by [`MeterSnapshot::to_json`]. The traffic
+    /// counters default to 0 when absent, so pre-cache snapshots (older
+    /// logs and bench baselines) still parse.
     pub fn from_json(j: &Json) -> Result<MeterSnapshot, String> {
         let get = |k: &str| -> Result<u64, String> {
             j.get(k)
@@ -251,12 +273,18 @@ impl MeterSnapshot {
                 .map(|v| v as u64)
                 .ok_or_else(|| format!("meter snapshot: missing {k}"))
         };
+        let opt = |k: &str| -> u64 {
+            j.get(k).and_then(|v| v.as_f64()).map(|v| v as u64).unwrap_or(0)
+        };
         Ok(MeterSnapshot {
             w2s_per_worker: get("w2s_per_worker")?,
             w2s_all: get("w2s_all")?,
             s2w_total: get("s2w_total")?,
             rounds_issued: get("rounds_issued")?,
             rounds_absorbed: get("rounds_absorbed")?,
+            snap_assembled: opt("snap_assembled"),
+            snap_reused: opt("snap_reused"),
+            bytes_cloned: opt("bytes_cloned"),
         })
     }
 }

@@ -19,8 +19,10 @@
 //! per-round snapshot of every other shard, forwards the request, and
 //! projects the returned gradient back onto the shard's layers.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -54,6 +56,144 @@ const INIT_STEP: usize = usize::MAX;
 fn batch_rng(seed: u64, worker: usize, step: usize) -> Rng {
     let step_mix = (step as u64).wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15);
     Rng::with_stream(seed.wrapping_add(step_mix), grad_stream(worker))
+}
+
+/// Per-shard cache of assembled full-model snapshots, keyed by round.
+///
+/// Every worker of a shard assembles the *identical* full model for a given
+/// round — its own layers' W coincides bit-for-bit across the shard's
+/// workers (the total-ordered broadcast stream; see `opt::ef21`), and the
+/// foreign layers come from the same sealed [`ParamBoard`] epoch. So the
+/// first worker to request round `r` assembles once into an `Arc<Layers>`
+/// and every later request reuses it, turning the per-round host copy cost
+/// from `workers × model` into `model` per shard. Evicted snapshots whose
+/// `Arc` is unshared donate their buffers back to a small pool, so
+/// steady-state assembly is allocation-free (the workspace-arena pattern,
+/// one level up).
+///
+/// The un-keyed entry points (`INIT_STEP`: worker init, offline eval) are
+/// never cached — they read the board's *newest* snapshot, which moves
+/// between calls.
+pub struct SnapCache {
+    inner: Mutex<SnapCacheInner>,
+    /// How many trailing rounds to retain (≥ lookahead + 2, mirroring the
+    /// board's retention so every in-flight round finds its entry).
+    keep: usize,
+    assembled: AtomicU64,
+    reused: AtomicU64,
+    bytes_assembled: AtomicU64,
+    fresh: AtomicU64,
+}
+
+struct SnapCacheInner {
+    /// (step, snapshot), steps strictly increasing.
+    snaps: VecDeque<(usize, Arc<Layers>)>,
+    /// Buffers reclaimed from evicted snapshots.
+    pool: Vec<Layers>,
+}
+
+impl SnapCache {
+    pub fn new(keep: usize) -> SnapCache {
+        SnapCache {
+            inner: Mutex::new(SnapCacheInner { snaps: VecDeque::new(), pool: Vec::new() }),
+            keep: keep.max(2),
+            assembled: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+            bytes_assembled: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+        }
+    }
+
+    /// Rounds assembled from scratch (exactly one per (shard, round)).
+    pub fn assembled(&self) -> u64 {
+        self.assembled.load(Ordering::Relaxed)
+    }
+
+    /// Requests served from an already-assembled snapshot.
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Bytes deep-copied by assemblies (board snapshot + own layers).
+    pub fn bytes_assembled(&self) -> u64 {
+        self.bytes_assembled.load(Ordering::Relaxed)
+    }
+
+    /// Genuine heap allocations (pool misses) — flat once warm.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// The assembled full model for `step`: board epoch `step` with the
+    /// shard's own layers substituted. Assembles at most once per step;
+    /// concurrent workers of the shard block briefly on the one assembly
+    /// they all need anyway.
+    fn get_or_assemble(
+        &self,
+        board: &ParamBoard,
+        layer_ids: &[usize],
+        own: &[Matrix],
+        step: usize,
+    ) -> Result<Arc<Layers>> {
+        // validate before the hit lookup, so a malformed own-slice fails
+        // deterministically instead of only when this worker loses the
+        // assembly race
+        check_own(board, layer_ids, own)?;
+        let mut inner = self.inner.lock().expect("snap cache lock");
+        if let Some((_, snap)) = inner.snaps.iter().find(|(s, _)| *s == step) {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return Ok(snap.clone());
+        }
+        let src = board.read(step);
+        // merge-copy each layer exactly once — own layers from the caller,
+        // foreign layers from the board epoch (`layer_ids` is ascending);
+        // the assembly buffer comes from the reclaim pool when one is
+        // available (all entries are full-model shaped, so any fits)
+        let mut k = 0;
+        let full: Layers = match inner.pool.pop() {
+            Some(mut buf) => {
+                for (i, dst) in buf.iter_mut().enumerate() {
+                    let from = if k < layer_ids.len() && layer_ids[k] == i {
+                        k += 1;
+                        &own[k - 1]
+                    } else {
+                        &src[i]
+                    };
+                    dst.data.copy_from_slice(&from.data);
+                }
+                buf
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                (0..src.len())
+                    .map(|i| {
+                        if k < layer_ids.len() && layer_ids[k] == i {
+                            k += 1;
+                            own[k - 1].clone()
+                        } else {
+                            src[i].clone()
+                        }
+                    })
+                    .collect()
+            }
+        };
+        let bytes: usize = full.iter().map(|m| m.numel() * 4).sum();
+        self.bytes_assembled.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.assembled.fetch_add(1, Ordering::Relaxed);
+        let arc = Arc::new(full);
+        debug_assert!(inner.snaps.back().map(|(s, _)| *s < step).unwrap_or(true));
+        inner.snaps.push_back((step, arc.clone()));
+        while inner.snaps.len() > self.keep {
+            let (_, old) = inner.snaps.pop_front().expect("non-empty");
+            // reclaim the buffers unless a straggler still borrows them
+            if let Ok(buf) = Arc::try_unwrap(old) {
+                if inner.pool.len() < 2 {
+                    inner.pool.push(buf);
+                }
+            }
+        }
+        Ok(arc)
+    }
 }
 
 /// Requests served by the PJRT service thread.
@@ -97,6 +237,9 @@ enum HandleInner {
         board: Arc<ParamBoard>,
         /// Global layer ids this shard owns (ascending).
         layer_ids: Arc<Vec<usize>>,
+        /// Shared by every worker-derived clone of this shard's handle:
+        /// one snapshot assembly per (shard, round), not per worker.
+        cache: Arc<SnapCache>,
     },
 }
 
@@ -120,11 +263,12 @@ impl GradHandle {
                 },
             },
             HandleInner::Pjrt { tx } => GradHandle { inner: HandleInner::Pjrt { tx: tx.clone() } },
-            HandleInner::Sharded { inner, board, layer_ids } => GradHandle {
+            HandleInner::Sharded { inner, board, layer_ids, cache } => GradHandle {
                 inner: HandleInner::Sharded {
                     inner: Box::new(inner.for_worker(worker)),
                     board: board.clone(),
                     layer_ids: layer_ids.clone(),
+                    cache: cache.clone(),
                 },
             },
         }
@@ -136,13 +280,34 @@ impl GradHandle {
     /// global — shard `s`'s worker `j` is the *same* logical data worker
     /// `j` as every other shard's (one `f_j` per worker, sliced by layer),
     /// so its RNG/batch streams match the single-coordinator deployment.
-    pub fn for_shard(&self, board: Arc<ParamBoard>, layer_ids: Vec<usize>) -> GradHandle {
+    /// `cache` holds the shard's per-round assembled snapshots; the caller
+    /// (the cluster root) keeps its own `Arc` to read the traffic counters.
+    pub fn for_shard(
+        &self,
+        board: Arc<ParamBoard>,
+        layer_ids: Vec<usize>,
+        cache: Arc<SnapCache>,
+    ) -> GradHandle {
         GradHandle {
             inner: HandleInner::Sharded {
                 inner: Box::new(self.clone()),
                 board,
                 layer_ids: Arc::new(layer_ids),
+                cache,
             },
+        }
+    }
+
+    /// True when the underlying objective reports layer-separable local
+    /// losses ([`Objective::loss_is_layer_separable`]): shard-sliced
+    /// handles then return only the shard's own contribution from
+    /// `grad_at`, and the cluster root *sums* per-shard train losses
+    /// instead of averaging them.
+    pub fn loss_is_layer_separable(&self) -> bool {
+        match &self.inner {
+            HandleInner::Local { obj, .. } => obj.loss_is_layer_separable(),
+            HandleInner::Pjrt { .. } => false,
+            HandleInner::Sharded { inner, .. } => inner.loss_is_layer_separable(),
         }
     }
 
@@ -150,7 +315,7 @@ impl GradHandle {
     /// a round index: initialization and offline callers. Sharded handles
     /// read the newest sealed board snapshot; the PJRT backend samples from
     /// a dedicated init batch stream.
-    pub fn grad(&mut self, worker: usize, params: &Layers) -> Result<(f32, Layers)> {
+    pub fn grad(&mut self, worker: usize, params: &[Matrix]) -> Result<(f32, Layers)> {
         self.grad_at(worker, params, INIT_STEP)
     }
 
@@ -158,10 +323,12 @@ impl GradHandle {
     /// `step`. Objective backend: computed inline in the calling thread
     /// (workers run fully in parallel; `step` does not perturb the RNG
     /// stream). PJRT backend: proxied to the service thread, batches keyed
-    /// by `(worker, step)`. Sharded backend: assembles the full model from
-    /// `params` (own layers) + the board snapshot sealed for `step` (other
-    /// shards' layers), forwards, and projects the gradient back.
-    pub fn grad_at(&mut self, worker: usize, params: &Layers, step: usize) -> Result<(f32, Layers)> {
+    /// by `(worker, step)`. Sharded backend: borrows the full model from
+    /// the shard's per-round snapshot cache — the first worker of the shard
+    /// assembles `params` (own layers) + the board snapshot sealed for
+    /// `step` (other shards' layers) once; everyone else reuses the `Arc` —
+    /// forwards, and projects the gradient back.
+    pub fn grad_at(&mut self, worker: usize, params: &[Matrix], step: usize) -> Result<(f32, Layers)> {
         match &mut self.inner {
             HandleInner::Local { obj, seed, rng } => {
                 // a handle caches one worker's stream; on a mismatch (handle
@@ -179,21 +346,27 @@ impl GradHandle {
             }
             HandleInner::Pjrt { tx } => {
                 let (rtx, rrx) = channel();
-                tx.send(Req::Grad { worker, step, params: params.clone(), reply: rtx })
+                tx.send(Req::Grad { worker, step, params: params.to_vec(), reply: rtx })
                     .map_err(|_| anyhow!("grad service is down"))?;
                 rrx.recv()
                     .map_err(|_| anyhow!("grad service dropped the request"))?
                     .map_err(anyhow::Error::msg)
             }
-            HandleInner::Sharded { inner, board, layer_ids } => {
+            HandleInner::Sharded { inner, board, layer_ids, cache } => {
                 let ids: Arc<Vec<usize>> = layer_ids.clone();
                 // a shard owning every layer (the 1-shard cluster) needs no
-                // assembly: skip the snapshot clone so the golden-matched
+                // assembly: skip the snapshot entirely so the golden-matched
                 // deployment is cost-identical to the unsharded one
                 if ids.len() == board.layers() {
                     return inner.grad_layers_at(worker, params, ids.as_slice(), step);
                 }
-                let full = assemble(board.as_ref(), ids.as_slice(), params, step)?;
+                if step == INIT_STEP {
+                    // un-keyed entry (worker init): reads the *newest*
+                    // snapshot, which moves between calls — never cached
+                    let full = assemble(board.as_ref(), ids.as_slice(), params, step)?;
+                    return inner.grad_layers_at(worker, &full, ids.as_slice(), step);
+                }
+                let full = cache.get_or_assemble(board.as_ref(), ids.as_slice(), params, step)?;
                 inner.grad_layers_at(worker, &full, ids.as_slice(), step)
             }
         }
@@ -203,11 +376,14 @@ impl GradHandle {
     /// Objective backend: routes through
     /// [`Objective::stoch_grad_j_layers`], so layer-separable objectives
     /// only pay for the requested layers (the cluster's per-shard gradient
-    /// cost). Other backends compute the full gradient and project.
+    /// cost) — and through [`Objective::loss_j_layers`], so the reported
+    /// train loss is the shard's own contribution (summed by the cluster
+    /// root) instead of a full-model recomputation per shard. Other
+    /// backends compute the full gradient and project.
     fn grad_layers_at(
         &mut self,
         worker: usize,
-        params: &Layers,
+        params: &[Matrix],
         layer_ids: &[usize],
         step: usize,
     ) -> Result<(f32, Layers)> {
@@ -219,7 +395,7 @@ impl GradHandle {
             }
             let (_, r) = rng.as_mut().expect("just installed");
             let g = obj.stoch_grad_j_layers(worker, params, layer_ids, r);
-            let loss = obj.loss_j(worker, params) as f32;
+            let loss = obj.loss_j_layers(worker, params, layer_ids) as f32;
             return Ok((loss, g));
         }
         let (loss, g_full) = self.grad_at(worker, params, step)?;
@@ -229,23 +405,23 @@ impl GradHandle {
     /// Evaluation loss at `params` (deterministic given params). Sharded
     /// handles evaluate the full model with the newest board snapshot
     /// standing in for the other shards' layers.
-    pub fn eval(&self, params: Layers) -> Result<f32> {
+    pub fn eval(&self, params: &[Matrix]) -> Result<f32> {
         match &self.inner {
-            HandleInner::Local { obj, .. } => Ok(obj.loss(&params) as f32),
+            HandleInner::Local { obj, .. } => Ok(obj.loss(params) as f32),
             HandleInner::Pjrt { tx } => {
                 let (rtx, rrx) = channel();
-                tx.send(Req::Eval { params, reply: rtx })
+                tx.send(Req::Eval { params: params.to_vec(), reply: rtx })
                     .map_err(|_| anyhow!("grad service is down"))?;
                 rrx.recv()
                     .map_err(|_| anyhow!("grad service dropped the request"))?
                     .map_err(anyhow::Error::msg)
             }
-            HandleInner::Sharded { inner, board, layer_ids } => {
+            HandleInner::Sharded { inner, board, layer_ids, .. } => {
                 if layer_ids.len() == board.layers() {
                     return inner.eval(params);
                 }
-                let full = assemble(board.as_ref(), layer_ids.as_slice(), &params, INIT_STEP)?;
-                inner.eval(full)
+                let full = assemble(board.as_ref(), layer_ids.as_slice(), params, INIT_STEP)?;
+                inner.eval(&full)
             }
         }
     }
@@ -269,14 +445,8 @@ impl GradHandle {
     }
 }
 
-/// Substitute a shard's own layers into the board's full-model snapshot for
-/// `step` (the newest sealed snapshot for `INIT_STEP`).
-fn assemble(
-    board: &ParamBoard,
-    layer_ids: &[usize],
-    own: &Layers,
-    step: usize,
-) -> Result<Layers> {
+/// Validate a shard's own-layer slice against its id list and the board.
+fn check_own(board: &ParamBoard, layer_ids: &[usize], own: &[Matrix]) -> Result<()> {
     if own.len() != layer_ids.len() {
         return Err(anyhow!(
             "sharded handle: got {} layers for a {}-layer shard",
@@ -284,12 +454,26 @@ fn assemble(
             layer_ids.len()
         ));
     }
+    if let Some(&li) = layer_ids.iter().find(|&&li| li >= board.layers()) {
+        return Err(anyhow!("sharded handle: layer id {li} out of range"));
+    }
+    Ok(())
+}
+
+/// Substitute a shard's own layers into the board's full-model snapshot for
+/// `step` (the newest sealed snapshot for `INIT_STEP`). The uncached path —
+/// worker init and offline eval; round-keyed requests go through
+/// [`SnapCache::get_or_assemble`].
+fn assemble(
+    board: &ParamBoard,
+    layer_ids: &[usize],
+    own: &[Matrix],
+    step: usize,
+) -> Result<Layers> {
+    check_own(board, layer_ids, own)?;
     let snap = if step == INIT_STEP { board.read_latest() } else { board.read(step) };
     let mut full: Layers = (*snap).clone();
     for (m, &li) in own.iter().zip(layer_ids) {
-        if li >= full.len() {
-            return Err(anyhow!("sharded handle: layer id {li} out of range"));
-        }
         full[li] = m.clone();
     }
     Ok(full)
@@ -458,8 +642,8 @@ mod tests {
         let (l2, g2) = h0b.grad(0, &x0).unwrap();
         assert_eq!(l1, l2);
         assert_eq!(g1[0].data, g2[0].data);
-        let e1 = svc.handle().eval(x0.clone()).unwrap();
-        let e2 = svc.handle().eval(x0.clone()).unwrap();
+        let e1 = svc.handle().eval(&x0).unwrap();
+        let e2 = svc.handle().eval(&x0).unwrap();
         assert_eq!(e1, e2);
         assert!(svc.handle().ns_orthogonalize(&x0[0]).unwrap().is_none());
     }

@@ -12,20 +12,26 @@ use crate::util::rng::Rng;
 /// A finite-sum objective `f = (1/n) Σ f_j` over layer-structured params.
 /// `Sync` so the dist worker threads can evaluate their local gradients
 /// concurrently through a shared handle (see `dist::service`).
+///
+/// Parameters are passed as borrowed `&[Matrix]` slices (not `&Layers`):
+/// `&Layers` deref-coerces at every call site, and composite objectives
+/// like [`Stacked`] can hand each part its sub-slice of the layer list
+/// without materializing an owned copy per call — the zero-copy contract
+/// the cluster gradient path relies on.
 pub trait Objective: Send + Sync {
     fn num_workers(&self) -> usize;
     fn layer_shapes(&self) -> Vec<(usize, usize)>;
     /// Global loss `f(x)`.
-    fn loss(&self, x: &Layers) -> f64;
+    fn loss(&self, x: &[Matrix]) -> f64;
     /// Local loss `f_j(x)` (worker-side telemetry; the default falls back
     /// to the global loss for objectives without a cheap local form).
-    fn loss_j(&self, _j: usize, x: &Layers) -> f64 {
+    fn loss_j(&self, _j: usize, x: &[Matrix]) -> f64 {
         self.loss(x)
     }
     /// Exact local gradient `∇f_j(x)`.
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers;
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers;
     /// Stochastic local gradient (unbiased, bounded variance).
-    fn stoch_grad_j(&self, j: usize, x: &Layers, _rng: &mut Rng) -> Layers {
+    fn stoch_grad_j(&self, j: usize, x: &[Matrix], _rng: &mut Rng) -> Layers {
         self.grad_j(j, x)
     }
 
@@ -40,12 +46,33 @@ pub trait Objective: Send + Sync {
     fn stoch_grad_j_layers(
         &self,
         j: usize,
-        x: &Layers,
+        x: &[Matrix],
         layer_ids: &[usize],
         rng: &mut Rng,
     ) -> Layers {
         let g = self.stoch_grad_j(j, x, rng);
         layer_ids.iter().map(|&i| g[i].clone()).collect()
+    }
+
+    /// Whether [`Objective::loss_j_layers`] returns a genuine *restricted*
+    /// contribution (true for layer-separable objectives like [`Stacked`]).
+    /// The cluster's root reducer uses this to decide whether per-shard
+    /// train losses are summed (disjoint contributions) or averaged
+    /// (every shard reported the same full-model loss). Override together
+    /// with [`Objective::loss_j_layers`], never one without the other.
+    fn loss_is_layer_separable(&self) -> bool {
+        false
+    }
+
+    /// Local loss attributed to the ascending `layer_ids` slice of the
+    /// model. Contract: over any disjoint cover of the layer ids the
+    /// attributed losses must sum to exactly `loss_j` — that is what lets
+    /// each cluster shard evaluate only its own layers' contribution and
+    /// the root reducer sum, instead of every shard recomputing (and
+    /// reporting) the full-model loss. The default is the full local loss
+    /// (correct for the non-separable fallback, where the root averages).
+    fn loss_j_layers(&self, j: usize, x: &[Matrix], _layer_ids: &[usize]) -> f64 {
+        self.loss_j(j, x)
     }
     /// Known optimum value, if any (for convergence assertions).
     fn opt_value(&self) -> Option<f64> {
@@ -60,7 +87,7 @@ pub trait Objective: Send + Sync {
     }
 
     /// Exact global gradient (averaged locals).
-    fn grad(&self, x: &Layers) -> Layers {
+    fn grad(&self, x: &[Matrix]) -> Layers {
         let n = self.num_workers();
         let mut acc = self.grad_j(0, x);
         for j in 1..n {
@@ -116,12 +143,12 @@ impl Objective for Quadratics {
         vec![(self.dim, 1)]
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         let n = self.num_workers();
         (0..n).map(|j| self.loss_j(j, x)).sum::<f64>() / n as f64
     }
 
-    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+    fn loss_j(&self, j: usize, x: &[Matrix]) -> f64 {
         let xv = &x[0].data;
         let mut total = 0.0f64;
         for i in 0..self.dim {
@@ -131,7 +158,7 @@ impl Objective for Quadratics {
         total
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         let xv = &x[0].data;
         let g: Vec<f32> = (0..self.dim)
             .map(|i| self.a[j][i] * xv[i] - self.b[j][i])
@@ -139,7 +166,7 @@ impl Objective for Quadratics {
         vec![Matrix::col_vec(&g)]
     }
 
-    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+    fn stoch_grad_j(&self, j: usize, x: &[Matrix], rng: &mut Rng) -> Layers {
         let mut g = self.grad_j(j, x);
         for v in g[0].data.iter_mut() {
             *v += self.noise * rng.normal_f32();
@@ -187,7 +214,7 @@ impl Objective for ThreeQuadratics {
         vec![(3, 1)]
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         let xv = &x[0].data;
         let mut total = 0.0f64;
         for aj in &self.a {
@@ -197,7 +224,7 @@ impl Objective for ThreeQuadratics {
         total / 3.0
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         let xv = &x[0].data;
         let aj = &self.a[j];
         let dot: f32 = aj.iter().zip(xv).map(|(a, b)| a * b).sum();
@@ -258,7 +285,7 @@ impl Logistic {
         Logistic { xs, ys, l2, minibatch: samples_per.max(4) / 4, dim }
     }
 
-    fn grad_over(&self, j: usize, x: &Layers, rows: &[usize]) -> Layers {
+    fn grad_over(&self, j: usize, x: &[Matrix], rows: &[usize]) -> Layers {
         let w = &x[0].data;
         let mut g = vec![0.0f32; self.dim];
         for &s in rows {
@@ -290,7 +317,7 @@ impl Objective for Logistic {
         vec![(self.dim, 1)]
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         let w = &x[0].data;
         let mut total = 0.0f64;
         let mut count = 0usize;
@@ -312,12 +339,12 @@ impl Objective for Logistic {
         total / count as f64 + reg
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         let rows: Vec<usize> = (0..self.ys[j].len()).collect();
         self.grad_over(j, x, &rows)
     }
 
-    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+    fn stoch_grad_j(&self, j: usize, x: &[Matrix], rng: &mut Rng) -> Layers {
         let n = self.ys[j].len();
         let rows: Vec<usize> = (0..self.minibatch.max(1)).map(|_| rng.below(n)).collect();
         self.grad_over(j, x, &rows)
@@ -352,7 +379,7 @@ impl Objective for CoshObjective {
         vec![(self.dim, 1)]
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         let n = self.c.len() as f64;
         self.c
             .iter()
@@ -366,7 +393,7 @@ impl Objective for CoshObjective {
             / n
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         let c = self.c[j];
         let g: Vec<f32> = x[0]
             .data
@@ -425,22 +452,22 @@ impl Objective for MatrixQuadratic {
         vec![self.shape]
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         let n = self.a.len() as f64;
         (0..self.a.len()).map(|j| self.loss_j(j, x)).sum::<f64>() / n
     }
 
-    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+    fn loss_j(&self, j: usize, x: &[Matrix]) -> f64 {
         let r = crate::linalg::matmul::matmul(&self.a[j], &x[0]).sub(&self.b[j]);
         0.5 * r.norm2_sq()
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         let r = crate::linalg::matmul::matmul(&self.a[j], &x[0]).sub(&self.b[j]);
         vec![crate::linalg::matmul::matmul_at(&self.a[j], &r)]
     }
 
-    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+    fn stoch_grad_j(&self, j: usize, x: &[Matrix], rng: &mut Rng) -> Layers {
         let mut g = self.grad_j(j, x);
         for v in g[0].data.iter_mut() {
             *v += self.noise * rng.normal_f32();
@@ -484,12 +511,9 @@ impl Stacked {
         Ok(Stacked { parts, offsets, n_workers })
     }
 
-    /// The slice of `x` belonging to part `p`. Callers currently `to_vec`
-    /// this to satisfy the `&Layers` (= `&Vec<Matrix>`) signatures of
-    /// [`Objective`] — one matrix-data copy per part per call. Moving the
-    /// trait to `&[Matrix]` parameters would make these borrows free; that
-    /// refactor touches every implementor and is tracked in ROADMAP.md.
-    fn slice<'a>(&self, p: usize, x: &'a Layers) -> &'a [Matrix] {
+    /// The slice of `x` belonging to part `p` — a free borrow, handed
+    /// straight to the part's `&[Matrix]` [`Objective`] methods.
+    fn slice<'a>(&self, p: usize, x: &'a [Matrix]) -> &'a [Matrix] {
         let lo = self.offsets[p];
         let hi = lo + self.parts[p].layer_shapes().len();
         &x[lo..hi]
@@ -505,34 +529,57 @@ impl Objective for Stacked {
         self.parts.iter().flat_map(|p| p.layer_shapes()).collect()
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         (0..self.parts.len())
-            .map(|p| self.parts[p].loss(&self.slice(p, x).to_vec()))
+            .map(|p| self.parts[p].loss(self.slice(p, x)))
             .sum()
     }
 
-    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+    fn loss_j(&self, j: usize, x: &[Matrix]) -> f64 {
         (0..self.parts.len())
-            .map(|p| self.parts[p].loss_j(j, &self.slice(p, x).to_vec()))
+            .map(|p| self.parts[p].loss_j(j, self.slice(p, x)))
             .sum()
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         (0..self.parts.len())
-            .flat_map(|p| self.parts[p].grad_j(j, &self.slice(p, x).to_vec()))
+            .flat_map(|p| self.parts[p].grad_j(j, self.slice(p, x)))
             .collect()
     }
 
-    fn stoch_grad_j(&self, j: usize, x: &Layers, rng: &mut Rng) -> Layers {
+    fn stoch_grad_j(&self, j: usize, x: &[Matrix], rng: &mut Rng) -> Layers {
         (0..self.parts.len())
-            .flat_map(|p| self.parts[p].stoch_grad_j(j, &self.slice(p, x).to_vec(), rng))
+            .flat_map(|p| self.parts[p].stoch_grad_j(j, self.slice(p, x), rng))
             .collect()
+    }
+
+    fn loss_is_layer_separable(&self) -> bool {
+        true
+    }
+
+    /// Each part is attributed to the caller owning the part's *first*
+    /// layer: any disjoint cover of the layer ids counts every part exactly
+    /// once, so the per-shard contributions sum to `loss_j` — part losses
+    /// in ascending part order, the same accumulation `loss_j` itself runs,
+    /// so the all-ids call is bit-identical to it (the shards=1 golden
+    /// contract).
+    fn loss_j_layers(&self, j: usize, x: &[Matrix], layer_ids: &[usize]) -> f64 {
+        // the binary_search below relies on the documented ascending-ids
+        // contract; a violation would silently drop parts from the sum
+        debug_assert!(
+            layer_ids.windows(2).all(|w| w[0] < w[1]),
+            "layer_ids must be ascending"
+        );
+        (0..self.parts.len())
+            .filter(|&p| layer_ids.binary_search(&self.offsets[p]).is_ok())
+            .map(|p| self.parts[p].loss_j(j, self.slice(p, x)))
+            .sum()
     }
 
     fn stoch_grad_j_layers(
         &self,
         j: usize,
-        x: &Layers,
+        x: &[Matrix],
         layer_ids: &[usize],
         rng: &mut Rng,
     ) -> Layers {
@@ -550,7 +597,7 @@ impl Objective for Stacked {
                 k += 1;
             }
             if k > start {
-                let g = self.parts[p].stoch_grad_j(j, &self.slice(p, x).to_vec(), rng);
+                let g = self.parts[p].stoch_grad_j(j, self.slice(p, x), rng);
                 for &id in &layer_ids[start..k] {
                     out.push(g[id - lo].clone());
                 }
@@ -572,14 +619,14 @@ impl Objective for Stacked {
 mod tests {
     use super::*;
 
-    fn finite_diff_check(obj: &dyn Objective, x: &Layers, tol: f64) {
+    fn finite_diff_check(obj: &dyn Objective, x: &[Matrix], tol: f64) {
         let g = obj.grad(x);
         let eps = 1e-3f32;
         for li in 0..x.len() {
             for e in [0, x[li].numel() - 1] {
-                let mut xp = x.clone();
+                let mut xp = x.to_vec();
                 xp[li].data[e] += eps;
-                let mut xm = x.clone();
+                let mut xm = x.to_vec();
                 xm[li].data[e] -= eps;
                 let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps as f64);
                 let an = g[li].data[e] as f64;
@@ -666,6 +713,43 @@ mod tests {
         let d = Quadratics::new(3, 4, 0.5, 0.0, &mut rng);
         assert!(Stacked::new(vec![Box::new(c) as Box<dyn Objective>, Box::new(d)]).is_err());
         assert!(Stacked::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn stacked_layer_loss_partitions_sum_to_full() {
+        let mut rng = Rng::new(207);
+        let a = Quadratics::new(2, 5, 0.5, 0.0, &mut rng);
+        let b = MatrixQuadratic::new(2, 4, 2, 0.0, &mut rng);
+        let c = Quadratics::new(2, 3, 0.5, 0.0, &mut rng);
+        let s =
+            Stacked::new(vec![Box::new(a) as Box<dyn Objective>, Box::new(b), Box::new(c)])
+                .unwrap();
+        assert!(s.loss_is_layer_separable());
+        let x = s.init(&mut rng);
+        let full = s.loss_j(1, &x);
+        // any disjoint cover of the layer ids sums to the full local loss
+        // (each part is attributed to the cell owning its first layer)
+        let covers: Vec<Vec<Vec<usize>>> = vec![
+            vec![vec![0], vec![1], vec![2]],
+            vec![vec![0, 2], vec![1]],
+            vec![vec![0, 1, 2]],
+        ];
+        for cover in &covers {
+            let sum: f64 = cover.iter().map(|ids| s.loss_j_layers(1, &x, ids)).sum();
+            assert!(
+                (sum - full).abs() < 1e-9 * (1.0 + full.abs()),
+                "{cover:?}: {sum} vs {full}"
+            );
+        }
+        // the all-ids call runs the same accumulation as loss_j itself, so
+        // it is bit-identical (the shards=1 golden contract)
+        assert_eq!(s.loss_j_layers(1, &x, &[0, 1, 2]), full);
+        // the non-separable default reports the full local loss
+        let mut rng2 = Rng::new(208);
+        let q = Quadratics::new(2, 4, 0.5, 0.0, &mut rng2);
+        let xq = q.init(&mut rng2);
+        assert!(!q.loss_is_layer_separable());
+        assert_eq!(q.loss_j_layers(0, &xq, &[0]), q.loss_j(0, &xq));
     }
 
     #[test]

@@ -143,7 +143,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     )?;
     let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
     let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
-    let loss = svc.handle().eval(x0)?;
+    let loss = svc.handle().eval(&x0)?;
     println!(
         "eval loss at init: {loss:.4} (ln V = {:.4})",
         (manifest.vocab as f64).ln()

@@ -145,7 +145,7 @@ impl ModelRuntime {
 
     fn pack_inputs(
         &self,
-        params: &Layers,
+        params: &[Matrix],
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<Vec<xla::Literal>> {
@@ -164,7 +164,7 @@ impl ModelRuntime {
     /// worker-side hot call (L2 graph with the L1 Pallas matmuls inside).
     pub fn grad(
         &self,
-        params: &Layers,
+        params: &[Matrix],
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<(f32, Layers)> {
@@ -185,7 +185,7 @@ impl ModelRuntime {
     }
 
     /// Evaluation loss on one batch.
-    pub fn eval_loss(&self, params: &Layers, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+    pub fn eval_loss(&self, params: &[Matrix], tokens: &[i32], targets: &[i32]) -> Result<f32> {
         let outs = self.eval.call(&self.pack_inputs(params, tokens, targets)?)?;
         Ok(outs[0].to_vec::<f32>()?[0])
     }

@@ -82,23 +82,128 @@ pub fn geometry_for(manifest: &Manifest, cfg: &TrainConfig) -> Vec<LayerGeometry
         .collect()
 }
 
+/// Driver-agnostic telemetry of one round (what the shared loop consumes).
+struct DriveRound {
+    /// Whether this call absorbed a round (async pipelines absorb nothing
+    /// for the first `lookahead` calls).
+    absorbed: bool,
+    train_loss: f32,
+    radius: f64,
+}
+
+/// The deployment surface the shared training loop drives: one round at a
+/// time, a drain before the final eval, an eval, and the byte/round meters
+/// the eval points record. Implemented by the single [`Coordinator`] and
+/// the sharded [`Cluster`], so there is exactly one loop to keep correct —
+/// the two previous near-duplicate loops could silently drift.
+trait Driver {
+    fn round(&mut self) -> Result<DriveRound>;
+    /// Land every in-flight round (no-op in sync mode); returns the drained
+    /// rounds' train losses in absorption order.
+    fn drain_losses(&mut self) -> Result<Vec<f32>>;
+    fn eval(&mut self) -> Result<f32>;
+    /// Rounds fully absorbed so far (tokens are paired with this, so both
+    /// token and byte meters count absorbed work).
+    fn rounds_absorbed(&self) -> u64;
+    /// w2s bytes one (logical full-model) worker has sent.
+    fn w2s(&self) -> u64;
+    /// s2w broadcast bytes.
+    fn s2w(&self) -> u64;
+    /// Driver-specific keys appended to each eval log record.
+    fn annotate(&self, o: JsonObj) -> JsonObj;
+}
+
+impl Driver for Coordinator {
+    fn round(&mut self) -> Result<DriveRound> {
+        let s = Coordinator::round(self)?;
+        Ok(DriveRound {
+            absorbed: s.absorbed_step.is_some(),
+            train_loss: s.train_loss,
+            radius: s.radius,
+        })
+    }
+
+    fn drain_losses(&mut self) -> Result<Vec<f32>> {
+        Ok(Coordinator::drain(self)?.into_iter().map(|s| s.train_loss).collect())
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        Coordinator::eval(self)
+    }
+
+    fn rounds_absorbed(&self) -> u64 {
+        self.meter().rounds_absorbed()
+    }
+
+    fn w2s(&self) -> u64 {
+        self.meter().w2s()
+    }
+
+    fn s2w(&self) -> u64 {
+        self.meter().s2w()
+    }
+
+    fn annotate(&self, o: JsonObj) -> JsonObj {
+        o
+    }
+}
+
+impl Driver for Cluster {
+    fn round(&mut self) -> Result<DriveRound> {
+        let s = Cluster::round(self)?;
+        Ok(DriveRound {
+            absorbed: s.absorbed_step.is_some(),
+            train_loss: s.train_loss,
+            radius: s.radius,
+        })
+    }
+
+    fn drain_losses(&mut self) -> Result<Vec<f32>> {
+        Ok(Cluster::drain(self)?.into_iter().map(|s| s.train_loss).collect())
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        Cluster::eval(self)
+    }
+
+    fn rounds_absorbed(&self) -> u64 {
+        self.meter().rounds_absorbed()
+    }
+
+    fn w2s(&self) -> u64 {
+        self.meter().w2s()
+    }
+
+    fn s2w(&self) -> u64 {
+        self.meter().s2w()
+    }
+
+    fn annotate(&self, o: JsonObj) -> JsonObj {
+        let meter = self.meter();
+        o.put("shards", self.shards())
+            .put("s2w_bytes", meter.s2w())
+            .put("meter", meter.to_json())
+    }
+}
+
 /// Run one full distributed training job per the config. `shards = 1`
 /// drives the single [`Coordinator`] (the exact deployment of every prior
 /// PR); `shards > 1` partitions the model's layers across a
-/// [`Cluster`] of concurrent shard coordinators.
+/// [`Cluster`] of concurrent shard coordinators. Both run the *same*
+/// [`Driver`] loop — only the deployment construction differs.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     if cfg.shards == 0 {
         // reject rather than silently reinterpret as 1 (the same hardening
         // contract as RoundMode::parse)
         return Err(anyhow::anyhow!("shards must be >= 1 (got 0); use --shards 1 for the single-leader deployment"));
     }
-    if cfg.shards > 1 {
-        return train_cluster(cfg);
-    }
     let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
     let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
     let geometry = geometry_for(&manifest, cfg);
+    // the logical data workers are shared across shards (shard s's worker j
+    // is data worker j), so tokens per round are shard-count invariant
     let tokens_per_step = manifest.batch * manifest.seq_len * cfg.workers;
+    let model_bytes = manifest.model_bytes();
 
     let svc = GradService::spawn_pjrt(
         cfg.artifacts.clone(),
@@ -107,27 +212,65 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         cfg.eval_batches,
         cfg.seed,
     )?;
-    let mut coord = Coordinator::spawn(
-        x0,
-        geometry,
-        svc.handle(),
-        CoordinatorCfg {
-            n_workers: cfg.workers,
-            worker_comp: cfg.worker_comp.clone(),
-            server_comp: cfg.server_comp.clone(),
-            beta: cfg.beta,
-            schedule: Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac),
-            transport: if cfg.full_codec {
-                TransportMode::Encoded
-            } else {
-                TransportMode::Counted
-            },
-            round_mode: RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?,
-            seed: cfg.seed,
-            use_ns_artifact: cfg.use_ns_artifact,
-        },
-    )?;
+    let schedule = Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac);
+    let transport = if cfg.full_codec {
+        TransportMode::Encoded
+    } else {
+        TransportMode::Counted
+    };
+    let round_mode = RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?;
 
+    if cfg.shards > 1 {
+        let mut cluster = Cluster::spawn(
+            x0,
+            geometry,
+            svc.handle(),
+            ClusterCfg {
+                shards: cfg.shards,
+                workers_per_shard: cfg.workers,
+                worker_comp: cfg.worker_comp.clone(),
+                server_comp: cfg.server_comp.clone(),
+                beta: cfg.beta,
+                schedule,
+                transport,
+                round_mode,
+                seed: cfg.seed,
+                use_ns_artifact: cfg.use_ns_artifact,
+            },
+        )?;
+        run_driver(cfg, &mut cluster, tokens_per_step, model_bytes)
+    } else {
+        let mut coord = Coordinator::spawn(
+            x0,
+            geometry,
+            svc.handle(),
+            CoordinatorCfg {
+                n_workers: cfg.workers,
+                worker_comp: cfg.worker_comp.clone(),
+                server_comp: cfg.server_comp.clone(),
+                beta: cfg.beta,
+                schedule,
+                transport,
+                round_mode,
+                seed: cfg.seed,
+                use_ns_artifact: cfg.use_ns_artifact,
+            },
+        )?;
+        run_driver(cfg, &mut coord, tokens_per_step, model_bytes)
+    }
+}
+
+/// The one training loop, shared by both topologies: round →
+/// absorbed-loss → drain at the last step only → eval → log. Mid-run evals
+/// never drain, so the observation frequency (`eval_every`) can never
+/// perturb the optimization trajectory; the final eval drains every
+/// pipeline first, so the reported loss reflects fully-absorbed rounds.
+fn run_driver(
+    cfg: &TrainConfig,
+    drv: &mut dyn Driver,
+    tokens_per_step: usize,
+    model_bytes: usize,
+) -> Result<TrainReport> {
     let mut log = match &cfg.log_path {
         Some(p) => Some(JsonlWriter::create(p)?),
         None => None,
@@ -137,31 +280,26 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut train_losses = Vec::with_capacity(cfg.steps);
 
     for step in 0..cfg.steps {
-        let stats = coord.round()?;
+        let stats = drv.round()?;
         // async modes: the first `lookahead` calls absorb no round yet, so
         // there is no train loss to record for them
-        if stats.absorbed_step.is_some() {
+        if stats.absorbed {
             train_losses.push(stats.train_loss);
         }
         let last = step + 1 == cfg.steps;
         if last {
-            // land every in-flight round before the final eval (no-op when
-            // synchronous)
-            for s in coord.drain()? {
-                train_losses.push(s.train_loss);
-            }
+            train_losses.extend(drv.drain_losses()?);
         }
         let do_eval = step % cfg.eval_every.max(1) == 0 || last;
         if do_eval {
-            let eval_loss = coord.eval()?;
+            let eval_loss = drv.eval()?;
             // pair tokens with the byte meter: both count *absorbed* rounds
             // (== step+1 in sync mode; in async modes eval_loss runs at most
             // `lookahead` issued-but-unabsorbed LMO steps ahead of them)
-            let absorbed = coord.meter().rounds_absorbed();
             let point = EvalPoint {
                 step,
-                tokens_processed: (tokens_per_step as u64) * absorbed,
-                w2s_bytes_per_worker: coord.meter().w2s(),
+                tokens_processed: (tokens_per_step as u64) * drv.rounds_absorbed(),
+                w2s_bytes_per_worker: drv.w2s(),
                 eval_loss,
             };
             if let Some(log) = log.as_mut() {
@@ -177,6 +315,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 if let Some(l) = train_losses.last().copied() {
                     o = o.put("train_loss", l);
                 }
+                o = drv.annotate(o);
                 log.write(&o)?;
                 log.flush()?;
             }
@@ -190,125 +329,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         final_eval_loss: curve.last().map(|p| p.eval_loss).unwrap_or(f32::NAN),
         curve,
         train_losses,
-        total_w2s_bytes_per_worker: coord.meter().w2s(),
-        total_s2w_bytes: coord.meter().s2w(),
-        model_bytes: manifest.model_bytes(),
-        tokens_per_step,
-        wall_seconds: timer.seconds(),
-    })
-}
-
-/// The `shards > 1` training path: the model's layers are partitioned
-/// across a [`Cluster`] of concurrent shard coordinators. The final eval
-/// drains all shard pipelines so the reported loss reflects fully-absorbed
-/// rounds on every shard.
-///
-/// NOTE: this loop deliberately mirrors [`train`]'s cadence (round →
-/// absorbed-loss → drain at the last step only → eval → log); a change to
-/// one driver's loop logic almost certainly belongs in the other too
-/// (extracting a shared driver is tracked in ROADMAP.md).
-fn train_cluster(cfg: &TrainConfig) -> Result<TrainReport> {
-    let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
-    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
-    let geometry = geometry_for(&manifest, cfg);
-    // the logical data workers are shared across shards (shard s's worker j
-    // is data worker j), so tokens per cluster round match the
-    // single-coordinator deployment
-    let tokens_per_step = manifest.batch * manifest.seq_len * cfg.workers;
-
-    let svc = GradService::spawn_pjrt(
-        cfg.artifacts.clone(),
-        cfg.workers,
-        cfg.corpus_tokens,
-        cfg.eval_batches,
-        cfg.seed,
-    )?;
-    let mut cluster = Cluster::spawn(
-        x0,
-        geometry,
-        svc.handle(),
-        ClusterCfg {
-            shards: cfg.shards,
-            workers_per_shard: cfg.workers,
-            worker_comp: cfg.worker_comp.clone(),
-            server_comp: cfg.server_comp.clone(),
-            beta: cfg.beta,
-            schedule: Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac),
-            transport: if cfg.full_codec {
-                TransportMode::Encoded
-            } else {
-                TransportMode::Counted
-            },
-            round_mode: RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?,
-            seed: cfg.seed,
-            use_ns_artifact: cfg.use_ns_artifact,
-        },
-    )?;
-
-    let mut log = match &cfg.log_path {
-        Some(p) => Some(JsonlWriter::create(p)?),
-        None => None,
-    };
-    let timer = crate::util::timer::Timer::start();
-    let mut curve = Vec::new();
-    let mut train_losses = Vec::with_capacity(cfg.steps);
-
-    for step in 0..cfg.steps {
-        let stats = cluster.round()?;
-        if stats.absorbed_step.is_some() {
-            train_losses.push(stats.train_loss);
-        }
-        let last = step + 1 == cfg.steps;
-        if last {
-            // the final eval drains all shard pipelines: every issued round
-            // lands on every shard first (no-op when synchronous). Same
-            // cadence as the single-coordinator path — mid-run evals never
-            // drain, so the observation frequency (eval_every) can never
-            // perturb the optimization trajectory.
-            for s in cluster.drain()? {
-                train_losses.push(s.train_loss);
-            }
-        }
-        let do_eval = step % cfg.eval_every.max(1) == 0 || last;
-        if do_eval {
-            let eval_loss = cluster.eval()?;
-            let meter = cluster.meter();
-            let point = EvalPoint {
-                step,
-                tokens_processed: (tokens_per_step as u64) * meter.rounds_absorbed(),
-                w2s_bytes_per_worker: meter.w2s(),
-                eval_loss,
-            };
-            if let Some(log) = log.as_mut() {
-                let mut o = JsonObj::new()
-                    .put("step", step)
-                    .put("shards", cfg.shards)
-                    .put("eval_loss", eval_loss)
-                    .put("tokens", point.tokens_processed)
-                    .put("w2s_bytes", point.w2s_bytes_per_worker)
-                    .put("s2w_bytes", meter.s2w())
-                    .put("radius", stats.radius)
-                    .put("meter", meter.to_json());
-                if let Some(l) = train_losses.last().copied() {
-                    o = o.put("train_loss", l);
-                }
-                log.write(&o)?;
-                log.flush()?;
-            }
-            curve.push(point);
-        }
-    }
-
-    let meter = cluster.meter();
-    Ok(TrainReport {
-        config_comp: cfg.worker_comp.clone(),
-        steps: cfg.steps,
-        final_eval_loss: curve.last().map(|p| p.eval_loss).unwrap_or(f32::NAN),
-        curve,
-        train_losses,
-        total_w2s_bytes_per_worker: meter.w2s(),
-        total_s2w_bytes: meter.s2w(),
-        model_bytes: manifest.model_bytes(),
+        total_w2s_bytes_per_worker: drv.w2s(),
+        total_s2w_bytes: drv.s2w(),
+        model_bytes,
         tokens_per_step,
         wall_seconds: timer.seconds(),
     })

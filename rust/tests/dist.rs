@@ -9,7 +9,7 @@ use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics};
-use efmuon::linalg::matrix::Layers;
+use efmuon::linalg::matrix::{Layers, Matrix};
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
@@ -286,15 +286,15 @@ impl Objective for PanicObjective {
         self.inner.layer_shapes()
     }
 
-    fn loss(&self, x: &Layers) -> f64 {
+    fn loss(&self, x: &[Matrix]) -> f64 {
         self.inner.loss(x)
     }
 
-    fn loss_j(&self, j: usize, x: &Layers) -> f64 {
+    fn loss_j(&self, j: usize, x: &[Matrix]) -> f64 {
         self.inner.loss_j(j, x)
     }
 
-    fn grad_j(&self, j: usize, x: &Layers) -> Layers {
+    fn grad_j(&self, j: usize, x: &[Matrix]) -> Layers {
         if j == self.panic_worker {
             let seen = self.calls.fetch_add(1, Ordering::SeqCst);
             if seen >= self.panic_after {

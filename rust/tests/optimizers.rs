@@ -152,7 +152,7 @@ fn logistic_regression_end_to_end() {
         21,
     )
     .unwrap();
-    let l0 = obj.loss(&opt.params().clone());
+    let l0 = obj.loss(opt.params());
     let trace = opt.run(&obj, 800);
     let lk = trace.last().unwrap().loss;
     assert!(lk < 0.8 * l0, "loss {l0} -> {lk}");

@@ -5,6 +5,13 @@ Compares the round-time entries of a fresh BENCH_hotpath.json against a
 stored baseline and fails (exit 1) when any matched entry's median time
 regressed past the threshold (default 1.05 = +5%, the ISSUE-2 bar).
 
+Round entries that carry host memory-traffic counters
+(`bytes_cloned_per_round`: bytes the cluster gradient path deep-copies per
+round) are gated on those too, with the same threshold: a bytes_cloned
+regression means the zero-copy snapshot path started cloning again —
+deterministic, so any growth past the threshold (including any growth from
+an exact-zero baseline) fails.
+
 Bench numbers are machine-specific, so the baseline is self-priming and
 untracked: the first run on a machine copies the current results into the
 baseline file (established from the PR-1-era bench set); later runs gate
@@ -76,6 +83,25 @@ def adopt(current_path, baseline_path, names):
         print(f"    ADOPTED  {n} (new round entry; gated from the next run)")
 
 
+def adopt_counters(baseline_path, updates):
+    """Merge new counters ({name: {key: value}}) into existing baseline
+    entries (atomically), so counters that appeared after the baseline was
+    primed gate from the next run instead of being noted forever."""
+    with open(baseline_path) as f:
+        doc = json.load(f)
+    by_name = {e.get("name"): e for e in doc.get("entries", []) if isinstance(e, dict)}
+    for name, kv in updates.items():
+        if name in by_name:
+            by_name[name].update(kv)
+    tmp = baseline_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, baseline_path)
+    for name, kv in sorted(updates.items()):
+        for k, v in sorted(kv.items()):
+            print(f"    ADOPTED  {name} [{k}={v}] (new counter; gated from the next run)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -140,6 +166,7 @@ def main():
         return 0
 
     failed = []
+    gained_counters = {}
     for name in sorted(gated):
         cur = current[name]["median_s"]
         base = baseline[name]["median_s"]
@@ -148,6 +175,40 @@ def main():
         print(f"  {verdict:>9}  {ratio:6.3f}x  {name}  ({base:.6f}s -> {cur:.6f}s)")
         if ratio > args.threshold:
             failed.append(name)
+
+        # the memory-traffic gate: bytes_cloned_per_round is deterministic
+        # (assemblies + seals, no timing noise), so it gates whenever the
+        # baseline entry carries it
+        key = "bytes_cloned_per_round"
+        if key in baseline[name]:
+            base_b = baseline[name][key]
+            if key not in current[name]:
+                print(
+                    f"  REGRESSED       ?x  {name} [{key}]  "
+                    f"(counter disappeared from current results)"
+                )
+                failed.append(f"{name} [{key}]")
+                continue
+            cur_b = current[name][key]
+            if base_b == 0:
+                ok = cur_b == 0
+                shown = "0x" if ok else "infx"
+            else:
+                bratio = cur_b / base_b
+                ok = bratio <= args.threshold
+                shown = f"{bratio:.3f}x"
+            verdict = "OK" if ok else "REGRESSED"
+            print(f"  {verdict:>9}  {shown:>6}  {name} [{key}]  ({base_b}B -> {cur_b}B)")
+            if not ok:
+                failed.append(f"{name} [{key}]")
+        elif key in current[name]:
+            # baseline predates the counter (e.g. primed before the
+            # zero-copy PR): adopt it so the NEXT run gates it, instead of
+            # noting it forever
+            gained_counters.setdefault(name, {})[key] = current[name][key]
+
+    if gained_counters:
+        adopt_counters(args.baseline, gained_counters)
 
     if failed:
         print(

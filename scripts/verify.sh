@@ -35,7 +35,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   cat "$BENCH"
   echo
 
-  echo "== tier-2: round-time regression gate =="
+  echo "== tier-2: round-time + bytes-cloned regression gate =="
+  # gates cluster-round host memory traffic (bytes_cloned_per_round) along
+  # with median round times: the zero-copy gradient path must stay zero-copy
   python3 "$SCRIPT_DIR/bench_gate.py" "$BENCH" "$SCRIPT_DIR/../BENCH_baseline.json" \
     --threshold "${EFMUON_BENCH_TOLERANCE:-1.05}"
 fi
