@@ -46,9 +46,9 @@ fn main() -> anyhow::Result<()> {
         None
     } else {
         exp::load_reports(&cache).ok().filter(|rs| {
-            let want: Vec<&str> = exp::figure_specs();
+            let want = exp::figure_specs();
             rs.len() == want.len()
-                && rs.iter().zip(&want).all(|(r, w)| r.config_comp == *w)
+                && rs.iter().zip(want).all(|(r, w)| r.config_comp == w.spec())
         })
     };
     let reports = match cached {
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             rs
         }
         None => {
-            let rs = exp::figure_sweep(&base, &exp::figure_specs())?;
+            let rs = exp::figure_sweep(&base, exp::figure_specs())?;
             exp::save_reports(&cache, &rs)?;
             rs
         }

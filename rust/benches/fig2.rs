@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
                 eval_batches: 3,
                 ..TrainConfig::default()
             };
-            exp::figure_sweep(&base, &exp::figure_specs())?
+            exp::figure_sweep(&base, exp::figure_specs())?
         }
     };
 

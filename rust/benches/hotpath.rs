@@ -22,6 +22,7 @@ use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
 use efmuon::runtime::ModelRuntime;
+use efmuon::spec::CompSpec;
 use efmuon::util::cli::Args;
 use efmuon::util::json::{Json, JsonObj};
 use efmuon::util::rng::Rng;
@@ -139,8 +140,8 @@ fn main() -> anyhow::Result<()> {
             svc.handle(),
             CoordinatorCfg {
                 n_workers: 4,
-                worker_comp: "top:0.1".into(),
-                server_comp: "id".into(),
+                worker_comp: CompSpec::Top { frac: 0.1, nat: false },
+                server_comp: CompSpec::Id,
                 beta: 0.9,
                 schedule: Schedule::constant(0.01),
                 transport: TransportMode::Encoded,
@@ -162,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     //      JSON rows carry per-round wire bytes in both directions; the
     //      async row measures what one round of lookahead buys in latency.
     {
-        let mut bench_round = |name: &str, server_comp: &str, mode: RoundMode| -> anyhow::Result<()> {
+        let mut bench_round = |name: &str, server_comp: CompSpec, mode: RoundMode| -> anyhow::Result<()> {
             let q = Quadratics::new(4, 4096, 0.5, 0.1, &mut Rng::new(3));
             let x0 = q.init(&mut Rng::new(3));
             let svc = GradService::spawn_objective(Box::new(q), 3);
@@ -172,8 +173,8 @@ fn main() -> anyhow::Result<()> {
                 svc.handle(),
                 CoordinatorCfg {
                     n_workers: 4,
-                    worker_comp: "top:0.1".into(),
-                    server_comp: server_comp.into(),
+                    worker_comp: CompSpec::Top { frac: 0.1, nat: false },
+                    server_comp,
                     beta: 0.9,
                     schedule: Schedule::constant(0.01),
                     transport: TransportMode::Encoded,
@@ -198,10 +199,11 @@ fn main() -> anyhow::Result<()> {
             entries.last_mut().unwrap().comm = Some((w2s, s.s2w_bytes));
             Ok(())
         };
-        bench_round("coordinator round s2w=top:0.1 sync (4 workers, d=4096)", "top:0.1", RoundMode::Sync)?;
+        let s2w_comp = CompSpec::Top { frac: 0.1, nat: false };
+        bench_round("coordinator round s2w=top:0.1 sync (4 workers, d=4096)", s2w_comp, RoundMode::Sync)?;
         bench_round(
             "coordinator round s2w=top:0.1 async:1 (4 workers, d=4096)",
-            "top:0.1",
+            s2w_comp,
             RoundMode::Async { lookahead: 1 },
         )?;
         let n = entries.len();
@@ -246,8 +248,8 @@ fn main() -> anyhow::Result<()> {
             svc.handle(),
             CoordinatorCfg {
                 n_workers: 4,
-                worker_comp: "rank:0.2".into(),
-                server_comp: "id".into(),
+                worker_comp: CompSpec::Rank { frac: 0.2, nat: false },
+                server_comp: CompSpec::Id,
                 beta: 0.9,
                 schedule: Schedule::constant(0.01),
                 transport: TransportMode::Counted,
@@ -293,8 +295,8 @@ fn main() -> anyhow::Result<()> {
                 ClusterCfg {
                     shards,
                     workers_per_shard: 4,
-                    worker_comp: "rank:0.2".into(),
-                    server_comp: "id".into(),
+                    worker_comp: CompSpec::Rank { frac: 0.2, nat: false },
+                    server_comp: CompSpec::Id,
                     beta: 0.9,
                     schedule: Schedule::constant(0.01),
                     transport: TransportMode::Counted,

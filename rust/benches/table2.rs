@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             micro_preset_shapes()
         }
     };
-    let rows = table2_rows(&shapes, &paper_compressor_specs())?;
+    let rows = table2_rows(&shapes, paper_compressor_specs())?;
     std::fs::create_dir_all("results")?;
     let mut csv = CsvWriter::create(
         "results/table2.csv",

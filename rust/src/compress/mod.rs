@@ -210,7 +210,7 @@ pub fn contraction_ratio(x: &Matrix, decoded: &Matrix) -> f64 {
     }
 }
 
-/// Parse a compressor spec string. Grammar:
+/// Parse a compressor spec string and build the compressor. Grammar:
 ///
 /// ```text
 /// spec    := base ("+nat")?
@@ -220,68 +220,12 @@ pub fn contraction_ratio(x: &Matrix, decoded: &Matrix) -> f64 {
 ///
 /// `F` = fraction (0,1], `P` = keep-probability, `G` = damping factor,
 /// `K` = integer rank. Examples: `top:0.15+nat`, `rank:0.1`, `id`.
+///
+/// The grammar itself lives in [`crate::spec::CompSpec`] — the typed,
+/// parse-once descriptor every configuration boundary uses; this function
+/// is the one-shot convenience for tests and benches.
 pub fn parse_spec(spec: &str) -> Result<Box<dyn Compressor>, String> {
-    let (base, nat) = match spec.strip_suffix("+nat") {
-        Some(b) => (b, true),
-        None => (spec, false),
-    };
-    let mk_err = |m: &str| format!("bad compressor spec {spec:?}: {m}");
-    let parse_f = |s: &str| -> Result<f64, String> {
-        s.parse::<f64>().map_err(|_| mk_err("expected a number"))
-    };
-    let boxed: Box<dyn Compressor> = match base.split_once(':') {
-        None => match base {
-            "id" => {
-                if nat {
-                    return Ok(Box::new(natural::NaturalCompressor::new()));
-                }
-                Box::new(simple::Identity)
-            }
-            "nat" => Box::new(natural::NaturalCompressor::new()),
-            "sign" => Box::new(quantize::ScaledSign),
-            _ => return Err(mk_err("unknown compressor")),
-        },
-        Some(("top", f)) => {
-            let frac = parse_f(f)?;
-            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
-                return Err(mk_err("top fraction must be in (0,1]"));
-            }
-            Box::new(sparse::TopK::new(frac, nat))
-        }
-        Some(("rank", f)) => {
-            let frac = parse_f(f)?;
-            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
-                return Err(mk_err("rank fraction must be in (0,1]"));
-            }
-            Box::new(lowrank::RankK::new(frac, nat))
-        }
-        Some(("drop", p)) => Box::new(simple::RandomDropout::new(parse_f(p)?)),
-        Some(("damp", g)) => Box::new(simple::Damping::new(parse_f(g)? as f32)),
-        Some(("svdtop", k)) => {
-            let k: usize = k.parse().map_err(|_| mk_err("expected integer rank"))?;
-            Box::new(lowrank::SvdTopK::new(k))
-        }
-        Some(("coltop", f)) => Box::new(sparse::ColTopK::new(parse_f(f)?)),
-        Some(("randk", f)) => {
-            let frac = parse_f(f)?;
-            if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
-                return Err(mk_err("randk fraction must be in (0,1]"));
-            }
-            Box::new(sparse::RandK::new(frac))
-        }
-        Some(("qsgd", l)) => {
-            let levels: u8 = l.parse().map_err(|_| mk_err("expected integer levels"))?;
-            if levels == 0 {
-                return Err(mk_err("qsgd levels must be >= 1"));
-            }
-            Box::new(quantize::Qsgd::new(levels))
-        }
-        Some(_) => return Err(mk_err("unknown compressor")),
-    };
-    if nat && !matches!(base.split_once(':').map(|x| x.0), Some("top") | Some("rank")) {
-        return Err(mk_err("+nat is supported for top:/rank: only"));
-    }
-    Ok(boxed)
+    Ok(crate::spec::CompSpec::parse(spec)?.build())
 }
 
 #[cfg(test)]

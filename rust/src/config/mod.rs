@@ -1,12 +1,24 @@
 //! Training configuration: JSON config files + CLI overrides (flags win).
 //!
+//! `TrainConfig` is the **string-level serialization facade** over the
+//! typed [`crate::spec::RunSpec`]: every field that names an algorithm
+//! choice (`worker_comp`, `round_mode`, `lmo_hidden`, …) is a plain string
+//! here and is parsed **exactly once** — by
+//! [`crate::spec::RunBuilder::from_config`] (via [`TrainConfig::validate`])
+//! — into the typed descriptor the rest of the system runs on. Nothing
+//! outside the `spec`/`config` boundary ever re-parses these strings.
+//!
 //! Every experiment in `rust/benches` and `examples/` is a `TrainConfig`;
-//! the same struct drives the `efmuon train` subcommand.
+//! the same struct drives the `efmuon train` subcommand, and
+//! `efmuon config` prints the validated spec back as canonical JSON
+//! (a lossless `RunSpec → Json → RunSpec` round trip).
 
+use crate::spec::{RunBuilder, RunSpec, SpecError};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
-/// Full configuration of one distributed training run.
+/// Full configuration of one distributed training run (string facade; see
+/// the module docs and [`crate::spec::RunSpec`] for the typed form).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Directory with `manifest.json` + HLO artifacts.
@@ -30,6 +42,15 @@ pub struct TrainConfig {
     /// Round scheduling: `sync` | `async` (= `async:1`) | `async:N` —
     /// see [`crate::dist::RoundMode`]. `async:0` is bit-equal to `sync`.
     pub round_mode: String,
+    /// LMO ball for the hidden (2-D matmul) group: `spectral` | `sign` |
+    /// `top1` | `euclid` | `nuclear` | `colnorm`. The defaults are the
+    /// paper's assignment; presets pin them to recover Muon/Scion/Gluon
+    /// (see [`crate::spec::Preset`]).
+    pub lmo_hidden: String,
+    /// LMO ball for the embedding / tied-output group.
+    pub lmo_embed: String,
+    /// LMO ball for the vector (LayerNorm gain) group.
+    pub lmo_vector: String,
     /// Momentum β (paper uses 0.9).
     pub beta: f32,
     /// Base radius / learning rate for hidden layers.
@@ -69,6 +90,9 @@ impl Default for TrainConfig {
             worker_comp: "id".into(),
             server_comp: "id".into(),
             round_mode: "sync".into(),
+            lmo_hidden: "spectral".into(),
+            lmo_embed: "sign".into(),
+            lmo_vector: "sign".into(),
             beta: 0.9,
             lr: 0.02,
             embed_mult: 1.0,
@@ -96,6 +120,9 @@ impl TrainConfig {
         self.worker_comp = a.str("comp", &self.worker_comp);
         self.server_comp = a.str("server-comp", &self.server_comp);
         self.round_mode = a.str("round-mode", &self.round_mode);
+        self.lmo_hidden = a.str("lmo-hidden", &self.lmo_hidden);
+        self.lmo_embed = a.str("lmo-embed", &self.lmo_embed);
+        self.lmo_vector = a.str("lmo-vector", &self.lmo_vector);
         self.beta = a.f64("beta", self.beta as f64) as f32;
         self.lr = a.f64("lr", self.lr);
         self.embed_mult = a.f64("embed-mult", self.embed_mult as f64) as f32;
@@ -128,6 +155,9 @@ impl TrainConfig {
                 "worker_comp" => c.worker_comp = v.as_str().ok_or("worker_comp: string")?.into(),
                 "server_comp" => c.server_comp = v.as_str().ok_or("server_comp: string")?.into(),
                 "round_mode" => c.round_mode = v.as_str().ok_or("round_mode: string")?.into(),
+                "lmo_hidden" => c.lmo_hidden = v.as_str().ok_or("lmo_hidden: string")?.into(),
+                "lmo_embed" => c.lmo_embed = v.as_str().ok_or("lmo_embed: string")?.into(),
+                "lmo_vector" => c.lmo_vector = v.as_str().ok_or("lmo_vector: string")?.into(),
                 "beta" => c.beta = v.as_f64().ok_or("beta: number")? as f32,
                 "lr" => c.lr = v.as_f64().ok_or("lr: number")?,
                 "embed_mult" => c.embed_mult = v.as_f64().ok_or("embed_mult: number")? as f32,
@@ -145,6 +175,18 @@ impl TrainConfig {
             }
         }
         Ok(c)
+    }
+
+    /// Parse every string field exactly once and validate every numeric
+    /// invariant eagerly, returning the typed [`RunSpec`] — or a
+    /// [`SpecError`] naming *all* offending fields by path. This is the one
+    /// boundary between the string facade and the typed world; `train`
+    /// calls it before anything loads, so `workers = 0`, `eval_every = 0`,
+    /// `steps = 0` or an out-of-range `min_lr_frac` fail here with a field
+    /// message instead of surfacing as late panics or silent div-by-zero
+    /// deep in the run.
+    pub fn validate(&self) -> Result<RunSpec, SpecError> {
+        RunBuilder::from_config(self).build()
     }
 
     /// Parse `--config file.json` (if given) then CLI overrides.
@@ -180,6 +222,23 @@ mod tests {
         assert_eq!(c.lr, 0.05);
         assert_eq!(c.steps, TrainConfig::default().steps);
         assert!(TrainConfig::from_json(r#"{"bogus": 1}"#).is_err());
+    }
+
+    #[test]
+    fn validate_is_the_typed_boundary() {
+        let spec = TrainConfig::default().validate().unwrap();
+        assert!(spec.worker_comp.is_identity());
+        assert_eq!(spec, RunSpec::default());
+        let bad = TrainConfig {
+            workers: 0,
+            worker_comp: "top:9".into(),
+            lmo_embed: "l33t".into(),
+            ..TrainConfig::default()
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(err.mentions("workers"), "{err}");
+        assert!(err.mentions("worker_comp"), "{err}");
+        assert!(err.mentions("lmo_embed"), "{err}");
     }
 
     #[test]

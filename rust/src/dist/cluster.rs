@@ -49,6 +49,7 @@ use anyhow::{anyhow, Result};
 
 use crate::linalg::matrix::Layers;
 use crate::opt::{LayerGeometry, Schedule};
+use crate::spec::CompSpec;
 use crate::util::json::{Json, JsonObj};
 
 use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
@@ -225,8 +226,10 @@ pub struct ClusterCfg {
     /// Worker threads per shard. Worker `j` of every shard is the same
     /// logical data worker `j` (one `f_j` per worker, sliced by layer).
     pub workers_per_shard: usize,
-    pub worker_comp: String,
-    pub server_comp: String,
+    /// w2s compressor descriptor (typed; parsed once at the spec boundary).
+    pub worker_comp: CompSpec,
+    /// s2w (EF21-P broadcast) compressor descriptor.
+    pub server_comp: CompSpec,
     pub beta: f32,
     pub schedule: Schedule,
     pub transport: TransportMode,
@@ -239,8 +242,8 @@ impl ClusterCfg {
     fn coordinator_cfg(&self) -> CoordinatorCfg {
         CoordinatorCfg {
             n_workers: self.workers_per_shard,
-            worker_comp: self.worker_comp.clone(),
-            server_comp: self.server_comp.clone(),
+            worker_comp: self.worker_comp,
+            server_comp: self.server_comp,
             beta: self.beta,
             schedule: self.schedule.clone(),
             transport: self.transport,

@@ -33,6 +33,7 @@ use anyhow::{anyhow, Result};
 use crate::linalg::matrix::{layers, Layers};
 use crate::opt::ef21::{ServerState, WorkerState};
 use crate::opt::{LayerGeometry, Schedule};
+use crate::spec::CompSpec;
 
 use super::comm::{FromWorker, ToWorker, Wire};
 use super::server::SpectralServer;
@@ -43,13 +44,15 @@ use super::{Meter, RoundMode, TransportMode};
 #[derive(Debug, Clone)]
 pub struct CoordinatorCfg {
     pub n_workers: usize,
-    /// w2s compressor spec (per layer), e.g. `top:0.1+nat`.
-    pub worker_comp: String,
-    /// s2w compressor spec (per layer) for the EF21-P broadcast. Any
-    /// contractive spec works end to end — `id` reproduces the paper's
-    /// dense-broadcast deployment, anything else activates bidirectional
-    /// compression (`rust/tests/scenario.rs` locks both down).
-    pub server_comp: String,
+    /// w2s compressor descriptor (applied per layer), e.g.
+    /// `CompSpec::Top { frac: 0.1, nat: true }`. Typed — the string grammar
+    /// is parsed once at the `spec`/`config` boundary, never here.
+    pub worker_comp: CompSpec,
+    /// s2w compressor descriptor (per layer) for the EF21-P broadcast. Any
+    /// contractive descriptor works end to end — `CompSpec::Id` reproduces
+    /// the paper's dense-broadcast deployment, anything else activates
+    /// bidirectional compression (`rust/tests/scenario.rs` locks both down).
+    pub server_comp: CompSpec,
     /// Momentum β.
     pub beta: f32,
     /// Radius / learning-rate schedule.
@@ -143,15 +146,13 @@ impl Coordinator {
             &cfg.server_comp,
             cfg.n_workers,
             cfg.seed,
-        )
-        .map_err(anyhow::Error::msg)?;
+        );
 
         let (reply_tx, reply_rx) = channel::<FromWorker>();
         let mut to_workers = Vec::with_capacity(cfg.n_workers);
         let mut joins = Vec::with_capacity(cfg.n_workers);
         for j in 0..cfg.n_workers {
-            let state = WorkerState::new(j, &x0, &cfg.worker_comp, cfg.beta, cfg.seed)
-                .map_err(anyhow::Error::msg)?;
+            let state = WorkerState::new(j, &x0, &cfg.worker_comp, cfg.beta, cfg.seed);
             let (tx, rx) = channel::<ToWorker>();
             let rtx = reply_tx.clone();
             let h = handle.for_worker(j);

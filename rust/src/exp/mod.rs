@@ -6,45 +6,32 @@ use anyhow::Result;
 
 use crate::compress::Message;
 use crate::config::TrainConfig;
-use crate::dist::cluster::{Cluster, ClusterCfg};
+use crate::dist::cluster::Cluster;
 use crate::dist::service::GradService;
-use crate::dist::{RoundMode, TransportMode};
 use crate::funcs::{CoshObjective, MatrixQuadratic, Objective, Quadratics, Stacked};
 use crate::linalg::matrix::Matrix;
 use crate::lmo::LmoKind;
 use crate::metrics::render_table;
 use crate::opt::ef21::Ef21MuonSeq;
 use crate::opt::{LayerGeometry, Schedule, ScheduleKind};
-use crate::train::{train, TrainReport};
+use crate::spec::{CompSpec, RunBuilder};
+use crate::train::{spawn_seq_driver, train, Driver, TrainReport};
 use crate::util::rng::Rng;
 use crate::util::stats::linfit;
 use crate::util::timer::Timer;
 
 /// The compressor configurations evaluated in the paper's Table 2 /
-/// Figures 1–2 (compression levels as reported there).
-pub fn paper_compressor_specs() -> Vec<&'static str> {
-    vec![
-        "id",
-        "nat",
-        "rank:0.2",
-        "rank:0.15",
-        "rank:0.15+nat",
-        "rank:0.1",
-        "rank:0.1+nat",
-        "rank:0.05",
-        "top:0.2",
-        "top:0.15",
-        "top:0.15+nat",
-        "top:0.1",
-        "top:0.1+nat",
-        "top:0.05",
-    ]
+/// Figures 1–2. The typed table lives in [`crate::spec`] — one source of
+/// truth the train path, the sweeps and the benches all share, so they
+/// cannot drift.
+pub fn paper_compressor_specs() -> &'static [CompSpec] {
+    crate::spec::PAPER_COMPRESSOR_SPECS
 }
 
 /// A compact default sweep for the figures (most competitive configs, as
-/// Figure 1 does).
-pub fn figure_specs() -> Vec<&'static str> {
-    vec!["id", "nat", "top:0.15", "top:0.15+nat", "rank:0.15", "rank:0.15+nat"]
+/// Figure 1 does). Typed table in [`crate::spec`].
+pub fn figure_specs() -> &'static [CompSpec] {
+    crate::spec::FIGURE_SPECS
 }
 
 // ---------------------------------------------------------------------------
@@ -60,25 +47,22 @@ pub struct CostRow {
 }
 
 /// Exact per-round w2s bytes for each compressor over a set of layer
-/// shapes (one message per layer, as in Algorithm 3).
-pub fn table2_rows(shapes: &[(usize, usize)], specs: &[&str]) -> Result<Vec<CostRow>> {
+/// shapes (one message per layer, as in Algorithm 3). Takes the typed
+/// descriptors — the same values the train path deploys, including the
+/// RankK→TopK degenerate-shape fallback.
+pub fn table2_rows(shapes: &[(usize, usize)], specs: &[CompSpec]) -> Result<Vec<CostRow>> {
     let mut rng = Rng::new(42);
     let layers: Vec<Matrix> = shapes
         .iter()
         .map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng))
         .collect();
-    let dense: usize = {
-        let cs = crate::opt::layer_compressors("id", shapes).map_err(anyhow::Error::msg)?;
-        total_bytes(cs, &layers, &mut rng)
-    };
+    let dense: usize = total_bytes(CompSpec::Id.build_layers(shapes), &layers, &mut rng);
     specs
         .iter()
         .map(|spec| {
-            let cs =
-                crate::opt::layer_compressors(spec, shapes).map_err(anyhow::Error::msg)?;
-            let bytes = total_bytes(cs, &layers, &mut Rng::new(42));
+            let bytes = total_bytes(spec.build_layers(shapes), &layers, &mut Rng::new(42));
             Ok(CostRow {
-                spec: spec.to_string(),
+                spec: spec.spec(),
                 bytes_per_round: bytes,
                 relative: bytes as f64 / dense as f64,
             })
@@ -118,9 +102,10 @@ pub fn table2_text(rows: &[CostRow]) -> String {
 // Bidirectional compression: the EF21-P s2w sweep (objective backend)
 // ---------------------------------------------------------------------------
 
-/// Server-compressor specs worth sweeping for the s2w direction.
-pub fn s2w_specs() -> Vec<&'static str> {
-    vec!["id", "nat", "top:0.5", "top:0.25"]
+/// Server-compressor specs worth sweeping for the s2w direction (typed
+/// table in [`crate::spec`]).
+pub fn s2w_specs() -> &'static [CompSpec] {
+    crate::spec::S2W_SPECS
 }
 
 /// One row of the bidirectional-compression comparison.
@@ -139,30 +124,34 @@ pub struct S2wRow {
 /// seeds. The paper's deployment fixes s2w to `id`; this measures what the
 /// bidirectional path buys — strictly fewer broadcast bytes at matched
 /// final loss (the scenario harness asserts the same on the threaded
-/// coordinator).
-pub fn s2w_savings(server_specs: &[&str], rounds: usize, seed: u64) -> Result<Vec<S2wRow>> {
+/// coordinator). Each run is one [`crate::spec::RunSpec`] driven through
+/// the sequential reference [`Driver`] — no hand-wired optimizer.
+pub fn s2w_savings(server_specs: &[CompSpec], rounds: usize, seed: u64) -> Result<Vec<S2wRow>> {
     let mut rows = Vec::new();
     for spec in server_specs {
         let mut rng = Rng::new(seed);
         let obj = Quadratics::new(4, 16, 0.6, 0.0, &mut rng);
         let geometry = vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }];
-        let mut opt = Ef21MuonSeq::new(
-            &obj,
-            geometry,
-            "top:0.3",
-            spec,
-            1.0,
-            Schedule::warmup_cosine(0.05, 0, rounds, 0.02),
-            false,
-            seed,
-        )
-        .map_err(anyhow::Error::msg)?;
-        let trace = opt.run(&obj, rounds);
+        let run = RunBuilder::new()
+            .steps(rounds)
+            .worker_comp(CompSpec::Top { frac: 0.3, nat: false })
+            .server_comp(spec)
+            .beta(1.0)
+            .lr(0.05)
+            .warmup(0)
+            .min_lr_frac(0.02)
+            .seed(seed)
+            .build()?;
+        let mut drv = spawn_seq_driver(&run, Box::new(obj), geometry)?;
+        for _ in 0..rounds {
+            drv.round()?;
+        }
         rows.push(S2wRow {
-            server_spec: spec.to_string(),
-            s2w_bytes: opt.total_s2w_bytes,
-            w2s_bytes: opt.total_w2s_bytes,
-            final_loss: trace.last().map(|s| s.loss).unwrap_or(f64::NAN),
+            server_spec: spec.spec(),
+            s2w_bytes: drv.s2w(),
+            w2s_bytes: drv.w2s(),
+            // full-precision, like the pre-driver sweep always reported
+            final_loss: drv.loss_f64(),
         });
     }
     Ok(rows)
@@ -250,23 +239,21 @@ pub fn shard_scaling_with(
         let geometry =
             vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; parts];
         let svc = GradService::spawn_objective(Box::new(obj), seed);
-        let mut cluster = Cluster::spawn(
-            x0,
-            geometry,
-            svc.handle(),
-            ClusterCfg {
-                shards: s,
-                workers_per_shard: workers,
-                worker_comp: "top:0.2".into(),
-                server_comp: "top:0.5".into(),
-                beta: 0.9,
-                schedule: Schedule::constant(0.02),
-                transport: TransportMode::Counted,
-                round_mode: RoundMode::Sync,
-                seed,
-                use_ns_artifact: false,
-            },
-        )?;
+        // one typed spec per shard count; warmup 0 + min_lr_frac 1.0 is
+        // exactly the constant schedule the sweep always used
+        let run = RunBuilder::new()
+            .workers(workers)
+            .shards(s)
+            .steps(rounds)
+            .worker_comp(CompSpec::Top { frac: 0.2, nat: false })
+            .server_comp(CompSpec::Top { frac: 0.5, nat: false })
+            .lr(0.02)
+            .warmup(0)
+            .min_lr_frac(1.0)
+            .seed(seed)
+            .use_ns_artifact(false)
+            .build()?;
+        let mut cluster = Cluster::spawn(x0, geometry, svc.handle(), run.cluster_cfg())?;
         for _ in 0..rounds.min(3) {
             cluster.round()?; // warmup: arenas, caches, thread ramp-up
         }
@@ -330,11 +317,13 @@ pub fn shards_text(rows: &[ShardScalingRow]) -> String {
 // ---------------------------------------------------------------------------
 
 /// Run the full compressor sweep (Figure 1 left+right, Figure 2 rows).
-pub fn figure_sweep(base: &TrainConfig, specs: &[&str]) -> Result<Vec<TrainReport>> {
+/// The sweep axis is typed ([`CompSpec`]) — each run's config carries the
+/// canonical string form, parsed back exactly once at the train boundary.
+pub fn figure_sweep(base: &TrainConfig, specs: &[CompSpec]) -> Result<Vec<TrainReport>> {
     let mut out = Vec::new();
     for spec in specs {
         let mut cfg = base.clone();
-        cfg.worker_comp = spec.to_string();
+        cfg.worker_comp = spec.spec();
         eprintln!("[fig] training with {spec} ...");
         let report = train(&cfg)?;
         eprintln!(
@@ -624,10 +613,21 @@ pub fn level_ablation(
     let shapes = manifest.layer_shapes();
     let mut out = Vec::new();
     for &lv in levels {
-        let spec = format!("{family}:{lv}");
-        let rows = table2_rows(&shapes, &[&spec])?;
+        // construct the typed descriptor directly — no string formatting
+        // round-trip through the grammar
+        let spec = match family {
+            "top" => CompSpec::Top { frac: lv, nat: false },
+            "rank" => CompSpec::Rank { frac: lv, nat: false },
+            other => {
+                return Err(anyhow::anyhow!(
+                    "level ablation supports families top | rank (got {other:?})"
+                ))
+            }
+        };
+        spec.validate().map_err(anyhow::Error::msg)?;
+        let rows = table2_rows(&shapes, &[spec])?;
         let mut cfg = base.clone();
-        cfg.worker_comp = spec.clone();
+        cfg.worker_comp = spec.spec();
         let r = train(&cfg)?;
         eprintln!("[G4] {spec}: final eval loss {:.4}", r.final_eval_loss);
         out.push((lv, r.final_eval_loss, rows[0].relative));
@@ -832,10 +832,15 @@ pub fn message_overhead(msg: &Message) -> usize {
 mod tests {
     use super::*;
 
+    /// Parse a list of spec strings (test-side boundary).
+    fn specs(list: &[&str]) -> Vec<CompSpec> {
+        list.iter().map(|s| CompSpec::parse(s).unwrap()).collect()
+    }
+
     #[test]
     fn table2_id_is_one() {
         let shapes = vec![(64, 64), (64, 256), (64, 1)];
-        let rows = table2_rows(&shapes, &["id", "nat", "top:0.1", "rank:0.1"]).unwrap();
+        let rows = table2_rows(&shapes, &specs(&["id", "nat", "top:0.1", "rank:0.1"])).unwrap();
         assert!((rows[0].relative - 1.0).abs() < 1e-12);
         // natural ~ 9/32
         assert!((rows[1].relative - 9.0 / 32.0).abs() < 0.02, "{}", rows[1].relative);
@@ -852,7 +857,7 @@ mod tests {
         let shapes = vec![(128, 384), (128, 128), (128, 512)];
         let rows = table2_rows(
             &shapes,
-            &["rank:0.15", "rank:0.15+nat", "top:0.15", "top:0.15+nat"],
+            &specs(&["rank:0.15", "rank:0.15+nat", "top:0.15", "top:0.15+nat"]),
         )
         .unwrap();
         let get = |s: &str| rows.iter().find(|r| r.spec == s).unwrap().relative;
@@ -863,7 +868,7 @@ mod tests {
 
     #[test]
     fn s2w_sweep_saves_bytes_at_matched_loss() {
-        let rows = s2w_savings(&["id", "top:0.5"], 600, 7).unwrap();
+        let rows = s2w_savings(&specs(&["id", "top:0.5"]), 600, 7).unwrap();
         let id = &rows[0];
         let top = &rows[1];
         // compressed broadcast is strictly cheaper...

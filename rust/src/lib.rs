@@ -28,6 +28,7 @@ pub mod model;
 pub mod data;
 pub mod runtime;
 pub mod dist;
+pub mod spec;
 pub mod train;
 pub mod config;
 pub mod metrics;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train            run distributed EF21-Muon pretraining on the AOT model
+//!   config           validate the resolved config, print it as canonical
+//!                    JSON (lossless round trip; presets via --preset)
 //!   eval             evaluate the loaded init params (artifact smoke test)
 //!   info             print manifest / layer table / geometry
 //!   table2           reproduce Table 2 (per-round communication cost)
@@ -38,6 +40,7 @@ fn main() {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "train" => cmd_train(args),
+        "config" => cmd_config(args),
         "eval" => cmd_eval(args),
         "info" => cmd_info(args),
         "table2" => cmd_table2(args),
@@ -65,6 +68,10 @@ COMMANDS:
                       --comp SPEC --server-comp SPEC
                       --round-mode sync|async:N --beta B --lr LR --warmup W
                       --eval-every E --seed S --log out.jsonl --full-codec
+                      --lmo-hidden|--lmo-embed|--lmo-vector NORM
+  config       resolve (--config/--preset/flags), validate eagerly with
+               field-path errors, and print the canonical JSON spec — its
+               output is itself a valid --config file (lossless round trip)
   eval         load artifacts, run one eval pass (smoke test)
   info         print the manifest: layers, shapes, groups, LMO geometry
   table2       Table 2 — per-round communication cost per compressor
@@ -81,6 +88,14 @@ COMMANDS:
 COMPRESSOR SPECS (both directions: --comp for w2s, --server-comp for s2w):
   id | nat | top:F | top:F+nat | rank:F | rank:F+nat | drop:P | damp:G
   | svdtop:K | coltop:F      (F = fraction, e.g. top:0.15+nat)
+
+PRESETS (--preset, `config`/`train`): pinned members of the algorithm
+  family — the paper's recovery claims as named configs:
+  muon | scion | gluon | ef21-muon | ef21-p
+  (e.g. `efmuon train --preset ef21-p --steps 100`; explicit flags win)
+
+LMO NORMS (--lmo-hidden / --lmo-embed / --lmo-vector):
+  spectral | sign | top1 | euclid | nuclear | colnorm
 
 ROUND MODES:
   sync      lock-step rounds (default)
@@ -100,8 +115,21 @@ fn warn_unknown(args: &Args) {
     }
 }
 
+/// Resolve the layered configuration: `--preset NAME` or `--config FILE`
+/// as the base (mutually exclusive), CLI flags winning over either.
+fn base_config(args: &Args) -> Result<TrainConfig> {
+    if let Some(p) = args.opt_str("preset") {
+        if args.opt_str("config").is_some() {
+            return Err(anyhow!("--preset and --config are mutually exclusive"));
+        }
+        let preset = efmuon::spec::Preset::parse(&p).map_err(anyhow::Error::msg)?;
+        return Ok(preset.spec().to_train_config().override_from_args(args));
+    }
+    TrainConfig::from_args(args).map_err(anyhow::Error::msg)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    let cfg = base_config(args)?;
     warn_unknown(args);
     println!(
         "training: {} workers, {} shard(s), {} steps, w2s={}, s2w={}, rounds={}, lr={}, beta={}",
@@ -128,6 +156,19 @@ fn cmd_train(args: &Args) -> Result<()> {
             p.step, p.tokens_processed, p.eval_loss
         );
     }
+    Ok(())
+}
+
+/// `efmuon config`: resolve the configuration exactly like `train` would,
+/// validate it eagerly through the typed `RunBuilder` (all errors at once,
+/// field-named), and print the canonical JSON. The output parses back
+/// identically through `--config` — the lossless `RunSpec → Json → RunSpec`
+/// round trip `scripts/verify.sh` smoke-checks.
+fn cmd_config(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    warn_unknown(args);
+    let spec = cfg.validate()?;
+    println!("{}", spec.to_json());
     Ok(())
 }
 
@@ -186,7 +227,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
             efmuon::model::micro_preset_shapes()
         }
     };
-    let rows = exp::table2_rows(&shapes, &exp::paper_compressor_specs())?;
+    let rows = exp::table2_rows(&shapes, exp::paper_compressor_specs())?;
     println!("{}", exp::table2_text(&rows));
     Ok(())
 }
@@ -203,7 +244,7 @@ fn cmd_s2w(args: &Args) -> Result<()> {
     let rounds = args.usize("rounds", 600);
     let seed = args.u64("seed", 7);
     warn_unknown(args);
-    let rows = exp::s2w_savings(&exp::s2w_specs(), rounds, seed)?;
+    let rows = exp::s2w_savings(exp::s2w_specs(), rounds, seed)?;
     println!("{}", exp::s2w_text(&rows));
     Ok(())
 }
@@ -227,10 +268,10 @@ fn cmd_shards(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    let cfg = TrainConfig::from_args(args).map_err(anyhow::Error::msg)?;
+    let cfg = base_config(args)?;
     let target = args.f64("target", 0.0) as f32;
     warn_unknown(args);
-    let reports = exp::figure_sweep(&cfg, &exp::figure_specs())?;
+    let reports = exp::figure_sweep(&cfg, exp::figure_specs())?;
     println!("== Figure 1 (left): eval loss vs tokens ==");
     for (spec, tokens, loss) in exp::fig1_left_rows(&reports) {
         println!("{spec:>16} {tokens:>12} {loss:.4}");

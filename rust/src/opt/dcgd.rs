@@ -9,6 +9,7 @@
 use crate::compress::Compressor;
 use crate::funcs::Objective;
 use crate::linalg::matrix::{layers, Layers};
+use crate::spec::IntoCompSpec;
 use crate::util::rng::Rng;
 
 /// Distributed compressed GD with NO error feedback.
@@ -19,11 +20,17 @@ pub struct NaiveDcgd {
 }
 
 impl NaiveDcgd {
-    pub fn new(obj: &dyn Objective, spec: &str, lr: f64, seed: u64) -> Result<Self, String> {
+    pub fn new(
+        obj: &dyn Objective,
+        spec: impl IntoCompSpec,
+        lr: f64,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let spec = spec.into_comp_spec()?;
         let shapes = obj.layer_shapes();
         let compressors = (0..obj.num_workers())
-            .map(|_| crate::opt::layer_compressors(spec, &shapes))
-            .collect::<Result<Vec<_>, _>>()?;
+            .map(|_| spec.build_layers(&shapes))
+            .collect();
         Ok(NaiveDcgd { lr, compressors, rng: Rng::new(seed) })
     }
 
@@ -54,7 +61,13 @@ pub struct Ef14 {
 }
 
 impl Ef14 {
-    pub fn new(obj: &dyn Objective, spec: &str, lr: f64, seed: u64) -> Result<Self, String> {
+    pub fn new(
+        obj: &dyn Objective,
+        spec: impl IntoCompSpec,
+        lr: f64,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let spec = spec.into_comp_spec()?;
         let shapes = obj.layer_shapes();
         let n = obj.num_workers();
         let zeros: Layers = shapes
@@ -63,9 +76,7 @@ impl Ef14 {
             .collect();
         Ok(Ef14 {
             lr,
-            compressors: (0..n)
-                .map(|_| crate::opt::layer_compressors(spec, &shapes))
-                .collect::<Result<Vec<_>, _>>()?,
+            compressors: (0..n).map(|_| spec.build_layers(&shapes)).collect(),
             errors: vec![zeros; n],
             rng: Rng::new(seed),
         })

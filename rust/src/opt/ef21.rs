@@ -31,7 +31,8 @@ use crate::funcs::Objective;
 use crate::linalg::matrix::{layers, Layers, Matrix};
 use crate::linalg::workspace::Workspace;
 use crate::lmo::{Lmo, LmoKind, SpectralEngine};
-use crate::opt::{layer_compressors, LayerGeometry, Schedule};
+use crate::opt::{LayerGeometry, Schedule};
+use crate::spec::{CompSpec, IntoCompSpec};
 use crate::util::rng::Rng;
 
 /// Layer collections below this total element count run the LMO pass
@@ -65,16 +66,16 @@ impl ServerState {
     pub fn new(
         x0: Layers,
         geometry: Vec<LayerGeometry>,
-        server_spec: &str,
+        server_spec: &CompSpec,
         n_workers: usize,
         seed: u64,
-    ) -> Result<Self, String> {
+    ) -> Self {
         let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
-        let compressors = layer_compressors(server_spec, &shapes)?;
+        let compressors = server_spec.build_layers(&shapes);
         let lmos = geometry.iter().map(|g| g.lmo_for()).collect();
         let agg = layers::zeros_like(&x0);
         let lanes = crate::util::threads::num_threads().max(1);
-        Ok(ServerState {
+        ServerState {
             w: x0.clone(),
             g: layers::zeros_like(&x0),
             x: x0,
@@ -85,7 +86,7 @@ impl ServerState {
             rng: Rng::with_stream(seed, 0x5e7),
             agg,
             ws: (0..lanes).map(|_| Workspace::new()).collect(),
-        })
+        }
     }
 
     /// Override the initial gradient estimator G⁰ (the theory initializes
@@ -228,24 +229,18 @@ pub struct WorkerState {
 }
 
 impl WorkerState {
-    pub fn new(
-        id: usize,
-        x0: &Layers,
-        worker_spec: &str,
-        beta: f32,
-        seed: u64,
-    ) -> Result<Self, String> {
+    pub fn new(id: usize, x0: &Layers, worker_spec: &CompSpec, beta: f32, seed: u64) -> Self {
         let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
-        Ok(WorkerState {
+        WorkerState {
             id,
             w: x0.clone(),
             m: layers::zeros_like(x0),
             g: layers::zeros_like(x0),
             beta,
-            compressors: layer_compressors(worker_spec, &shapes)?,
+            compressors: worker_spec.build_layers(&shapes),
             rng: Rng::with_stream(seed, 0x1000 + id as u64),
             ws: Workspace::new(),
-        })
+        }
     }
 
     /// Initialization per the theorems: M⁰ⱼ = G⁰ⱼ = ∇fⱼ(X⁰;ξ⁰). Returns the
@@ -309,25 +304,30 @@ pub struct Ef21MuonSeq {
 }
 
 impl Ef21MuonSeq {
+    /// Build the sequential driver. The compressor arguments accept either
+    /// typed [`CompSpec`] descriptors or spec strings — strings are parsed
+    /// exactly once here (the [`IntoCompSpec`] boundary), never per layer.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         obj: &dyn Objective,
         geometry: Vec<LayerGeometry>,
-        worker_spec: &str,
-        server_spec: &str,
+        worker_spec: impl IntoCompSpec,
+        server_spec: impl IntoCompSpec,
         beta: f32,
         schedule: Schedule,
         stochastic: bool,
         seed: u64,
     ) -> Result<Self, String> {
+        let worker_spec = worker_spec.into_comp_spec()?;
+        let server_spec = server_spec.into_comp_spec()?;
         let mut rng = Rng::new(seed);
         let x0 = obj.init(&mut rng);
         let n = obj.num_workers();
-        let mut server = ServerState::new(x0.clone(), geometry, server_spec, n, seed)?;
+        let mut server = ServerState::new(x0.clone(), geometry, &server_spec, n, seed);
         let mut workers = Vec::with_capacity(n);
         let mut g0_avg = layers::zeros_like(&x0);
         for j in 0..n {
-            let mut wkr = WorkerState::new(j, &x0, worker_spec, beta, seed)?;
+            let mut wkr = WorkerState::new(j, &x0, &worker_spec, beta, seed);
             let grad0 = if stochastic {
                 obj.stoch_grad_j(j, &x0, &mut wkr.rng)
             } else {

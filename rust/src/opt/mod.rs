@@ -6,7 +6,6 @@ pub mod ef21;
 pub mod baselines;
 pub mod dcgd;
 
-use crate::compress::{parse_spec, Compressor};
 use crate::lmo::{Lmo, LmoKind};
 
 /// Per-layer optimizer geometry: which LMO ball, and a relative radius
@@ -22,33 +21,6 @@ impl LayerGeometry {
     pub fn lmo_for(&self) -> Lmo {
         Lmo::new(self.lmo)
     }
-}
-
-/// Build one compressor instance per layer from a spec string, degrading
-/// gracefully on degenerate shapes: RankK on an effectively-1D layer
-/// (LayerNorm gain, single row/column) is no cheaper than dense, so those
-/// layers fall back to TopK at the same fraction — mirroring how the
-/// paper's DDP implementation only low-ranks genuine matrices.
-pub fn layer_compressors(
-    spec: &str,
-    shapes: &[(usize, usize)],
-) -> Result<Vec<Box<dyn Compressor>>, String> {
-    shapes
-        .iter()
-        .map(|&(m, n)| {
-            let is_rank = spec.starts_with("rank:");
-            if is_rank && m.min(n) <= 2 {
-                let frac = spec
-                    .trim_start_matches("rank:")
-                    .trim_end_matches("+nat")
-                    .to_string();
-                let nat = spec.ends_with("+nat");
-                parse_spec(&format!("top:{frac}{}", if nat { "+nat" } else { "" }))
-            } else {
-                parse_spec(spec)
-            }
-        })
-        .collect()
 }
 
 /// Learning-rate / radius schedule (nanoGPT-style warmup + cosine decay,
@@ -118,13 +90,7 @@ mod tests {
         assert_eq!(c.at(1000), 0.5);
     }
 
-    #[test]
-    fn compressor_fallback_for_vectors() {
-        let shapes = vec![(64, 64), (64, 1)];
-        let cs = layer_compressors("rank:0.1+nat", &shapes).unwrap();
-        assert_eq!(cs[0].name(), "rank:0.1+nat");
-        assert_eq!(cs[1].name(), "top:0.1+nat");
-        let cs = layer_compressors("top:0.2", &shapes).unwrap();
-        assert_eq!(cs[1].name(), "top:0.2");
-    }
+    // NOTE: the per-layer compressor construction (and its degenerate-shape
+    // fallback, locked by `compressor_fallback_for_vectors`) moved to the
+    // typed `crate::spec::CompSpec` — see `spec::comp` and its tests.
 }

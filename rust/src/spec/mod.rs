@@ -1,0 +1,49 @@
+//! Typed run specification: parse-once algorithm descriptors, presets that
+//! recover Muon/Scion/Gluon, and the unified run builder.
+//!
+//! The paper's family is ONE algorithm parameterized by (per-layer LMO
+//! norm, w2s/s2w compressor pair, momentum, schedule). This module is the
+//! typed form of that parameterization and the only place configuration
+//! strings are parsed:
+//!
+//! ```text
+//!   CLI flags / JSON  ──►  config::TrainConfig      (strings — the facade)
+//!                               │  RunBuilder::from_config   (parse ONCE)
+//!                               ▼
+//!   Preset::{Muon,…} ──►  spec::RunSpec             (typed, validated)
+//!          builder overrides    │  train::spawn_driver
+//!                               ▼
+//!          Coordinator / Cluster / Ef21MuonSeq  behind train::Driver
+//! ```
+//!
+//! - [`CompSpec`] — the compressor descriptor. Parsed once, cloned per
+//!   layer; the RankK→TopK degenerate-shape fallback is typed logic
+//!   ([`CompSpec::for_shape`]) instead of string splicing.
+//! - [`RoundSpec`] — round scheduling (re-export of [`crate::dist::RoundMode`],
+//!   the one canonical enum; its string grammar is only invoked here and in
+//!   tests).
+//! - [`GeomSpec`] / [`SchedulePlan`] — per-group norm/radius choices and
+//!   the schedule descriptor.
+//! - [`RunSpec`] / [`RunBuilder`] — the whole run, validated eagerly with
+//!   field-path error messages ([`SpecError`]); JSON round-trips losslessly.
+//! - [`Preset`] — named members of the family (Muon, Scion, Gluon,
+//!   EF21-Muon, EF21-P), golden-tested against their legacy string configs.
+//!
+//! Sweep tables ([`PAPER_COMPRESSOR_SPECS`], [`FIGURE_SPECS`],
+//! [`S2W_SPECS`]) live here too, typed and `const`, so `exp` sweeps and
+//! Table-2 rows cannot drift from what the train path accepts.
+#![deny(clippy::wildcard_enum_match_arm, clippy::too_many_arguments)]
+
+mod comp;
+mod preset;
+mod run;
+
+pub use comp::{CompSpec, IntoCompSpec, FIGURE_SPECS, PAPER_COMPRESSOR_SPECS, S2W_SPECS};
+pub use preset::Preset;
+pub use run::{lmo_name, parse_lmo, FieldError, GeomSpec, RunBuilder, RunSpec, SchedulePlan, SpecError};
+
+/// Round scheduling descriptor. [`crate::dist::RoundMode`] is already a
+/// parsed, validated value type; the spec layer re-exports it as the
+/// canonical name so every descriptor a [`RunSpec`] carries is importable
+/// from one place.
+pub use crate::dist::RoundMode as RoundSpec;

@@ -1,0 +1,717 @@
+//! `RunSpec` — the fully-typed, validated description of one run — and
+//! `RunBuilder`, the single place a configuration is checked and turned
+//! into a deployment.
+//!
+//! `config::TrainConfig` remains the serialization facade (CLI flags and
+//! JSON files, all strings); [`RunBuilder::from_config`] parses each string
+//! field exactly once into the typed form and [`RunBuilder::build`]
+//! validates everything eagerly, reporting *all* problems with field-path
+//! messages instead of panicking mid-run. `RunSpec::to_json` →
+//! `RunSpec::from_json` is a lossless round trip (asserted in
+//! `rust/tests/spec_api.rs`).
+
+use crate::config::TrainConfig;
+use crate::dist::cluster::ClusterCfg;
+use crate::dist::coordinator::CoordinatorCfg;
+use crate::dist::{RoundMode, TransportMode};
+use crate::lmo::LmoKind;
+use crate::model::Group;
+use crate::opt::{LayerGeometry, Schedule};
+use crate::util::json::{Json, JsonObj};
+
+use super::comp::CompSpec;
+
+// ---------------------------------------------------------------------------
+// Field-path errors
+// ---------------------------------------------------------------------------
+
+/// One invalid configuration field: the field path plus what is wrong.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FieldError {
+    pub path: String,
+    pub msg: String,
+}
+
+/// Eager validation error: every invalid field of the spec, collected in
+/// one pass so a config with three typos reports all three at build time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    pub fields: Vec<FieldError>,
+}
+
+impl SpecError {
+    fn new() -> SpecError {
+        SpecError { fields: Vec::new() }
+    }
+
+    fn push(&mut self, path: &str, msg: impl Into<String>) {
+        self.fields.push(FieldError { path: path.to_string(), msg: msg.into() });
+    }
+
+    /// True when `path` is among the offending fields (test helper).
+    pub fn mentions(&self, path: &str) -> bool {
+        self.fields.iter().any(|f| f.path == path)
+    }
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid run spec: ")?;
+        for (i, e) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{}: {}", e.path, e.msg)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ---------------------------------------------------------------------------
+// LmoKind names (the serialization form of the per-group norm choice)
+// ---------------------------------------------------------------------------
+
+/// Canonical name of an LMO ball (round-trips through [`parse_lmo`]).
+pub fn lmo_name(kind: LmoKind) -> &'static str {
+    match kind {
+        LmoKind::Spectral => "spectral",
+        LmoKind::SignLInf => "sign",
+        LmoKind::L1Top1 => "top1",
+        LmoKind::Euclidean => "euclid",
+        LmoKind::NuclearRank1 => "nuclear",
+        LmoKind::ColNorm => "colnorm",
+    }
+}
+
+/// Parse an LMO ball name (see [`lmo_name`]).
+pub fn parse_lmo(s: &str) -> Result<LmoKind, String> {
+    match s {
+        "spectral" => Ok(LmoKind::Spectral),
+        "sign" => Ok(LmoKind::SignLInf),
+        "top1" => Ok(LmoKind::L1Top1),
+        "euclid" => Ok(LmoKind::Euclidean),
+        "nuclear" => Ok(LmoKind::NuclearRank1),
+        "colnorm" => Ok(LmoKind::ColNorm),
+        other => Err(format!(
+            "unknown LMO {other:?} (expected spectral | sign | top1 | euclid | nuclear | colnorm)"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GeomSpec — the per-group norm/radius parameterization (Gluon's knob)
+// ---------------------------------------------------------------------------
+
+/// Per-group optimizer geometry: which LMO ball each parameter group uses
+/// and the relative radius multipliers on top of the global schedule. This
+/// is the layer-wise parameterization Gluon formalizes — the presets pin it
+/// to recover Muon/Scion (see [`super::Preset`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeomSpec {
+    /// 2-D matmul weights. Paper assignment: spectral (Muon).
+    pub hidden: LmoKind,
+    /// Embeddings / tied output head. Paper assignment: ℓ∞ sign (Scion).
+    pub embed: LmoKind,
+    /// LayerNorm gains. Paper assignment: ℓ∞ sign at a small radius.
+    pub vector: LmoKind,
+    /// Radius multiplier for the embed group.
+    pub embed_mult: f32,
+    /// Radius multiplier for the vector group (the group's base multiplier
+    /// is 0.1; the default reproduces it exactly).
+    pub vector_mult: f32,
+}
+
+impl Default for GeomSpec {
+    /// The paper's assignment (`model::Group::geometry` + the historical
+    /// `TrainConfig` multiplier defaults).
+    fn default() -> GeomSpec {
+        GeomSpec {
+            hidden: LmoKind::Spectral,
+            embed: LmoKind::SignLInf,
+            vector: LmoKind::SignLInf,
+            embed_mult: 1.0,
+            vector_mult: 0.1,
+        }
+    }
+}
+
+impl GeomSpec {
+    /// Per-layer geometry for a model's group assignment. The radius
+    /// arithmetic is bit-identical to the historical `train::geometry_for`
+    /// (base group multiplier composed with the config multiplier), so
+    /// existing trajectories are unchanged.
+    pub fn for_groups<I: IntoIterator<Item = Group>>(&self, groups: I) -> Vec<LayerGeometry> {
+        groups
+            .into_iter()
+            .map(|group| {
+                let mut g = group.geometry();
+                match group {
+                    Group::Hidden => g.lmo = self.hidden,
+                    Group::Embed => {
+                        g.lmo = self.embed;
+                        g.radius_mult *= self.embed_mult;
+                    }
+                    Group::Vector => {
+                        g.lmo = self.vector;
+                        // base is already 0.1 (Group::geometry)
+                        g.radius_mult *= self.vector_mult / 0.1;
+                    }
+                }
+                g
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SchedulePlan — the schedule descriptor (materialized once steps are known)
+// ---------------------------------------------------------------------------
+
+/// Descriptor of the nanoGPT-style warmup+cosine radius schedule. A plan is
+/// independent of the run length; [`SchedulePlan::materialize`] pins it to
+/// a total step count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulePlan {
+    /// Base radius / learning rate for hidden layers.
+    pub lr: f64,
+    /// Warmup steps.
+    pub warmup: usize,
+    /// Final LR fraction of the cosine decay.
+    pub min_lr_frac: f64,
+}
+
+impl SchedulePlan {
+    pub fn materialize(&self, total_steps: usize) -> Schedule {
+        Schedule::warmup_cosine(self.lr, self.warmup, total_steps, self.min_lr_frac)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunSpec
+// ---------------------------------------------------------------------------
+
+/// Fully-typed description of one training run: every compressor, norm and
+/// schedule choice parsed and validated exactly once. Constructed by
+/// [`RunBuilder`] (from a `TrainConfig`, a [`super::Preset`], or typed
+/// setters); consumed by `train::train_spec` and the driver factory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Directory with `manifest.json` + HLO artifacts.
+    pub artifacts: String,
+    /// Number of workers `n` (per shard).
+    pub workers: usize,
+    /// Shard coordinators the model's layers are partitioned across.
+    pub shards: usize,
+    /// Optimizer steps.
+    pub steps: usize,
+    /// Worker (w2s) compressor.
+    pub worker_comp: CompSpec,
+    /// Server (s2w) compressor for the EF21-P broadcast.
+    pub server_comp: CompSpec,
+    /// Round scheduling (sync or bounded pipeline).
+    pub round: RoundMode,
+    /// Momentum β.
+    pub beta: f32,
+    /// Radius schedule descriptor.
+    pub schedule: SchedulePlan,
+    /// Per-group norm/radius geometry.
+    pub geom: GeomSpec,
+    /// Synthetic corpus size in tokens.
+    pub corpus_tokens: usize,
+    /// Evaluate every `eval_every` steps.
+    pub eval_every: usize,
+    /// Number of held-out eval batches.
+    pub eval_batches: usize,
+    /// Use the PJRT NS artifact for spectral LMOs when a shape matches.
+    pub use_ns_artifact: bool,
+    /// Run the real wire codec on every message.
+    pub full_codec: bool,
+    pub seed: u64,
+    /// Optional JSONL metrics path.
+    pub log_path: Option<String>,
+}
+
+impl Default for RunSpec {
+    /// Mirrors `TrainConfig::default()` field for field.
+    fn default() -> RunSpec {
+        RunSpec {
+            artifacts: "artifacts".into(),
+            workers: 4,
+            shards: 1,
+            steps: 200,
+            worker_comp: CompSpec::Id,
+            server_comp: CompSpec::Id,
+            round: RoundMode::Sync,
+            beta: 0.9,
+            schedule: SchedulePlan { lr: 0.02, warmup: 20, min_lr_frac: 0.1 },
+            geom: GeomSpec::default(),
+            corpus_tokens: 2_000_000,
+            eval_every: 25,
+            eval_batches: 4,
+            use_ns_artifact: true,
+            full_codec: false,
+            seed: 0,
+            log_path: None,
+        }
+    }
+}
+
+impl RunSpec {
+    /// Transport implied by `full_codec`.
+    pub fn transport(&self) -> TransportMode {
+        if self.full_codec {
+            TransportMode::Encoded
+        } else {
+            TransportMode::Counted
+        }
+    }
+
+    /// The schedule, materialized over this run's step count.
+    pub fn schedule(&self) -> Schedule {
+        self.schedule.materialize(self.steps)
+    }
+
+    /// The single-leader deployment config this spec describes.
+    pub fn coordinator_cfg(&self) -> CoordinatorCfg {
+        CoordinatorCfg {
+            n_workers: self.workers,
+            worker_comp: self.worker_comp,
+            server_comp: self.server_comp,
+            beta: self.beta,
+            schedule: self.schedule(),
+            transport: self.transport(),
+            round_mode: self.round,
+            seed: self.seed,
+            use_ns_artifact: self.use_ns_artifact,
+        }
+    }
+
+    /// The sharded deployment config this spec describes.
+    pub fn cluster_cfg(&self) -> ClusterCfg {
+        ClusterCfg {
+            shards: self.shards,
+            workers_per_shard: self.workers,
+            worker_comp: self.worker_comp,
+            server_comp: self.server_comp,
+            beta: self.beta,
+            schedule: self.schedule(),
+            transport: self.transport(),
+            round_mode: self.round,
+            seed: self.seed,
+            use_ns_artifact: self.use_ns_artifact,
+        }
+    }
+
+    /// The string-level facade form (CLI/JSON). Lossless: every `RunSpec`
+    /// field has a `TrainConfig` representation, and
+    /// `RunBuilder::from_config(&spec.to_train_config())` rebuilds an equal
+    /// spec (asserted in tests).
+    pub fn to_train_config(&self) -> TrainConfig {
+        TrainConfig {
+            artifacts: self.artifacts.clone(),
+            workers: self.workers,
+            shards: self.shards,
+            steps: self.steps,
+            worker_comp: self.worker_comp.spec(),
+            server_comp: self.server_comp.spec(),
+            round_mode: self.round.spec(),
+            lmo_hidden: lmo_name(self.geom.hidden).to_string(),
+            lmo_embed: lmo_name(self.geom.embed).to_string(),
+            lmo_vector: lmo_name(self.geom.vector).to_string(),
+            beta: self.beta,
+            lr: self.schedule.lr,
+            embed_mult: self.geom.embed_mult,
+            vector_mult: self.geom.vector_mult,
+            warmup: self.schedule.warmup,
+            min_lr_frac: self.schedule.min_lr_frac,
+            corpus_tokens: self.corpus_tokens,
+            eval_every: self.eval_every,
+            eval_batches: self.eval_batches,
+            use_ns_artifact: self.use_ns_artifact,
+            full_codec: self.full_codec,
+            seed: self.seed,
+            log_path: self.log_path.clone(),
+        }
+    }
+
+    /// Canonical JSON form — exactly the `TrainConfig` key set, so the
+    /// output is a valid `--config` file (`efmuon config` round-trips
+    /// through this; see `scripts/verify.sh`).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new()
+            .put("artifacts", self.artifacts.as_str())
+            .put("workers", self.workers)
+            .put("shards", self.shards)
+            .put("steps", self.steps)
+            .put("worker_comp", self.worker_comp.spec())
+            .put("server_comp", self.server_comp.spec())
+            .put("round_mode", self.round.spec())
+            .put("lmo_hidden", lmo_name(self.geom.hidden))
+            .put("lmo_embed", lmo_name(self.geom.embed))
+            .put("lmo_vector", lmo_name(self.geom.vector))
+            .put("beta", self.beta)
+            .put("lr", self.schedule.lr)
+            .put("embed_mult", self.geom.embed_mult)
+            .put("vector_mult", self.geom.vector_mult)
+            .put("warmup", self.schedule.warmup)
+            .put("min_lr_frac", self.schedule.min_lr_frac)
+            .put("corpus_tokens", self.corpus_tokens)
+            .put("eval_every", self.eval_every)
+            .put("eval_batches", self.eval_batches)
+            .put("use_ns_artifact", self.use_ns_artifact)
+            .put("full_codec", self.full_codec)
+            .put("seed", self.seed);
+        if let Some(p) = &self.log_path {
+            o = o.put("log_path", p.as_str());
+        }
+        o.build()
+    }
+
+    /// Parse the form emitted by [`RunSpec::to_json`] (any valid
+    /// `TrainConfig` JSON, i.e. any `--config` file): the strings are
+    /// parsed once and the result fully validated.
+    pub fn from_json(text: &str) -> Result<RunSpec, SpecError> {
+        let cfg = TrainConfig::from_json(text).map_err(|e| {
+            let mut err = SpecError::new();
+            err.push("config", e);
+            err
+        })?;
+        RunBuilder::from_config(&cfg).build()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunBuilder
+// ---------------------------------------------------------------------------
+
+/// Builder for a validated [`RunSpec`]. String fields are parsed the moment
+/// they enter ([`RunBuilder::from_config`]); [`RunBuilder::build`] then
+/// validates every numeric invariant and reports *all* failures as one
+/// [`SpecError`] with field-path messages — a bad config can never make it
+/// into a running deployment.
+#[derive(Debug, Clone)]
+pub struct RunBuilder {
+    spec: RunSpec,
+    errors: Vec<FieldError>,
+}
+
+impl Default for RunBuilder {
+    fn default() -> Self {
+        RunBuilder::new()
+    }
+}
+
+impl RunBuilder {
+    /// Start from the default spec (equivalent to `TrainConfig::default()`).
+    pub fn new() -> RunBuilder {
+        RunBuilder { spec: RunSpec::default(), errors: Vec::new() }
+    }
+
+    /// Start from an existing typed spec.
+    pub fn from_spec(spec: RunSpec) -> RunBuilder {
+        RunBuilder { spec, errors: Vec::new() }
+    }
+
+    /// Start from a named preset (see [`super::Preset`]).
+    pub fn preset(p: super::Preset) -> RunBuilder {
+        RunBuilder::from_spec(p.spec())
+    }
+
+    /// Parse a string-level `TrainConfig` — each spec string exactly once.
+    /// Parse failures are recorded with their field path and surface at
+    /// [`RunBuilder::build`] alongside any numeric validation errors.
+    pub fn from_config(cfg: &TrainConfig) -> RunBuilder {
+        let mut b = RunBuilder::new();
+        b.spec.artifacts = cfg.artifacts.clone();
+        b.spec.workers = cfg.workers;
+        b.spec.shards = cfg.shards;
+        b.spec.steps = cfg.steps;
+        match CompSpec::parse(&cfg.worker_comp) {
+            Ok(c) => b.spec.worker_comp = c,
+            Err(e) => b.err("worker_comp", e),
+        }
+        match CompSpec::parse(&cfg.server_comp) {
+            Ok(c) => b.spec.server_comp = c,
+            Err(e) => b.err("server_comp", e),
+        }
+        match RoundMode::parse(&cfg.round_mode) {
+            Ok(r) => b.spec.round = r,
+            Err(e) => b.err("round_mode", e),
+        }
+        match parse_lmo(&cfg.lmo_hidden) {
+            Ok(k) => b.spec.geom.hidden = k,
+            Err(e) => b.err("lmo_hidden", e),
+        }
+        match parse_lmo(&cfg.lmo_embed) {
+            Ok(k) => b.spec.geom.embed = k,
+            Err(e) => b.err("lmo_embed", e),
+        }
+        match parse_lmo(&cfg.lmo_vector) {
+            Ok(k) => b.spec.geom.vector = k,
+            Err(e) => b.err("lmo_vector", e),
+        }
+        b.spec.beta = cfg.beta;
+        b.spec.schedule =
+            SchedulePlan { lr: cfg.lr, warmup: cfg.warmup, min_lr_frac: cfg.min_lr_frac };
+        b.spec.geom.embed_mult = cfg.embed_mult;
+        b.spec.geom.vector_mult = cfg.vector_mult;
+        b.spec.corpus_tokens = cfg.corpus_tokens;
+        b.spec.eval_every = cfg.eval_every;
+        b.spec.eval_batches = cfg.eval_batches;
+        b.spec.use_ns_artifact = cfg.use_ns_artifact;
+        b.spec.full_codec = cfg.full_codec;
+        b.spec.seed = cfg.seed;
+        b.spec.log_path = cfg.log_path.clone();
+        b
+    }
+
+    fn err(&mut self, path: &str, msg: impl Into<String>) {
+        self.errors.push(FieldError { path: path.to_string(), msg: msg.into() });
+    }
+
+    // -- typed setters (fluent) --------------------------------------------
+
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.spec.artifacts = dir.into();
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.spec.workers = n;
+        self
+    }
+
+    pub fn shards(mut self, s: usize) -> Self {
+        self.spec.shards = s;
+        self
+    }
+
+    pub fn steps(mut self, k: usize) -> Self {
+        self.spec.steps = k;
+        self
+    }
+
+    /// Worker (w2s) compressor — typed descriptor or spec string, parsed
+    /// here if needed (errors surface at `build`).
+    pub fn worker_comp(mut self, c: impl super::IntoCompSpec) -> Self {
+        match c.into_comp_spec() {
+            Ok(c) => self.spec.worker_comp = c,
+            Err(e) => self.err("worker_comp", e),
+        }
+        self
+    }
+
+    /// Server (s2w) compressor — typed descriptor or spec string.
+    pub fn server_comp(mut self, c: impl super::IntoCompSpec) -> Self {
+        match c.into_comp_spec() {
+            Ok(c) => self.spec.server_comp = c,
+            Err(e) => self.err("server_comp", e),
+        }
+        self
+    }
+
+    pub fn round(mut self, r: RoundMode) -> Self {
+        self.spec.round = r;
+        self
+    }
+
+    pub fn beta(mut self, beta: f32) -> Self {
+        self.spec.beta = beta;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.spec.schedule.lr = lr;
+        self
+    }
+
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.spec.schedule.warmup = warmup;
+        self
+    }
+
+    pub fn min_lr_frac(mut self, frac: f64) -> Self {
+        self.spec.schedule.min_lr_frac = frac;
+        self
+    }
+
+    pub fn geom(mut self, geom: GeomSpec) -> Self {
+        self.spec.geom = geom;
+        self
+    }
+
+    pub fn corpus_tokens(mut self, t: usize) -> Self {
+        self.spec.corpus_tokens = t;
+        self
+    }
+
+    pub fn eval_every(mut self, e: usize) -> Self {
+        self.spec.eval_every = e;
+        self
+    }
+
+    pub fn eval_batches(mut self, e: usize) -> Self {
+        self.spec.eval_batches = e;
+        self
+    }
+
+    pub fn use_ns_artifact(mut self, on: bool) -> Self {
+        self.spec.use_ns_artifact = on;
+        self
+    }
+
+    pub fn full_codec(mut self, on: bool) -> Self {
+        self.spec.full_codec = on;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    pub fn log_path(mut self, p: impl Into<String>) -> Self {
+        self.spec.log_path = Some(p.into());
+        self
+    }
+
+    /// Validate everything and return the spec, or *every* problem found.
+    pub fn build(self) -> Result<RunSpec, SpecError> {
+        let RunBuilder { spec, errors } = self;
+        let mut err = SpecError { fields: errors };
+        if spec.workers == 0 {
+            err.push("workers", "must be >= 1 (got 0)");
+        }
+        if spec.shards == 0 {
+            err.push(
+                "shards",
+                "must be >= 1 (got 0); use shards=1 for the single-leader deployment",
+            );
+        }
+        if spec.steps == 0 {
+            err.push("steps", "must be >= 1 (got 0)");
+        }
+        if spec.eval_every == 0 {
+            err.push("eval_every", "must be >= 1 (got 0)");
+        }
+        if spec.eval_batches == 0 {
+            err.push("eval_batches", "must be >= 1 (got 0)");
+        }
+        if spec.corpus_tokens == 0 {
+            // the full bound (corpus >= workers * seq_len) needs the
+            // manifest; reject the certain failure here, the rest at load
+            err.push("corpus_tokens", "must be >= 1 (got 0)");
+        }
+        if !(0.0..=1.0).contains(&spec.schedule.min_lr_frac) {
+            err.push(
+                "min_lr_frac",
+                format!("must be in [0, 1] (got {})", spec.schedule.min_lr_frac),
+            );
+        }
+        if !spec.schedule.lr.is_finite() || spec.schedule.lr <= 0.0 {
+            err.push("lr", format!("must be a finite positive radius (got {})", spec.schedule.lr));
+        }
+        if !(spec.beta > 0.0 && spec.beta <= 1.0) {
+            err.push("beta", format!("momentum must be in (0, 1] (got {})", spec.beta));
+        }
+        if let Err(e) = spec.worker_comp.validate() {
+            err.push("worker_comp", e);
+        }
+        if let Err(e) = spec.server_comp.validate() {
+            err.push("server_comp", e);
+        }
+        if spec.round.lookahead() > RoundMode::MAX_LOOKAHEAD {
+            err.push(
+                "round_mode",
+                format!("lookahead exceeds the max of {}", RoundMode::MAX_LOOKAHEAD),
+            );
+        }
+        if err.fields.is_empty() {
+            Ok(spec)
+        } else {
+            Err(err)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_matches_default_config() {
+        let from_cfg = RunBuilder::from_config(&TrainConfig::default()).build().unwrap();
+        assert_eq!(from_cfg, RunSpec::default());
+    }
+
+    #[test]
+    fn build_collects_every_error_with_field_paths() {
+        let cfg = TrainConfig {
+            workers: 0,
+            steps: 0,
+            eval_every: 0,
+            min_lr_frac: 1.5,
+            worker_comp: "top:0".into(),
+            round_mode: "later".into(),
+            ..TrainConfig::default()
+        };
+        let err = RunBuilder::from_config(&cfg).build().unwrap_err();
+        for path in ["workers", "steps", "eval_every", "min_lr_frac", "worker_comp", "round_mode"] {
+            assert!(err.mentions(path), "missing {path} in {err}");
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("workers: must be >= 1"), "{msg}");
+        assert!(msg.contains("min_lr_frac: must be in [0, 1]"), "{msg}");
+    }
+
+    #[test]
+    fn builder_setters_parse_strings_once() {
+        let spec = RunBuilder::new()
+            .workers(2)
+            .steps(5)
+            .worker_comp("top:0.3+nat")
+            .server_comp(CompSpec::Natural)
+            .round(RoundMode::Async { lookahead: 2 })
+            .build()
+            .unwrap();
+        assert_eq!(spec.worker_comp, CompSpec::Top { frac: 0.3, nat: true });
+        assert_eq!(spec.server_comp, CompSpec::Natural);
+        let err = RunBuilder::new().worker_comp("bogus").build().unwrap_err();
+        assert!(err.mentions("worker_comp"), "{err}");
+    }
+
+    #[test]
+    fn geom_reproduces_legacy_radius_arithmetic() {
+        let geom = GeomSpec::default();
+        let g = geom.for_groups([Group::Hidden, Group::Embed, Group::Vector]);
+        assert_eq!(g[0].lmo, LmoKind::Spectral);
+        assert_eq!(g[0].radius_mult, 1.0);
+        assert_eq!(g[1].lmo, LmoKind::SignLInf);
+        assert_eq!(g[1].radius_mult, 1.0);
+        assert_eq!(g[2].lmo, LmoKind::SignLInf);
+        // the legacy formula: 0.1 (group base) * (vector_mult / 0.1)
+        assert_eq!(g[2].radius_mult, 0.1 * (0.1 / 0.1));
+        // overrides flow through
+        let custom = GeomSpec { embed: LmoKind::Euclidean, embed_mult: 2.0, ..geom };
+        let g = custom.for_groups([Group::Embed]);
+        assert_eq!(g[0].lmo, LmoKind::Euclidean);
+        assert_eq!(g[0].radius_mult, 2.0);
+    }
+
+    #[test]
+    fn lmo_names_roundtrip() {
+        for k in [
+            LmoKind::Spectral,
+            LmoKind::SignLInf,
+            LmoKind::L1Top1,
+            LmoKind::Euclidean,
+            LmoKind::NuclearRank1,
+            LmoKind::ColNorm,
+        ] {
+            assert_eq!(parse_lmo(lmo_name(k)).unwrap(), k);
+        }
+        assert!(parse_lmo("frobnicate").is_err());
+    }
+}

@@ -1,20 +1,27 @@
-//! End-to-end training orchestration: wire a [`TrainConfig`] into the
-//! distributed coordinator + PJRT grad service, run the schedule, evaluate,
-//! and log. This is the module behind `efmuon train` and the experiment
-//! drivers in [`crate::exp`].
+//! End-to-end training orchestration: validate a config into a typed
+//! [`RunSpec`], construct a deployment behind the [`Driver`] trait, run the
+//! schedule, evaluate, and log. This is the module behind `efmuon train`
+//! and the experiment drivers in [`crate::exp`].
+//!
+//! Configuration flows one way: `TrainConfig` (strings) →
+//! [`TrainConfig::validate`] → [`RunSpec`] (typed, validated) →
+//! [`spawn_driver`] → a [`Driver`]. No spec string is ever parsed past the
+//! first arrow.
 
 pub mod checkpoint;
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::dist::cluster::{Cluster, ClusterCfg};
-use crate::dist::coordinator::{Coordinator, CoordinatorCfg};
-use crate::dist::service::GradService;
-use crate::dist::{RoundMode, TransportMode};
-use crate::metrics::JsonlWriter;
-use crate::model::{Group, Manifest};
-use crate::opt::{LayerGeometry, Schedule};
+use crate::dist::cluster::Cluster;
+use crate::dist::coordinator::Coordinator;
+use crate::dist::service::{GradHandle, GradService};
+use crate::funcs::Objective;
+use crate::linalg::matrix::Layers;
+use crate::model::Manifest;
+use crate::opt::ef21::Ef21MuonSeq;
+use crate::opt::LayerGeometry;
+use crate::spec::RunSpec;
 use crate::util::json::JsonObj;
 
 /// One evaluation point on the loss curve.
@@ -65,43 +72,41 @@ impl TrainReport {
     }
 }
 
-/// Per-layer geometry with the config's group multipliers applied.
-pub fn geometry_for(manifest: &Manifest, cfg: &TrainConfig) -> Vec<LayerGeometry> {
-    manifest
-        .layers
-        .iter()
-        .map(|l| {
-            let mut g = l.group.geometry();
-            match l.group {
-                Group::Embed => g.radius_mult *= cfg.embed_mult,
-                Group::Vector => g.radius_mult *= cfg.vector_mult / 0.1, // base already 0.1
-                Group::Hidden => {}
-            }
-            g
-        })
-        .collect()
-}
-
-/// Driver-agnostic telemetry of one round (what the shared loop consumes).
-struct DriveRound {
-    /// Whether this call absorbed a round (async pipelines absorb nothing
-    /// for the first `lookahead` calls).
-    absorbed: bool,
-    train_loss: f32,
-    radius: f64,
+/// Driver-agnostic telemetry of one round (mirrors the coordinator's
+/// `RoundStats` / the cluster rollup, minus topology-specific detail).
+#[derive(Debug, Clone)]
+pub struct DriveRound {
+    /// The round whose broadcast this call issued.
+    pub step: usize,
+    /// The round whose uplinks this call absorbed, if any (async pipelines
+    /// absorb nothing for the first `lookahead` calls).
+    pub absorbed_step: Option<usize>,
+    /// Train loss of the absorbed round (NaN while the pipeline fills).
+    pub train_loss: f32,
+    /// LMO radius of the issued round.
+    pub radius: f64,
+    /// w2s bytes one (logical full-model) worker sent in the absorbed round.
+    pub w2s_bytes_per_worker: usize,
+    /// s2w broadcast bytes of the issued round.
+    pub s2w_bytes: usize,
 }
 
 /// The deployment surface the shared training loop drives: one round at a
 /// time, a drain before the final eval, an eval, and the byte/round meters
-/// the eval points record. Implemented by the single [`Coordinator`] and
-/// the sharded [`Cluster`], so there is exactly one loop to keep correct —
-/// the two previous near-duplicate loops could silently drift.
-trait Driver {
+/// the eval points record. Implemented by the single [`Coordinator`], the
+/// sharded [`Cluster`], and the sequential reference [`SeqDriver`] — so
+/// there is exactly one loop to keep correct, and every entry point
+/// (`train`, the `exp` sweeps, benches, scenario tests) constructs its
+/// deployment through [`spawn_driver`] instead of hand-wiring one.
+pub trait Driver {
     fn round(&mut self) -> Result<DriveRound>;
     /// Land every in-flight round (no-op in sync mode); returns the drained
-    /// rounds' train losses in absorption order.
-    fn drain_losses(&mut self) -> Result<Vec<f32>>;
+    /// rounds in absorption order (their broadcasts were already metered
+    /// when issued, so `s2w_bytes` is 0 on these entries).
+    fn drain(&mut self) -> Result<Vec<DriveRound>>;
     fn eval(&mut self) -> Result<f32>;
+    /// Current full-model parameters.
+    fn params(&mut self) -> Result<Layers>;
     /// Rounds fully absorbed so far (tokens are paired with this, so both
     /// token and byte meters count absorbed work).
     fn rounds_absorbed(&self) -> u64;
@@ -113,22 +118,47 @@ trait Driver {
     fn annotate(&self, o: JsonObj) -> JsonObj;
 }
 
-impl Driver for Coordinator {
-    fn round(&mut self) -> Result<DriveRound> {
-        let s = Coordinator::round(self)?;
-        Ok(DriveRound {
-            absorbed: s.absorbed_step.is_some(),
+impl From<crate::dist::coordinator::RoundStats> for DriveRound {
+    fn from(s: crate::dist::coordinator::RoundStats) -> DriveRound {
+        DriveRound {
+            step: s.step,
+            absorbed_step: s.absorbed_step,
             train_loss: s.train_loss,
             radius: s.radius,
-        })
+            w2s_bytes_per_worker: s.w2s_bytes_per_worker,
+            s2w_bytes: s.s2w_bytes,
+        }
+    }
+}
+
+impl From<crate::dist::cluster::ClusterRoundStats> for DriveRound {
+    fn from(s: crate::dist::cluster::ClusterRoundStats) -> DriveRound {
+        DriveRound {
+            step: s.step,
+            absorbed_step: s.absorbed_step,
+            train_loss: s.train_loss,
+            radius: s.radius,
+            w2s_bytes_per_worker: s.w2s_bytes_per_worker,
+            s2w_bytes: s.s2w_bytes,
+        }
+    }
+}
+
+impl Driver for Coordinator {
+    fn round(&mut self) -> Result<DriveRound> {
+        Ok(Coordinator::round(self)?.into())
     }
 
-    fn drain_losses(&mut self) -> Result<Vec<f32>> {
-        Ok(Coordinator::drain(self)?.into_iter().map(|s| s.train_loss).collect())
+    fn drain(&mut self) -> Result<Vec<DriveRound>> {
+        Ok(Coordinator::drain(self)?.into_iter().map(Into::into).collect())
     }
 
     fn eval(&mut self) -> Result<f32> {
         Coordinator::eval(self)
+    }
+
+    fn params(&mut self) -> Result<Layers> {
+        Ok(Coordinator::params(self).clone())
     }
 
     fn rounds_absorbed(&self) -> u64 {
@@ -150,20 +180,19 @@ impl Driver for Coordinator {
 
 impl Driver for Cluster {
     fn round(&mut self) -> Result<DriveRound> {
-        let s = Cluster::round(self)?;
-        Ok(DriveRound {
-            absorbed: s.absorbed_step.is_some(),
-            train_loss: s.train_loss,
-            radius: s.radius,
-        })
+        Ok(Cluster::round(self)?.into())
     }
 
-    fn drain_losses(&mut self) -> Result<Vec<f32>> {
-        Ok(Cluster::drain(self)?.into_iter().map(|s| s.train_loss).collect())
+    fn drain(&mut self) -> Result<Vec<DriveRound>> {
+        Ok(Cluster::drain(self)?.into_iter().map(Into::into).collect())
     }
 
     fn eval(&mut self) -> Result<f32> {
         Cluster::eval(self)
+    }
+
+    fn params(&mut self) -> Result<Layers> {
+        Cluster::params(self)
     }
 
     fn rounds_absorbed(&self) -> u64 {
@@ -186,111 +215,191 @@ impl Driver for Cluster {
     }
 }
 
-/// Run one full distributed training job per the config. `shards = 1`
-/// drives the single [`Coordinator`] (the exact deployment of every prior
-/// PR); `shards > 1` partitions the model's layers across a
-/// [`Cluster`] of concurrent shard coordinators. Both run the *same*
-/// [`Driver`] loop — only the deployment construction differs.
-pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
-    if cfg.shards == 0 {
-        // reject rather than silently reinterpret as 1 (the same hardening
-        // contract as RoundMode::parse)
-        return Err(anyhow::anyhow!("shards must be >= 1 (got 0); use --shards 1 for the single-leader deployment"));
+/// The sequential single-process reference deployment ([`Ef21MuonSeq`])
+/// behind the same [`Driver`] surface, so offline sweeps (e.g.
+/// `exp::s2w_savings`) and tests drive Algorithm 3 verbatim through the
+/// exact interface the threaded topologies use.
+pub struct SeqDriver {
+    opt: Ef21MuonSeq,
+    obj: Box<dyn Objective>,
+}
+
+impl SeqDriver {
+    pub fn new(opt: Ef21MuonSeq, obj: Box<dyn Objective>) -> SeqDriver {
+        SeqDriver { opt, obj }
     }
-    let manifest = Manifest::load(&cfg.artifacts).map_err(anyhow::Error::msg)?;
-    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
-    let geometry = geometry_for(&manifest, cfg);
-    // the logical data workers are shared across shards (shard s's worker j
-    // is data worker j), so tokens per round are shard-count invariant
-    let tokens_per_step = manifest.batch * manifest.seq_len * cfg.workers;
-    let model_bytes = manifest.model_bytes();
 
-    let svc = GradService::spawn_pjrt(
-        cfg.artifacts.clone(),
-        cfg.workers,
-        cfg.corpus_tokens,
-        cfg.eval_batches,
-        cfg.seed,
-    )?;
-    let schedule = Schedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_frac);
-    let transport = if cfg.full_codec {
-        TransportMode::Encoded
-    } else {
-        TransportMode::Counted
-    };
-    let round_mode = RoundMode::parse(&cfg.round_mode).map_err(anyhow::Error::msg)?;
+    /// The wrapped sequential optimizer (tests inspect protocol state).
+    pub fn inner(&self) -> &Ef21MuonSeq {
+        &self.opt
+    }
 
-    if cfg.shards > 1 {
-        let mut cluster = Cluster::spawn(
-            x0,
-            geometry,
-            svc.handle(),
-            ClusterCfg {
-                shards: cfg.shards,
-                workers_per_shard: cfg.workers,
-                worker_comp: cfg.worker_comp.clone(),
-                server_comp: cfg.server_comp.clone(),
-                beta: cfg.beta,
-                schedule,
-                transport,
-                round_mode,
-                seed: cfg.seed,
-                use_ns_artifact: cfg.use_ns_artifact,
-            },
-        )?;
-        run_driver(cfg, &mut cluster, tokens_per_step, model_bytes)
-    } else {
-        let mut coord = Coordinator::spawn(
-            x0,
-            geometry,
-            svc.handle(),
-            CoordinatorCfg {
-                n_workers: cfg.workers,
-                worker_comp: cfg.worker_comp.clone(),
-                server_comp: cfg.server_comp.clone(),
-                beta: cfg.beta,
-                schedule,
-                transport,
-                round_mode,
-                seed: cfg.seed,
-                use_ns_artifact: cfg.use_ns_artifact,
-            },
-        )?;
-        run_driver(cfg, &mut coord, tokens_per_step, model_bytes)
+    /// Full-precision loss at the current parameters. [`Driver::eval`]
+    /// narrows to f32 for trait uniformity; offline sweeps that always
+    /// reported f64 (e.g. `exp::s2w_savings`) read this instead.
+    pub fn loss_f64(&self) -> f64 {
+        self.obj.loss(self.opt.params())
     }
 }
 
-/// The one training loop, shared by both topologies: round →
+impl Driver for SeqDriver {
+    fn round(&mut self) -> Result<DriveRound> {
+        let s = self.opt.step(self.obj.as_ref());
+        Ok(DriveRound {
+            step: s.step,
+            absorbed_step: Some(s.step),
+            train_loss: s.loss as f32,
+            radius: s.radius,
+            w2s_bytes_per_worker: s.w2s_bytes,
+            s2w_bytes: s.s2w_bytes,
+        })
+    }
+
+    fn drain(&mut self) -> Result<Vec<DriveRound>> {
+        Ok(Vec::new()) // fully synchronous: nothing is ever in flight
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        Ok(self.obj.loss(self.opt.params()) as f32)
+    }
+
+    fn params(&mut self) -> Result<Layers> {
+        Ok(self.opt.params().clone())
+    }
+
+    fn rounds_absorbed(&self) -> u64 {
+        self.opt.step as u64
+    }
+
+    fn w2s(&self) -> u64 {
+        self.opt.total_w2s_bytes
+    }
+
+    fn s2w(&self) -> u64 {
+        self.opt.total_s2w_bytes
+    }
+
+    fn annotate(&self, o: JsonObj) -> JsonObj {
+        o.put("driver", "seq")
+    }
+}
+
+/// Construct the deployment a [`RunSpec`] describes over an already-running
+/// gradient service: the single [`Coordinator`] for `shards = 1` (the exact
+/// deployment of every prior PR) or a sharded [`Cluster`] — both behind the
+/// [`Driver`] trait, so callers never hand-assemble optimizer wiring.
+pub fn spawn_driver(
+    spec: &RunSpec,
+    x0: Layers,
+    geometry: Vec<LayerGeometry>,
+    handle: GradHandle,
+) -> Result<Box<dyn Driver>> {
+    // RunSpec fields are public, so a caller can bypass RunBuilder; keep
+    // the old "reject rather than silently reinterpret as 1" contract
+    if spec.shards == 0 {
+        return Err(anyhow::anyhow!(
+            "shards: must be >= 1 (got 0); build the spec through RunBuilder"
+        ));
+    }
+    if spec.shards > 1 {
+        Ok(Box::new(Cluster::spawn(x0, geometry, handle, spec.cluster_cfg())?))
+    } else {
+        Ok(Box::new(Coordinator::spawn(x0, geometry, handle, spec.coordinator_cfg())?))
+    }
+}
+
+/// The sequential reference deployment of a [`RunSpec`] over a synthetic
+/// objective (offline sweeps; no artifacts, no threads).
+pub fn spawn_seq_driver(
+    spec: &RunSpec,
+    obj: Box<dyn Objective>,
+    geometry: Vec<LayerGeometry>,
+) -> Result<SeqDriver> {
+    let opt = Ef21MuonSeq::new(
+        obj.as_ref(),
+        geometry,
+        spec.worker_comp,
+        spec.server_comp,
+        spec.beta,
+        spec.schedule(),
+        false,
+        spec.seed,
+    )
+    .map_err(anyhow::Error::msg)?;
+    Ok(SeqDriver::new(opt, obj))
+}
+
+/// Run one full distributed training job per the (string-facade) config:
+/// validate into a [`RunSpec`] — all errors surface here, field-named,
+/// before anything loads — then run it.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let spec = cfg.validate()?;
+    train_spec(&spec)
+}
+
+/// Run one full distributed training job from a validated [`RunSpec`].
+/// `shards = 1` drives the single [`Coordinator`]; `shards > 1` partitions
+/// the model's layers across a [`Cluster`] of concurrent shard
+/// coordinators. Both run the *same* [`Driver`] loop — only the deployment
+/// construction differs (and that lives in [`spawn_driver`]).
+pub fn train_spec(spec: &RunSpec) -> Result<TrainReport> {
+    let manifest = Manifest::load(&spec.artifacts).map_err(anyhow::Error::msg)?;
+    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
+    let geometry = spec.geom.for_groups(manifest.layers.iter().map(|l| l.group));
+    // the logical data workers are shared across shards (shard s's worker j
+    // is data worker j), so tokens per round are shard-count invariant
+    let tokens_per_step = manifest.batch * manifest.seq_len * spec.workers;
+    let model_bytes = manifest.model_bytes();
+
+    let svc = GradService::spawn_pjrt(
+        spec.artifacts.clone(),
+        spec.workers,
+        spec.corpus_tokens,
+        spec.eval_batches,
+        spec.seed,
+    )?;
+    let mut drv = spawn_driver(spec, x0, geometry, svc.handle())?;
+    run_driver(spec, drv.as_mut(), tokens_per_step, model_bytes)
+}
+
+/// The one training loop, shared by every topology: round →
 /// absorbed-loss → drain at the last step only → eval → log. Mid-run evals
 /// never drain, so the observation frequency (`eval_every`) can never
 /// perturb the optimization trajectory; the final eval drains every
 /// pipeline first, so the reported loss reflects fully-absorbed rounds.
 fn run_driver(
-    cfg: &TrainConfig,
+    spec: &RunSpec,
     drv: &mut dyn Driver,
     tokens_per_step: usize,
     model_bytes: usize,
 ) -> Result<TrainReport> {
-    let mut log = match &cfg.log_path {
-        Some(p) => Some(JsonlWriter::create(p)?),
+    let mut log = match &spec.log_path {
+        Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
         None => None,
     };
     let timer = crate::util::timer::Timer::start();
     let mut curve = Vec::new();
-    let mut train_losses = Vec::with_capacity(cfg.steps);
+    let mut train_losses = Vec::with_capacity(spec.steps);
 
-    for step in 0..cfg.steps {
+    for step in 0..spec.steps {
         let stats = drv.round()?;
         // async modes: the first `lookahead` calls absorb no round yet, so
         // there is no train loss to record for them
-        if stats.absorbed {
+        if stats.absorbed_step.is_some() {
             train_losses.push(stats.train_loss);
         }
-        let last = step + 1 == cfg.steps;
+        let last = step + 1 == spec.steps;
         if last {
-            train_losses.extend(drv.drain_losses()?);
+            train_losses.extend(
+                drv.drain()?
+                    .into_iter()
+                    .filter(|d| d.absorbed_step.is_some())
+                    .map(|d| d.train_loss),
+            );
         }
-        let do_eval = step % cfg.eval_every.max(1) == 0 || last;
+        // eval_every >= 1 is a RunBuilder invariant, but RunSpec fields are
+        // public — guard rather than panic on a hand-built spec
+        let do_eval = step % spec.eval_every.max(1) == 0 || last;
         if do_eval {
             let eval_loss = drv.eval()?;
             // pair tokens with the byte meter: both count *absorbed* rounds
@@ -324,8 +433,8 @@ fn run_driver(
     }
 
     Ok(TrainReport {
-        config_comp: cfg.worker_comp.clone(),
-        steps: cfg.steps,
+        config_comp: spec.worker_comp.spec(),
+        steps: spec.steps,
         final_eval_loss: curve.last().map(|p| p.eval_loss).unwrap_or(f32::NAN),
         curve,
         train_losses,
@@ -345,6 +454,25 @@ mod tests {
     fn zero_shards_is_rejected_before_anything_loads() {
         let cfg = TrainConfig { shards: 0, ..TrainConfig::default() };
         let err = train(&cfg).expect_err("shards=0 must be rejected");
-        assert!(format!("{err:#}").contains("shards must be >= 1"), "{err:#}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shards"), "{msg}");
+        assert!(msg.contains("must be >= 1"), "{msg}");
+    }
+
+    #[test]
+    fn invalid_config_fails_with_every_field_named() {
+        let cfg = TrainConfig {
+            workers: 0,
+            steps: 0,
+            eval_every: 0,
+            min_lr_frac: -0.5,
+            worker_comp: "rank:2".into(),
+            ..TrainConfig::default()
+        };
+        let err = train(&cfg).expect_err("invalid config must be rejected");
+        let msg = format!("{err:#}");
+        for field in ["workers", "steps", "eval_every", "min_lr_frac", "worker_comp"] {
+            assert!(msg.contains(field), "missing {field} in: {msg}");
+        }
     }
 }

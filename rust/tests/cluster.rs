@@ -17,6 +17,7 @@ use efmuon::funcs::{Objective, Quadratics, Stacked};
 use efmuon::linalg::matrix::{Layers, Matrix};
 use efmuon::lmo::LmoKind;
 use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::spec::CompSpec;
 use efmuon::util::proptest::check;
 use efmuon::util::rng::Rng;
 
@@ -114,8 +115,8 @@ fn spawn_cluster(
         ClusterCfg {
             shards,
             workers_per_shard: workers,
-            worker_comp: "top:0.3".into(),
-            server_comp: "top:0.5".into(),
+            worker_comp: CompSpec::Top { frac: 0.3, nat: false },
+            server_comp: CompSpec::Top { frac: 0.5, nat: false },
             beta: 1.0,
             schedule: Schedule::constant(0.03),
             transport: TransportMode::Counted,

@@ -13,10 +13,16 @@ use efmuon::linalg::matrix::{Layers, Matrix};
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::spec::CompSpec;
 use efmuon::util::rng::Rng;
 
 fn geom() -> Vec<LayerGeometry> {
     vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }]
+}
+
+/// Parse a compressor spec string (test-side boundary).
+fn comp(s: &str) -> CompSpec {
+    CompSpec::parse(s).unwrap()
 }
 
 fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coordinator, GradService) {
@@ -30,8 +36,8 @@ fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coord
         svc.handle(),
         CoordinatorCfg {
             n_workers: n,
-            worker_comp: spec.into(),
-            server_comp: "id".into(),
+            worker_comp: comp(spec),
+            server_comp: CompSpec::Id,
             beta,
             schedule: Schedule::constant(0.03),
             transport: mode,
@@ -95,8 +101,8 @@ fn threaded_matches_sequential_reference() {
         svc.handle(),
         CoordinatorCfg {
             n_workers: n,
-            worker_comp: "top:0.25".into(),
-            server_comp: "id".into(),
+            worker_comp: comp("top:0.25"),
+            server_comp: CompSpec::Id,
             beta: 1.0,
             schedule: Schedule::constant(0.03),
             transport: TransportMode::Encoded,
@@ -179,8 +185,8 @@ fn mk_async(lookahead: usize, seed_obj: u64) -> (Coordinator, GradService) {
         svc.handle(),
         CoordinatorCfg {
             n_workers: n,
-            worker_comp: "top:0.3".into(),
-            server_comp: "top:0.5".into(),
+            worker_comp: comp("top:0.3"),
+            server_comp: comp("top:0.5"),
             beta: 1.0,
             schedule: Schedule::constant(0.03),
             transport: TransportMode::Counted,
@@ -319,8 +325,8 @@ fn mk_fault_coord(obj: PanicObjective, mode: RoundMode) -> anyhow::Result<(Coord
         svc.handle(),
         CoordinatorCfg {
             n_workers: n,
-            worker_comp: "top:0.3".into(),
-            server_comp: "id".into(),
+            worker_comp: comp("top:0.3"),
+            server_comp: CompSpec::Id,
             beta: 1.0,
             schedule: Schedule::constant(0.03),
             transport: TransportMode::Counted,

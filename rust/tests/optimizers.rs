@@ -13,6 +13,7 @@ fn geom(kind: LmoKind) -> Vec<LayerGeometry> {
     vec![LayerGeometry { lmo: kind, radius_mult: 1.0 }]
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     obj: &dyn Objective,
     kind: LmoKind,

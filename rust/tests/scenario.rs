@@ -22,15 +22,17 @@
 //!   (g) for deterministic compressors, the trajectory is invariant in the
 //!       shard count across every round mode and transport.
 
-use efmuon::dist::cluster::{totals_consistent, Cluster, ClusterCfg};
-use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::cluster::{totals_consistent, Cluster};
+use efmuon::dist::coordinator::Coordinator;
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
 use efmuon::linalg::matrix::Layers;
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
-use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::opt::LayerGeometry;
+use efmuon::spec::{RunBuilder, RunSpec, SchedulePlan};
+use efmuon::train::{spawn_driver, Driver};
 use efmuon::util::rng::Rng;
 
 /// One deployment shape of the scenario table.
@@ -87,8 +89,46 @@ struct RunTrace {
     eval: f32,
 }
 
+/// The constant-radius plan every scenario uses (warmup 0 + min_lr_frac 1
+/// materializes to exactly the constant schedule, bit for bit).
+const FLAT: SchedulePlan = SchedulePlan { lr: 0.03, warmup: 0, min_lr_frac: 1.0 };
+
+/// The typed spec of one scenario run — the scenario harness goes through
+/// the same `RunBuilder` → `spawn_driver` path as `efmuon train`, so the
+/// golden trajectories also lock the spec plumbing itself. Every scenario
+/// contract knob (beta 1.0, seed, no NS artifact, full-codec iff Encoded)
+/// is encoded HERE and only here — the coordinator and cluster runners
+/// share it, so their golden comparisons can't desynchronize.
+#[allow(clippy::too_many_arguments)]
+fn scenario_spec(
+    sc: &Scenario,
+    shards: usize,
+    mode: RoundMode,
+    transport: TransportMode,
+    rounds: usize,
+    plan: SchedulePlan,
+) -> RunSpec {
+    let mut b = RunBuilder::new()
+        .workers(sc.workers)
+        .shards(shards)
+        .steps(rounds)
+        .worker_comp(sc.w2s)
+        .server_comp(sc.s2w)
+        .round(mode)
+        .beta(1.0)
+        .lr(plan.lr)
+        .warmup(plan.warmup)
+        .min_lr_frac(plan.min_lr_frac)
+        .seed(SEED)
+        .use_ns_artifact(false);
+    if transport == TransportMode::Encoded {
+        b = b.full_codec(true);
+    }
+    b.build().unwrap()
+}
+
 fn run_scenario(sc: &Scenario, mode: RoundMode, transport: TransportMode, rounds: usize) -> RunTrace {
-    run_scenario_sched(sc, mode, transport, rounds, Schedule::constant(0.03))
+    run_scenario_sched(sc, mode, transport, rounds, FLAT)
 }
 
 fn run_scenario_sched(
@@ -96,33 +136,16 @@ fn run_scenario_sched(
     mode: RoundMode,
     transport: TransportMode,
     rounds: usize,
-    schedule: Schedule,
+    plan: SchedulePlan,
 ) -> RunTrace {
+    let spec = scenario_spec(sc, 1, mode, transport, rounds, plan);
     let q = objective(sc);
     let x0 = q.init(&mut Rng::new(SEED));
-    let n = q.num_workers();
     let svc = GradService::spawn_objective(Box::new(q), SEED);
-    let mut coord = Coordinator::spawn(
-        x0,
-        geom(),
-        svc.handle(),
-        CoordinatorCfg {
-            n_workers: n,
-            worker_comp: sc.w2s.into(),
-            server_comp: sc.s2w.into(),
-            beta: 1.0,
-            schedule,
-            transport,
-            round_mode: mode,
-            seed: SEED,
-            use_ns_artifact: false,
-        },
-    )
-    .unwrap();
-    let stats = coord.run(rounds).unwrap();
+    let mut drv = spawn_driver(&spec, x0, geom(), svc.handle()).unwrap();
     let mut s2w = Vec::new();
     let mut w2s = Vec::new();
-    for s in &stats {
+    let mut record = |s: &efmuon::train::DriveRound| {
         // per-call entries carry the issued broadcast's bytes; drained-tail
         // entries carry 0 (their broadcast was metered when issued)
         if s.s2w_bytes > 0 {
@@ -131,14 +154,21 @@ fn run_scenario_sched(
         if s.absorbed_step.is_some() {
             w2s.push(s.w2s_bytes_per_worker);
         }
+    };
+    for _ in 0..rounds {
+        record(&drv.round().unwrap());
     }
+    for s in drv.drain().unwrap() {
+        record(&s);
+    }
+    drop(record);
     RunTrace {
-        params: flatten(coord.params()),
+        params: flatten(&drv.params().unwrap()),
         s2w,
         w2s,
-        meter_w2s: coord.meter().w2s(),
-        meter_s2w: coord.meter().s2w(),
-        eval: coord.eval().unwrap(),
+        meter_w2s: drv.w2s(),
+        meter_s2w: drv.s2w(),
+        eval: drv.eval().unwrap(),
     }
 }
 
@@ -150,32 +180,25 @@ fn run_cluster_obj(
     obj: Box<dyn Objective>,
     workers: usize,
     n_layers: usize,
-    w2s: &str,
-    s2w: &str,
+    w2s: &'static str,
+    s2w: &'static str,
     shards: usize,
     mode: RoundMode,
     transport: TransportMode,
     rounds: usize,
-    schedule: Schedule,
+    plan: SchedulePlan,
 ) -> (RunTrace, Vec<Vec<usize>>) {
     let x0 = obj.init(&mut Rng::new(SEED));
     let svc = GradService::spawn_objective(obj, SEED);
+    // same contract knobs as every coordinator scenario (dim is unused by
+    // the spec — the objective is supplied by the caller)
+    let sc = Scenario { name: "cluster", workers, dim: 0, w2s, s2w };
+    let spec = scenario_spec(&sc, shards, mode, transport, rounds, plan);
     let mut cluster = Cluster::spawn(
         x0,
         vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; n_layers],
         svc.handle(),
-        ClusterCfg {
-            shards,
-            workers_per_shard: workers,
-            worker_comp: w2s.into(),
-            server_comp: s2w.into(),
-            beta: 1.0,
-            schedule,
-            transport,
-            round_mode: mode,
-            seed: SEED,
-            use_ns_artifact: false,
-        },
+        spec.cluster_cfg(),
     )
     .unwrap();
     let stats = cluster.run(rounds).unwrap();
@@ -222,7 +245,7 @@ fn run_cluster_scenario(
         mode,
         transport,
         rounds,
-        Schedule::constant(0.03),
+        FLAT,
     )
     .0
 }
@@ -274,7 +297,7 @@ fn coordinator_matches_sequential_golden() {
             sc.w2s,
             sc.s2w,
             1.0,
-            Schedule::constant(0.03),
+            FLAT.materialize(ROUNDS),
             false,
             SEED,
         )
@@ -314,9 +337,9 @@ fn compressed_s2w_saves_bytes_at_matched_loss() {
     // decaying radius: both runs converge to the optimum's neighborhood, so
     // their final losses match to well under the 1e-3 bar
     let rounds = 600;
-    let sched = Schedule::warmup_cosine(0.05, 0, rounds, 0.02);
-    let a = run_scenario_sched(&dense, RoundMode::Sync, TransportMode::Counted, rounds, sched.clone());
-    let b = run_scenario_sched(&comp, RoundMode::Sync, TransportMode::Counted, rounds, sched);
+    let plan = SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02 };
+    let a = run_scenario_sched(&dense, RoundMode::Sync, TransportMode::Counted, rounds, plan);
+    let b = run_scenario_sched(&comp, RoundMode::Sync, TransportMode::Counted, rounds, plan);
     assert!(
         b.meter_s2w < a.meter_s2w,
         "compressed s2w must be strictly cheaper: {} vs {}",
@@ -391,22 +414,13 @@ fn cluster_shards_match_independent_coordinators() {
         let shapes = stack.layer_shapes();
 
         let svc = GradService::spawn_objective(Box::new(stack), SEED);
+        let sc = Scenario { name: "stack", workers, dim: 0, w2s, s2w };
+        let spec = scenario_spec(&sc, 2, RoundMode::Sync, TransportMode::Counted, ROUNDS, FLAT);
         let mut cluster = Cluster::spawn(
             x0_full.clone(),
             vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; shapes.len()],
             svc.handle(),
-            ClusterCfg {
-                shards: 2,
-                workers_per_shard: workers,
-                worker_comp: w2s.into(),
-                server_comp: s2w.into(),
-                beta: 1.0,
-                schedule: Schedule::constant(0.03),
-                transport: TransportMode::Counted,
-                round_mode: RoundMode::Sync,
-                seed: SEED,
-                use_ns_artifact: false,
-            },
+            spec.cluster_cfg(),
         )
         .unwrap();
         // sizes 12 > 10: the greedy partition puts layer 0 on shard 0 and
@@ -420,21 +434,13 @@ fn cluster_shards_match_independent_coordinators() {
             let x0_s: Layers = vec![x0_full[shard].clone()];
             let n = part.num_workers();
             let svc_s = GradService::spawn_objective(Box::new(part), SEED);
+            let sc_solo = Scenario { name: "stack-solo", workers: n, dim: 0, w2s, s2w };
+            let solo_spec = scenario_spec(&sc_solo, 1, RoundMode::Sync, TransportMode::Counted, ROUNDS, FLAT);
             let mut coord = Coordinator::spawn(
                 x0_s,
                 vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
                 svc_s.handle(),
-                CoordinatorCfg {
-                    n_workers: n,
-                    worker_comp: w2s.into(),
-                    server_comp: s2w.into(),
-                    beta: 1.0,
-                    schedule: Schedule::constant(0.03),
-                    transport: TransportMode::Counted,
-                    round_mode: RoundMode::Sync,
-                    seed: SEED,
-                    use_ns_artifact: false,
-                },
+                solo_spec.coordinator_cfg(),
             )
             .unwrap();
             let solo = coord.run(ROUNDS).unwrap();
@@ -490,7 +496,7 @@ fn cluster_trajectory_invariant_across_shards_modes_transports() {
             mode,
             TransportMode::Counted,
             ROUNDS,
-            Schedule::constant(0.03),
+            FLAT,
         );
         for shards in [1usize, 2, 3] {
             for transport in [TransportMode::Counted, TransportMode::Encoded] {
@@ -504,7 +510,7 @@ fn cluster_trajectory_invariant_across_shards_modes_transports() {
                     mode,
                     transport,
                     ROUNDS,
-                    Schedule::constant(0.03),
+                    FLAT,
                 );
                 let tag = format!("{} shards / {} / {:?}", shards, mode.spec(), transport);
                 // coverage: the partition owns every layer exactly once
@@ -521,11 +527,11 @@ fn cluster_trajectory_invariant_across_shards_modes_transports() {
         // threads + pipelining never leak scheduling into the trajectory)
         let (a, _) = run_cluster_obj(
             mk(), workers, 3, "top:0.3", "top:0.5", 3, mode,
-            TransportMode::Counted, ROUNDS, Schedule::constant(0.03),
+            TransportMode::Counted, ROUNDS, FLAT,
         );
         let (b, _) = run_cluster_obj(
             mk(), workers, 3, "top:0.3", "top:0.5", 3, mode,
-            TransportMode::Counted, ROUNDS, Schedule::constant(0.03),
+            TransportMode::Counted, ROUNDS, FLAT,
         );
         assert_eq!(a.params, b.params, "{}: rerun determinism", mode.spec());
         assert_eq!(a.w2s, b.w2s);
@@ -540,9 +546,9 @@ fn cluster_trajectory_invariant_across_shards_modes_transports() {
 fn async_converges_near_sync() {
     let sc = Scenario { name: "async-conv", workers: 3, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
     let rounds = 600;
-    let sched = Schedule::warmup_cosine(0.05, 0, rounds, 0.02);
-    let sync = run_scenario_sched(&sc, RoundMode::Sync, TransportMode::Counted, rounds, sched.clone());
-    let pipe = run_scenario_sched(&sc, RoundMode::Async { lookahead: 1 }, TransportMode::Counted, rounds, sched);
+    let plan = SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02 };
+    let sync = run_scenario_sched(&sc, RoundMode::Sync, TransportMode::Counted, rounds, plan);
+    let pipe = run_scenario_sched(&sc, RoundMode::Async { lookahead: 1 }, TransportMode::Counted, rounds, plan);
     // every issued round was absorbed by the end (run() drains)
     assert_eq!(pipe.w2s.len(), rounds);
     let gap = (sync.eval - pipe.eval).abs();

@@ -20,6 +20,24 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== smoke: typed config round trip (efmuon config) =="
+# `efmuon config` prints the validated RunSpec as canonical JSON; feeding
+# that JSON back through --config must reproduce it byte for byte — the
+# lossless RunSpec -> Json -> RunSpec contract of the spec layer.
+EFMUON=target/release/efmuon
+CFG_TMP="$(mktemp)"
+trap 'rm -f "$CFG_TMP" "$CFG_TMP.2"' EXIT
+"$EFMUON" config > "$CFG_TMP"
+"$EFMUON" config --config "$CFG_TMP" > "$CFG_TMP.2"
+diff "$CFG_TMP" "$CFG_TMP.2"
+# presets must validate and round-trip too
+for preset in muon scion gluon ef21-muon ef21-p; do
+  "$EFMUON" config --preset "$preset" > "$CFG_TMP"
+  "$EFMUON" config --config "$CFG_TMP" > "$CFG_TMP.2"
+  diff "$CFG_TMP" "$CFG_TMP.2"
+done
+echo "config round trip: OK"
+
 if [[ "${1:-}" != "--no-bench" ]]; then
   # tier-1 already ran scenario.rs in debug; the release rerun is deliberate:
   # it shares the release build with the bench below (no extra codegen of the
