@@ -12,6 +12,7 @@
 use efmuon::compress::{codec, parse_spec};
 use efmuon::dist::cluster::{Cluster, ClusterCfg};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::fault::FaultPolicy;
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics, Stacked};
@@ -41,6 +42,11 @@ struct Entry {
     /// the byte counter — a regression here means the zero-copy gradient
     /// path started cloning again.
     cloned: Option<(u64, u64)>,
+    /// Fault counters for the round entries: (stragglers, respawns,
+    /// partial_rounds). The bench runs fault-free, so `bench_gate.py`
+    /// fails the run if any of these is nonzero — a worker stalling long
+    /// enough to trip a deadline inside a benchmark is itself a perf bug.
+    faults: Option<(u64, u64, u64)>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -49,7 +55,7 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
         None => println!("{}", result.report()),
     }
-    entries.push(Entry { result, gflops, comm: None, cloned: None });
+    entries.push(Entry { result, gflops, comm: None, cloned: None, faults: None });
 }
 
 fn main() -> anyhow::Result<()> {
@@ -148,6 +154,9 @@ fn main() -> anyhow::Result<()> {
                 round_mode: RoundMode::Sync,
                 seed: 3,
                 use_ns_artifact: false,
+                fault: FaultPolicy::off(),
+                fault_plan: None,
+                start_step: 0,
             },
         )?;
         let r = bench_fn("coordinator round (4 workers, d=4096)", 3, iters, || {
@@ -155,7 +164,10 @@ fn main() -> anyhow::Result<()> {
         });
         push(&mut entries, r, None);
         let s = coord.round()?;
-        entries.last_mut().unwrap().comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+        let m = coord.meter();
+        let e = entries.last_mut().unwrap();
+        e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+        e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
     }
 
     // ---- bidirectional compression + async pipelining: the same synthetic
@@ -181,6 +193,9 @@ fn main() -> anyhow::Result<()> {
                     round_mode: mode,
                     seed: 3,
                     use_ns_artifact: false,
+                    fault: FaultPolicy::off(),
+                    fault_plan: None,
+                    start_step: 0,
                 },
             )?;
             let r = bench_fn(name, 3, iters, || {
@@ -196,7 +211,10 @@ fn main() -> anyhow::Result<()> {
             } else {
                 drained.first().map(|d| d.w2s_bytes_per_worker).unwrap_or(0)
             };
-            entries.last_mut().unwrap().comm = Some((w2s, s.s2w_bytes));
+            let m = coord.meter();
+            let e = entries.last_mut().unwrap();
+            e.comm = Some((w2s, s.s2w_bytes));
+            e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
             Ok(())
         };
         let s2w_comp = CompSpec::Top { frac: 0.1, nat: false };
@@ -256,6 +274,9 @@ fn main() -> anyhow::Result<()> {
                 round_mode: RoundMode::Sync,
                 seed: 4,
                 use_ns_artifact: false,
+                fault: FaultPolicy::off(),
+                fault_plan: None,
+                start_step: 0,
             },
         )?;
         let r_dist = bench_fn("ef21 round, threaded coordinator (4 workers, 192x192)", 2, cfg_iters, || {
@@ -264,6 +285,9 @@ fn main() -> anyhow::Result<()> {
         let seq_s = entries[entries.len() - 1].result.median_s;
         let speed = seq_s / r_dist.median_s;
         push(&mut entries, r_dist, None);
+        let m = coord.meter();
+        entries.last_mut().unwrap().faults =
+            Some((m.stragglers(), m.respawns(), m.partial_rounds()));
         println!("  -> threaded coordinator round: {speed:.2}x vs sequential driver");
     }
 
@@ -303,6 +327,9 @@ fn main() -> anyhow::Result<()> {
                     round_mode: RoundMode::Sync,
                     seed: 4,
                     use_ns_artifact: false,
+                    fault: FaultPolicy::off(),
+                    fault_plan: None,
+                    start_step: 0,
                 },
             )?;
             let name = format!("cluster round ({shards} shard(s), 4x192x192, 4 workers)");
@@ -329,6 +356,7 @@ fn main() -> anyhow::Result<()> {
             let e = entries.last_mut().unwrap();
             e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
             e.cloned = Some((per_round_cloned, per_round_asm));
+            e.faults = Some((m1.stragglers, m1.respawns, m1.partial_rounds));
         }
         if let Some(&(_, base)) = shard_times.first() {
             for &(shards, t) in &shard_times[1..] {
@@ -383,6 +411,12 @@ fn main() -> anyhow::Result<()> {
                 o = o
                     .put("bytes_cloned_per_round", bytes)
                     .put("assemblies_per_round", asm);
+            }
+            if let Some((stragglers, respawns, partial)) = e.faults {
+                o = o
+                    .put("stragglers", stragglers)
+                    .put("respawns", respawns)
+                    .put("partial_rounds", partial);
             }
             o.build()
         })

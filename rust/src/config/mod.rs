@@ -78,6 +78,16 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Optional JSONL metrics path.
     pub log_path: Option<String>,
+    /// Straggler / quorum / respawn policy spec: `off`, or a comma list of
+    /// `deadline:MS,quorum:F,respawns:N,backoff:MS` (see
+    /// [`crate::dist::fault::FaultPolicy`]).
+    pub fault_policy: String,
+    /// Save a checkpoint every this many steps (0 = never).
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are saved to / resumed from.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from the latest checkpoint in `checkpoint_dir`.
+    pub resume: bool,
 }
 
 impl Default for TrainConfig {
@@ -106,6 +116,10 @@ impl Default for TrainConfig {
             full_codec: false,
             seed: 0,
             log_path: None,
+            fault_policy: "off".into(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -138,6 +152,12 @@ impl TrainConfig {
         if let Some(p) = a.opt_str("log") {
             self.log_path = Some(p);
         }
+        self.fault_policy = a.str("fault-policy", &self.fault_policy);
+        self.checkpoint_every = a.usize("checkpoint-every", self.checkpoint_every);
+        if let Some(d) = a.opt_str("checkpoint-dir") {
+            self.checkpoint_dir = Some(d);
+        }
+        self.resume = a.bool("resume", self.resume);
         self
     }
 
@@ -171,6 +191,14 @@ impl TrainConfig {
                 "full_codec" => c.full_codec = v.as_bool().ok_or("full_codec: bool")?,
                 "seed" => c.seed = v.as_f64().ok_or("seed: number")? as u64,
                 "log_path" => c.log_path = v.as_str().map(|s| s.to_string()),
+                "fault_policy" => {
+                    c.fault_policy = v.as_str().ok_or("fault_policy: string")?.into()
+                }
+                "checkpoint_every" => {
+                    c.checkpoint_every = v.as_usize().ok_or("checkpoint_every: int")?
+                }
+                "checkpoint_dir" => c.checkpoint_dir = v.as_str().map(|s| s.to_string()),
+                "resume" => c.resume = v.as_bool().ok_or("resume: bool")?,
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -222,6 +250,30 @@ mod tests {
         assert_eq!(c.lr, 0.05);
         assert_eq!(c.steps, TrainConfig::default().steps);
         assert!(TrainConfig::from_json(r#"{"bogus": 1}"#).is_err());
+    }
+
+    #[test]
+    fn fault_and_checkpoint_keys_parse() {
+        let c = TrainConfig::from_json(
+            r#"{"fault_policy": "deadline:50,quorum:0.75,respawns:2,backoff:5",
+                "checkpoint_every": 10, "checkpoint_dir": "/tmp/ck", "resume": true}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fault_policy, "deadline:50,quorum:0.75,respawns:2,backoff:5");
+        assert_eq!(c.checkpoint_every, 10);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("/tmp/ck"));
+        assert!(c.resume);
+        let a = Args::parse(
+            ["--fault-policy", "deadline:25", "--checkpoint-every", "5",
+             "--checkpoint-dir", "out/ck", "--resume"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().override_from_args(&a);
+        assert_eq!(c.fault_policy, "deadline:25");
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("out/ck"));
+        assert!(c.resume);
     }
 
     #[test]

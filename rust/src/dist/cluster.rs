@@ -53,6 +53,7 @@ use crate::spec::CompSpec;
 use crate::util::json::{Json, JsonObj};
 
 use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
+use super::fault::{FaultPlan, FaultPolicy};
 use super::service::{GradHandle, SnapCache};
 use super::{MeterSnapshot, RoundMode, TransportMode};
 
@@ -236,6 +237,15 @@ pub struct ClusterCfg {
     pub round_mode: RoundMode,
     pub seed: u64,
     pub use_ns_artifact: bool,
+    /// Straggler / quorum / respawn policy, applied per shard (each shard
+    /// coordinator supervises its own worker pool independently).
+    pub fault: FaultPolicy,
+    /// Deterministic fault-injection schedule, shared by every shard's
+    /// worker pool (worker `j` of every shard is the same logical worker,
+    /// so an injected fault hits all of its per-shard threads).
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// First round index (nonzero when resuming from a checkpoint).
+    pub start_step: usize,
 }
 
 impl ClusterCfg {
@@ -250,6 +260,9 @@ impl ClusterCfg {
             round_mode: self.round_mode,
             seed: self.seed,
             use_ns_artifact: self.use_ns_artifact,
+            fault: self.fault,
+            fault_plan: self.fault_plan.clone(),
+            start_step: self.start_step,
         }
     }
 }
@@ -489,7 +502,7 @@ impl Cluster {
             to_shards,
             from_shards: reply_rx,
             joins,
-            step: 0,
+            step: cfg.start_step,
             failed: None,
         })
     }
@@ -843,6 +856,9 @@ pub fn totals_consistent(meter: &ClusterMeter) -> bool {
         && t.snap_assembled == sum(|m| m.snap_assembled)
         && t.snap_reused == sum(|m| m.snap_reused)
         && t.bytes_cloned == sum(|m| m.bytes_cloned) + meter.root_bytes_cloned
+        && t.stragglers == sum(|m| m.stragglers)
+        && t.respawns == sum(|m| m.respawns)
+        && t.partial_rounds == sum(|m| m.partial_rounds)
 }
 
 #[cfg(test)]
@@ -929,6 +945,9 @@ mod tests {
             snap_assembled: 4,
             snap_reused: 8,
             bytes_cloned: 100,
+            stragglers: 1,
+            respawns: 0,
+            partial_rounds: 1,
         };
         let m1 = MeterSnapshot {
             w2s_per_worker: 7,
@@ -939,6 +958,9 @@ mod tests {
             snap_assembled: 4,
             snap_reused: 8,
             bytes_cloned: 100,
+            stragglers: 2,
+            respawns: 1,
+            partial_rounds: 2,
         };
         let cm = ClusterMeter { per_shard: vec![m0, m1], root_bytes_cloned: 40 };
         let t = cm.totals();
@@ -950,6 +972,9 @@ mod tests {
         assert_eq!(t.snap_assembled, 8);
         assert_eq!(t.snap_reused, 16);
         assert_eq!(t.bytes_cloned, 240, "per-shard assembly bytes + root seal bytes");
+        assert_eq!(t.stragglers, 3);
+        assert_eq!(t.respawns, 1);
+        assert_eq!(t.partial_rounds, 3);
         assert!(totals_consistent(&cm));
         let j = cm.to_json();
         assert!(j.get("totals").is_some());

@@ -92,7 +92,12 @@ pub enum FromWorker {
     /// Initial local gradient estimator `G⁰ⱼ` (server averages these).
     Init { id: usize, g0: crate::linalg::matrix::Layers },
     /// One round's uplink: local train loss + compressed residuals, tagged
-    /// with the round it answers.
+    /// with the round it answers. The `(step, id)` tag is also what marks a
+    /// straggler: under a [`super::fault::FaultPolicy`] deadline the leader
+    /// may absorb a round before every reply lands, and a reply tagged with
+    /// an already-absorbed step is then recognized as that straggler's late
+    /// uplink (folded into the server estimator) instead of a protocol
+    /// error.
     Round { id: usize, step: usize, loss: f32, bytes: usize, uplink: Wire },
     /// Irrecoverable worker-side failure (including panics: the worker's
     /// panic guard converts an unwind into this message so the leader

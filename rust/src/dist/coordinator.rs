@@ -18,27 +18,63 @@
 //! therefore reproducible from its seed on any machine — in every round
 //! mode, because reply *arrival* order never influences absorption order.
 //!
-//! Fault model: a worker that fails (gradient error, bad broadcast, or a
-//! panic anywhere in its round — converted to a [`FromWorker::Failed`] by
-//! the worker's panic guard) surfaces as a clean `Err` from
-//! [`Coordinator::round`] / [`Coordinator::run`]; the leader never hangs
-//! on a dead worker.
+//! Fault model ([`FaultPolicy`], default off = fail-stop):
+//!
+//! - **Fail-stop (default).** A worker that fails (gradient error, bad
+//!   broadcast, or a panic anywhere in its round — converted to a
+//!   [`FromWorker::Failed`] by the worker's panic guard) surfaces as a
+//!   clean `Err` from [`Coordinator::round`] / [`Coordinator::run`]; the
+//!   leader never hangs on a dead worker. With the policy off the absorb
+//!   loop is the plain blocking `recv()` — bit-identical to every release
+//!   before the policy existed.
+//! - **Straggler deadline.** With `deadline_ms > 0` the front round may
+//!   absorb once the deadline has passed and at least
+//!   `quorum_min = ceil(quorum · n)` workers have replied: the missing
+//!   slots are marked `Skipped`, counted as stragglers, and the round
+//!   aggregates over the quorum via [`ServerState::absorb_quorum`] — the
+//!   EF21 estimator terms of the missing workers are simply left in place.
+//!   A straggler's late reply (tagged with the already-absorbed step) is
+//!   recognized through the `owed` set and folded into the estimator by
+//!   [`ServerState::absorb_late`], so the server catches back up to the
+//!   full aggregate. `quorum = 1.0` makes `quorum_min = n`: the deadline
+//!   can never fire early and the trajectory stays bit-identical to
+//!   lock-step (the golden anchor, asserted in `rust/tests/scenario.rs`).
+//! - **Respawn.** With `max_respawns > 0` a `Failed` worker is relaunched
+//!   through the existing `INIT_STEP` re-init path (fresh [`WorkerState`]
+//!   seeded from the *current* server shift `W`, which already includes
+//!   every issued broadcast) after an exponential backoff; its unanswered
+//!   slots in all in-flight rounds are skipped (not counted as
+//!   stragglers). The respawned worker's `Init` gradient is discarded —
+//!   the server keeps the dead incarnation's estimator term as an accepted
+//!   constant bias (DESIGN.md §Fault tolerance). Once a worker exhausts
+//!   its budget the coordinator latches a terminal `Err`.
 
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::Message;
 use crate::linalg::matrix::{layers, Layers};
 use crate::opt::ef21::{ServerState, WorkerState};
 use crate::opt::{LayerGeometry, Schedule};
 use crate::spec::CompSpec;
 
 use super::comm::{FromWorker, ToWorker, Wire};
+use super::fault::{FaultKind, FaultPlan, FaultPolicy};
 use super::server::SpectralServer;
 use super::service::GradHandle;
 use super::{Meter, RoundMode, TransportMode};
+
+/// Straggler debts older than this many rounds are forgotten: a `Drop`
+/// fault (federated non-participation) never replies, and remembering its
+/// `(step, id)` forever would leak. Late replies beyond the window are
+/// protocol errors again — matching the pipeline bound, which also caps
+/// how stale an absorbable uplink can be.
+const OWED_WINDOW: usize = RoundMode::MAX_LOOKAHEAD;
 
 /// Configuration of one distributed EF21-Muon deployment.
 #[derive(Debug, Clone)]
@@ -63,6 +99,16 @@ pub struct CoordinatorCfg {
     pub seed: u64,
     /// Route spectral LMOs through the PJRT NS artifact when available.
     pub use_ns_artifact: bool,
+    /// Straggler / quorum / respawn policy. [`FaultPolicy::off`] (the
+    /// default) is bit-identical to the fail-stop lock-step deployment.
+    pub fault: FaultPolicy,
+    /// Deterministic fault-injection schedule for tests and benches; never
+    /// part of a serialized `RunSpec`.
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// First round index this deployment will issue — nonzero when resuming
+    /// from a checkpoint, so the schedule position is restored along with
+    /// the parameters.
+    pub start_step: usize,
 }
 
 /// Telemetry of one [`Coordinator::round`] call.
@@ -78,7 +124,8 @@ pub struct RoundStats {
     pub step: usize,
     /// The round whose uplinks this call absorbed, if any.
     pub absorbed_step: Option<usize>,
-    /// Mean of the workers' local train losses in the absorbed round.
+    /// Mean of the workers' local train losses in the absorbed round
+    /// (over the workers that replied, under a partial quorum).
     pub train_loss: f32,
     /// LMO radius of round `step` (the issued round for [`Coordinator::round`]
     /// entries, the absorbed round for [`Coordinator::drain`] entries — in
@@ -91,12 +138,28 @@ pub struct RoundStats {
     pub s2w_bytes: usize,
 }
 
+/// One worker's reply slot in an in-flight round.
+enum Slot {
+    /// No reply yet.
+    Empty,
+    /// The worker's uplink: local train loss, wire bytes, payload.
+    Filled(f32, usize, Wire),
+    /// The round will absorb without this worker (straggler past the
+    /// deadline, or a dead worker whose replacement never saw this
+    /// round's broadcast).
+    Skipped,
+}
+
 /// One round in flight: its schedule info plus id-indexed reply slots.
 struct InFlight {
     step: usize,
     radius: f64,
-    slots: Vec<Option<(f32, usize, Wire)>>,
+    slots: Vec<Slot>,
     filled: usize,
+    skipped: usize,
+    /// When the broadcast went out — the straggler deadline is measured
+    /// from here.
+    issued_at: Instant,
 }
 
 /// Telemetry of one absorbed round (internal).
@@ -105,6 +168,44 @@ struct Absorbed {
     radius: f64,
     train_loss: f32,
     w2s_bytes_per_worker: usize,
+}
+
+/// Everything needed to (re)launch a worker thread. Built once in
+/// [`Coordinator::spawn`] and used for the initial pool; kept on the
+/// coordinator only when the policy grants a respawn budget (its
+/// reply-channel sender would otherwise keep the channel open and defeat
+/// the fail-stop disconnect detection).
+struct WorkerLauncher {
+    worker_comp: CompSpec,
+    beta: f32,
+    seed: u64,
+    handle: GradHandle,
+    reply_tx: Sender<FromWorker>,
+    plan: Option<Arc<FaultPlan>>,
+}
+
+impl WorkerLauncher {
+    /// Launch worker `j` with its shift mirror initialized to `w0` (X⁰ at
+    /// first spawn; the current server W on respawn — which already
+    /// includes every issued broadcast, so the replacement is in sync with
+    /// the next round it will see).
+    fn launch(
+        &self,
+        j: usize,
+        w0: &Layers,
+        label: &str,
+    ) -> Result<(Sender<ToWorker>, JoinHandle<()>)> {
+        let state = WorkerState::new(j, w0, &self.worker_comp, self.beta, self.seed);
+        let (tx, rx) = channel::<ToWorker>();
+        let rtx = self.reply_tx.clone();
+        let h = self.handle.for_worker(j);
+        let plan = self.plan.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("efmuon-worker-{label}"))
+            .spawn(move || worker_main(state, rx, rtx, h, plan))
+            .map_err(|e| anyhow!("spawning worker {j}: {e}"))?;
+        Ok((tx, join))
+    }
 }
 
 /// The leader of a threaded EF21-Muon deployment.
@@ -121,10 +222,23 @@ pub struct Coordinator {
     to_workers: Vec<Sender<ToWorker>>,
     from_workers: Receiver<FromWorker>,
     joins: Vec<JoinHandle<()>>,
-    /// First fatal error, latched: once a worker fails, every further
-    /// `round`/`drain` call fails fast instead of re-entering the protocol
-    /// (a dying worker's command channel may linger briefly during unwind,
-    /// so without the latch a retry could block on a reply that never comes).
+    fault: FaultPolicy,
+    /// Present iff `fault.max_respawns > 0` (see [`WorkerLauncher`]).
+    launcher: Option<WorkerLauncher>,
+    /// Respawns consumed per worker id.
+    attempts: Vec<u32>,
+    /// Worker ids whose replacement's `Init` reply is still expected (and
+    /// discarded when it lands, instead of being a protocol error).
+    respawning: HashSet<usize>,
+    /// `(step, id)` slots absorbed without a reply whose late uplink is
+    /// still welcome ([`ServerState::absorb_late`]); pruned by
+    /// [`OWED_WINDOW`] and on respawn.
+    owed: HashSet<(usize, usize)>,
+    /// First fatal error, latched: once a worker fails terminally, every
+    /// further `round`/`drain` call fails fast instead of re-entering the
+    /// protocol (a dying worker's command channel may linger briefly during
+    /// unwind, so without the latch a retry could block on a reply that
+    /// never comes).
     failed: Option<String>,
 }
 
@@ -140,6 +254,7 @@ impl Coordinator {
         if cfg.n_workers == 0 {
             return Err(anyhow!("n_workers must be >= 1"));
         }
+        cfg.fault.validate().map_err(|e| anyhow!(e))?;
         let mut server = ServerState::new(
             x0.clone(),
             geometry,
@@ -149,22 +264,25 @@ impl Coordinator {
         );
 
         let (reply_tx, reply_rx) = channel::<FromWorker>();
+        let launcher = WorkerLauncher {
+            worker_comp: cfg.worker_comp,
+            beta: cfg.beta,
+            seed: cfg.seed,
+            handle: handle.clone(),
+            reply_tx,
+            plan: cfg.fault_plan,
+        };
         let mut to_workers = Vec::with_capacity(cfg.n_workers);
         let mut joins = Vec::with_capacity(cfg.n_workers);
         for j in 0..cfg.n_workers {
-            let state = WorkerState::new(j, &x0, &cfg.worker_comp, cfg.beta, cfg.seed);
-            let (tx, rx) = channel::<ToWorker>();
-            let rtx = reply_tx.clone();
-            let h = handle.for_worker(j);
-            joins.push(
-                std::thread::Builder::new()
-                    .name(format!("efmuon-worker-{j}"))
-                    .spawn(move || worker_main(state, rx, rtx, h))
-                    .map_err(|e| anyhow!("spawning worker {j}: {e}"))?,
-            );
+            let (tx, join) = launcher.launch(j, &x0, &j.to_string())?;
             to_workers.push(tx);
+            joins.push(join);
         }
-        drop(reply_tx);
+        // keep the launcher (and its reply-channel sender) only when the
+        // policy can respawn; otherwise drop it so `recv()` disconnects as
+        // soon as every worker thread has exited (fail-stop detection)
+        let launcher = (cfg.fault.max_respawns > 0).then_some(launcher);
 
         // initialization: collect G⁰ⱼ into id-slots, average in worker order
         // (bit-identical to the sequential driver's init loop)
@@ -196,11 +314,16 @@ impl Coordinator {
             spectral: SpectralServer::new(handle.clone(), cfg.use_ns_artifact),
             handle,
             meter: Meter::new(),
-            step: 0,
+            step: cfg.start_step,
             pending: VecDeque::new(),
             to_workers,
             from_workers: reply_rx,
             joins,
+            fault: cfg.fault,
+            launcher,
+            attempts: vec![0; cfg.n_workers],
+            respawning: HashSet::new(),
+            owed: HashSet::new(),
             failed: None,
         })
     }
@@ -235,16 +358,27 @@ impl Coordinator {
         let bcast = self.server.broadcast();
         let (wire, s2w_bytes) = Wire::pack(bcast, self.transport);
         for tx in &self.to_workers {
-            tx.send(ToWorker::Round { step: self.step, broadcast: wire.clone() })
-                .map_err(|_| anyhow!("a worker thread has exited"))?;
+            // a failed send to a respawnable worker is tolerated: the
+            // worker's `Failed` reply is already queued (it always sends
+            // one before its command channel closes), and processing it
+            // will skip this round's slot and relaunch
+            if tx
+                .send(ToWorker::Round { step: self.step, broadcast: wire.clone() })
+                .is_err()
+                && self.launcher.is_none()
+            {
+                return Err(anyhow!("a worker thread has exited"));
+            }
         }
         self.meter.record_broadcast(s2w_bytes as u64);
         let n = self.to_workers.len();
         self.pending.push_back(InFlight {
             step: self.step,
             radius: t,
-            slots: (0..n).map(|_| None).collect(),
+            slots: (0..n).map(|_| Slot::Empty).collect(),
             filled: 0,
+            skipped: 0,
+            issued_at: Instant::now(),
         });
         let issued = self.step;
         self.step += 1;
@@ -332,71 +466,225 @@ impl Coordinator {
         r
     }
 
-    /// Receive replies until the oldest in-flight round is complete, then
-    /// absorb it in worker-id order and return its telemetry.
+    /// Receive replies until the oldest in-flight round is complete — every
+    /// slot filled, or (past the straggler deadline, with quorum met) the
+    /// missing slots skipped — then absorb it in worker-id order and return
+    /// its telemetry. With the fault policy off this is the plain blocking
+    /// loop, bit-identical to the fail-stop deployment.
     fn absorb_oldest(&mut self) -> Result<Absorbed> {
         loop {
-            let done = match self.pending.front() {
-                Some(p) => p.filled == p.slots.len(),
+            let (n, filled, skipped, elapsed) = match self.pending.front() {
+                Some(p) => (p.slots.len(), p.filled, p.skipped, p.issued_at.elapsed()),
                 None => return Err(anyhow!("no round in flight to absorb")),
             };
-            if done {
+            if filled + skipped == n {
                 break;
             }
-            match self.from_workers.recv() {
-                Ok(FromWorker::Round { id, step, loss, bytes, uplink }) => {
-                    let front_step = self.pending.front().expect("pending non-empty").step;
-                    if step < front_step {
-                        return Err(anyhow!(
-                            "worker {id} replied for already-absorbed step {step}"
-                        ));
+            if self.fault.deadline_ms == 0 {
+                // fail-stop absorb: block until the next reply
+                match self.from_workers.recv() {
+                    Ok(msg) => self.handle_reply(msg)?,
+                    Err(_) => return Err(anyhow!("worker channel closed mid-round")),
+                }
+                continue;
+            }
+            let deadline = Duration::from_millis(self.fault.deadline_ms);
+            if elapsed >= deadline {
+                if filled >= self.fault.quorum_min(n) {
+                    self.skip_stragglers();
+                    break;
+                }
+                // deadline passed but quorum not met: keep waiting
+                match self.from_workers.recv() {
+                    Ok(msg) => self.handle_reply(msg)?,
+                    Err(_) => return Err(anyhow!("worker channel closed mid-round")),
+                }
+            } else {
+                match self.from_workers.recv_timeout(deadline - elapsed) {
+                    Ok(msg) => self.handle_reply(msg)?,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("worker channel closed mid-round"))
                     }
-                    let p = match self.pending.get_mut(step - front_step) {
-                        Some(p) => p,
-                        None => {
-                            return Err(anyhow!("worker {id} replied for un-issued step {step}"))
-                        }
-                    };
-                    if id >= p.slots.len() || p.slots[id].is_some() {
-                        return Err(anyhow!(
-                            "duplicate or out-of-range reply from worker {id} at step {step}"
-                        ));
-                    }
-                    p.slots[id] = Some((loss, bytes, uplink));
-                    p.filled += 1;
                 }
-                Ok(FromWorker::Failed { id, err }) => {
-                    return Err(anyhow!("worker {id} failed: {err}"))
-                }
-                Ok(FromWorker::Init { id, .. }) => {
-                    return Err(anyhow!("unexpected re-init from worker {id}"))
-                }
-                Err(_) => return Err(anyhow!("worker channel closed mid-round")),
             }
         }
+        self.finalize_front()
+    }
 
-        let p = self.pending.pop_front().expect("pending non-empty");
-        let n = p.slots.len();
-        let mut all_msgs = Vec::with_capacity(n);
-        let mut loss_acc = 0.0f64;
-        let mut w2s_per_worker = 0usize;
-        let mut w2s_all = 0u64;
-        // decode + absorb in worker-id order (determinism contract)
-        for slot in p.slots.into_iter() {
-            let (loss, bytes, uplink) = slot.expect("all round slots filled");
-            loss_acc += loss as f64;
-            w2s_per_worker = bytes;
-            w2s_all += bytes as u64;
-            all_msgs.push(uplink.unpack().map_err(anyhow::Error::msg)?);
+    /// Mark every empty slot of the front round `Skipped` and record the
+    /// skipped workers as owed stragglers.
+    fn skip_stragglers(&mut self) {
+        let p = self.pending.front_mut().expect("pending non-empty");
+        let mut newly = Vec::new();
+        for (id, slot) in p.slots.iter_mut().enumerate() {
+            if matches!(slot, Slot::Empty) {
+                *slot = Slot::Skipped;
+                newly.push(id);
+            }
         }
-        self.server.absorb(&all_msgs);
-        self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
-        Ok(Absorbed {
-            step: p.step,
-            radius: p.radius,
-            train_loss: (loss_acc / n as f64) as f32,
-            w2s_bytes_per_worker: w2s_per_worker,
-        })
+        p.skipped += newly.len();
+        let front_step = p.step;
+        for &id in &newly {
+            self.owed.insert((front_step, id));
+        }
+        self.meter.record_stragglers(newly.len() as u64);
+    }
+
+    /// Route one worker message: a current reply into its round's id-slot,
+    /// an owed straggler's late uplink into the server estimator, a failure
+    /// into the respawn path (or a terminal error).
+    fn handle_reply(&mut self, msg: FromWorker) -> Result<()> {
+        match msg {
+            FromWorker::Round { id, step, loss, bytes, uplink } => {
+                let front_step = self.pending.front().expect("pending non-empty").step;
+                if step < front_step {
+                    if self.owed.remove(&(step, id)) {
+                        // a straggler's late uplink: its round already
+                        // absorbed without it — fold the residual into the
+                        // estimator so the server catches back up
+                        let msgs = uplink.unpack().map_err(anyhow::Error::msg)?;
+                        self.server.absorb_late(&msgs);
+                        self.meter.record_late_uplink(bytes as u64);
+                        return Ok(());
+                    }
+                    return Err(anyhow!(
+                        "worker {id} replied for already-absorbed step {step}"
+                    ));
+                }
+                let p = match self.pending.get_mut(step - front_step) {
+                    Some(p) => p,
+                    None => {
+                        return Err(anyhow!("worker {id} replied for un-issued step {step}"))
+                    }
+                };
+                if id >= p.slots.len() || !matches!(p.slots[id], Slot::Empty) {
+                    return Err(anyhow!(
+                        "duplicate or out-of-range reply from worker {id} at step {step}"
+                    ));
+                }
+                p.slots[id] = Slot::Filled(loss, bytes, uplink);
+                p.filled += 1;
+                Ok(())
+            }
+            FromWorker::Failed { id, err } => self.handle_failure(id, &err),
+            FromWorker::Init { id, .. } => {
+                // a respawned worker re-runs the INIT_STEP path; its fresh
+                // G⁰ⱼ is discarded — the server keeps the dead
+                // incarnation's estimator term (accepted constant bias)
+                if self.respawning.remove(&id) {
+                    Ok(())
+                } else {
+                    Err(anyhow!("unexpected re-init from worker {id}"))
+                }
+            }
+        }
+    }
+
+    /// A worker reported failure: relaunch it if the policy still has
+    /// budget for this id, else return the terminal error.
+    fn handle_failure(&mut self, id: usize, err: &str) -> Result<()> {
+        if self.launcher.is_none() {
+            return Err(anyhow!("worker {id} failed: {err}"));
+        }
+        let attempt = self.attempts[id] + 1;
+        if attempt > self.fault.max_respawns {
+            return Err(anyhow!(
+                "worker {id} failed after {} respawn(s): {err}",
+                self.attempts[id]
+            ));
+        }
+        self.attempts[id] = attempt;
+        // the dead worker can no longer answer any in-flight round, and its
+        // replacement never saw those broadcasts (sent on the old channel):
+        // skip its slots so the rounds complete over the remaining workers.
+        // Not counted as stragglers — these are failures, not slow replies.
+        for p in self.pending.iter_mut() {
+            if matches!(p.slots[id], Slot::Empty) {
+                p.slots[id] = Slot::Skipped;
+                p.skipped += 1;
+            }
+        }
+        // any late uplink it owed will never come
+        self.owed.retain(|&(_, w)| w != id);
+        let backoff = self.fault.backoff_for(attempt);
+        if backoff > 0 {
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+        let launcher = self.launcher.as_ref().expect("respawn requires a launcher");
+        let (tx, join) =
+            launcher.launch(id, &self.server.w, &format!("{id}r{attempt}"))?;
+        self.to_workers[id] = tx;
+        self.joins.push(join);
+        self.respawning.insert(id);
+        self.meter.record_respawn();
+        Ok(())
+    }
+
+    /// Pop the completed front round and absorb it in worker-id order.
+    /// A fully-replied round takes the exact fail-stop path
+    /// ([`ServerState::absorb`]); a round with skipped slots aggregates
+    /// over its quorum ([`ServerState::absorb_quorum`]).
+    fn finalize_front(&mut self) -> Result<Absorbed> {
+        let p = self.pending.pop_front().expect("pending non-empty");
+        // forget straggler debts the pipeline has left far behind
+        let front_step = p.step;
+        self.owed.retain(|&(s, _)| s + OWED_WINDOW >= front_step);
+        let n = p.slots.len();
+        if p.skipped == 0 {
+            let mut all_msgs = Vec::with_capacity(n);
+            let mut loss_acc = 0.0f64;
+            let mut w2s_per_worker = 0usize;
+            let mut w2s_all = 0u64;
+            // decode + absorb in worker-id order (determinism contract)
+            for slot in p.slots.into_iter() {
+                let (loss, bytes, uplink) = match slot {
+                    Slot::Filled(loss, bytes, uplink) => (loss, bytes, uplink),
+                    _ => unreachable!("all round slots filled"),
+                };
+                loss_acc += loss as f64;
+                w2s_per_worker = bytes;
+                w2s_all += bytes as u64;
+                all_msgs.push(uplink.unpack().map_err(anyhow::Error::msg)?);
+            }
+            self.server.absorb(&all_msgs);
+            self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
+            Ok(Absorbed {
+                step: p.step,
+                radius: p.radius,
+                train_loss: (loss_acc / n as f64) as f32,
+                w2s_bytes_per_worker: w2s_per_worker,
+            })
+        } else {
+            let mut quorum_msgs: Vec<Option<Vec<Message>>> = Vec::with_capacity(n);
+            let mut loss_acc = 0.0f64;
+            let mut replied = 0usize;
+            let mut w2s_per_worker = 0usize;
+            let mut w2s_all = 0u64;
+            for slot in p.slots.into_iter() {
+                match slot {
+                    Slot::Filled(loss, bytes, uplink) => {
+                        loss_acc += loss as f64;
+                        replied += 1;
+                        w2s_per_worker = bytes;
+                        w2s_all += bytes as u64;
+                        quorum_msgs.push(Some(uplink.unpack().map_err(anyhow::Error::msg)?));
+                    }
+                    Slot::Skipped => quorum_msgs.push(None),
+                    Slot::Empty => unreachable!("front round completed"),
+                }
+            }
+            self.server.absorb_quorum(&quorum_msgs);
+            self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
+            self.meter.record_partial_round();
+            Ok(Absorbed {
+                step: p.step,
+                radius: p.radius,
+                // NaN when nobody replied (possible only via respawn skips)
+                train_loss: (loss_acc / replied as f64) as f32,
+                w2s_bytes_per_worker: w2s_per_worker,
+            })
+        }
     }
 
     /// Evaluation loss at the current server parameters (borrowed — the
@@ -441,6 +729,8 @@ impl Drop for Coordinator {
         for tx in &self.to_workers {
             let _ = tx.send(ToWorker::Stop);
         }
+        // release the launcher's reply-channel sender with the rest
+        self.launcher = None;
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
@@ -468,11 +758,13 @@ impl Drop for PanicGuard {
 }
 
 /// Worker-thread main loop: init, then one EF21 local step per command.
+/// The `plan` hook injects deterministic faults for tests/benches.
 fn worker_main(
     mut state: WorkerState,
     rx: Receiver<ToWorker>,
     tx: Sender<FromWorker>,
     mut handle: GradHandle,
+    plan: Option<Arc<FaultPlan>>,
 ) {
     let id = state.id;
     let _guard = PanicGuard { id, tx: tx.clone() };
@@ -494,6 +786,10 @@ fn worker_main(
             ToWorker::Stop => break,
             ToWorker::Round { step, broadcast } => (step, broadcast),
         };
+        let fault = plan.as_ref().and_then(|p| p.at(id, step));
+        if matches!(fault, Some(FaultKind::Panic)) {
+            panic!("injected fault: worker {id} panics at step {step}");
+        }
         let mode = broadcast.mode();
         let msgs = match broadcast.unpack() {
             Ok(m) => m,
@@ -503,6 +799,14 @@ fn worker_main(
             }
         };
         state.apply_broadcast(&msgs);
+        if matches!(fault, Some(FaultKind::Drop)) {
+            // federated non-participation: shift stays in sync, but the
+            // local step and reply are skipped — the slot stays owed
+            continue;
+        }
+        if let Some(FaultKind::DelayMs(ms)) = fault {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
         // the round index doubles as the data/board epoch: sharded handles
         // read the cross-shard parameter snapshot sealed for this round, and
         // the PJRT service keys batch sampling on (worker, step) so cluster

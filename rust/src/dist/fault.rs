@@ -1,0 +1,360 @@
+//! Fault tolerance: the typed straggler/respawn policy and the
+//! deterministic fault-injection plan.
+//!
+//! [`FaultPolicy`] is the spec-level knob carried by `RunSpec`,
+//! `CoordinatorCfg` and `ClusterCfg`. The default (`off()`) reproduces the
+//! fail-stop lock-step deployment bit for bit: every round blocks until all
+//! workers reply and the first failure latches the coordinator. Turning the
+//! policy on makes the absorb loop deadline-driven — workers past
+//! `deadline_ms` are marked stragglers and the round aggregates over the
+//! quorum that did reply (the EF21 server estimator for the missing ids is
+//! simply left untouched; its compressed-difference state waits for the
+//! next round the worker participates in) — and gives dead workers a
+//! bounded respawn budget through the existing `INIT_STEP` re-init path.
+//!
+//! [`FaultPlan`] is a test/bench-only injection harness: a seeded, fully
+//! deterministic schedule of `(worker, step) → FaultKind` events hooked
+//! into the worker threads. It is deliberately *not* part of `RunSpec`
+//! (never serialized into a config): faults are injected by tests, not
+//! configured by runs.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// FaultPolicy
+// ---------------------------------------------------------------------------
+
+/// Straggler / quorum / respawn policy for a deployment.
+///
+/// Spec grammar (the `--fault-policy` flag and the `fault_policy` config
+/// key): `off`, or a comma list of `key:value` pairs —
+/// `deadline:50,quorum:0.75,respawns:2,backoff:10`. Omitted keys take the
+/// field defaults below; [`FaultPolicy::spec`] always emits either `off`
+/// or all four keys in that fixed order, so `parse(spec(p)) == p` exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPolicy {
+    /// Per-round straggler deadline in milliseconds, measured from the
+    /// round's broadcast. `0` disables the deadline: the absorb loop blocks
+    /// exactly like the policy-off path.
+    pub deadline_ms: u64,
+    /// Minimum fraction of workers that must have replied before a
+    /// deadline-expired round may absorb. In `(0, 1]`; `1.0` waits for
+    /// everyone — the golden anchor, bit-identical to lock-step.
+    pub quorum: f32,
+    /// Respawn budget per worker id. A failed worker is relaunched through
+    /// the `INIT_STEP` re-init path up to this many times before the
+    /// coordinator returns a terminal `Err`. `0` keeps failures fail-stop.
+    pub max_respawns: u32,
+    /// Base backoff before a respawn; attempt `k` (1-based) sleeps
+    /// `backoff_ms << (k - 1)` milliseconds.
+    pub backoff_ms: u64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy::off()
+    }
+}
+
+impl FaultPolicy {
+    /// The fail-stop default: no deadline, full quorum, no respawns.
+    pub const fn off() -> Self {
+        FaultPolicy { deadline_ms: 0, quorum: 1.0, max_respawns: 0, backoff_ms: 0 }
+    }
+
+    /// True when the policy changes nothing about the lock-step deployment.
+    pub fn is_off(&self) -> bool {
+        *self == FaultPolicy::off()
+    }
+
+    /// Minimum reply count implied by `quorum` for an `n`-worker pool
+    /// (ceil, clamped into `[1, n]`).
+    pub fn quorum_min(&self, n: usize) -> usize {
+        let q = (self.quorum as f64 * n as f64).ceil() as usize;
+        q.clamp(1, n)
+    }
+
+    /// Backoff before respawn `attempt` (1-based), capped at 30 s so a
+    /// misconfigured exponent cannot wedge the supervisor.
+    pub fn backoff_for(&self, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(20);
+        (self.backoff_ms << shift).min(30_000)
+    }
+
+    /// Parse the spec grammar. Accepts `off` (or the empty string) and any
+    /// subset of `deadline:MS,quorum:F,respawns:N,backoff:MS`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(FaultPolicy::off());
+        }
+        let mut p = FaultPolicy::off();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault policy: expected key:value, got {part:?}"))?;
+            match key {
+                "deadline" => {
+                    p.deadline_ms = val
+                        .parse()
+                        .map_err(|_| format!("fault policy: bad deadline {val:?}"))?;
+                }
+                "quorum" => {
+                    p.quorum = val
+                        .parse()
+                        .map_err(|_| format!("fault policy: bad quorum {val:?}"))?;
+                }
+                "respawns" => {
+                    p.max_respawns = val
+                        .parse()
+                        .map_err(|_| format!("fault policy: bad respawns {val:?}"))?;
+                }
+                "backoff" => {
+                    p.backoff_ms = val
+                        .parse()
+                        .map_err(|_| format!("fault policy: bad backoff {val:?}"))?;
+                }
+                other => {
+                    return Err(format!(
+                        "fault policy: unknown key {other:?} \
+                         (expected deadline/quorum/respawns/backoff, or \"off\")"
+                    ))
+                }
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Canonical spec string; `parse` round-trips it losslessly.
+    pub fn spec(&self) -> String {
+        if self.is_off() {
+            return "off".into();
+        }
+        format!(
+            "deadline:{},quorum:{},respawns:{},backoff:{}",
+            self.deadline_ms, self.quorum, self.max_respawns, self.backoff_ms
+        )
+    }
+
+    /// Field-level validation (also run by `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.quorum.is_finite() || self.quorum <= 0.0 || self.quorum > 1.0 {
+            return Err(format!(
+                "fault policy: quorum must be in (0, 1] (got {})",
+                self.quorum
+            ));
+        }
+        if self.quorum < 1.0 && self.deadline_ms == 0 {
+            return Err(
+                "fault policy: quorum < 1 requires a deadline (deadline:MS)".into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for FaultPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan — deterministic injection
+// ---------------------------------------------------------------------------
+
+/// What a scheduled fault does to the worker that hits it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panics at the scheduled step (a fail-stop crash;
+    /// the panic guard converts it into a `Failed` reply).
+    Panic,
+    /// The worker sleeps this long before computing its gradient — a
+    /// straggler the deadline should skip (and whose late reply the
+    /// coordinator re-absorbs into the EF21 estimator when it lands).
+    DelayMs(u64),
+    /// The worker applies the broadcast (keeping its shift in sync) but
+    /// skips its local step and reply entirely — federated
+    /// non-participation; its slot is owed forever.
+    Drop,
+}
+
+/// A deterministic schedule of faults keyed by `(worker, step)`.
+///
+/// Carried as `Option<Arc<FaultPlan>>` on the deployment cfgs and consulted
+/// by each worker thread right after it receives a round's broadcast.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    events: HashMap<(usize, usize), FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Schedule `kind` for `worker` at `step` (builder-style).
+    pub fn with(mut self, worker: usize, step: usize, kind: FaultKind) -> Self {
+        self.events.insert((worker, step), kind);
+        self
+    }
+
+    /// The fault scheduled for `(worker, step)`, if any.
+    pub fn at(&self, worker: usize, step: usize) -> Option<FaultKind> {
+        self.events.get(&(worker, step)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// `(panics, delays, drops)` — the exact injected counts, for asserting
+    /// meter totals against the plan.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for kind in self.events.values() {
+            match kind {
+                FaultKind::Panic => c.0 += 1,
+                FaultKind::DelayMs(_) => c.1 += 1,
+                FaultKind::Drop => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// A seeded random plan: `n_events` distinct `(worker, step)` slots
+    /// drawn uniformly from `workers × [min_step, steps)` with kinds cycled
+    /// panic → delay → drop. `min_step` keeps faults away from warmup
+    /// rounds a test wants clean. Fully deterministic in `seed`.
+    pub fn seeded(
+        seed: u64,
+        workers: usize,
+        steps: usize,
+        min_step: usize,
+        n_events: usize,
+        delay_ms: u64,
+    ) -> Self {
+        assert!(workers > 0 && steps > min_step, "empty fault domain");
+        let mut rng = Rng::with_stream(seed, 0xfa_17);
+        let mut plan = FaultPlan::new();
+        let kinds = [FaultKind::Panic, FaultKind::DelayMs(delay_ms), FaultKind::Drop];
+        let mut k = 0usize;
+        let domain = workers * (steps - min_step);
+        let target = n_events.min(domain);
+        while plan.events.len() < target {
+            let worker = rng.below(workers);
+            let step = min_step + rng.below(steps - min_step);
+            if plan.events.contains_key(&(worker, step)) {
+                continue;
+            }
+            plan.events.insert((worker, step), kinds[k % kinds.len()]);
+            k += 1;
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_default_is_off_and_roundtrips() {
+        let p = FaultPolicy::default();
+        assert!(p.is_off());
+        assert_eq!(p.spec(), "off");
+        assert_eq!(FaultPolicy::parse("off").unwrap(), p);
+        assert_eq!(FaultPolicy::parse("").unwrap(), p);
+    }
+
+    #[test]
+    fn policy_spec_parse_roundtrip() {
+        for s in [
+            "deadline:50,quorum:0.75,respawns:2,backoff:10",
+            "deadline:1,quorum:1,respawns:0,backoff:0",
+            "deadline:0,quorum:1,respawns:3,backoff:250",
+        ] {
+            let p = FaultPolicy::parse(s).unwrap();
+            assert_eq!(FaultPolicy::parse(&p.spec()).unwrap(), p, "spec {s}");
+        }
+        // subset parses fill defaults, then canonicalize stably
+        let p = FaultPolicy::parse("deadline:25").unwrap();
+        assert_eq!(p.deadline_ms, 25);
+        assert_eq!(p.quorum, 1.0);
+        assert_eq!(FaultPolicy::parse(&p.spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn policy_rejects_bad_fields() {
+        assert!(FaultPolicy::parse("quorum:0").is_err());
+        assert!(FaultPolicy::parse("quorum:1.5,deadline:10").is_err());
+        assert!(FaultPolicy::parse("quorum:nan,deadline:10").is_err());
+        // quorum < 1 without a deadline can never absorb early
+        assert!(FaultPolicy::parse("quorum:0.5").is_err());
+        assert!(FaultPolicy::parse("deadline:ten").is_err());
+        assert!(FaultPolicy::parse("pizza:1").is_err());
+        assert!(FaultPolicy::parse("deadline=10").is_err());
+    }
+
+    #[test]
+    fn quorum_min_is_ceil_clamped() {
+        let mut p = FaultPolicy::off();
+        p.deadline_ms = 10;
+        p.quorum = 0.5;
+        assert_eq!(p.quorum_min(4), 2);
+        assert_eq!(p.quorum_min(5), 3);
+        p.quorum = 0.01;
+        assert_eq!(p.quorum_min(4), 1);
+        p.quorum = 1.0;
+        assert_eq!(p.quorum_min(4), 4);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = FaultPolicy { backoff_ms: 10, ..FaultPolicy::off() };
+        assert_eq!(p.backoff_for(1), 10);
+        assert_eq!(p.backoff_for(2), 20);
+        assert_eq!(p.backoff_for(3), 40);
+        assert!(p.backoff_for(64) <= 30_000);
+    }
+
+    #[test]
+    fn plan_builder_and_lookup() {
+        let plan = FaultPlan::new()
+            .with(0, 3, FaultKind::Panic)
+            .with(2, 5, FaultKind::DelayMs(40))
+            .with(1, 7, FaultKind::Drop);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.at(0, 3), Some(FaultKind::Panic));
+        assert_eq!(plan.at(2, 5), Some(FaultKind::DelayMs(40)));
+        assert_eq!(plan.at(1, 7), Some(FaultKind::Drop));
+        assert_eq!(plan.at(0, 4), None);
+        assert_eq!(plan.counts(), (1, 1, 1));
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_in_domain() {
+        let a = FaultPlan::seeded(9, 4, 30, 5, 6, 25);
+        let b = FaultPlan::seeded(9, 4, 30, 5, 6, 25);
+        assert_eq!(a.len(), 6);
+        for (&(w, s), kind) in &a.events {
+            assert!(w < 4 && (5..30).contains(&s));
+            assert_eq!(b.at(w, s), Some(*kind), "same seed, same plan");
+        }
+        let c = FaultPlan::seeded(10, 4, 30, 5, 6, 25);
+        let mut ka: Vec<_> = a.events.keys().copied().collect();
+        let mut kc: Vec<_> = c.events.keys().copied().collect();
+        ka.sort_unstable();
+        kc.sort_unstable();
+        assert_ne!(ka, kc, "different seeds should differ");
+    }
+}

@@ -52,6 +52,7 @@
 pub mod cluster;
 pub mod comm;
 pub mod coordinator;
+pub mod fault;
 pub mod server;
 pub mod service;
 
@@ -148,6 +149,13 @@ pub struct Meter {
     pub rounds_issued: AtomicU64,
     /// Rounds whose uplinks have been fully absorbed.
     pub rounds_absorbed: AtomicU64,
+    /// Worker replies skipped at a straggler deadline (one per skipped
+    /// slot; [`fault::FaultPolicy`]). Zero in a fault-free run.
+    pub stragglers: AtomicU64,
+    /// Workers respawned by the supervisor after a failure.
+    pub respawns: AtomicU64,
+    /// Rounds absorbed over a partial quorum (at least one slot skipped).
+    pub partial_rounds: AtomicU64,
 }
 
 impl Meter {
@@ -180,6 +188,21 @@ impl Meter {
         self.rounds_absorbed.load(Ordering::Relaxed)
     }
 
+    /// Deadline-skipped worker replies so far.
+    pub fn stragglers(&self) -> u64 {
+        self.stragglers.load(Ordering::Relaxed)
+    }
+
+    /// Worker respawns so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Rounds absorbed with a partial quorum so far.
+    pub fn partial_rounds(&self) -> u64 {
+        self.partial_rounds.load(Ordering::Relaxed)
+    }
+
     /// Record one issued broadcast (s2w direction).
     pub(crate) fn record_broadcast(&self, s2w: u64) {
         self.s2w_total.fetch_add(s2w, Ordering::Relaxed);
@@ -193,6 +216,29 @@ impl Meter {
         self.rounds_absorbed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` slots skipped at a straggler deadline.
+    pub(crate) fn record_stragglers(&self, n: u64) {
+        self.stragglers.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one worker respawn.
+    pub(crate) fn record_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one round absorbed over a partial quorum.
+    pub(crate) fn record_partial_round(&self) {
+        self.partial_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Late w2s bytes from a straggler whose round already absorbed (its
+    /// residual still lands in the server estimator, so the wire traffic is
+    /// real — count it in the all-workers total, without advancing the
+    /// round counters or the single-worker reporting unit).
+    pub(crate) fn record_late_uplink(&self, bytes: u64) {
+        self.w2s_all.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// A point-in-time copy of every counter (plain integers — cheap to
     /// ship across threads; the cluster rollup aggregates these).
     pub fn snapshot(&self) -> MeterSnapshot {
@@ -202,6 +248,9 @@ impl Meter {
             s2w_total: self.s2w(),
             rounds_issued: self.rounds_issued(),
             rounds_absorbed: self.rounds_absorbed(),
+            stragglers: self.stragglers(),
+            respawns: self.respawns(),
+            partial_rounds: self.partial_rounds(),
             // host memory-traffic counters are overlaid by the cluster
             // layer; a lone coordinator assembles nothing
             ..MeterSnapshot::default()
@@ -228,6 +277,12 @@ pub struct MeterSnapshot {
     pub snap_reused: u64,
     /// Bytes deep-copied on the host gradient/snapshot path.
     pub bytes_cloned: u64,
+    /// Deadline-skipped worker replies ([`fault::FaultPolicy`]).
+    pub stragglers: u64,
+    /// Worker respawns performed by the supervisor.
+    pub respawns: u64,
+    /// Rounds absorbed over a partial quorum.
+    pub partial_rounds: u64,
 }
 
 impl MeterSnapshot {
@@ -240,6 +295,9 @@ impl MeterSnapshot {
         self.snap_assembled += other.snap_assembled;
         self.snap_reused += other.snap_reused;
         self.bytes_cloned += other.bytes_cloned;
+        self.stragglers += other.stragglers;
+        self.respawns += other.respawns;
+        self.partial_rounds += other.partial_rounds;
         if first {
             self.rounds_issued = other.rounds_issued;
             self.rounds_absorbed = other.rounds_absorbed;
@@ -260,6 +318,9 @@ impl MeterSnapshot {
             .put("snap_assembled", self.snap_assembled)
             .put("snap_reused", self.snap_reused)
             .put("bytes_cloned", self.bytes_cloned)
+            .put("stragglers", self.stragglers)
+            .put("respawns", self.respawns)
+            .put("partial_rounds", self.partial_rounds)
             .build()
     }
 
@@ -285,6 +346,9 @@ impl MeterSnapshot {
             snap_assembled: opt("snap_assembled"),
             snap_reused: opt("snap_reused"),
             bytes_cloned: opt("bytes_cloned"),
+            stragglers: opt("stragglers"),
+            respawns: opt("respawns"),
+            partial_rounds: opt("partial_rounds"),
         })
     }
 }
@@ -354,5 +418,30 @@ mod tests {
         let back = MeterSnapshot::from_json(&j).unwrap();
         assert_eq!(back, snap);
         assert!(MeterSnapshot::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn meter_fault_counters_roundtrip_and_default_zero() {
+        let m = Meter::new();
+        m.record_stragglers(2);
+        m.record_respawn();
+        m.record_partial_round();
+        m.record_late_uplink(64);
+        let snap = m.snapshot();
+        assert_eq!(snap.stragglers, 2);
+        assert_eq!(snap.respawns, 1);
+        assert_eq!(snap.partial_rounds, 1);
+        assert_eq!(snap.w2s_all, 64);
+        assert_eq!(snap.w2s_per_worker, 0, "late bytes don't touch the per-worker unit");
+        let back = MeterSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        // old snapshots without fault counters still parse, as zeros
+        let legacy = Json::parse(
+            r#"{"w2s_per_worker":1,"w2s_all":2,"s2w_total":3,
+                "rounds_issued":4,"rounds_absorbed":4}"#,
+        )
+        .unwrap();
+        let s = MeterSnapshot::from_json(&legacy).unwrap();
+        assert_eq!((s.stragglers, s.respawns, s.partial_rounds), (0, 0, 0));
     }
 }

@@ -69,6 +69,8 @@ COMMANDS:
                       --round-mode sync|async:N --beta B --lr LR --warmup W
                       --eval-every E --seed S --log out.jsonl --full-codec
                       --lmo-hidden|--lmo-embed|--lmo-vector NORM
+                      --fault-policy off|deadline:MS,quorum:F,respawns:R,backoff:MS
+                      --checkpoint-every K --checkpoint-dir DIR --resume
   config       resolve (--config/--preset/flags), validate eagerly with
                field-path errors, and print the canonical JSON spec — its
                output is itself a valid --config file (lossless round trip)
@@ -107,6 +109,18 @@ SHARDING:
   coordinators (balanced by parameter count), each with its own worker
   pool, reduced by a root coordinator; --shards 1 is bit-identical to the
   single-leader deployment.
+
+FAULT TOLERANCE:
+  --fault-policy deadline:MS,quorum:F,respawns:R,backoff:MS
+    rounds absorb once a quorum (fraction F of workers) has replied and MS
+    milliseconds have elapsed; stragglers are skipped (their EF21 server
+    term stays in place), dead workers are respawned up to R times with
+    exponential backoff. quorum:1.0 is bit-identical to lock-step rounds;
+    the default (off) is the fail-stop behavior of prior versions.
+  --checkpoint-every K --checkpoint-dir DIR
+    atomically save params + run metadata every K steps; --resume restores
+    the latest checkpoint (params, step count, schedule position) and
+    continues. A missing checkpoint under --resume starts fresh.
 ";
 
 fn warn_unknown(args: &Args) {

@@ -206,6 +206,41 @@ impl ServerState {
         }
     }
 
+    /// [`ServerState::absorb`] over a partial quorum: slot `j` is `None`
+    /// for a worker whose reply was skipped at a straggler deadline. Only
+    /// the replies that landed are summed — the missing workers' share of
+    /// the estimator is simply left untouched (their local Gⱼ did not
+    /// advance either, if they dropped the round; if they merely straggled,
+    /// [`ServerState::absorb_late`] folds their residual in when it
+    /// arrives). With every slot `Some` the summation order is identical to
+    /// `absorb`, so a full quorum is bit-identical to the lock-step path.
+    pub fn absorb_quorum(&mut self, worker_msgs: &[Option<Vec<Message>>]) {
+        assert_eq!(worker_msgs.len(), self.n_workers);
+        let inv = 1.0 / self.n_workers as f32;
+        for i in 0..self.g.len() {
+            let agg = &mut self.agg[i];
+            agg.fill(0.0);
+            for msgs in worker_msgs.iter().flatten() {
+                msgs[i].add_into(agg);
+            }
+            self.g[i].axpy(inv, agg);
+        }
+    }
+
+    /// Fold one straggler's late residual into the estimator:
+    /// `Gᵢ += (1/n) Rⱼ`. The worker advanced its local Gⱼ when it computed
+    /// the reply, so this restores the `G = (1/n) Σⱼ Gⱼ` invariant its
+    /// skipped round left one term short.
+    pub fn absorb_late(&mut self, msgs: &[Message]) {
+        let inv = 1.0 / self.n_workers as f32;
+        for i in 0..self.g.len() {
+            let agg = &mut self.agg[i];
+            agg.fill(0.0);
+            msgs[i].add_into(agg);
+            self.g[i].axpy(inv, agg);
+        }
+    }
+
     /// ‖G‖ dual-norm diagnostics (per layer).
     pub fn grad_estimator_norms(&mut self) -> Vec<f64> {
         let mut rng = self.rng.split(0xd1a6);
@@ -496,6 +531,96 @@ mod tests {
         for _ in 0..25 {
             opt.step(&q);
             state_consistency(&opt).unwrap();
+        }
+    }
+
+    /// Run one round's LMO/broadcast/local-step phases by hand so the test
+    /// controls the absorb call.
+    fn drive_round_collect(opt: &mut Ef21MuonSeq, q: &Quadratics) -> Vec<Vec<Message>> {
+        let t = opt.schedule.at(opt.step);
+        opt.server.lmo_step(t);
+        let bcast = opt.server.broadcast();
+        let mut all = Vec::with_capacity(opt.workers.len());
+        for wkr in opt.workers.iter_mut() {
+            wkr.apply_broadcast(&bcast);
+            let grad = q.grad_j(wkr.id, &wkr.w);
+            all.push(wkr.local_step(&grad));
+        }
+        opt.step += 1;
+        all
+    }
+
+    #[test]
+    fn absorb_quorum_full_set_is_bitwise_absorb() {
+        let mut rng = Rng::new(305);
+        let q = Quadratics::new(3, 8, 1.0, 0.1, &mut rng);
+        let mk = || {
+            Ef21MuonSeq::new(
+                &q,
+                geom(1, LmoKind::Euclidean),
+                "top:0.5",
+                "id",
+                0.9,
+                Schedule::constant(0.02),
+                false,
+                21,
+            )
+            .unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..5 {
+            let all_a = drive_round_collect(&mut a, &q);
+            let all_b = drive_round_collect(&mut b, &q);
+            a.server.absorb(&all_a);
+            let full: Vec<Option<Vec<Message>>> = all_b.into_iter().map(Some).collect();
+            b.server.absorb_quorum(&full);
+            for i in 0..a.server.g.len() {
+                assert_eq!(
+                    a.server.g[i].max_abs_diff(&b.server.g[i]),
+                    0.0,
+                    "full quorum must be bit-identical to absorb (layer {i})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_quorum_plus_late_reconstructs_full_absorb() {
+        let mut rng = Rng::new(306);
+        let q = Quadratics::new(3, 8, 1.0, 0.1, &mut rng);
+        let mk = || {
+            Ef21MuonSeq::new(
+                &q,
+                geom(1, LmoKind::Euclidean),
+                "top:0.5",
+                "id",
+                0.9,
+                Schedule::constant(0.02),
+                false,
+                22,
+            )
+            .unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..4 {
+            let all_a = drive_round_collect(&mut a, &q);
+            let all_b = drive_round_collect(&mut b, &q);
+            a.server.absorb(&all_a);
+            // b's worker 2 straggles: its round absorbs without it, then
+            // its residual lands late — the estimator must catch back up
+            let quorum: Vec<Option<Vec<Message>>> = all_b
+                .iter()
+                .enumerate()
+                .map(|(j, m)| if j == 2 { None } else { Some(m.clone()) })
+                .collect();
+            b.server.absorb_quorum(&quorum);
+            b.server.absorb_late(&all_b[2]);
+            for i in 0..a.server.g.len() {
+                assert!(
+                    a.server.g[i].max_abs_diff(&b.server.g[i]) < 1e-5,
+                    "quorum + late must reconstruct the full absorb (layer {i})"
+                );
+            }
         }
     }
 

@@ -13,6 +13,7 @@
 use crate::config::TrainConfig;
 use crate::dist::cluster::ClusterCfg;
 use crate::dist::coordinator::CoordinatorCfg;
+use crate::dist::fault::FaultPolicy;
 use crate::dist::{RoundMode, TransportMode};
 use crate::lmo::LmoKind;
 use crate::model::Group;
@@ -231,6 +232,16 @@ pub struct RunSpec {
     pub seed: u64,
     /// Optional JSONL metrics path.
     pub log_path: Option<String>,
+    /// Straggler / quorum / respawn policy ([`FaultPolicy::off`] =
+    /// fail-stop lock-step, bit-identical to the policy-free deployment).
+    pub fault: FaultPolicy,
+    /// Save a checkpoint every this many steps (0 = never).
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are saved to / resumed from.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from the latest checkpoint in `checkpoint_dir` (fresh start
+    /// with a notice when none exists yet).
+    pub resume: bool,
 }
 
 impl Default for RunSpec {
@@ -254,6 +265,10 @@ impl Default for RunSpec {
             full_codec: false,
             seed: 0,
             log_path: None,
+            fault: FaultPolicy::off(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -273,7 +288,10 @@ impl RunSpec {
         self.schedule.materialize(self.steps)
     }
 
-    /// The single-leader deployment config this spec describes.
+    /// The single-leader deployment config this spec describes. The
+    /// fault-injection plan is always `None` (injection is a test/bench
+    /// hook, never part of a spec) and `start_step` is 0 — the driver
+    /// factory overrides it when resuming from a checkpoint.
     pub fn coordinator_cfg(&self) -> CoordinatorCfg {
         CoordinatorCfg {
             n_workers: self.workers,
@@ -285,10 +303,14 @@ impl RunSpec {
             round_mode: self.round,
             seed: self.seed,
             use_ns_artifact: self.use_ns_artifact,
+            fault: self.fault,
+            fault_plan: None,
+            start_step: 0,
         }
     }
 
-    /// The sharded deployment config this spec describes.
+    /// The sharded deployment config this spec describes (same `fault_plan`
+    /// / `start_step` conventions as [`RunSpec::coordinator_cfg`]).
     pub fn cluster_cfg(&self) -> ClusterCfg {
         ClusterCfg {
             shards: self.shards,
@@ -301,6 +323,9 @@ impl RunSpec {
             round_mode: self.round,
             seed: self.seed,
             use_ns_artifact: self.use_ns_artifact,
+            fault: self.fault,
+            fault_plan: None,
+            start_step: 0,
         }
     }
 
@@ -333,6 +358,10 @@ impl RunSpec {
             full_codec: self.full_codec,
             seed: self.seed,
             log_path: self.log_path.clone(),
+            fault_policy: self.fault.spec(),
+            checkpoint_every: self.checkpoint_every,
+            checkpoint_dir: self.checkpoint_dir.clone(),
+            resume: self.resume,
         }
     }
 
@@ -362,9 +391,15 @@ impl RunSpec {
             .put("eval_batches", self.eval_batches)
             .put("use_ns_artifact", self.use_ns_artifact)
             .put("full_codec", self.full_codec)
-            .put("seed", self.seed);
+            .put("seed", self.seed)
+            .put("fault_policy", self.fault.spec())
+            .put("checkpoint_every", self.checkpoint_every)
+            .put("resume", self.resume);
         if let Some(p) = &self.log_path {
             o = o.put("log_path", p.as_str());
+        }
+        if let Some(d) = &self.checkpoint_dir {
+            o = o.put("checkpoint_dir", d.as_str());
         }
         o.build()
     }
@@ -464,6 +499,13 @@ impl RunBuilder {
         b.spec.full_codec = cfg.full_codec;
         b.spec.seed = cfg.seed;
         b.spec.log_path = cfg.log_path.clone();
+        match FaultPolicy::parse(&cfg.fault_policy) {
+            Ok(p) => b.spec.fault = p,
+            Err(e) => b.err("fault_policy", e),
+        }
+        b.spec.checkpoint_every = cfg.checkpoint_every;
+        b.spec.checkpoint_dir = cfg.checkpoint_dir.clone();
+        b.spec.resume = cfg.resume;
         b
     }
 
@@ -577,6 +619,30 @@ impl RunBuilder {
         self
     }
 
+    /// Straggler / quorum / respawn policy (typed; validated at `build`).
+    pub fn fault(mut self, p: FaultPolicy) -> Self {
+        self.spec.fault = p;
+        self
+    }
+
+    /// Save a checkpoint every `k` steps (0 = never).
+    pub fn checkpoint_every(mut self, k: usize) -> Self {
+        self.spec.checkpoint_every = k;
+        self
+    }
+
+    /// Directory checkpoints are saved to / resumed from.
+    pub fn checkpoint_dir(mut self, d: impl Into<String>) -> Self {
+        self.spec.checkpoint_dir = Some(d.into());
+        self
+    }
+
+    /// Resume from the latest checkpoint in `checkpoint_dir`.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.spec.resume = on;
+        self
+    }
+
     /// Validate everything and return the spec, or *every* problem found.
     pub fn build(self) -> Result<RunSpec, SpecError> {
         let RunBuilder { spec, errors } = self;
@@ -627,6 +693,18 @@ impl RunBuilder {
                 "round_mode",
                 format!("lookahead exceeds the max of {}", RoundMode::MAX_LOOKAHEAD),
             );
+        }
+        if let Err(e) = spec.fault.validate() {
+            err.push("fault_policy", e);
+        }
+        if spec.checkpoint_every > 0 && spec.checkpoint_dir.is_none() {
+            err.push(
+                "checkpoint_every",
+                "saving checkpoints requires checkpoint_dir",
+            );
+        }
+        if spec.resume && spec.checkpoint_dir.is_none() {
+            err.push("resume", "resuming requires checkpoint_dir");
         }
         if err.fields.is_empty() {
             Ok(spec)
@@ -698,6 +776,29 @@ mod tests {
         let g = custom.for_groups([Group::Embed]);
         assert_eq!(g[0].lmo, LmoKind::Euclidean);
         assert_eq!(g[0].radius_mult, 2.0);
+    }
+
+    #[test]
+    fn fault_and_checkpoint_fields_roundtrip_and_validate() {
+        let spec = RunBuilder::new()
+            .fault(FaultPolicy::parse("deadline:50,quorum:0.75,respawns:2,backoff:5").unwrap())
+            .checkpoint_every(10)
+            .checkpoint_dir("/tmp/ck")
+            .build()
+            .unwrap();
+        let back = RunBuilder::from_config(&spec.to_train_config()).build().unwrap();
+        assert_eq!(back, spec);
+        // bad policy / orphan checkpoint knobs collect field-path errors
+        let cfg = TrainConfig {
+            fault_policy: "quorum:0.5".into(),
+            checkpoint_every: 5,
+            resume: true,
+            ..TrainConfig::default()
+        };
+        let err = RunBuilder::from_config(&cfg).build().unwrap_err();
+        for path in ["fault_policy", "checkpoint_every", "resume"] {
+            assert!(err.mentions(path), "missing {path} in {err}");
+        }
     }
 
     #[test]

@@ -2,10 +2,19 @@
 //! pretraining runs survive restarts (and so trained models can be handed
 //! to downstream tools). Format: `<stem>.bin` (f32 LE, layer order) +
 //! `<stem>.json` (metadata incl. shape table for validation).
+//!
+//! Saves are atomic: both files are written to `.tmp` siblings and moved
+//! into place with `rename`, so a kill mid-save never leaves a torn
+//! checkpoint for `--resume` to half-load — the stem either holds the
+//! previous complete checkpoint or the new one. The weights commit first;
+//! the metadata (whose `step` drives resume) commits second, so the
+//! worst-case crash window resumes one save earlier, never ahead of the
+//! weights. The seed is stored as a decimal string: JSON numbers travel as
+//! f64 here and would silently corrupt seeds above 2^53.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::linalg::matrix::{Layers, Matrix};
 use crate::util::json::{Json, JsonObj};
@@ -20,7 +29,7 @@ pub struct CheckpointMeta {
     pub shapes: Vec<(usize, usize)>,
 }
 
-/// Write `<stem>.bin` + `<stem>.json`.
+/// Write `<stem>.bin` + `<stem>.json` atomically (tmp + rename).
 pub fn save(stem: impl AsRef<Path>, params: &Layers, meta: &CheckpointMeta) -> Result<()> {
     let stem = stem.as_ref();
     if let Some(parent) = stem.parent() {
@@ -32,7 +41,6 @@ pub fn save(stem: impl AsRef<Path>, params: &Layers, meta: &CheckpointMeta) -> R
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
-    std::fs::write(stem.with_extension("bin"), &bytes)?;
     let shapes: Vec<Json> = params
         .iter()
         .map(|p| Json::Arr(vec![Json::Num(p.rows as f64), Json::Num(p.cols as f64)]))
@@ -41,34 +49,79 @@ pub fn save(stem: impl AsRef<Path>, params: &Layers, meta: &CheckpointMeta) -> R
         .put("step", meta.step)
         .put("eval_loss", meta.eval_loss)
         .put("comp", meta.comp.as_str())
-        .put("seed", meta.seed)
+        .put("seed", meta.seed.to_string().as_str())
         .put("shapes", Json::Arr(shapes))
         .build();
-    std::fs::write(stem.with_extension("json"), j.to_string())?;
+
+    let bin = stem.with_extension("bin");
+    let bin_tmp = stem.with_extension("bin.tmp");
+    let json = stem.with_extension("json");
+    let json_tmp = stem.with_extension("json.tmp");
+    std::fs::write(&bin_tmp, &bytes)
+        .with_context(|| format!("writing {}", bin_tmp.display()))?;
+    std::fs::write(&json_tmp, j.to_string())
+        .with_context(|| format!("writing {}", json_tmp.display()))?;
+    // weights first, metadata second: a crash between the renames resumes
+    // from the previous step count, never ahead of the committed weights
+    std::fs::rename(&bin_tmp, &bin)
+        .with_context(|| format!("committing {}", bin.display()))?;
+    std::fs::rename(&json_tmp, &json)
+        .with_context(|| format!("committing {}", json.display()))?;
     Ok(())
 }
 
 /// Read a checkpoint; validates the byte count against the shape table.
+/// Malformed metadata returns a clean `Err` naming the offending field —
+/// never a panic, never silently-zero shapes.
 pub fn load(stem: impl AsRef<Path>) -> Result<(Layers, CheckpointMeta)> {
     let stem = stem.as_ref();
     let meta_text = std::fs::read_to_string(stem.with_extension("json"))
         .with_context(|| format!("reading {}", stem.with_extension("json").display()))?;
     let j = Json::parse(&meta_text).map_err(anyhow::Error::msg)?;
-    let shapes: Vec<(usize, usize)> = j
+    let shape_entries = j
         .get("shapes")
         .and_then(|s| s.as_arr())
-        .ok_or_else(|| anyhow::anyhow!("checkpoint missing shapes"))?
-        .iter()
-        .map(|s| {
-            let a = s.as_arr().unwrap();
-            (a[0].as_usize().unwrap_or(0), a[1].as_usize().unwrap_or(0))
-        })
-        .collect();
+        .ok_or_else(|| anyhow!("checkpoint missing shapes"))?;
+    let mut shapes = Vec::with_capacity(shape_entries.len());
+    for (i, s) in shape_entries.iter().enumerate() {
+        let a = s
+            .as_arr()
+            .ok_or_else(|| anyhow!("checkpoint shapes[{i}]: expected [rows, cols]"))?;
+        if a.len() != 2 {
+            bail!("checkpoint shapes[{i}]: expected 2 entries, got {}", a.len());
+        }
+        let rows = a[0]
+            .as_usize()
+            .ok_or_else(|| anyhow!("checkpoint shapes[{i}]: rows must be a non-negative integer"))?;
+        let cols = a[1]
+            .as_usize()
+            .ok_or_else(|| anyhow!("checkpoint shapes[{i}]: cols must be a non-negative integer"))?;
+        if rows == 0 || cols == 0 {
+            bail!("checkpoint shapes[{i}]: degenerate shape {rows}x{cols}");
+        }
+        shapes.push((rows, cols));
+    }
+    let seed = match j.get("seed") {
+        None => 0,
+        Some(v) => {
+            if let Some(s) = v.as_str() {
+                // canonical form: decimal string, lossless for any u64
+                s.parse::<u64>()
+                    .map_err(|_| anyhow!("checkpoint seed: expected a u64, got {s:?}"))?
+            } else if let Some(n) = v.as_f64() {
+                // legacy numeric form (pre-string checkpoints; exact only
+                // below 2^53)
+                n as u64
+            } else {
+                bail!("checkpoint seed: expected a string or number");
+            }
+        }
+    };
     let meta = CheckpointMeta {
         step: j.get("step").and_then(|v| v.as_usize()).unwrap_or(0),
         eval_loss: j.get("eval_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
         comp: j.get("comp").and_then(|v| v.as_str()).unwrap_or("").to_string(),
-        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        seed,
         shapes: shapes.clone(),
     };
     let bytes = std::fs::read(stem.with_extension("bin"))?;
@@ -117,6 +170,9 @@ mod tests {
         for (a, b) in back.iter().zip(&params) {
             assert_eq!(a.data, b.data);
         }
+        // atomic save leaves no tmp droppings behind
+        assert!(!stem.with_extension("bin.tmp").exists());
+        assert!(!stem.with_extension("json.tmp").exists());
     }
 
     #[test]
@@ -138,5 +194,69 @@ mod tests {
         let bytes = std::fs::read(&bin).unwrap();
         std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
         assert!(load(&stem).is_err());
+    }
+
+    #[test]
+    fn seed_roundtrips_above_f64_precision() {
+        let params = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        // 2^63 + 1: corrupted by any f64 round trip
+        let seed = (1u64 << 63) + 1;
+        let meta = CheckpointMeta {
+            step: 3,
+            eval_loss: 0.5,
+            comp: "id".into(),
+            seed,
+            shapes: vec![(1, 1)],
+        };
+        let dir = std::env::temp_dir().join("efmuon_ckpt_seed");
+        let stem = dir.join("ck");
+        save(&stem, &params, &meta).unwrap();
+        let (_, back) = load(&stem).unwrap();
+        assert_eq!(back.seed, seed, "seed must round-trip losslessly");
+    }
+
+    #[test]
+    fn legacy_numeric_seed_still_parses() {
+        let dir = std::env::temp_dir().join("efmuon_ckpt_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ck");
+        std::fs::write(
+            stem.with_extension("json"),
+            r#"{"step": 5, "eval_loss": 1.0, "comp": "id", "seed": 99,
+                "shapes": [[1, 1]]}"#,
+        )
+        .unwrap();
+        std::fs::write(stem.with_extension("bin"), 1.0f32.to_le_bytes()).unwrap();
+        let (_, meta) = load(&stem).unwrap();
+        assert_eq!(meta.seed, 99);
+        assert_eq!(meta.step, 5);
+    }
+
+    #[test]
+    fn malformed_metadata_errors_cleanly() {
+        let dir = std::env::temp_dir().join("efmuon_ckpt_malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ck");
+        std::fs::write(stem.with_extension("bin"), [0u8; 4]).unwrap();
+        let cases = [
+            // shapes entry not an array: used to panic on as_arr().unwrap()
+            (r#"{"shapes": [7]}"#, "expected [rows, cols]"),
+            // wrong arity
+            (r#"{"shapes": [[4]]}"#, "expected 2 entries"),
+            // non-integer dims: used to become silent zero shapes
+            (r#"{"shapes": [["x", "y"]]}"#, "non-negative integer"),
+            // zero dims
+            (r#"{"shapes": [[0, 5]]}"#, "degenerate"),
+            // garbage seed
+            (r#"{"shapes": [[1, 1]], "seed": "not-a-number"}"#, "seed"),
+            (r#"{"shapes": [[1, 1]], "seed": true}"#, "seed"),
+            // no shapes at all
+            (r#"{"step": 1}"#, "missing shapes"),
+        ];
+        for (text, needle) in cases {
+            std::fs::write(stem.with_extension("json"), text).unwrap();
+            let err = load(&stem).expect_err(text).to_string();
+            assert!(err.contains(needle), "case {text:?}: {err}");
+        }
     }
 }

@@ -294,6 +294,21 @@ pub fn spawn_driver(
     geometry: Vec<LayerGeometry>,
     handle: GradHandle,
 ) -> Result<Box<dyn Driver>> {
+    spawn_driver_at(spec, x0, geometry, handle, 0)
+}
+
+/// [`spawn_driver`], but with the round counter — and thus the LR-schedule
+/// position — starting at `start_step`: the resume path. `start_step` rides
+/// on the driver cfg rather than the spec because it is run *state*, not
+/// run shape; the spec of a resumed run stays byte-identical to the
+/// original's.
+pub fn spawn_driver_at(
+    spec: &RunSpec,
+    x0: Layers,
+    geometry: Vec<LayerGeometry>,
+    handle: GradHandle,
+    start_step: usize,
+) -> Result<Box<dyn Driver>> {
     // RunSpec fields are public, so a caller can bypass RunBuilder; keep
     // the old "reject rather than silently reinterpret as 1" contract
     if spec.shards == 0 {
@@ -302,9 +317,13 @@ pub fn spawn_driver(
         ));
     }
     if spec.shards > 1 {
-        Ok(Box::new(Cluster::spawn(x0, geometry, handle, spec.cluster_cfg())?))
+        let mut cfg = spec.cluster_cfg();
+        cfg.start_step = start_step;
+        Ok(Box::new(Cluster::spawn(x0, geometry, handle, cfg)?))
     } else {
-        Ok(Box::new(Coordinator::spawn(x0, geometry, handle, spec.coordinator_cfg())?))
+        let mut cfg = spec.coordinator_cfg();
+        cfg.start_step = start_step;
+        Ok(Box::new(Coordinator::spawn(x0, geometry, handle, cfg)?))
     }
 }
 
@@ -344,12 +363,38 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 /// construction differs (and that lives in [`spawn_driver`]).
 pub fn train_spec(spec: &RunSpec) -> Result<TrainReport> {
     let manifest = Manifest::load(&spec.artifacts).map_err(anyhow::Error::msg)?;
-    let x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
+    let mut x0 = manifest.load_init_params().map_err(anyhow::Error::msg)?;
     let geometry = spec.geom.for_groups(manifest.layers.iter().map(|l| l.group));
     // the logical data workers are shared across shards (shard s's worker j
     // is data worker j), so tokens per round are shard-count invariant
     let tokens_per_step = manifest.batch * manifest.seq_len * spec.workers;
     let model_bytes = manifest.model_bytes();
+
+    let mut start_step = 0usize;
+    if spec.resume {
+        let dir = spec
+            .checkpoint_dir
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("resume: requires checkpoint_dir"))?;
+        let stem = std::path::Path::new(dir).join(CHECKPOINT_STEM);
+        if stem.with_extension("json").exists() {
+            let (params, meta) = checkpoint::load(&stem)?;
+            let want: Vec<(usize, usize)> = x0.iter().map(|p| (p.rows, p.cols)).collect();
+            if meta.shapes != want {
+                return Err(anyhow::anyhow!(
+                    "resume: checkpoint shapes {:?} do not match the manifest model {:?}",
+                    meta.shapes,
+                    want
+                ));
+            }
+            x0 = params;
+            start_step = meta.step;
+        } else {
+            // a missing checkpoint on --resume is the normal first launch of
+            // a restartable job, not an error — announce and start fresh
+            eprintln!("resume: no checkpoint at {}, starting fresh", stem.display());
+        }
+    }
 
     let svc = GradService::spawn_pjrt(
         spec.artifacts.clone(),
@@ -358,30 +403,50 @@ pub fn train_spec(spec: &RunSpec) -> Result<TrainReport> {
         spec.eval_batches,
         spec.seed,
     )?;
-    let mut drv = spawn_driver(spec, x0, geometry, svc.handle())?;
-    run_driver(spec, drv.as_mut(), tokens_per_step, model_bytes)
+    let mut drv = spawn_driver_at(spec, x0, geometry, svc.handle(), start_step)?;
+    run_driver(spec, drv.as_mut(), tokens_per_step, model_bytes, start_step)
 }
+
+/// Stem (within `checkpoint_dir`) every checkpoint is saved under — and
+/// the one `--resume` looks for.
+pub const CHECKPOINT_STEM: &str = "ck";
 
 /// The one training loop, shared by every topology: round →
 /// absorbed-loss → drain at the last step only → eval → log. Mid-run evals
 /// never drain, so the observation frequency (`eval_every`) can never
 /// perturb the optimization trajectory; the final eval drains every
 /// pipeline first, so the reported loss reflects fully-absorbed rounds.
+///
+/// Checkpoints (`checkpoint_every > 0`) *do* drain before saving — the
+/// saved parameters must reflect every issued round or a resume would
+/// silently drop in-flight work. In sync mode that drain is a no-op, so
+/// checkpointing never perturbs the trajectory; in async modes each
+/// checkpoint flushes the pipeline (momentarily lock-step), which changes
+/// wall-clock overlap but not the absorbed-round algebra.
 fn run_driver(
     spec: &RunSpec,
     drv: &mut dyn Driver,
     tokens_per_step: usize,
     model_bytes: usize,
+    start_step: usize,
 ) -> Result<TrainReport> {
     let mut log = match &spec.log_path {
         Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
         None => None,
     };
+    let ckpt_stem = match (spec.checkpoint_every > 0, &spec.checkpoint_dir) {
+        (true, Some(dir)) => Some(std::path::Path::new(dir).join(CHECKPOINT_STEM)),
+        (true, None) => {
+            // RunBuilder rejects this; guard the public-field bypass
+            return Err(anyhow::anyhow!("checkpoint_every: requires checkpoint_dir"));
+        }
+        _ => None,
+    };
     let timer = crate::util::timer::Timer::start();
     let mut curve = Vec::new();
-    let mut train_losses = Vec::with_capacity(spec.steps);
+    let mut train_losses = Vec::with_capacity(spec.steps.saturating_sub(start_step));
 
-    for step in 0..spec.steps {
+    for step in start_step..spec.steps {
         let stats = drv.round()?;
         // async modes: the first `lookahead` calls absorb no round yet, so
         // there is no train loss to record for them
@@ -389,7 +454,9 @@ fn run_driver(
             train_losses.push(stats.train_loss);
         }
         let last = step + 1 == spec.steps;
-        if last {
+        let do_ckpt =
+            ckpt_stem.is_some() && ((step + 1) % spec.checkpoint_every.max(1) == 0 || last);
+        if last || do_ckpt {
             train_losses.extend(
                 drv.drain()?
                     .into_iter()
@@ -430,6 +497,32 @@ fn run_driver(
             }
             curve.push(point);
         }
+        if do_ckpt {
+            let stem = ckpt_stem.as_ref().expect("do_ckpt implies a stem");
+            // every issued round was just drained, so step+1 rounds are
+            // fully absorbed into these parameters
+            let params = drv.params()?;
+            let meta = checkpoint::CheckpointMeta {
+                step: step + 1,
+                eval_loss: curve.last().map(|p| p.eval_loss as f64).unwrap_or(f64::NAN),
+                comp: spec.worker_comp.spec(),
+                seed: spec.seed,
+                shapes: params.iter().map(|p| (p.rows, p.cols)).collect(),
+            };
+            checkpoint::save(stem, &params, &meta)?;
+        }
+    }
+
+    // resuming a checkpoint taken at (or past) the final step: the loop
+    // body never ran, so evaluate the restored parameters once rather than
+    // report an empty curve
+    if curve.is_empty() {
+        curve.push(EvalPoint {
+            step: start_step,
+            tokens_processed: (tokens_per_step as u64) * drv.rounds_absorbed(),
+            w2s_bytes_per_worker: drv.w2s(),
+            eval_loss: drv.eval()?,
+        });
     }
 
     Ok(TrainReport {

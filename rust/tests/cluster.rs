@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use efmuon::dist::cluster::{partition_layers, Cluster, ClusterCfg, ParamBoard};
+use efmuon::dist::fault::FaultPolicy;
 use efmuon::dist::service::{GradService, SnapCache};
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
@@ -123,6 +124,9 @@ fn spawn_cluster(
             round_mode: mode,
             seed: 7,
             use_ns_artifact: false,
+            fault: FaultPolicy::off(),
+            fault_plan: None,
+            start_step: 0,
         },
     )?;
     Ok((cluster, svc))
@@ -354,6 +358,29 @@ fn shard_worker_panic_surfaces_clean_root_error() {
     let again = cluster.round().expect_err("latched cluster must fail fast");
     assert!(format!("{again:#}").contains("already failed"));
     assert!(cluster.eval().is_err());
+}
+
+/// A worker dying while rounds are pipelined must surface from
+/// `Cluster::drain` as a clean shard-named `Err` — never a hang on the
+/// dead shard.
+#[test]
+fn shard_worker_death_mid_flight_fails_drain_promptly() {
+    // worker 1's 6th gradient call is necessarily some shard's round-1
+    // work (2 inits + 2 round-0 calls precede it in every interleaving),
+    // so the panic lands while both issued rounds are still in flight
+    let obj = PanicStack {
+        inner: three_layer_stack(3, 904),
+        panic_worker: 1,
+        panic_after: 5,
+        calls: AtomicUsize::new(0),
+    };
+    let (mut cluster, _svc) =
+        spawn_cluster(Box::new(obj), 2, 3, RoundMode::Async { lookahead: 2 }).unwrap();
+    assert_eq!(cluster.round().unwrap().absorbed_step, None);
+    assert_eq!(cluster.round().unwrap().absorbed_step, None);
+    let err = cluster.drain().expect_err("drain must surface the dead shard");
+    assert!(format!("{err:#}").contains("shard"), "{err:#}");
+    assert!(cluster.round().is_err(), "failure latches");
 }
 
 /// A worker panic during shard init fails `Cluster::spawn` itself.

@@ -1,11 +1,14 @@
 //! Distributed-stack integration: threaded coordinator vs the sequential
 //! reference implementation, transport-mode equivalence, byte metering,
-//! async round pipelining, and fault injection (a worker that panics
-//! mid-round must surface a clean `Err`, never a hang).
+//! async round pipelining, and fault tolerance (fail-stop errors surface
+//! cleanly; under a [`FaultPolicy`] stragglers are skipped at the deadline,
+//! their late uplinks land, and dead workers respawn within budget).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
+use efmuon::dist::fault::{FaultKind, FaultPlan, FaultPolicy};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics};
@@ -44,6 +47,9 @@ fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coord
             round_mode: RoundMode::Sync,
             seed: 5,
             use_ns_artifact: false,
+            fault: FaultPolicy::off(),
+            fault_plan: None,
+            start_step: 0,
         },
     )
     .unwrap();
@@ -109,6 +115,9 @@ fn threaded_matches_sequential_reference() {
             round_mode: RoundMode::Sync,
             seed: 5,
             use_ns_artifact: false,
+            fault: FaultPolicy::off(),
+            fault_plan: None,
+            start_step: 0,
         },
     )
     .unwrap();
@@ -193,6 +202,9 @@ fn mk_async(lookahead: usize, seed_obj: u64) -> (Coordinator, GradService) {
             round_mode: RoundMode::Async { lookahead },
             seed: 5,
             use_ns_artifact: false,
+            fault: FaultPolicy::off(),
+            fault_plan: None,
+            start_step: 0,
         },
     )
     .unwrap();
@@ -333,6 +345,9 @@ fn mk_fault_coord(obj: PanicObjective, mode: RoundMode) -> anyhow::Result<(Coord
             round_mode: mode,
             seed: 5,
             use_ns_artifact: false,
+            fault: FaultPolicy::off(),
+            fault_plan: None,
+            start_step: 0,
         },
     )?;
     Ok((coord, svc))
@@ -369,4 +384,156 @@ fn worker_panic_during_init_fails_spawn() {
         Ok(_) => panic!("spawn must fail when a worker dies during init"),
     };
     assert!(format!("{err:#}").contains("worker 0"), "{err:#}");
+}
+
+#[test]
+fn async_worker_death_mid_flight_fails_drain_promptly() {
+    // with rounds in flight, a dead worker must surface from drain() as a
+    // clean Err (its panic guard queues a Failed reply), never a hang
+    let obj = PanicObjective::new(1, 2, 74);
+    let (mut coord, _svc) =
+        mk_fault_coord(obj, RoundMode::Async { lookahead: 2 }).unwrap();
+    // two issuing calls fill the pipeline without absorbing anything;
+    // worker 1's panic (its round-1 gradient) happens while both rounds
+    // are still in flight
+    assert_eq!(coord.round().unwrap().absorbed_step, None);
+    assert_eq!(coord.round().unwrap().absorbed_step, None);
+    let err = coord.drain().expect_err("drain must surface the dead worker");
+    assert!(format!("{err:#}").contains("worker 1"), "{err:#}");
+    // the failure latches: later rounds fail fast instead of re-entering
+    // the protocol against a dead pool
+    assert!(coord.round().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Fault policy: straggler deadlines, quorum absorption, respawn
+// ---------------------------------------------------------------------------
+
+fn mk_policy_coord(
+    workers: usize,
+    dim: usize,
+    policy: &str,
+    plan: Option<FaultPlan>,
+    mode: RoundMode,
+) -> (Coordinator, GradService) {
+    let q = Quadratics::new(workers, dim, 0.5, 0.0, &mut Rng::new(75));
+    let x0 = q.init(&mut Rng::new(75));
+    let n = q.num_workers();
+    let svc = GradService::spawn_objective(Box::new(q), 5);
+    let coord = Coordinator::spawn(
+        x0,
+        geom(),
+        svc.handle(),
+        CoordinatorCfg {
+            n_workers: n,
+            worker_comp: comp("top:0.3"),
+            server_comp: CompSpec::Id,
+            beta: 1.0,
+            schedule: Schedule::constant(0.03),
+            transport: TransportMode::Counted,
+            round_mode: mode,
+            seed: 5,
+            use_ns_artifact: false,
+            fault: FaultPolicy::parse(policy).unwrap(),
+            fault_plan: plan.map(Arc::new),
+            start_step: 0,
+        },
+    )
+    .unwrap();
+    (coord, svc)
+}
+
+#[test]
+fn respawn_relaunches_dead_worker_and_run_completes() {
+    // worker 1 crashes at round 3; with a respawn budget the run must
+    // complete: the crash round absorbs over the quorum (not a straggler —
+    // a corpse can't be late) and the replacement serves every later round
+    let plan = FaultPlan::new().with(1, 3, FaultKind::Panic);
+    let (mut coord, _svc) = mk_policy_coord(
+        3,
+        8,
+        "deadline:0,quorum:1,respawns:2,backoff:0",
+        Some(plan),
+        RoundMode::Sync,
+    );
+    coord.run(10).unwrap();
+    let m = coord.meter();
+    assert_eq!(m.respawns(), 1);
+    assert_eq!(m.stragglers(), 0, "a crash is not a straggler");
+    assert_eq!(m.partial_rounds(), 1, "only the crash round absorbs partially");
+    assert!(coord.params()[0].data.iter().all(|v| v.is_finite()));
+    assert!(coord.eval().unwrap().is_finite());
+}
+
+#[test]
+fn respawn_budget_exhausted_is_terminal() {
+    // the same id crashing twice against a budget of one must latch a
+    // terminal error that names the worker and the consumed budget
+    let plan = FaultPlan::new()
+        .with(1, 2, FaultKind::Panic)
+        .with(1, 5, FaultKind::Panic);
+    let (mut coord, _svc) = mk_policy_coord(
+        3,
+        8,
+        "deadline:0,quorum:1,respawns:1,backoff:0",
+        Some(plan),
+        RoundMode::Sync,
+    );
+    let err = coord.run(10).expect_err("second crash exceeds the budget");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1") && msg.contains("respawn"), "{msg}");
+    assert_eq!(coord.meter().respawns(), 1);
+    assert!(coord.round().is_err(), "terminal failure latches");
+}
+
+#[test]
+fn straggler_is_skipped_then_its_late_uplink_lands() {
+    // deadline 200ms, injected delay 300ms: round 2 absorbs without
+    // worker 2 (one straggler, one partial round), and worker 2 wakes well
+    // before round 3's deadline (~2 deadlines after round 2's broadcast) —
+    // so its late round-2 uplink folds into the estimator and every later
+    // round is full again; 100ms of scheduler margin on both sides
+    let plan = FaultPlan::new().with(2, 2, FaultKind::DelayMs(300));
+    let (mut coord, _svc) = mk_policy_coord(
+        3,
+        8,
+        "deadline:200,quorum:0.5,respawns:0,backoff:0",
+        Some(plan),
+        RoundMode::Sync,
+    );
+    coord.run(6).unwrap();
+    let m = coord.meter();
+    assert_eq!(m.stragglers(), 1);
+    assert_eq!(m.partial_rounds(), 1);
+    assert_eq!(m.respawns(), 0);
+    // the late uplink is metered into the aggregate direction: all
+    // 3 workers x 6 rounds of uplink bytes are accounted for even though
+    // one of them arrived after its round absorbed
+    assert_eq!(m.w2s_all(), 3 * m.w2s(), "late uplink bytes must be metered");
+    assert!(coord.eval().unwrap().is_finite());
+}
+
+#[test]
+fn dropped_reply_is_skipped_and_never_owed_forever() {
+    // a Drop fault never replies at all (federated non-participation): the
+    // round absorbs over the quorum and the run completes; the missing
+    // uplink shows up as exactly one worker-round of bytes never sent
+    let plan = FaultPlan::new().with(0, 1, FaultKind::Drop);
+    let (mut coord, _svc) = mk_policy_coord(
+        3,
+        8,
+        "deadline:150,quorum:0.5,respawns:0,backoff:0",
+        Some(plan),
+        RoundMode::Sync,
+    );
+    coord.run(5).unwrap();
+    let m = coord.meter();
+    assert_eq!(m.stragglers(), 1);
+    assert_eq!(m.partial_rounds(), 1);
+    let per_round = m.w2s() / 5;
+    assert_eq!(
+        m.w2s_all(),
+        3 * m.w2s() - per_round,
+        "exactly one worker-round of uplink bytes is missing"
+    );
 }

@@ -20,10 +20,20 @@
 //!       independent per-part coordinators bit-for-bit (any compressor,
 //!       including RNG-consuming rank/nat specs);
 //!   (g) for deterministic compressors, the trajectory is invariant in the
-//!       shard count across every round mode and transport.
+//!       shard count across every round mode and transport;
+//!   (h) the fault axis (ISSUE 6): a fault-free run with the fault policy
+//!       enabled — quorum 1.0 lock-step anchor, or a partial quorum whose
+//!       deadline never fires — is bit-identical to the policy-off run with
+//!       all fault counters zero, for coordinators and clusters alike; an
+//!       injected panic + straggler complete the run with exact meter
+//!       counts; a checkpointed run killed mid-way resumes to the same
+//!       final step with a finite eval loss.
+
+use std::sync::Arc;
 
 use efmuon::dist::cluster::{totals_consistent, Cluster};
 use efmuon::dist::coordinator::Coordinator;
+use efmuon::dist::fault::{FaultKind, FaultPlan, FaultPolicy};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
@@ -32,7 +42,7 @@ use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::LayerGeometry;
 use efmuon::spec::{RunBuilder, RunSpec, SchedulePlan};
-use efmuon::train::{spawn_driver, Driver};
+use efmuon::train::{checkpoint, spawn_driver, spawn_driver_at, Driver, CHECKPOINT_STEM};
 use efmuon::util::rng::Rng;
 
 /// One deployment shape of the scenario table.
@@ -553,4 +563,238 @@ fn async_converges_near_sync() {
     assert_eq!(pipe.w2s.len(), rounds);
     let gap = (sync.eval - pipe.eval).abs();
     assert!(gap < 1e-2, "async:1 final loss {} vs sync {} (gap {gap})", pipe.eval, sync.eval);
+}
+
+// ---------------------------------------------------------------------------
+// The fault axis (ISSUE 6): deadlines, quorum, respawn, checkpointed recovery
+// ---------------------------------------------------------------------------
+
+/// Run one scenario through the coordinator with a fault policy (and an
+/// optional injection plan), returning the usual trace plus the fault
+/// counters `(stragglers, respawns, partial_rounds)`. The spec goes through
+/// the same `RunBuilder` path as every other scenario; only the test-only
+/// injection plan is attached to the built config directly (a `FaultPlan`
+/// is a harness hook, never part of a spec).
+fn run_scenario_fault(
+    sc: &Scenario,
+    mode: RoundMode,
+    rounds: usize,
+    policy: &str,
+    plan: Option<FaultPlan>,
+) -> (RunTrace, (u64, u64, u64)) {
+    let spec = scenario_spec(sc, 1, mode, TransportMode::Counted, rounds, FLAT);
+    let mut cfg = spec.coordinator_cfg();
+    cfg.fault = FaultPolicy::parse(policy).unwrap();
+    cfg.fault_plan = plan.map(Arc::new);
+    let q = objective(sc);
+    let x0 = q.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(Box::new(q), SEED);
+    let mut coord = Coordinator::spawn(x0, geom(), svc.handle(), cfg).unwrap();
+    let stats = coord.run(rounds).unwrap();
+    let mut s2w = Vec::new();
+    let mut w2s = Vec::new();
+    for s in &stats {
+        if s.s2w_bytes > 0 {
+            s2w.push(s.s2w_bytes);
+        }
+        if s.absorbed_step.is_some() {
+            w2s.push(s.w2s_bytes_per_worker);
+        }
+    }
+    let m = coord.meter();
+    let counts = (m.stragglers(), m.respawns(), m.partial_rounds());
+    let trace = RunTrace {
+        params: flatten(coord.params()),
+        s2w,
+        w2s,
+        meter_w2s: m.w2s(),
+        meter_s2w: m.s2w(),
+        eval: coord.eval().unwrap(),
+    };
+    (trace, counts)
+}
+
+/// (h) A fault-free run with the fault policy ENABLED is bit-identical to
+/// the policy-off run — trajectory, per-round bytes in both directions,
+/// meters, eval — across every scenario and round mode, with all fault
+/// counters zero. Two policies lock the two code paths: quorum 1.0 can
+/// never absorb below `n` replies regardless of the deadline (the golden
+/// lock-step anchor), and a partial quorum whose generous deadline never
+/// fires aggregates over every reply (full aggregation ≡ quorum
+/// aggregation with all workers present).
+#[test]
+fn fault_free_policy_on_matches_policy_off_bitwise() {
+    const POLICIES: &[&str] = &[
+        "deadline:50,quorum:1,respawns:1,backoff:1",
+        "deadline:5000,quorum:0.5,respawns:1,backoff:1",
+    ];
+    for sc in SCENARIOS {
+        for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+            let off = run_scenario(sc, mode, TransportMode::Counted, ROUNDS);
+            for policy in POLICIES {
+                let (on, counts) = run_scenario_fault(sc, mode, ROUNDS, policy, None);
+                let tag = format!("{} / {} / {policy}", sc.name, mode.spec());
+                assert_eq!(off.params, on.params, "{tag}: trajectory");
+                assert_eq!(off.s2w, on.s2w, "{tag}: s2w bytes per round");
+                assert_eq!(off.w2s, on.w2s, "{tag}: w2s bytes per round");
+                assert_eq!(off.meter_w2s, on.meter_w2s, "{tag}: w2s meter");
+                assert_eq!(off.meter_s2w, on.meter_s2w, "{tag}: s2w meter");
+                assert_eq!(off.eval, on.eval, "{tag}: eval");
+                assert_eq!(counts, (0, 0, 0), "{tag}: fault counters must stay zero");
+            }
+        }
+    }
+}
+
+/// (h) The same policy-on ≡ policy-off identity through the cluster layer:
+/// the policy is forwarded to every shard coordinator, and a fault-free
+/// multi-shard run stays bit-identical with zero rolled-up fault counters.
+#[test]
+fn fault_free_policy_on_cluster_matches_policy_off_bitwise() {
+    let workers = 3;
+    let mk = || -> Box<dyn Objective> {
+        Box::new(
+            Stacked::new(
+                stacked_parts(workers)
+                    .into_iter()
+                    .map(|q| Box::new(q) as Box<dyn Objective>)
+                    .collect(),
+            )
+            .unwrap(),
+        )
+    };
+    for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+        let (reference, _) = run_cluster_obj(
+            mk(),
+            workers,
+            2,
+            "top:0.3",
+            "top:0.5",
+            2,
+            mode,
+            TransportMode::Counted,
+            ROUNDS,
+            FLAT,
+        );
+        let obj = mk();
+        let x0 = obj.init(&mut Rng::new(SEED));
+        let svc = GradService::spawn_objective(obj, SEED);
+        let sc = Scenario { name: "cluster-fault", workers, dim: 0, w2s: "top:0.3", s2w: "top:0.5" };
+        let spec = scenario_spec(&sc, 2, mode, TransportMode::Counted, ROUNDS, FLAT);
+        let mut cfg = spec.cluster_cfg();
+        cfg.fault = FaultPolicy::parse("deadline:5000,quorum:0.5,respawns:1,backoff:1").unwrap();
+        let mut cluster = Cluster::spawn(
+            x0,
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; 2],
+            svc.handle(),
+            cfg,
+        )
+        .unwrap();
+        cluster.run(ROUNDS).unwrap();
+        let meter = cluster.meter();
+        let totals = meter.totals();
+        let tag = format!("cluster policy-on / {}", mode.spec());
+        assert_eq!(flatten(&cluster.params().unwrap()), reference.params, "{tag}: trajectory");
+        assert_eq!(meter.w2s(), reference.meter_w2s, "{tag}: w2s meter");
+        assert_eq!(meter.s2w(), reference.meter_s2w, "{tag}: s2w meter");
+        assert_eq!(cluster.eval().unwrap(), reference.eval, "{tag}: eval");
+        assert_eq!(
+            (totals.stragglers, totals.respawns, totals.partial_rounds),
+            (0, 0, 0),
+            "{tag}: fault counters must stay zero"
+        );
+    }
+}
+
+/// (h) Acceptance: 4 workers, a seeded plan injecting one mid-run panic and
+/// one delay-straggler, under a quorum policy with a respawn budget. The
+/// run completes with exactly one straggler, one respawn, and two partial
+/// rounds — and every round still broadcast and absorbed.
+#[test]
+fn fault_acceptance_one_panic_one_straggler_exact_counts() {
+    let sc = Scenario { name: "fault-accept", workers: 4, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
+    let rounds = 10;
+    let plan = FaultPlan::new()
+        .with(1, 3, FaultKind::Panic)
+        .with(2, 6, FaultKind::DelayMs(300));
+    // deadline 200 < delay 300 < 2x deadline: the delayed reply misses its
+    // own round's deadline but lands before the NEXT round's, so it is
+    // counted late exactly once; the panic is detected via the failure
+    // notification well inside the deadline, so it never double-counts as a
+    // straggler
+    let (trace, (stragglers, respawns, partial)) = run_scenario_fault(
+        &sc,
+        RoundMode::Sync,
+        rounds,
+        "deadline:200,quorum:0.5,respawns:2,backoff:0",
+        Some(plan),
+    );
+    assert_eq!(stragglers, 1, "exactly the delayed worker straggles");
+    assert_eq!(respawns, 1, "exactly the panicked worker is respawned");
+    assert_eq!(partial, 2, "the panic round and the straggler round absorb partially");
+    assert_eq!(trace.s2w.len(), rounds, "every round broadcast");
+    assert_eq!(trace.w2s.len(), rounds, "every round absorbed");
+    assert!(trace.eval.is_finite(), "eval loss must stay finite, got {}", trace.eval);
+    assert!(trace.params.iter().all(|v| v.is_finite()), "params must stay finite");
+}
+
+/// (h) Checkpointed recovery: a run checkpointed at step `cut` and then
+/// dropped (the "kill") resumes from the checkpoint into a fresh driver at
+/// the stored step, covers exactly the remaining steps, and finishes with a
+/// finite eval loss.
+#[test]
+fn fault_checkpoint_resume_reaches_final_step() {
+    let sc = Scenario { name: "fault-resume", workers: 3, dim: 10, w2s: "top:0.3", s2w: "id" };
+    let steps = 10;
+    let cut = 6;
+    let spec = scenario_spec(&sc, 1, RoundMode::Sync, TransportMode::Counted, steps, FLAT);
+    let dir = std::env::temp_dir().join(format!("efmuon-scenario-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join(CHECKPOINT_STEM);
+
+    // first life: run to the cut, checkpoint, and drop the driver
+    let q = objective(&sc);
+    let x0 = q.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(Box::new(q), SEED);
+    let mut drv = spawn_driver(&spec, x0, geom(), svc.handle()).unwrap();
+    for _ in 0..cut {
+        drv.round().unwrap();
+    }
+    drv.drain().unwrap();
+    let params = drv.params().unwrap();
+    let meta = checkpoint::CheckpointMeta {
+        step: cut,
+        eval_loss: drv.eval().unwrap() as f64,
+        comp: spec.worker_comp.spec(),
+        seed: spec.seed,
+        shapes: params.iter().map(|p| (p.rows, p.cols)).collect(),
+    };
+    checkpoint::save(&stem, &params, &meta).unwrap();
+    drop(drv);
+
+    // second life: load, spawn at the stored step, run the remainder
+    let (restored, loaded) = checkpoint::load(&stem).unwrap();
+    assert_eq!(loaded.step, cut, "checkpoint must store the resume step");
+    let q2 = objective(&sc);
+    let svc2 = GradService::spawn_objective(Box::new(q2), SEED);
+    let mut resumed = spawn_driver_at(&spec, restored, geom(), svc2.handle(), loaded.step).unwrap();
+    let mut absorbed = Vec::new();
+    for _ in loaded.step..steps {
+        if let Some(k) = resumed.round().unwrap().absorbed_step {
+            absorbed.push(k);
+        }
+    }
+    for s in resumed.drain().unwrap() {
+        if let Some(k) = s.absorbed_step {
+            absorbed.push(k);
+        }
+    }
+    assert_eq!(
+        absorbed,
+        (cut..steps).collect::<Vec<_>>(),
+        "the resumed run must cover exactly steps {cut}..{steps}"
+    );
+    let eval = resumed.eval().unwrap();
+    assert!(eval.is_finite(), "resumed eval loss must be finite, got {eval}");
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -30,6 +30,29 @@ import sys
 # tracked but too noisy at --iters 5 to fail a verify run on
 GATED_SUBSTRINGS = ("round",)
 
+# the hotpath bench always runs with fault injection off, so these counters
+# must be exactly zero in every round entry — checked against the current
+# results alone, no baseline needed
+FAULT_KEYS = ("stragglers", "respawns")
+
+
+def fault_problems(entries):
+    """Nonzero fault counters in a fault-free bench run fail the gate: a
+    straggler or respawn inside a benchmark means either the fault layer
+    fired spuriously or a worker genuinely stalled past a deadline — both
+    are bugs, and both would silently skew the round-time medians."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if not any(s in name for s in GATED_SUBSTRINGS):
+            continue
+        for key in FAULT_KEYS:
+            v = e.get(key, 0)
+            if v:
+                problems.append(
+                    f"round entry {name!r} has {key}={v} in a fault-free bench run"
+                )
+    return problems
+
 
 def load_entries(path):
     """Index a bench file's entries by name.
@@ -119,6 +142,20 @@ def main():
             print(f"bench gate: {p}", file=sys.stderr)
         print(
             "bench gate: current results are malformed; rerun the hotpath bench",
+            file=sys.stderr,
+        )
+        return 1
+
+    # baseline-independent: fault counters gate before any priming/compare,
+    # so even the very first run on a machine fails on a spurious straggler
+    faults = fault_problems(current)
+    if faults:
+        for p in faults:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            "bench gate: fault counters must be zero in a fault-free bench "
+            "run (the bench never injects faults); see DESIGN.md §Fault "
+            "tolerance",
             file=sys.stderr,
         )
         return 1

@@ -45,6 +45,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== tier-2: scenario harness (release) =="
   cargo test --release -q --test scenario
 
+  # the fault-injection subset reruns by name so a timing-sensitive failure
+  # (deadline/quorum/respawn under release scheduling) is attributed to the
+  # fault layer in the verify log rather than buried in the full harness
+  echo "== tier-2: fault-injection scenarios (release) =="
+  cargo test --release -q --test scenario fault
+
   echo "== perf smoke: hotpath bench (--iters 5) =="
   cargo bench --bench hotpath -- --iters 5
   BENCH=../BENCH_hotpath.json
