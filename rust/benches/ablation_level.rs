@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("SKIP ablation_level: run `make artifacts` first");
         return Ok(());
     }
-    let steps = args.usize("steps", 60);
+    let steps = args.usize("steps", 60).unwrap();
     let family = args.str("family", "rank");
     let base = TrainConfig {
         workers: 4,

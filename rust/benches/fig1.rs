@@ -19,21 +19,21 @@ fn main() -> anyhow::Result<()> {
     }
     // --short: the G.5 half-budget variant
     let short = args.bool("short", false);
-    let steps = args.usize("steps", if short { 75 } else { 150 });
+    let steps = args.usize("steps", if short { 75 } else { 150 }).unwrap();
     let base = TrainConfig {
-        workers: args.usize("workers", 4),
+        workers: args.usize("workers", 4).unwrap(),
         steps,
         // bidirectional / pipelined variants of the sweep: --server-comp
         // compresses the EF21-P broadcast, --round-mode async:N pipelines
         server_comp: args.str("server-comp", "id"),
         round_mode: args.str("round-mode", "sync"),
         beta: 0.9,
-        lr: args.f64("lr", 0.02),
+        lr: args.f64("lr", 0.02).unwrap(),
         warmup: steps / 20 + 1,
         corpus_tokens: 1_500_000,
         eval_every: (steps / 15).max(1),
         eval_batches: 3,
-        seed: args.u64("seed", 0),
+        seed: args.u64("seed", 0).unwrap(),
         ..TrainConfig::default()
     };
 
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     // competitive configuration reaches within the budget; with our short
     // default budget that is the worst final loss across the sweep (each
     // config then reaches it at a different token/byte cost)
-    let target = args.f64("target", 0.0) as f32;
+    let target = args.f64("target", 0.0).unwrap() as f32;
     let target = if target > 0.0 {
         target
     } else {

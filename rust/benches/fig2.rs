@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
                 return Ok(());
             }
             eprintln!("(no fig1 results; running a reduced sweep)");
-            let steps = args.usize("steps", 100);
+            let steps = args.usize("steps", 100).unwrap();
             let base = TrainConfig {
                 workers: 4,
                 steps,
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     // same threshold protocol as fig1: the worst final loss in the sweep
-    let target = args.f64("target", 0.0) as f32;
+    let target = args.f64("target", 0.0).unwrap() as f32;
     let target = if target > 0.0 {
         target
     } else {

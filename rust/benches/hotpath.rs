@@ -16,7 +16,7 @@ use efmuon::dist::fault::FaultPolicy;
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics, Stacked};
-use efmuon::linalg::matmul::matmul_into_with_threads;
+use efmuon::linalg::matmul::{matmul_into_reference, matmul_into_with_threads};
 use efmuon::linalg::ns::newton_schulz;
 use efmuon::linalg::Matrix;
 use efmuon::lmo::LmoKind;
@@ -47,6 +47,11 @@ struct Entry {
     /// fails the run if any of these is nonzero — a worker stalling long
     /// enough to trip a deadline inside a benchmark is itself a perf bug.
     faults: Option<(u64, u64, u64)>,
+    /// Per-round parameter-board bytes for the cluster entries: what one
+    /// steady-state round reads from the board at its stored snapshot
+    /// width. `bench_gate.py` checks each bf16 entry against its matched
+    /// f32 entry (must be <= 0.55x).
+    shipped: Option<u64>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -55,12 +60,12 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
         None => println!("{}", result.report()),
     }
-    entries.push(Entry { result, gflops, comm: None, cloned: None, faults: None });
+    entries.push(Entry { result, gflops, comm: None, cloned: None, faults: None, shipped: None });
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    let iters = args.usize("iters", 30);
+    let iters = args.usize("iters", 30).unwrap();
     let mut rng = Rng::new(0);
     let mut entries: Vec<Entry> = Vec::new();
     let cores = efmuon::util::threads::num_threads();
@@ -88,6 +93,41 @@ fn main() -> anyhow::Result<()> {
         let speedup = entries[entries.len() - 1].result.median_s / rn.median_s;
         push(&mut entries, rn, Some(flops));
         println!("  -> threaded speedup: {speedup:.2}x over 1 thread");
+    }
+
+    // ---- NS-sized matmul: the packed register-tiled microkernel vs the
+    //      scalar reference it is bit-identical to (see
+    //      rust/src/linalg/matmul.rs). The microkernel entries carry
+    //      GFLOP/s gated by bench_gate.py; the printed speedup is the
+    //      single-thread acceptance (>= 1.5x on >= 256^2 products).
+    {
+        for (n, its) in [(256usize, iters), (512usize, iters.min(10))] {
+            let a = Matrix::randn(n, n, 1.0, &mut rng);
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(n, n);
+            let flops = 2.0 * (n as f64).powi(3);
+            let r_ref = bench_fn(
+                &format!("matmul {n}x{n}x{n} scalar reference (1 thread)"),
+                2,
+                its,
+                || {
+                    matmul_into_reference(&a, &b, std::hint::black_box(&mut c));
+                },
+            );
+            let ref_s = r_ref.median_s;
+            push(&mut entries, r_ref, Some(flops));
+            let r_mk = bench_fn(
+                &format!("matmul {n}x{n}x{n} microkernel (1 thread)"),
+                2,
+                its,
+                || {
+                    matmul_into_with_threads(&a, &b, std::hint::black_box(&mut c), 1);
+                },
+            );
+            let speed = ref_s / r_mk.median_s;
+            push(&mut entries, r_mk, Some(flops));
+            println!("  -> microkernel single-thread speedup: {speed:.2}x over scalar reference");
+        }
     }
 
     // ---- Newton–Schulz: native (workspace arena, threaded matmul inside)
@@ -301,7 +341,12 @@ fn main() -> anyhow::Result<()> {
     {
         let cfg_iters = iters.min(10);
         let mut shard_times: Vec<(usize, f64)> = Vec::new();
-        for shards in [1usize, 2, 4] {
+        // the bf16 rows re-run the 2- and 4-shard deployments with the
+        // parameter board stored at half width; bench_gate.py checks each
+        // bf16 row's board bytes against its matched f32 row (<= 0.55x)
+        for (shards, bf16) in
+            [(1usize, false), (2, false), (4, false), (2, true), (4, true)]
+        {
             let mut rng4 = Rng::new(4);
             let parts: Vec<Box<dyn Objective>> = (0..4)
                 .map(|_| {
@@ -330,13 +375,20 @@ fn main() -> anyhow::Result<()> {
                     fault: FaultPolicy::off(),
                     fault_plan: None,
                     start_step: 0,
+                    snap_bf16: bf16,
                 },
             )?;
-            let name = format!("cluster round ({shards} shard(s), 4x192x192, 4 workers)");
+            let name = if bf16 {
+                format!("cluster round ({shards} shard(s), 4x192x192, 4 workers, bf16 board)")
+            } else {
+                format!("cluster round ({shards} shard(s), 4x192x192, 4 workers)")
+            };
             let r = bench_fn(&name, 2, cfg_iters, || {
                 cluster.round().unwrap();
             });
-            shard_times.push((shards, r.median_s));
+            if !bf16 {
+                shard_times.push((shards, r.median_s));
+            }
             push(&mut entries, r, None);
             // sample one round's aggregated per-shard wire bytes (sync mode:
             // the absorbed round is the issued one) and its host memory
@@ -349,14 +401,16 @@ fn main() -> anyhow::Result<()> {
             let m1 = cluster.meter().totals();
             let per_round_cloned = m1.bytes_cloned - m0.bytes_cloned;
             let per_round_asm = m1.snap_assembled - m0.snap_assembled;
+            let per_round_shipped = m1.snap_bytes_shipped - m0.snap_bytes_shipped;
             println!(
                 "  -> {shards}-shard round memory traffic: {per_round_cloned} bytes cloned, \
-                 {per_round_asm} snapshot assemblies"
+                 {per_round_asm} snapshot assemblies, {per_round_shipped} board bytes"
             );
             let e = entries.last_mut().unwrap();
             e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
             e.cloned = Some((per_round_cloned, per_round_asm));
             e.faults = Some((m1.stragglers, m1.respawns, m1.partial_rounds));
+            e.shipped = Some(per_round_shipped);
         }
         if let Some(&(_, base)) = shard_times.first() {
             for &(shards, t) in &shard_times[1..] {
@@ -417,6 +471,9 @@ fn main() -> anyhow::Result<()> {
                     .put("stragglers", stragglers)
                     .put("respawns", respawns)
                     .put("partial_rounds", partial);
+            }
+            if let Some(shipped) = e.shipped {
+                o = o.put("snap_bytes_shipped_per_round", shipped);
             }
             o.build()
         })

@@ -11,7 +11,7 @@ use efmuon::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    let seed = args.u64("seed", 123);
+    let seed = args.u64("seed", 123).unwrap();
     let rows = rate_validation(seed)?;
     println!("== Table 1 (empirical): convergence-rate fits ==\n");
     println!("{}", rates_text(&rows));

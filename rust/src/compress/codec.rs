@@ -25,6 +25,7 @@ const TAG_SPARSE: u8 = 2;
 const TAG_LOWRANK: u8 = 3;
 const TAG_SIGN: u8 = 4;
 const TAG_QUANT: u8 = 5;
+const TAG_BF16: u8 = 6;
 const NAT_FLAG: u8 = 0x80;
 
 /// Generic little-endian bit packer for fixed-width codes.
@@ -148,6 +149,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         Payload::LowRank { q, nat, .. } => (TAG_LOWRANK, *nat, q.cols),
         Payload::Sign { .. } => (TAG_SIGN, false, 0),
         Payload::Quant { levels, .. } => (TAG_QUANT, false, *levels as usize),
+        Payload::Bf16 { .. } => (TAG_BF16, false, 0),
     };
     out.push(tag | if nat { NAT_FLAG } else { 0 });
     push_u24(&mut out, rows);
@@ -178,6 +180,11 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         Payload::Quant { scale, levels, codes, .. } => {
             out.extend_from_slice(&scale.to_le_bytes());
             pack_bits(codes, crate::compress::quantize::code_bits(*levels), &mut out);
+        }
+        Payload::Bf16 { codes, .. } => {
+            for &c in codes {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
         }
     }
     debug_assert_eq!(out.len(), msg.wire_bytes(), "codec size mismatch");
@@ -288,6 +295,15 @@ pub fn decode(bytes: &[u8]) -> Result<Message, String> {
             }
             Payload::Quant { rows, cols, scale, levels, codes }
         }
+        TAG_BF16 => {
+            let d = rows * cols;
+            need(2 * d)?;
+            let codes = body
+                .chunks_exact(2)
+                .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Payload::Bf16 { rows, cols, codes }
+        }
         t => return Err(format!("unknown payload tag {t}")),
     };
     Ok(Message { payload })
@@ -322,7 +338,7 @@ mod tests {
         let x = Matrix::randn(17, 23, 1.0, &mut rng);
         for spec in ["id", "nat", "top:0.2", "top:0.2+nat", "rank:0.3",
                      "rank:0.3+nat", "drop:0.5", "svdtop:2", "coltop:0.3",
-                     "sign", "qsgd:3", "qsgd:127", "randk:0.2"] {
+                     "sign", "qsgd:3", "qsgd:127", "randk:0.2", "bf16"] {
             let mut c = parse_spec(spec).unwrap();
             let msg = c.compress(&x, &mut rng);
             let bytes = encode(&msg);

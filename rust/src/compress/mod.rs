@@ -59,6 +59,10 @@ pub enum Payload {
         levels: u8,
         codes: Vec<u16>,
     },
+    /// bf16 cast: each code is the high 16 bits of the f32 (round-to-
+    /// nearest-even); decode widens exactly (low mantissa bits zero).
+    /// 2 bytes per entry — the snapshot/broadcast wire format.
+    Bf16 { rows: usize, cols: usize, codes: Vec<u16> },
 }
 
 /// Bits per Natural-compressed value: 1 sign + 8 exponent.
@@ -80,6 +84,7 @@ impl Message {
             Payload::LowRank { q, b, .. } => (q.rows, b.cols),
             Payload::Sign { rows, cols, .. } => (*rows, *cols),
             Payload::Quant { rows, cols, .. } => (*rows, *cols),
+            Payload::Bf16 { rows, cols, .. } => (*rows, *cols),
         }
     }
 
@@ -112,6 +117,13 @@ impl Message {
                 }
                 out
             }
+            Payload::Bf16 { rows, cols, codes } => {
+                let mut out = Matrix::zeros(*rows, *cols);
+                for (v, &c) in out.data.iter_mut().zip(codes) {
+                    *v = quantize::bf16_decode(c);
+                }
+                out
+            }
         }
     }
 
@@ -130,7 +142,7 @@ impl Message {
                 let qb = crate::linalg::matmul::matmul(q, b);
                 dst.axpy(1.0, &qb);
             }
-            Payload::Sign { .. } | Payload::Quant { .. } => {
+            Payload::Sign { .. } | Payload::Quant { .. } | Payload::Bf16 { .. } => {
                 dst.axpy(1.0, &self.decode());
             }
         }
@@ -165,6 +177,8 @@ impl Message {
             Payload::Quant { rows, cols, levels, .. } => {
                 4 + (rows * cols * quantize::code_bits(*levels) + 7) / 8
             }
+            // raw u16 codes — exactly half the f32 bytes
+            Payload::Bf16 { rows, cols, .. } => 2 * rows * cols,
         };
         HEADER_BYTES + body
     }
@@ -214,8 +228,8 @@ pub fn contraction_ratio(x: &Matrix, decoded: &Matrix) -> f64 {
 ///
 /// ```text
 /// spec    := base ("+nat")?
-/// base    := "id" | "nat" | "top:F" | "rank:F" | "drop:P" | "damp:G"
-///          | "svdtop:K" | "coltop:F"
+/// base    := "id" | "nat" | "sign" | "bf16" | "top:F" | "rank:F"
+///          | "drop:P" | "damp:G" | "svdtop:K" | "coltop:F"
 /// ```
 ///
 /// `F` = fraction (0,1], `P` = keep-probability, `G` = damping factor,
@@ -236,7 +250,7 @@ mod tests {
     fn spec_roundtrip() {
         for s in ["id", "nat", "top:0.15", "top:0.1+nat", "rank:0.2",
                   "rank:0.05+nat", "drop:0.5", "damp:0.8", "svdtop:3",
-                  "coltop:0.25", "sign", "qsgd:4", "randk:0.3"] {
+                  "coltop:0.25", "sign", "qsgd:4", "randk:0.3", "bf16"] {
             let c = parse_spec(s).unwrap();
             assert_eq!(c.name(), s, "name roundtrip for {s}");
         }
@@ -245,7 +259,7 @@ mod tests {
     #[test]
     fn spec_errors() {
         for s in ["", "bogus", "top:0", "top:1.5", "top:x", "drop:", "nat+nat",
-                  "qsgd:0", "randk:0", "sign+nat"] {
+                  "qsgd:0", "randk:0", "sign+nat", "bf16+nat", "bf16:2"] {
             assert!(parse_spec(s).is_err(), "{s} should fail");
         }
     }

@@ -21,6 +21,49 @@ pub fn code_bits(levels: u8) -> usize {
     usize::BITS as usize - (states - 1).leading_zeros() as usize
 }
 
+/// Round-to-nearest-even bf16 encode: the high 16 bits of the f32 after
+/// the RTNE carry. `inf`/`-0.0` are exact (their low 16 bits are zero);
+/// values past bf16 range (e.g. `f32::MAX`) round to `inf` per RTNE. NaN
+/// bypasses the carry path — the carry could ripple a NaN's truncated
+/// payload into the `inf` bit pattern — and instead keeps its sign and
+/// top payload bits with the quiet bit forced on.
+pub fn bf16_encode(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Exact widening decode: bf16 → f32 (the low 16 mantissa bits are zero,
+/// so decode(encode(x)) == x for every value representable in bf16).
+pub fn bf16_decode(c: u16) -> f32 {
+    f32::from_bits((c as u32) << 16)
+}
+
+/// bf16 cast compressor: round-to-nearest-even truncation to 16 bits, half
+/// the f32 wire bytes. Relative error ≤ 2⁻⁸ per finite entry, so it is
+/// contractive in every entrywise-monotone norm. This is the snapshot/
+/// broadcast wire format (`ParamBoard` in bf16 mode); as a gradient
+/// compressor it is available as spec `bf16`.
+pub struct Bf16Cast;
+
+impl Compressor for Bf16Cast {
+    fn compress(&mut self, x: &Matrix, _rng: &mut Rng) -> Message {
+        let codes = x.data.iter().map(|v| bf16_encode(*v)).collect();
+        Message { payload: Payload::Bf16 { rows: x.rows, cols: x.cols, codes } }
+    }
+
+    fn name(&self) -> String {
+        "bf16".into()
+    }
+
+    fn family(&self) -> NormFamily {
+        NormFamily::Euclidean
+    }
+}
+
 /// 1-bit SGD: transmit sign bits + one f32 scale.
 pub struct ScaledSign;
 
@@ -119,6 +162,46 @@ mod tests {
         assert_eq!(code_bits(3), 3); // 7 states
         assert_eq!(code_bits(7), 4); // 15 states
         assert_eq!(code_bits(127), 8); // 255 states
+    }
+
+    #[test]
+    fn bf16_exact_and_special_values() {
+        // one rounding is idempotent: decode(encode(x)) is a fixed point
+        for v in [0.0f32, 1.0, -2.0, 0.5, -0.09375, 3.5e38, 1e-40] {
+            let d = bf16_decode(bf16_encode(v));
+            assert_eq!(d.to_bits(), bf16_decode(bf16_encode(d)).to_bits(), "{v}");
+        }
+        assert_eq!(bf16_decode(bf16_encode(1.0)), 1.0);
+        assert_eq!(bf16_encode(f32::INFINITY), 0x7F80);
+        assert_eq!(bf16_encode(f32::NEG_INFINITY), 0xFF80);
+        assert_eq!(bf16_encode(-0.0), 0x8000);
+        assert!(bf16_decode(bf16_encode(-0.0)).is_sign_negative());
+        // overflow rounds to inf (RTNE), like hardware bf16 casts
+        assert_eq!(bf16_encode(f32::MAX), 0x7F80);
+        // NaN stays NaN — the rounding carry must not produce inf
+        assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+        let payload_nan = f32::from_bits(0x7F80_0001); // all payload in low bits
+        assert!(bf16_decode(bf16_encode(payload_nan)).is_nan());
+        assert!(bf16_decode(bf16_encode(-f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_relative_error_bound() {
+        let mut rng = Rng::new(76);
+        let x = Matrix::randn(11, 13, 3.0, &mut rng);
+        let y = Bf16Cast.compress(&x, &mut rng).decode();
+        for (a, b) in x.data.iter().zip(&y.data) {
+            assert!((a - b).abs() <= a.abs() / 256.0, "{a} vs {b}");
+        }
+        assert!(contraction_ratio(&x, &y) < 1e-4);
+    }
+
+    #[test]
+    fn bf16_wire_is_half_f32() {
+        let mut rng = Rng::new(77);
+        let x = Matrix::randn(16, 16, 1.0, &mut rng);
+        let msg = Bf16Cast.compress(&x, &mut rng);
+        assert_eq!(msg.wire_bytes(), crate::compress::HEADER_BYTES + 2 * 256);
     }
 
     #[test]

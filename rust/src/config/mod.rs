@@ -125,40 +125,41 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
-    /// Apply CLI flag overrides on top of `self`.
-    pub fn override_from_args(mut self, a: &Args) -> Self {
+    /// Apply CLI flag overrides on top of `self`. A malformed or dangling
+    /// numeric flag (`--lr` with no value) is a usage `Err`, not a panic.
+    pub fn override_from_args(mut self, a: &Args) -> Result<Self, String> {
         self.artifacts = a.str("artifacts", &self.artifacts);
-        self.workers = a.usize("workers", self.workers);
-        self.shards = a.usize("shards", self.shards);
-        self.steps = a.usize("steps", self.steps);
+        self.workers = a.usize("workers", self.workers)?;
+        self.shards = a.usize("shards", self.shards)?;
+        self.steps = a.usize("steps", self.steps)?;
         self.worker_comp = a.str("comp", &self.worker_comp);
         self.server_comp = a.str("server-comp", &self.server_comp);
         self.round_mode = a.str("round-mode", &self.round_mode);
         self.lmo_hidden = a.str("lmo-hidden", &self.lmo_hidden);
         self.lmo_embed = a.str("lmo-embed", &self.lmo_embed);
         self.lmo_vector = a.str("lmo-vector", &self.lmo_vector);
-        self.beta = a.f64("beta", self.beta as f64) as f32;
-        self.lr = a.f64("lr", self.lr);
-        self.embed_mult = a.f64("embed-mult", self.embed_mult as f64) as f32;
-        self.vector_mult = a.f64("vector-mult", self.vector_mult as f64) as f32;
-        self.warmup = a.usize("warmup", self.warmup);
-        self.min_lr_frac = a.f64("min-lr-frac", self.min_lr_frac);
-        self.corpus_tokens = a.usize("corpus-tokens", self.corpus_tokens);
-        self.eval_every = a.usize("eval-every", self.eval_every);
-        self.eval_batches = a.usize("eval-batches", self.eval_batches);
+        self.beta = a.f64("beta", self.beta as f64)? as f32;
+        self.lr = a.f64("lr", self.lr)?;
+        self.embed_mult = a.f64("embed-mult", self.embed_mult as f64)? as f32;
+        self.vector_mult = a.f64("vector-mult", self.vector_mult as f64)? as f32;
+        self.warmup = a.usize("warmup", self.warmup)?;
+        self.min_lr_frac = a.f64("min-lr-frac", self.min_lr_frac)?;
+        self.corpus_tokens = a.usize("corpus-tokens", self.corpus_tokens)?;
+        self.eval_every = a.usize("eval-every", self.eval_every)?;
+        self.eval_batches = a.usize("eval-batches", self.eval_batches)?;
         self.use_ns_artifact = a.bool("ns-artifact", self.use_ns_artifact);
         self.full_codec = a.bool("full-codec", self.full_codec);
-        self.seed = a.u64("seed", self.seed);
+        self.seed = a.u64("seed", self.seed)?;
         if let Some(p) = a.opt_str("log") {
             self.log_path = Some(p);
         }
         self.fault_policy = a.str("fault-policy", &self.fault_policy);
-        self.checkpoint_every = a.usize("checkpoint-every", self.checkpoint_every);
+        self.checkpoint_every = a.usize("checkpoint-every", self.checkpoint_every)?;
         if let Some(d) = a.opt_str("checkpoint-dir") {
             self.checkpoint_dir = Some(d);
         }
         self.resume = a.bool("resume", self.resume);
-        self
+        Ok(self)
     }
 
     /// Load overrides from a JSON config file (missing keys keep defaults).
@@ -227,7 +228,7 @@ impl TrainConfig {
             }
             None => TrainConfig::default(),
         };
-        Ok(base.override_from_args(a))
+        base.override_from_args(a)
     }
 }
 
@@ -269,7 +270,7 @@ mod tests {
                 .iter()
                 .map(|s| s.to_string()),
         );
-        let c = TrainConfig::default().override_from_args(&a);
+        let c = TrainConfig::default().override_from_args(&a).unwrap();
         assert_eq!(c.fault_policy, "deadline:25");
         assert_eq!(c.checkpoint_every, 5);
         assert_eq!(c.checkpoint_dir.as_deref(), Some("out/ck"));

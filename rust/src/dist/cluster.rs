@@ -47,7 +47,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::matrix::Layers;
+use crate::compress::quantize::{bf16_decode, bf16_encode};
+use crate::linalg::matrix::{Layers, Matrix};
 use crate::opt::{LayerGeometry, Schedule};
 use crate::spec::CompSpec;
 use crate::util::json::{Json, JsonObj};
@@ -102,6 +103,114 @@ pub fn partition_layers(
 // The cross-shard parameter board
 // ---------------------------------------------------------------------------
 
+/// One layer of a bf16-encoded board snapshot: the round-to-nearest-even
+/// high halves of the f32 entries
+/// ([`bf16_encode`](crate::compress::quantize::bf16_encode)) — 2 bytes per
+/// parameter instead of 4 on every board seal and snapshot assembly.
+pub struct Bf16Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<u16>,
+}
+
+impl Bf16Mat {
+    fn encode_from(m: &Matrix) -> Bf16Mat {
+        Bf16Mat {
+            rows: m.rows,
+            cols: m.cols,
+            codes: m.data.iter().map(|&v| bf16_encode(v)).collect(),
+        }
+    }
+
+    /// Re-encode `m` into this buffer (the pooled-seal path; shapes match
+    /// by construction — every board snapshot is full-model shaped).
+    fn reencode_from(&mut self, m: &Matrix) {
+        debug_assert_eq!(self.codes.len(), m.data.len());
+        for (c, &v) in self.codes.iter_mut().zip(&m.data) {
+            *c = bf16_encode(v);
+        }
+    }
+}
+
+/// A sealed board epoch at its stored width: full-precision f32, or the
+/// bf16 wire form ([`ClusterCfg::snap_bf16`]). Readers expand layers
+/// through [`BoardSnap::expand_layer_into`] / [`BoardSnap::layer_to_matrix`]
+/// and meter the cross-shard traffic at [`BoardSnap::layer_wire_bytes`].
+#[derive(Clone)]
+pub enum BoardSnap {
+    /// Byte-for-byte the sealed model (4 B/entry).
+    F32(Arc<Layers>),
+    /// bf16-cast snapshot (2 B/entry): the lossy half-width broadcast.
+    Bf16(Arc<Vec<Bf16Mat>>),
+}
+
+impl BoardSnap {
+    /// Layer count of the snapshot.
+    pub fn len(&self) -> usize {
+        match self {
+            BoardSnap::F32(l) => l.len(),
+            BoardSnap::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shape of layer `i`.
+    pub fn shape(&self, i: usize) -> (usize, usize) {
+        match self {
+            BoardSnap::F32(l) => (l[i].rows, l[i].cols),
+            BoardSnap::Bf16(v) => (v[i].rows, v[i].cols),
+        }
+    }
+
+    /// **The round-trip expansion point.** Write layer `i` into `dst` at
+    /// full f32 width: an exact copy from an f32 snapshot, or the exact
+    /// widening `(code as u32) << 16` from a bf16 one
+    /// ([`bf16_decode`](crate::compress::quantize::bf16_decode)). Every
+    /// consumer of a board snapshot — the per-shard
+    /// [`SnapCache`](super::service::SnapCache) assembly and the uncached
+    /// init/eval assembly — goes through here, so the bf16 loss is applied
+    /// exactly once per sealed value (encode at seal, widen at read) and
+    /// never compounds. With `snap_bf16` off the path is bit-identical to
+    /// the f32-only board (golden-tested in `rust/tests/cluster.rs`).
+    pub fn expand_layer_into(&self, i: usize, dst: &mut [f32]) {
+        match self {
+            BoardSnap::F32(l) => dst.copy_from_slice(&l[i].data),
+            BoardSnap::Bf16(v) => {
+                for (d, &c) in dst.iter_mut().zip(&v[i].codes) {
+                    *d = bf16_decode(c);
+                }
+            }
+        }
+    }
+
+    /// Layer `i` expanded into a freshly allocated [`Matrix`].
+    pub fn layer_to_matrix(&self, i: usize) -> Matrix {
+        let (rows, cols) = self.shape(i);
+        let mut m = Matrix::zeros(rows, cols);
+        self.expand_layer_into(i, &mut m.data);
+        m
+    }
+
+    /// Bytes layer `i` occupies at the snapshot's stored width (4 B/entry
+    /// f32, 2 B/entry bf16) — what a cross-shard read actually moves.
+    pub fn layer_wire_bytes(&self, i: usize) -> u64 {
+        let (rows, cols) = self.shape(i);
+        let width = match self {
+            BoardSnap::F32(_) => 4,
+            BoardSnap::Bf16(_) => 2,
+        };
+        (rows * cols) as u64 * width
+    }
+
+    /// Stored bytes of the whole snapshot.
+    pub fn wire_bytes(&self) -> u64 {
+        (0..self.len()).map(|i| self.layer_wire_bytes(i)).sum()
+    }
+}
+
 /// Round-sealed snapshots of the full model's broadcast shift W, published
 /// by the root reducer and read by each shard's sharded
 /// [`GradHandle`](super::service::GradHandle) when it assembles full-model
@@ -110,6 +219,14 @@ pub fn partition_layers(
 /// deterministic regardless of thread timing — including pipelined round
 /// modes, where a worker may still be computing round `k` after the root
 /// has sealed `k+1`.
+///
+/// A board constructed with [`ParamBoard::new_bf16`] stores every epoch in
+/// bf16 ([`BoardSnap::Bf16`]): seals copy half the bytes and snapshot
+/// assemblies read half the bytes, at ≤ 2⁻⁸ relative error per entry. For
+/// layer-separable objectives the foreign layers are never read by a
+/// shard's own gradient, so the cast provably cannot perturb the
+/// trajectory; for coupled models it is a lossy approximation on top of
+/// the one-round staleness the board already introduces.
 pub struct ParamBoard {
     /// (epoch, snapshot) plus reclaimed buffers, epochs strictly increasing.
     snaps: Mutex<BoardInner>,
@@ -118,25 +235,46 @@ pub struct ParamBoard {
     keep: usize,
     /// Full-model layer count (shards owning every layer skip the board).
     layers: usize,
+    /// Store epochs in bf16 (half-width snapshots).
+    bf16: bool,
 }
 
 struct BoardInner {
-    snaps: VecDeque<(usize, Arc<Layers>)>,
+    snaps: VecDeque<(usize, BoardSnap)>,
     /// Buffers reclaimed from evicted unshared epochs, so steady-state
-    /// sealing copies into a pooled buffer instead of allocating.
-    pool: Vec<Layers>,
+    /// sealing copies into a pooled buffer instead of allocating (one pool
+    /// per storage width; only the board's own width is ever populated).
+    pool_f32: Vec<Layers>,
+    pool_bf16: Vec<Vec<Bf16Mat>>,
 }
 
 impl ParamBoard {
     /// A board whose epoch 0 is `x0` (the init gradient's view).
     pub fn new(x0: Layers, keep: usize) -> ParamBoard {
+        Self::with_mode(x0, keep, false)
+    }
+
+    /// A board storing every epoch in bf16 (see [`ClusterCfg::snap_bf16`]).
+    pub fn new_bf16(x0: Layers, keep: usize) -> ParamBoard {
+        Self::with_mode(x0, keep, true)
+    }
+
+    fn with_mode(x0: Layers, keep: usize, bf16: bool) -> ParamBoard {
+        let layers = x0.len();
+        let snap0 = if bf16 {
+            BoardSnap::Bf16(Arc::new(x0.iter().map(Bf16Mat::encode_from).collect()))
+        } else {
+            BoardSnap::F32(Arc::new(x0))
+        };
         ParamBoard {
-            layers: x0.len(),
+            layers,
             snaps: Mutex::new(BoardInner {
-                snaps: VecDeque::from([(0usize, Arc::new(x0))]),
-                pool: Vec::new(),
+                snaps: VecDeque::from([(0usize, snap0)]),
+                pool_f32: Vec::new(),
+                pool_bf16: Vec::new(),
             }),
             keep: keep.max(2),
+            bf16,
         }
     }
 
@@ -149,34 +287,54 @@ impl ParamBoard {
     /// epoch; epochs must be sealed in increasing order.
     pub fn seal(&self, epoch: usize, full: Layers) {
         let mut s = self.snaps.lock().expect("board lock");
-        Self::seal_locked(&mut s, epoch, Arc::new(full), self.keep);
+        let snap = if self.bf16 {
+            BoardSnap::Bf16(Arc::new(full.iter().map(Bf16Mat::encode_from).collect()))
+        } else {
+            BoardSnap::F32(Arc::new(full))
+        };
+        Self::seal_locked(&mut s, epoch, snap, self.keep);
     }
 
-    /// [`ParamBoard::seal`] from a borrow: copies `full` into a buffer
-    /// reclaimed from an evicted epoch (allocating only until the retention
-    /// window fills), so the steady-state root reducer never clones the
-    /// model to seal. Returns the bytes copied (0 when the epoch was
-    /// already sealed).
+    /// [`ParamBoard::seal`] from a borrow: copies (f32 board) or encodes
+    /// (bf16 board) `full` into a buffer reclaimed from an evicted epoch
+    /// (allocating only until the retention window fills), so the
+    /// steady-state root reducer never clones the model to seal. Returns
+    /// the snapshot bytes written at the board's stored width — half as
+    /// many under bf16 (0 when the epoch was already sealed).
     pub fn seal_from(&self, epoch: usize, full: &Layers) -> u64 {
         let mut s = self.snaps.lock().expect("board lock");
         if s.snaps.iter().any(|(e, _)| *e == epoch) {
             return 0;
         }
-        let snap = match s.pool.pop() {
-            Some(mut buf) => {
-                for (dst, src) in buf.iter_mut().zip(full.iter()) {
-                    dst.data.copy_from_slice(&src.data);
+        let snap = if self.bf16 {
+            let enc = match s.pool_bf16.pop() {
+                Some(mut buf) => {
+                    for (dst, src) in buf.iter_mut().zip(full.iter()) {
+                        dst.reencode_from(src);
+                    }
+                    buf
                 }
-                buf
-            }
-            None => full.clone(),
+                None => full.iter().map(Bf16Mat::encode_from).collect(),
+            };
+            BoardSnap::Bf16(Arc::new(enc))
+        } else {
+            let copy = match s.pool_f32.pop() {
+                Some(mut buf) => {
+                    for (dst, src) in buf.iter_mut().zip(full.iter()) {
+                        dst.data.copy_from_slice(&src.data);
+                    }
+                    buf
+                }
+                None => full.clone(),
+            };
+            BoardSnap::F32(Arc::new(copy))
         };
-        let bytes: u64 = snap.iter().map(|m| m.numel() as u64 * 4).sum();
-        Self::seal_locked(&mut s, epoch, Arc::new(snap), self.keep);
+        let bytes = snap.wire_bytes();
+        Self::seal_locked(&mut s, epoch, snap, self.keep);
         bytes
     }
 
-    fn seal_locked(s: &mut BoardInner, epoch: usize, snap: Arc<Layers>, keep: usize) {
+    fn seal_locked(s: &mut BoardInner, epoch: usize, snap: BoardSnap, keep: usize) {
         if s.snaps.iter().any(|(e, _)| *e == epoch) {
             return;
         }
@@ -184,9 +342,20 @@ impl ParamBoard {
         s.snaps.push_back((epoch, snap));
         while s.snaps.len() > keep {
             let (_, old) = s.snaps.pop_front().expect("non-empty");
-            if let Ok(buf) = Arc::try_unwrap(old) {
-                if s.pool.len() < 2 {
-                    s.pool.push(buf);
+            match old {
+                BoardSnap::F32(a) => {
+                    if let Ok(buf) = Arc::try_unwrap(a) {
+                        if s.pool_f32.len() < 2 {
+                            s.pool_f32.push(buf);
+                        }
+                    }
+                }
+                BoardSnap::Bf16(a) => {
+                    if let Ok(buf) = Arc::try_unwrap(a) {
+                        if s.pool_bf16.len() < 2 {
+                            s.pool_bf16.push(buf);
+                        }
+                    }
                 }
             }
         }
@@ -195,7 +364,7 @@ impl ParamBoard {
     /// The snapshot sealed for `epoch`: the newest sealed epoch `<= epoch`
     /// (the oldest retained one if `epoch` predates the retention window).
     /// Hands out an `Arc` share of the sealed snapshot — never a deep copy.
-    pub fn read(&self, epoch: usize) -> Arc<Layers> {
+    pub fn read(&self, epoch: usize) -> BoardSnap {
         let s = self.snaps.lock().expect("board lock");
         s.snaps
             .iter()
@@ -207,7 +376,7 @@ impl ParamBoard {
     }
 
     /// The newest sealed snapshot (init / eval-time view).
-    pub fn read_latest(&self) -> Arc<Layers> {
+    pub fn read_latest(&self) -> BoardSnap {
         let s = self.snaps.lock().expect("board lock");
         s.snaps.back().map(|(_, a)| a.clone()).expect("board never empty")
     }
@@ -246,6 +415,12 @@ pub struct ClusterCfg {
     pub fault_plan: Option<Arc<FaultPlan>>,
     /// First round index (nonzero when resuming from a checkpoint).
     pub start_step: usize,
+    /// Store the cross-shard [`ParamBoard`] snapshots in bf16: every epoch
+    /// seal copies half the bytes and every snapshot assembly reads half
+    /// the bytes, at ≤ 2⁻⁸ relative error per foreign entry. Exact (bit-
+    /// identical trajectories) for layer-separable objectives, a lossy
+    /// approximation for coupled ones; off by default.
+    pub snap_bf16: bool,
 }
 
 impl ClusterCfg {
@@ -447,10 +622,12 @@ impl Cluster {
         }
         let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
         let partition = partition_layers(&shapes, cfg.shards).map_err(anyhow::Error::msg)?;
-        let board = Arc::new(ParamBoard::new(
-            x0.clone(),
-            cfg.round_mode.lookahead() + 3,
-        ));
+        let keep = cfg.round_mode.lookahead() + 3;
+        let board = Arc::new(if cfg.snap_bf16 {
+            ParamBoard::new_bf16(x0.clone(), keep)
+        } else {
+            ParamBoard::new(x0.clone(), keep)
+        });
 
         let (reply_tx, reply_rx) = channel::<FromShard>();
         let mut to_shards = Vec::with_capacity(cfg.shards);
@@ -681,6 +858,7 @@ impl Cluster {
             m.snap_assembled = c.assembled();
             m.snap_reused = c.reused();
             m.bytes_cloned = c.bytes_assembled();
+            m.snap_bytes_shipped = c.bytes_shipped();
         }
         ClusterMeter { per_shard, root_bytes_cloned: self.seal_bytes }
     }
@@ -855,6 +1033,7 @@ pub fn totals_consistent(meter: &ClusterMeter) -> bool {
         && t.rounds_absorbed == min(|m| m.rounds_absorbed)
         && t.snap_assembled == sum(|m| m.snap_assembled)
         && t.snap_reused == sum(|m| m.snap_reused)
+        && t.snap_bytes_shipped == sum(|m| m.snap_bytes_shipped)
         && t.bytes_cloned == sum(|m| m.bytes_cloned) + meter.root_bytes_cloned
         && t.stragglers == sum(|m| m.stragglers)
         && t.respawns == sum(|m| m.respawns)
@@ -900,38 +1079,67 @@ mod tests {
     #[test]
     fn board_seals_and_reads_by_epoch() {
         let mk = |v: f32| vec![Matrix::from_vec(1, 1, vec![v])];
+        let at = |s: BoardSnap| s.layer_to_matrix(0).data;
         let b = ParamBoard::new(mk(0.0), 3);
-        assert_eq!(b.read(0)[0].data, vec![0.0]);
+        assert_eq!(at(b.read(0)), vec![0.0]);
         b.seal(1, mk(1.0));
         b.seal(2, mk(2.0));
         // epoch reads are exact; re-seals are idempotent
         b.seal(2, mk(99.0));
-        assert_eq!(b.read(0)[0].data, vec![0.0]);
-        assert_eq!(b.read(1)[0].data, vec![1.0]);
-        assert_eq!(b.read(2)[0].data, vec![2.0]);
+        assert_eq!(at(b.read(0)), vec![0.0]);
+        assert_eq!(at(b.read(1)), vec![1.0]);
+        assert_eq!(at(b.read(2)), vec![2.0]);
         // future epochs fall back to the newest sealed snapshot
-        assert_eq!(b.read(7)[0].data, vec![2.0]);
-        assert_eq!(b.read_latest()[0].data, vec![2.0]);
+        assert_eq!(at(b.read(7)), vec![2.0]);
+        assert_eq!(at(b.read_latest()), vec![2.0]);
         // retention: keep=3 keeps {1,2,3} after sealing 3; epoch-0 reads
         // degrade to the oldest retained snapshot
         b.seal(3, mk(3.0));
-        assert_eq!(b.read(0)[0].data, vec![1.0]);
+        assert_eq!(at(b.read(0)), vec![1.0]);
     }
 
     #[test]
     fn board_seal_from_copies_and_pools() {
         let mk = |v: f32| vec![Matrix::from_vec(1, 1, vec![v])];
+        let at = |s: BoardSnap| s.layer_to_matrix(0).data;
         let b = ParamBoard::new(mk(0.0), 2);
         assert_eq!(b.seal_from(1, &mk(1.0)), 4, "one f32 layer = 4 bytes copied");
         assert_eq!(b.seal_from(1, &mk(9.0)), 0, "re-seal is idempotent and free");
-        assert_eq!(b.read(1)[0].data, vec![1.0]);
+        assert_eq!(at(b.read(1)), vec![1.0]);
         // eviction reclaims unshared snapshots; later seals copy into the
         // pooled buffer and reads see the fresh content
         b.seal_from(2, &mk(2.0));
         b.seal_from(3, &mk(3.0));
         b.seal_from(4, &mk(4.0));
-        assert_eq!(b.read(3)[0].data, vec![3.0]);
-        assert_eq!(b.read_latest()[0].data, vec![4.0]);
+        assert_eq!(at(b.read(3)), vec![3.0]);
+        assert_eq!(at(b.read_latest()), vec![4.0]);
+    }
+
+    #[test]
+    fn bf16_board_halves_seal_bytes_and_widens_exactly() {
+        let mk = |v: f32| vec![Matrix::from_vec(1, 2, vec![v, 1.5])];
+        let b = ParamBoard::new_bf16(mk(0.0), 2);
+        // 2 entries at 2 bytes each — exactly half the f32 board's 8
+        assert_eq!(b.seal_from(1, &mk(3.0)), 4);
+        assert_eq!(b.seal_from(1, &mk(9.0)), 0, "re-seal stays idempotent and free");
+        // bf16-exact values survive the round trip bit for bit
+        assert_eq!(b.read(1).layer_to_matrix(0).data, vec![3.0, 1.5]);
+        // 1 + 2⁻⁸ is a round-to-nearest-even tie: rounds down to 1.0
+        b.seal(2, vec![Matrix::from_vec(1, 2, vec![1.00390625, -0.0])]);
+        let m = b.read(2).layer_to_matrix(0);
+        assert_eq!(m.data[0], 1.0, "RTNE tie rounds to the even mantissa");
+        assert_eq!(m.data[1].to_bits(), (-0.0f32).to_bits(), "-0.0 keeps its sign");
+        // pooled re-encode path after eviction still reads fresh content
+        b.seal_from(3, &mk(4.0));
+        b.seal_from(4, &mk(5.0));
+        let snap = b.read_latest();
+        assert_eq!(snap.layer_to_matrix(0).data, vec![5.0, 1.5]);
+        assert_eq!(snap.shape(0), (1, 2));
+        assert_eq!(snap.layer_wire_bytes(0), 4);
+        assert_eq!(snap.wire_bytes(), 4);
+        let mut dst = [0.0f32; 2];
+        snap.expand_layer_into(0, &mut dst);
+        assert_eq!(dst, [5.0, 1.5]);
     }
 
     #[test]
@@ -945,6 +1153,7 @@ mod tests {
             snap_assembled: 4,
             snap_reused: 8,
             bytes_cloned: 100,
+            snap_bytes_shipped: 60,
             stragglers: 1,
             respawns: 0,
             partial_rounds: 1,
@@ -958,6 +1167,7 @@ mod tests {
             snap_assembled: 4,
             snap_reused: 8,
             bytes_cloned: 100,
+            snap_bytes_shipped: 70,
             stragglers: 2,
             respawns: 1,
             partial_rounds: 2,
@@ -972,6 +1182,7 @@ mod tests {
         assert_eq!(t.snap_assembled, 8);
         assert_eq!(t.snap_reused, 16);
         assert_eq!(t.bytes_cloned, 240, "per-shard assembly bytes + root seal bytes");
+        assert_eq!(t.snap_bytes_shipped, 130, "board-read bytes sum over shards");
         assert_eq!(t.stragglers, 3);
         assert_eq!(t.respawns, 1);
         assert_eq!(t.partial_rounds, 3);

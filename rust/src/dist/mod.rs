@@ -277,6 +277,10 @@ pub struct MeterSnapshot {
     pub snap_reused: u64,
     /// Bytes deep-copied on the host gradient/snapshot path.
     pub bytes_cloned: u64,
+    /// Bytes read from the cluster parameter board at its stored snapshot
+    /// width while assembling foreign layers (2 B/entry under the bf16
+    /// board, 4 B/entry under f32) — the cross-shard wire traffic.
+    pub snap_bytes_shipped: u64,
     /// Deadline-skipped worker replies ([`fault::FaultPolicy`]).
     pub stragglers: u64,
     /// Worker respawns performed by the supervisor.
@@ -295,6 +299,7 @@ impl MeterSnapshot {
         self.snap_assembled += other.snap_assembled;
         self.snap_reused += other.snap_reused;
         self.bytes_cloned += other.bytes_cloned;
+        self.snap_bytes_shipped += other.snap_bytes_shipped;
         self.stragglers += other.stragglers;
         self.respawns += other.respawns;
         self.partial_rounds += other.partial_rounds;
@@ -318,6 +323,7 @@ impl MeterSnapshot {
             .put("snap_assembled", self.snap_assembled)
             .put("snap_reused", self.snap_reused)
             .put("bytes_cloned", self.bytes_cloned)
+            .put("snap_bytes_shipped", self.snap_bytes_shipped)
             .put("stragglers", self.stragglers)
             .put("respawns", self.respawns)
             .put("partial_rounds", self.partial_rounds)
@@ -346,6 +352,7 @@ impl MeterSnapshot {
             snap_assembled: opt("snap_assembled"),
             snap_reused: opt("snap_reused"),
             bytes_cloned: opt("bytes_cloned"),
+            snap_bytes_shipped: opt("snap_bytes_shipped"),
             stragglers: opt("stragglers"),
             respawns: opt("respawns"),
             partial_rounds: opt("partial_rounds"),

@@ -82,6 +82,7 @@ pub struct SnapCache {
     assembled: AtomicU64,
     reused: AtomicU64,
     bytes_assembled: AtomicU64,
+    bytes_shipped: AtomicU64,
     fresh: AtomicU64,
 }
 
@@ -100,6 +101,7 @@ impl SnapCache {
             assembled: AtomicU64::new(0),
             reused: AtomicU64::new(0),
             bytes_assembled: AtomicU64::new(0),
+            bytes_shipped: AtomicU64::new(0),
             fresh: AtomicU64::new(0),
         }
     }
@@ -114,9 +116,18 @@ impl SnapCache {
         self.reused.load(Ordering::Relaxed)
     }
 
-    /// Bytes deep-copied by assemblies (board snapshot + own layers).
+    /// Bytes deep-copied by assemblies (board snapshot + own layers),
+    /// counted at full f32 width — the host memory-traffic meter.
     pub fn bytes_assembled(&self) -> u64 {
         self.bytes_assembled.load(Ordering::Relaxed)
+    }
+
+    /// Bytes read from the parameter board at its *stored* width while
+    /// assembling foreign layers: 2 B/entry under the bf16 board
+    /// ([`super::cluster::ClusterCfg::snap_bf16`]), 4 B/entry under f32 —
+    /// the cross-shard snapshot wire traffic `BENCH_hotpath.json` gates.
+    pub fn bytes_shipped(&self) -> u64 {
+        self.bytes_shipped.load(Ordering::Relaxed)
     }
 
     /// Genuine heap allocations (pool misses) — flat once warm.
@@ -146,20 +157,23 @@ impl SnapCache {
         }
         let src = board.read(step);
         // merge-copy each layer exactly once — own layers from the caller,
-        // foreign layers from the board epoch (`layer_ids` is ascending);
-        // the assembly buffer comes from the reclaim pool when one is
+        // foreign layers expanded from the board epoch at its stored width
+        // (f32 copy or bf16 widening; `BoardSnap::expand_layer_into` is the
+        // round-trip expansion point). `layer_ids` is ascending; the
+        // assembly buffer comes from the reclaim pool when one is
         // available (all entries are full-model shaped, so any fits)
+        let mut shipped = 0u64;
         let mut k = 0;
         let full: Layers = match inner.pool.pop() {
             Some(mut buf) => {
                 for (i, dst) in buf.iter_mut().enumerate() {
-                    let from = if k < layer_ids.len() && layer_ids[k] == i {
+                    if k < layer_ids.len() && layer_ids[k] == i {
                         k += 1;
-                        &own[k - 1]
+                        dst.data.copy_from_slice(&own[k - 1].data);
                     } else {
-                        &src[i]
-                    };
-                    dst.data.copy_from_slice(&from.data);
+                        src.expand_layer_into(i, &mut dst.data);
+                        shipped += src.layer_wire_bytes(i);
+                    }
                 }
                 buf
             }
@@ -171,7 +185,8 @@ impl SnapCache {
                             k += 1;
                             own[k - 1].clone()
                         } else {
-                            src[i].clone()
+                            shipped += src.layer_wire_bytes(i);
+                            src.layer_to_matrix(i)
                         }
                     })
                     .collect()
@@ -179,6 +194,7 @@ impl SnapCache {
         };
         let bytes: usize = full.iter().map(|m| m.numel() * 4).sum();
         self.bytes_assembled.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.bytes_shipped.fetch_add(shipped, Ordering::Relaxed);
         self.assembled.fetch_add(1, Ordering::Relaxed);
         let arc = Arc::new(full);
         debug_assert!(inner.snaps.back().map(|(s, _)| *s < step).unwrap_or(true));
@@ -472,7 +488,9 @@ fn assemble(
 ) -> Result<Layers> {
     check_own(board, layer_ids, own)?;
     let snap = if step == INIT_STEP { board.read_latest() } else { board.read(step) };
-    let mut full: Layers = (*snap).clone();
+    // foreign layers expand at the board's stored width (f32 copy or bf16
+    // widening — see `cluster::BoardSnap::expand_layer_into`)
+    let mut full: Layers = (0..snap.len()).map(|i| snap.layer_to_matrix(i)).collect();
     for (m, &li) in own.iter().zip(layer_ids) {
         full[li] = m.clone();
     }

@@ -1,17 +1,31 @@
 //! Blocked dense matmul — the L3-native analogue of the L1 Pallas kernel.
 //!
-//! The kernel computes `C = A · B` with the `ikj` loop order over
-//! cache-blocked tiles: the inner loop runs contiguously over a row of `B`
-//! and a row of `C`, which auto-vectorizes well. This mirrors the Pallas
-//! BlockSpec schedule at L1 (see DESIGN.md §Hardware-Adaptation): the block
-//! sizes play the role of the VMEM tiles.
+//! The kernel computes `C = A · B` with a packed register-tiled microkernel:
+//! `MR x NR` output tiles held in registers, accumulated over the full inner
+//! dimension in ascending `k` order, inside a `BN`-wide column panel so the
+//! streamed rows of `B` stay cache-resident. The fixed-size `[f32; NR]` lanes
+//! auto-vectorize to full-width FMA-free SIMD (no `mul_add`: contraction
+//! would change the rounding chain). This mirrors the Pallas BlockSpec
+//! schedule at L1 (see DESIGN.md §Hardware-Adaptation): the register tile
+//! plays the role of the VMEM tile. Tuning sweep: EXPERIMENTS.md §Microkernel.
+//!
+//! **Determinism contract.** Every output element is the chain
+//! `((0 + a[i,0]·b[0,j]) + a[i,1]·b[1,j]) + …` in ascending `k` with a single
+//! f32 accumulator — in the register tile, in the edge loops, and in
+//! [`matmul_into_reference`]. f32 stores/loads are lossless, so accumulating
+//! in a register tile vs. streaming into pre-zeroed memory is the *same*
+//! chain, and the blocked kernel is **bitwise** equal to the scalar
+//! reference — including `inf`/`NaN`/`-0.0` inputs. There is deliberately no
+//! `a[i,k] == 0.0` skip: it would drop `0·inf = NaN` and diverge from the
+//! reference on non-finite inputs (and it blocks vectorization). See
+//! DESIGN.md §Non-finite values policy.
 //!
 //! Large products are additionally **row-partitioned across scoped OS
 //! threads** (DESIGN.md §Hot-path threading): each thread owns a contiguous
 //! band of `C` rows, so the result is bit-identical for every thread count
 //! — for any output element the contributions over `k` are reduced by
-//! exactly one thread in block-ascending order. `rust/tests/parallel.rs`
-//! asserts this.
+//! exactly one thread in ascending order. `rust/tests/parallel.rs` asserts
+//! this.
 //!
 //! Used by the server hot path: Newton–Schulz spectral LMOs and RankK
 //! power-iteration compressors.
@@ -20,44 +34,95 @@ use super::matrix::Matrix;
 use super::workspace::{with_thread_workspace, Workspace};
 use crate::util::threads::num_threads;
 
-/// Tile sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
-const BM: usize = 32;
-const BK: usize = 64;
+/// Column-panel width: rows of `B` are streamed `BN` floats at a time so a
+/// `k x BN` panel of `B` (256 KiB at k = 256) stays L2-resident while the
+/// `i` loop sweeps over it (tuned in the §Perf pass; see EXPERIMENTS.md).
 const BN: usize = 256;
+/// Register tile height: rows of `C` accumulated concurrently. 4 rows of
+/// 16-lane accumulators = 8 x 256-bit (or 4 x 512-bit) registers live.
+const MR: usize = 4;
+/// Register tile width: one cache line of `C` per row, two 8-lane AVX2
+/// vectors — enough independent accumulator chains to hide FMA latency.
+const NR: usize = 16;
 
 /// Minimum FLOP count (2·m·k·n) before the kernel fans out across threads —
 /// below this, thread-spawn latency beats the parallel win.
 const PAR_MIN_FLOPS: usize = 8 << 20;
 
-/// Inner kernel: accumulate `rows` rows of `C` starting at absolute row
-/// `row0` of `A`. `cd` holds exactly those rows (caller pre-zeroed). The
-/// per-element accumulation order over `k` is independent of `row0`/`rows`,
-/// which is what makes the row-partitioned parallel variant bit-exact.
-fn mm_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
-    for i0 in (0..rows).step_by(BM) {
-        let i1 = (i0 + BM).min(rows);
-        for k0 in (0..k).step_by(BK) {
-            let k1 = (k0 + BK).min(k);
-            for j0 in (0..n).step_by(BN) {
-                let j1 = (j0 + BN).min(n);
-                // §Perf note: a 4-way k-unroll was tried here and REVERTED
-                // (bounds-check noise beat the ILP win; see EXPERIMENTS.md
-                // §Perf iteration log). The simple ikj form vectorizes
-                // cleanly under target-cpu=native.
-                for i in i0..i1 {
-                    let crow = &mut cd[i * n + j0..i * n + j1];
-                    for kk in k0..k1 {
-                        let aik = ad[(row0 + i) * k + kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[kk * n + j0..kk * n + j1];
-                        for (cv, bv) in crow.iter_mut().zip(brow) {
-                            *cv += aik * bv;
-                        }
-                    }
-                }
+/// `MR x NR` register-tiled microkernel: computes the full-`k` products for
+/// output rows `i..i+MR`, columns `j..j+NR`, and stores them. `cd` is the
+/// caller's row band (rows `row0..row0+rows` of `C`); `i` is band-relative.
+/// The accumulators start at 0.0 and run ascending in `k`, exactly like the
+/// pre-zeroed streaming edge loop, so both paths produce identical bits.
+#[inline(always)]
+fn mm_tile(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, i: usize, j: usize, k: usize, n: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        // fixed-size reborrow: lets the compiler keep the B strip in two
+        // vector registers with the bounds check hoisted out of the lanes
+        let brow: &[f32; NR] = bd[kk * n + j..kk * n + j + NR].try_into().unwrap();
+        for (mi, lane) in acc.iter_mut().enumerate() {
+            let aik = ad[(row0 + i + mi) * k + kk];
+            for (av, bv) in lane.iter_mut().zip(brow) {
+                *av += aik * *bv;
             }
+        }
+    }
+    for (mi, lane) in acc.iter().enumerate() {
+        cd[(i + mi) * n + j..(i + mi) * n + j + NR].copy_from_slice(lane);
+    }
+}
+
+/// Streaming `ikj` edge loop for the row/column remainders that don't fill
+/// an `MR x NR` tile. `cd` is pre-zeroed, so the per-element accumulation
+/// chain matches the register tile bit for bit. No `aik == 0.0` skip — see
+/// the module docs (non-finite divergence).
+fn mm_edge(
+    ad: &[f32],
+    bd: &[f32],
+    cd: &mut [f32],
+    row0: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in i0..i1 {
+        let crow = &mut cd[i * n + j0..i * n + j1];
+        for kk in 0..k {
+            let aik = ad[(row0 + i) * k + kk];
+            let brow = &bd[kk * n + j0..kk * n + j1];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// Inner kernel: compute `rows` rows of `C` starting at absolute row `row0`
+/// of `A`. `cd` holds exactly those rows (caller pre-zeroed). The
+/// per-element accumulation order over `k` is independent of `row0`/`rows`
+/// and of which path (tile vs. edge) computes it, which is what makes the
+/// row-partitioned parallel variant bit-exact.
+fn mm_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for j0 in (0..n).step_by(BN) {
+        let j1 = (j0 + BN).min(n);
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut j = j0;
+            while j + NR <= j1 {
+                mm_tile(ad, bd, cd, row0, i, j, k, n);
+                j += NR;
+            }
+            if j < j1 {
+                mm_edge(ad, bd, cd, row0, i, i + MR, j, j1, k, n);
+            }
+            i += MR;
+        }
+        if i < rows {
+            mm_edge(ad, bd, cd, row0, i, rows, j0, j1, k, n);
         }
     }
 }
@@ -112,6 +177,28 @@ pub fn matmul_into_with_threads(a: &Matrix, b: &Matrix, c: &mut Matrix, threads:
     });
 }
 
+/// Scalar `ikj` reference: the bit-exactness oracle for the microkernel
+/// (and the single-thread bench baseline — EXPERIMENTS.md §Microkernel).
+/// One f32 accumulator per element, ascending `k`, no skips, no blocking:
+/// the blocked/threaded kernel must reproduce this **bitwise**, including
+/// on `inf`/`NaN`/`-0.0` inputs (`tests/nonfinite.rs`).
+pub fn matmul_into_reference(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul out shape");
+    c.fill(0.0);
+    let (k, n) = (a.cols, b.cols);
+    for i in 0..a.rows {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a.data[i * k + kk];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
 /// `C = A · Bᵀ` without materializing the transpose (rows of `B` are
 /// contiguous, so this is a sequence of dot products).
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
@@ -131,7 +218,7 @@ pub fn matmul_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// workspace warms up).
 ///
 /// §Perf: for sizeable inputs the dot-product form (horizontal adds) loses
-/// badly to the vectorized `ikj` kernel, so we pay one explicit transpose
+/// badly to the register-tiled kernel, so we pay one explicit transpose
 /// — served from the workspace arena, not the allocator — and dispatch to
 /// [`matmul_into`]: 2-3× faster on NS-sized Gram matrices.
 pub fn matmul_bt_into_ws(a: &Matrix, b: &Matrix, c: &mut Matrix, ws: &mut Workspace) {
@@ -175,7 +262,10 @@ pub fn matmul_at(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = Aᵀ · B` into a caller-provided buffer (no allocation).
+/// `C = Aᵀ · B` into a caller-provided buffer (no allocation). `kij` order:
+/// per-element accumulation still runs ascending in the inner dimension
+/// (rows of `A`). No `aik == 0.0` skip — it would drop `0·inf = NaN`
+/// propagation (DESIGN.md §Non-finite values policy).
 pub fn matmul_at_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows, b.rows, "matmul_at inner dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at out shape");
@@ -186,9 +276,6 @@ pub fn matmul_at_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
         for i in 0..m {
             let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
             let crow = &mut c.data[i * n..(i + 1) * n];
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += aik * bv;
@@ -243,6 +330,10 @@ mod tests {
         c
     }
 
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
     #[test]
     fn blocked_matches_naive() {
         let mut rng = Rng::new(5);
@@ -252,6 +343,64 @@ mod tests {
             let c = matmul(&a, &b);
             assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn blocked_bitwise_equals_reference() {
+        // the microkernel contract: tile + edge paths reproduce the scalar
+        // ikj chain exactly, across tile-boundary shapes
+        let mut rng = Rng::new(51);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 7, 5),
+            (4, 9, 16),
+            (5, 9, 17),
+            (33, 65, 255),
+            (70, 40, 257),
+            (64, 128, 272),
+        ] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let mut r = Matrix::zeros(m, n);
+            matmul_into_reference(&a, &b, &mut r);
+            assert_eq!(bits(&c), bits(&r), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn nonfinite_inputs_match_reference_bitwise() {
+        // regression: the old `aik == 0.0 { continue }` skip dropped the
+        // 0·inf = NaN contribution, silently diverging from the reference
+        let mut rng = Rng::new(52);
+        let mut a = Matrix::randn(21, 37, 1.0, &mut rng);
+        let mut b = Matrix::randn(37, 33, 1.0, &mut rng);
+        a.data[0] = 0.0;
+        a.data[38] = -0.0;
+        a.data[40] = f32::NAN;
+        b.data[0] = f32::INFINITY;
+        b.data[1] = f32::NEG_INFINITY;
+        b.data[33] = f32::NAN;
+        b.data[34] = -0.0;
+        let c = matmul(&a, &b);
+        let mut r = Matrix::zeros(21, 33);
+        matmul_into_reference(&a, &b, &mut r);
+        assert_eq!(bits(&c), bits(&r));
+        // a zero row against an inf column MUST produce NaN, not 0
+        assert!(c.at(0, 0).is_nan(), "0·inf must propagate NaN");
+    }
+
+    #[test]
+    fn matmul_at_propagates_nonfinite() {
+        // Aᵀ·B with a zero in A lined up against inf in B: the element is NaN
+        let mut a = Matrix::zeros(2, 3);
+        let mut b = Matrix::zeros(2, 2);
+        a.set(0, 0, 0.0);
+        a.set(1, 0, 1.0);
+        b.set(0, 0, f32::INFINITY);
+        b.set(1, 0, 2.0);
+        let c = matmul_at(&a, &b);
+        assert!(c.at(0, 0).is_nan(), "0·inf + 1·2 must be NaN, got {}", c.at(0, 0));
     }
 
     #[test]

@@ -134,7 +134,11 @@ pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
             (s.sqrt() as f32, j)
         })
         .collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: a NaN singular value (non-finite input) sorts
+    // deterministically (above +inf in the descending order) instead of
+    // panicking; the Jacobi sweep itself is NaN-tolerant (all rotation
+    // predicates compare false). DESIGN.md §Non-finite values policy.
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
     let s: Vec<f32> = sv.iter().map(|(x, _)| *x).collect();
     let mut uu = Matrix::zeros(m, n);
     let mut vv = Matrix::zeros(n, n);
@@ -194,6 +198,20 @@ mod tests {
                 assert!(w[0] >= w[1] - 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn jacobi_survives_nan_input() {
+        // regression: the descending singular-value sort used
+        // partial_cmp().unwrap() and aborted on the first NaN — a single
+        // poisoned matrix entry must degrade, not panic
+        let mut rng = Rng::new(25);
+        let mut a = Matrix::randn(5, 4, 1.0, &mut rng);
+        a.data[3] = f32::NAN;
+        let (u, s, v) = jacobi_svd(&a);
+        assert_eq!(s.len(), 4);
+        assert_eq!((u.rows, u.cols), (5, 4));
+        assert_eq!((v.rows, v.cols), (4, 4));
     }
 
     #[test]

@@ -137,7 +137,7 @@ fn base_config(args: &Args) -> Result<TrainConfig> {
             return Err(anyhow!("--preset and --config are mutually exclusive"));
         }
         let preset = efmuon::spec::Preset::parse(&p).map_err(anyhow::Error::msg)?;
-        return Ok(preset.spec().to_train_config().override_from_args(args));
+        return preset.spec().to_train_config().override_from_args(args).map_err(anyhow::Error::msg);
     }
     TrainConfig::from_args(args).map_err(anyhow::Error::msg)
 }
@@ -247,7 +247,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
 }
 
 fn cmd_rates(args: &Args) -> Result<()> {
-    let seed = args.u64("seed", 123);
+    let seed = args.u64("seed", 123).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     let rows = exp::rate_validation(seed)?;
     println!("{}", exp::rates_text(&rows));
@@ -255,8 +255,8 @@ fn cmd_rates(args: &Args) -> Result<()> {
 }
 
 fn cmd_s2w(args: &Args) -> Result<()> {
-    let rounds = args.usize("rounds", 600);
-    let seed = args.u64("seed", 7);
+    let rounds = args.usize("rounds", 600).map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed", 7).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     let rows = exp::s2w_savings(exp::s2w_specs(), rounds, seed)?;
     println!("{}", exp::s2w_text(&rows));
@@ -264,9 +264,9 @@ fn cmd_s2w(args: &Args) -> Result<()> {
 }
 
 fn cmd_shards(args: &Args) -> Result<()> {
-    let rounds = args.usize("rounds", 40);
-    let seed = args.u64("seed", 11);
-    let max = args.usize("max-shards", 4);
+    let rounds = args.usize("rounds", 40).map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed", 11).map_err(anyhow::Error::msg)?;
+    let max = args.usize("max-shards", 4).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     let counts: Vec<usize> = [1usize, 2, 3, 4, 6, 8]
         .into_iter()
@@ -283,7 +283,7 @@ fn cmd_shards(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
-    let target = args.f64("target", 0.0) as f32;
+    let target = args.f64("target", 0.0).map_err(anyhow::Error::msg)? as f32;
     warn_unknown(args);
     let reports = exp::figure_sweep(&cfg, exp::figure_specs())?;
     println!("== Figure 1 (left): eval loss vs tokens ==");
@@ -315,7 +315,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_divergence(args: &Args) -> Result<()> {
-    let steps = args.usize("steps", 60);
+    let steps = args.usize("steps", 60).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     efmuon::exp::divergence::run_demo(steps, &mut std::io::stdout())?;
     Ok(())

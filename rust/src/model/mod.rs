@@ -175,12 +175,25 @@ impl Manifest {
         let mut off = 0usize;
         for l in &self.layers {
             let n = l.numel();
-            let mut data = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &bytes[off + 4 * i..off + 4 * i + 4];
-                data.push(f32::from_le_bytes(b.try_into().unwrap()));
+            let end = off + 4 * n;
+            // a manifest whose layer table outruns param_count used to slice
+            // out of bounds here and panic; name the offending layer instead,
+            // like the checkpoint loader's field errors
+            if end > bytes.len() {
+                return Err(format!(
+                    "init_params.bin truncated at layer {:?} ({}x{}): needs bytes {off}..{end}, \
+                     file has {}",
+                    l.name,
+                    l.rows,
+                    l.cols,
+                    bytes.len()
+                ));
             }
-            off += 4 * n;
+            let data: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            off = end;
             out.push(Matrix::from_vec(l.rows, l.cols, data));
         }
         Ok(out)
@@ -271,5 +284,35 @@ mod tests {
         let params = m.load_init_params().unwrap();
         assert_eq!(params[0].data, vec![1.0, -2.0, 0.5]);
         assert_eq!(m.model_bytes(), 12);
+    }
+
+    #[test]
+    fn truncated_init_params_is_a_named_error() {
+        let dir = std::env::temp_dir().join("efmuon_manifest_trunc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // layer table (2x2 = 4 floats) outruns param_count (3): the byte
+        // length check passes, the per-layer slice used to panic
+        let manifest = r#"{
+            "preset": "nano",
+            "config": {"vocab": 256, "seq_len": 64, "d_model": 64,
+                       "n_layer": 2, "n_head": 2, "d_ff": 256},
+            "batch": 4, "param_count": 3,
+            "layers": [
+                {"name": "wte", "shape": [2, 2], "group": "embed"}
+            ],
+            "artifacts": {"grad": "grad.hlo.txt", "eval": "eval.hlo.txt",
+                          "init_params": "init_params.bin"},
+            "ns_steps": 5
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("init_params.bin"), [0u8; 12]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.load_init_params().unwrap_err();
+        assert!(err.contains("wte") && err.contains("truncated"), "{err}");
+
+        // a short file still fails the up-front length check, with sizes
+        std::fs::write(dir.join("init_params.bin"), [0u8; 7]).unwrap();
+        let err = m.load_init_params().unwrap_err();
+        assert!(err.contains("7") && err.contains("12"), "{err}");
     }
 }

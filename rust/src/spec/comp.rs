@@ -18,7 +18,7 @@ use crate::compress::{lowrank, natural, quantize, simple, sparse, Compressor};
 ///
 /// ```text
 /// spec := base ("+nat")?
-/// base := "id" | "nat" | "sign" | "top:F" | "rank:F" | "drop:P"
+/// base := "id" | "nat" | "sign" | "bf16" | "top:F" | "rank:F" | "drop:P"
 ///       | "damp:G" | "svdtop:K" | "coltop:F" | "randk:F" | "qsgd:L"
 /// ```
 ///
@@ -47,6 +47,9 @@ pub enum CompSpec {
     RandK { frac: f64 },
     /// QSGD uniform quantization at `levels` levels.
     Qsgd { levels: u8 },
+    /// bf16 round-to-nearest-even cast: half the f32 bytes, relative error
+    /// ≤ 2⁻⁸ per entry (the snapshot/broadcast wire format).
+    Bf16,
 }
 
 impl CompSpec {
@@ -77,6 +80,7 @@ impl CompSpec {
                 "id" => CompSpec::Id,
                 "nat" => CompSpec::Natural,
                 "sign" => CompSpec::Sign,
+                "bf16" => CompSpec::Bf16,
                 _ => return Err(mk_err("unknown compressor")),
             },
             Some(("top", f)) => CompSpec::Top { frac: frac_in_unit(f, "top")?, nat },
@@ -123,6 +127,7 @@ impl CompSpec {
             CompSpec::ColTop { frac } => format!("coltop:{frac}"),
             CompSpec::RandK { frac } => format!("randk:{frac}"),
             CompSpec::Qsgd { levels } => format!("qsgd:{levels}"),
+            CompSpec::Bf16 => "bf16".into(),
         }
     }
 
@@ -137,7 +142,7 @@ impl CompSpec {
             Ok(())
         };
         match *self {
-            CompSpec::Id | CompSpec::Natural | CompSpec::Sign => Ok(()),
+            CompSpec::Id | CompSpec::Natural | CompSpec::Sign | CompSpec::Bf16 => Ok(()),
             CompSpec::Top { frac, nat: _ } => unit(frac, "top"),
             CompSpec::Rank { frac, nat: _ } => unit(frac, "rank"),
             CompSpec::RandK { frac } => unit(frac, "randk"),
@@ -209,6 +214,7 @@ impl CompSpec {
             CompSpec::ColTop { frac } => Box::new(sparse::ColTopK::new(frac)),
             CompSpec::RandK { frac } => Box::new(sparse::RandK::new(frac)),
             CompSpec::Qsgd { levels } => Box::new(quantize::Qsgd::new(levels)),
+            CompSpec::Bf16 => Box::new(quantize::Bf16Cast),
         }
     }
 
@@ -325,7 +331,7 @@ mod tests {
     fn parse_spec_build_name_roundtrip() {
         for s in ["id", "nat", "top:0.15", "top:0.1+nat", "rank:0.2",
                   "rank:0.05+nat", "drop:0.5", "damp:0.8", "svdtop:3",
-                  "coltop:0.25", "sign", "qsgd:4", "randk:0.3"] {
+                  "coltop:0.25", "sign", "qsgd:4", "randk:0.3", "bf16"] {
             let c = CompSpec::parse(s).unwrap();
             assert_eq!(c.spec(), s, "spec() roundtrip for {s}");
             assert_eq!(CompSpec::parse(&c.spec()).unwrap(), c, "parse(spec()) for {s}");
@@ -337,7 +343,8 @@ mod tests {
     #[test]
     fn parse_rejects_what_the_legacy_grammar_rejected() {
         for s in ["", "bogus", "top:0", "top:1.5", "top:x", "drop:", "nat+nat",
-                  "qsgd:0", "randk:0", "sign+nat", "rank:0", "rank:-0.1"] {
+                  "qsgd:0", "randk:0", "sign+nat", "rank:0", "rank:-0.1",
+                  "bf16+nat", "bf16:2"] {
             assert!(CompSpec::parse(s).is_err(), "{s} should fail");
         }
         // legacy quirk preserved: "id+nat" degrades to Natural

@@ -326,6 +326,10 @@ impl RunSpec {
             fault: self.fault,
             fault_plan: None,
             start_step: 0,
+            // bf16 board snapshots are a bench/test deployment knob for
+            // now; CLI wiring is a ROADMAP follow-up (adding it here would
+            // change the lossless TrainConfig round-trip surface)
+            snap_bf16: false,
         }
     }
 

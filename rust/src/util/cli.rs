@@ -3,12 +3,16 @@
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments. Typed getters with defaults; unknown-flag detection.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Flags given with no value (`--resume`, or a value-taking flag left
+    /// dangling as the last argument). Numeric getters on these return the
+    /// usage error "expects a value" instead of trying to parse `"true"`.
+    bare: BTreeSet<String>,
     seen: std::cell::RefCell<Vec<String>>,
 }
 
@@ -17,10 +21,12 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
+        let mut bare = BTreeSet::new();
         let mut it = iter.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
+                    bare.remove(k);
                     flags.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
@@ -28,15 +34,17 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
+                    bare.remove(stripped);
                     flags.insert(stripped.to_string(), v);
                 } else {
+                    bare.insert(stripped.to_string());
                     flags.insert(stripped.to_string(), "true".to_string());
                 }
             } else {
                 positional.push(arg);
             }
         }
-        Args { positional, flags, seen: Default::default() }
+        Args { positional, flags, bare, seen: Default::default() }
     }
 
     pub fn from_env() -> Self {
@@ -62,28 +70,31 @@ impl Args {
         self.flags.get(key).cloned()
     }
 
-    pub fn usize(&self, key: &str, default: usize) -> usize {
+    /// Shared typed-getter core: missing flag → default; a bare flag
+    /// (`efmuon train --lr`, value-taking flag as last argument) or an
+    /// unparsable value → the clean usage `Err` the entry points print,
+    /// never a panic.
+    fn numeric<T: std::str::FromStr>(&self, key: &str, default: T, kind: &str) -> Result<T, String> {
         self.note(key);
-        self.flags
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(_) if self.bare.contains(key) => {
+                Err(format!("--{key} expects {kind}, but no value was given"))
+            }
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects {kind}, got {v:?}")),
+        }
     }
 
-    pub fn u64(&self, key: &str, default: u64) -> u64 {
-        self.note(key);
-        self.flags
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.numeric(key, default, "an integer")
     }
 
-    pub fn f64(&self, key: &str, default: f64) -> f64 {
-        self.note(key);
-        self.flags
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.numeric(key, default, "an integer")
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.numeric(key, default, "a number")
     }
 
     pub fn bool(&self, key: &str, default: bool) -> bool {
@@ -118,11 +129,11 @@ mod tests {
     fn parse_forms() {
         let a = args("train --steps 100 --lr=0.05 --verbose --name run-1 pos1");
         assert_eq!(a.positional, vec!["train", "pos1"]);
-        assert_eq!(a.usize("steps", 0), 100);
-        assert_eq!(a.f64("lr", 0.0), 0.05);
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 0.05);
         assert!(a.bool("verbose", false));
         assert_eq!(a.str("name", ""), "run-1");
-        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
     }
 
     #[test]
@@ -130,5 +141,25 @@ mod tests {
         let a = args("--steps 10 --typo 3");
         let _ = a.usize("steps", 0);
         assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn dangling_value_flag_is_a_clean_error() {
+        // regression: `efmuon train --lr` stored "true" for --lr and the
+        // numeric getter panicked trying to parse it; it must surface the
+        // usage error the entry points print instead
+        let a = args("train --lr");
+        let err = a.f64("lr", 0.0).unwrap_err();
+        assert!(err.contains("--lr") && err.contains("no value"), "{err}");
+        // a later occurrence with a value rehabilitates the flag
+        let a = args("--seed --seed 9");
+        assert_eq!(a.u64("seed", 0).unwrap(), 9);
+        // unparsable values are clean errors too, naming flag and value
+        let a = args("--steps banana");
+        let err = a.usize("steps", 0).unwrap_err();
+        assert!(err.contains("--steps") && err.contains("banana"), "{err}");
+        // boolean flags still read bare forms
+        let a = args("--resume");
+        assert!(a.bool("resume", false));
     }
 }

@@ -17,13 +17,16 @@ pub fn std(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median (copies + sorts). NaN samples sort to the high end under
+/// `total_cmp` instead of aborting the run — a single poisoned timing
+/// sample must not panic the bench harness (DESIGN.md §Non-finite values
+/// policy).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -69,6 +72,17 @@ pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn median_survives_nan_samples() {
+        // regression: partial_cmp().unwrap() aborted on the first NaN pair
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        // NaN sorts last under total_cmp: [1, 2, 3, NaN] -> 0.5*(2+3)
+        assert_eq!(median(&xs), 2.5);
+        assert!(median(&[f64::NAN]).is_nan());
+        // mad: median [1, 1, NaN] = 1, deviations [0, 0, NaN] -> median 0
+        assert_eq!(mad(&[1.0, f64::NAN, 1.0]), 0.0);
+    }
 
     #[test]
     fn basic_stats() {

@@ -62,7 +62,8 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
-/// Run `f` with warmup then `iters` timed repetitions; report median/MAD.
+/// Run `f` with warmup then `iters` timed repetitions; report median/MAD
+/// over the outlier-trimmed samples (see [`summarize`]).
 pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
     for _ in 0..warmup {
         f();
@@ -73,12 +74,29 @@ pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) ->
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
+    summarize(name, &samples)
+}
+
+/// Summarize raw timing samples: samples beyond `median + 3·MAD` —
+/// scheduler hiccups (preemption, page faults, turbo transitions), not the
+/// code under test — are discarded before the median/MAD are computed, so
+/// the reported cost describes the steady state. `min_s` stays the raw
+/// minimum and `iters` the raw sample count. When the MAD is 0 (over half
+/// the samples tie) nothing is trimmed.
+pub fn summarize(name: &str, samples: &[f64]) -> BenchResult {
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let med = stats::median(samples);
+    let mad = stats::mad(samples);
+    let kept: Vec<f64> = if mad > 0.0 {
+        samples.iter().cloned().filter(|&s| s <= med + 3.0 * mad).collect()
+    } else {
+        samples.to_vec()
+    };
     BenchResult {
         name: name.to_string(),
-        iters,
-        median_s: stats::median(&samples),
-        mad_s: stats::mad(&samples),
+        iters: samples.len(),
+        median_s: stats::median(&kept),
+        mad_s: stats::mad(&kept),
         min_s: min,
     }
 }
@@ -95,6 +113,22 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.median_s >= 0.0);
         assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn summarize_trims_scheduler_hiccups() {
+        // one 50x outlier among tight samples must not drag the MAD; the
+        // raw minimum and sample count survive untouched
+        let samples = [1.0, 1.1, 0.9, 1.05, 0.95, 50.0];
+        let r = summarize("trim", &samples);
+        assert_eq!(r.iters, 6);
+        assert_eq!(r.min_s, 0.9);
+        assert!(r.median_s < 1.2, "outlier excluded from the median: {}", r.median_s);
+        assert!(r.mad_s < 0.2, "outlier excluded from the MAD: {}", r.mad_s);
+        // all-equal samples: MAD 0, nothing trimmed
+        let r = summarize("flat", &[2.0, 2.0, 2.0]);
+        assert_eq!(r.median_s, 2.0);
+        assert_eq!(r.mad_s, 0.0);
     }
 
     #[test]

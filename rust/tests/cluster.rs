@@ -106,6 +106,16 @@ fn spawn_cluster(
     workers: usize,
     mode: RoundMode,
 ) -> anyhow::Result<(Cluster, GradService)> {
+    spawn_cluster_ex(obj, shards, workers, mode, false)
+}
+
+fn spawn_cluster_ex(
+    obj: Box<dyn Objective>,
+    shards: usize,
+    workers: usize,
+    mode: RoundMode,
+    snap_bf16: bool,
+) -> anyhow::Result<(Cluster, GradService)> {
     let x0 = obj.init(&mut Rng::new(7));
     let n_layers = obj.layer_shapes().len();
     let svc = GradService::spawn_objective(obj, 7);
@@ -127,6 +137,7 @@ fn spawn_cluster(
             fault: FaultPolicy::off(),
             fault_plan: None,
             start_step: 0,
+            snap_bf16,
         },
     )?;
     Ok((cluster, svc))
@@ -274,6 +285,47 @@ fn snapshot_cache_zero_alloc_steady_state() {
     assert_eq!(cache.assembled(), 30, "one assembly per round");
     assert_eq!(cache.reused(), 30, "the second worker reuses every round");
     assert_eq!(cache.bytes_assembled(), 30 * model_bytes);
+}
+
+/// The bf16 parameter board (ISSUE-7 tentpole): sealing and assembling
+/// cross-shard snapshots at half width must halve the board-path byte
+/// meters exactly — and on a layer-separable stack, where a shard's own
+/// gradient and loss never read the foreign layers, the cast must leave
+/// the whole trajectory bit-for-bit identical to the f32 board. (With
+/// `snap_bf16` off nothing in this path changes, which every other test in
+/// this file — all running bf16-off — pins.)
+#[test]
+fn bf16_board_halves_snapshot_traffic_and_keeps_separable_trajectories() {
+    let run = |bf16: bool| {
+        let (mut cluster, _svc) =
+            spawn_cluster_ex(three_layer_stack(2, 940), 2, 2, RoundMode::Sync, bf16).unwrap();
+        for _ in 0..20 {
+            cluster.round().unwrap();
+        }
+        let m = cluster.meter();
+        let t = m.totals();
+        let params = cluster.params().unwrap();
+        let eval = cluster.eval().unwrap();
+        (params, eval, t, m.root_bytes_cloned)
+    };
+    let (p32, e32, t32, seal32) = run(false);
+    let (p16, e16, t16, seal16) = run(true);
+    for (li, (a, b)) in p32.iter().zip(&p16).enumerate() {
+        let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "layer {li}: bf16 board must not perturb a separable trajectory");
+    }
+    assert_eq!(e32.to_bits(), e16.to_bits(), "eval loss must match bitwise");
+    assert!(t32.snap_bytes_shipped > 0 && seal32 > 0, "the f32 run must meter traffic");
+    assert_eq!(
+        2 * t16.snap_bytes_shipped,
+        t32.snap_bytes_shipped,
+        "snapshot assembly ships exactly half the bytes"
+    );
+    assert_eq!(2 * seal16, seal32, "epoch seals write exactly half the bytes");
+    // the protocol wire itself is untouched — only the board path shrinks
+    assert_eq!(t16.w2s_per_worker, t32.w2s_per_worker);
+    assert_eq!(t16.s2w_total, t32.s2w_total);
 }
 
 /// Shard-local loss telemetry: over a layer-separable stack the per-shard

@@ -40,6 +40,7 @@ const ALL_SPECS: &[&str] = &[
     "qsgd:127",
     "randk:0.2",
     "randk:1",
+    "bf16",
 ];
 
 /// Specs whose compression is the identity map (the codec round-trip is
@@ -128,6 +129,8 @@ fn det_ratio_bound(spec: &str, x: &Matrix) -> Option<f64> {
         "rank:0.3" | "rank:1" | "svdtop:1" | "svdtop:2" => Some(1.0 + 1e-3),
         // nearest-level rounding with 0 on the grid: per-entry error ≤ |v|
         "qsgd:1" | "qsgd:7" | "qsgd:127" => Some(1.0),
+        // RTNE cast: per-entry relative error ≤ 2⁻⁸
+        "bf16" => Some((1.0f64 / 256.0).powi(2) + 1e-9),
         _ => None,
     }
 }

@@ -22,6 +22,7 @@ const ALL_SPECS: &[&str] = &[
     "sign",
     "qsgd:4",
     "randk:0.25",
+    "bf16",
 ];
 
 /// E‖C(X)−X‖₂² ≤ (1−α)‖X‖₂² with the analytic α per compressor (where one

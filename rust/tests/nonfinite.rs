@@ -1,0 +1,131 @@
+//! Non-finite propagation suite (DESIGN.md §Non-finite values policy).
+//!
+//! A diverging run must *look* diverged: Inf/NaN entering the hot path has
+//! to propagate to the output (or map through a documented total function),
+//! never panic, and never be silently zeroed. These tests pin that contract
+//! across the layers that historically broke it — the blocked matmul's
+//! `aik == 0.0` skip branch masked `0·Inf`/`0·NaN`, and `partial_cmp`
+//! sorts panicked on the first NaN singular value.
+
+use efmuon::compress::quantize::{bf16_decode, bf16_encode};
+use efmuon::compress::{codec, parse_spec, Compressor};
+use efmuon::linalg::matmul::{matmul_into_reference, matmul_into_with_threads};
+use efmuon::linalg::ns::{newton_schulz, NS_STEPS};
+use efmuon::linalg::Matrix;
+use efmuon::lmo::{Lmo, LmoKind, SpectralEngine};
+use efmuon::util::rng::Rng;
+
+/// Sprinkle non-finite values into an otherwise random matrix.
+fn poisoned(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::randn(rows, cols, 1.0, &mut rng);
+    let n = m.data.len();
+    m.data[0] = f32::INFINITY;
+    m.data[n / 3] = f32::NEG_INFINITY;
+    m.data[n / 2] = f32::NAN;
+    m.data[2 * n / 3] = -0.0;
+    m.data[n - 1] = 0.0;
+    m
+}
+
+/// The microkernel must agree with the scalar reference loop *bitwise* on
+/// non-finite inputs at every thread count: identical NaN payloads,
+/// identical signed zeros/infinities. This is the integration-scale twin of
+/// the unit test in `linalg/matmul.rs` — sized to cross the 256-wide column
+/// block so the packed edge/interior tiles and the parallel row split all
+/// see the poison.
+#[test]
+fn blocked_matmul_matches_reference_bitwise_on_poison() {
+    let a = poisoned(67, 301, 41);
+    let b = poisoned(301, 259, 42);
+    let mut want = Matrix::zeros(67, 259);
+    matmul_into_reference(&a, &b, &mut want);
+    assert!(
+        want.data.iter().any(|v| v.is_nan()),
+        "poison must reach the output (0·Inf = NaN), not be skipped"
+    );
+    for threads in [1usize, 2, 3, 8] {
+        let mut got = Matrix::zeros(67, 259);
+        matmul_into_with_threads(&a, &b, &mut got, threads);
+        for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "threads={threads} entry {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+/// Newton–Schulz on a poisoned gradient: no panic, NaN reaches the output
+/// (the spectral norm estimate is NaN, so the whole iterate is), and the
+/// result is deterministic run-to-run.
+#[test]
+fn newton_schulz_propagates_nonfinite() {
+    let g = poisoned(24, 16, 43);
+    let o1 = newton_schulz(&g, NS_STEPS);
+    assert_eq!(o1.rows, 24);
+    assert_eq!(o1.cols, 16);
+    assert!(
+        o1.data.iter().any(|v| v.is_nan()),
+        "NaN input must surface in the NS output"
+    );
+    let o2 = newton_schulz(&g, NS_STEPS);
+    let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&o1), bits(&o2), "NS must stay deterministic under NaN");
+}
+
+/// The LMO step never panics on non-finite gradients, for both spectral
+/// engines. The ExactSvd path is the historical `partial_cmp().unwrap()`
+/// crash site (`linalg/svd.rs`): a NaN singular value used to abort the run
+/// instead of reporting a diverged step.
+#[test]
+fn lmo_step_survives_nonfinite_gradients() {
+    let g = poisoned(12, 9, 44);
+    let mut rng = Rng::new(7);
+    for engine in [SpectralEngine::Native, SpectralEngine::ExactSvd] {
+        let lmo = Lmo { kind: LmoKind::Spectral, ns_steps: NS_STEPS, engine };
+        let step = lmo.step(&g, 0.5, &mut rng);
+        assert_eq!((step.rows, step.cols), (12, 9), "{engine:?}");
+    }
+    // sign(·) is a *total* map: ±Inf carries a sign (→ ∓t) and NaN
+    // compares false both ways (→ 0, a feasible point) — documented in
+    // DESIGN.md §Non-finite values policy, not an accidental zeroing.
+    let lmo = Lmo::new(LmoKind::SignLInf);
+    let mut g2 = Matrix::zeros(1, 3);
+    g2.data.copy_from_slice(&[f32::INFINITY, f32::NEG_INFINITY, f32::NAN]);
+    let s = lmo.step(&g2, 0.5, &mut rng);
+    assert_eq!(s.data, vec![-0.5, 0.5, 0.0]);
+}
+
+/// bf16 is a pure truncation of the f32 exponent range, so the codec must
+/// round-trip Inf, NaN and signed zero exactly — through the raw
+/// encode/decode pair and through the full wire codec.
+#[test]
+fn bf16_codec_roundtrips_nonfinite() {
+    // raw pair: Inf/−Inf/−0.0 are exact, NaN stays NaN (payload may be
+    // quieted, but it must never become a number or an infinity)
+    assert_eq!(bf16_decode(bf16_encode(f32::INFINITY)), f32::INFINITY);
+    assert_eq!(bf16_decode(bf16_encode(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+    assert_eq!(
+        bf16_decode(bf16_encode(-0.0)).to_bits(),
+        (-0.0f32).to_bits(),
+        "signed zero must survive"
+    );
+    assert_eq!(bf16_decode(bf16_encode(1.5)), 1.5);
+
+    // full wire path: compress → encode → decode → widen
+    let mut x = Matrix::zeros(2, 3);
+    x.data
+        .copy_from_slice(&[f32::INFINITY, f32::NEG_INFINITY, f32::NAN, -0.0, 1.5, -2.25]);
+    let mut rng = Rng::new(9);
+    let mut c = parse_spec("bf16").unwrap();
+    let back = codec::decode(&codec::encode(&c.compress(&x, &mut rng))).unwrap().decode();
+    assert_eq!(back.data[0], f32::INFINITY);
+    assert_eq!(back.data[1], f32::NEG_INFINITY);
+    assert!(back.data[2].is_nan());
+    assert_eq!(back.data[3].to_bits(), (-0.0f32).to_bits());
+    assert_eq!(back.data[4], 1.5);
+    assert_eq!(back.data[5], -2.25);
+}

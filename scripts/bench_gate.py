@@ -12,6 +12,15 @@ regression means the zero-copy snapshot path started cloning again —
 deterministic, so any growth past the threshold (including any growth from
 an exact-zero baseline) fails.
 
+Two more gates ride along:
+
+- The single-thread matmul `microkernel` entries gate on their GFLOP/s
+  (throughput, so the regression direction is inverted: dropping below
+  baseline/threshold fails).
+- The `bf16 board` cluster entries must ship at most 0.55x the
+  parameter-board bytes of their matched f32 entries — checked within the
+  current results alone (the byte ratio is deterministic; no baseline).
+
 Bench numbers are machine-specific, so the baseline is self-priming and
 untracked: the first run on a machine copies the current results into the
 baseline file (established from the PR-1-era bench set); later runs gate
@@ -26,14 +35,55 @@ import os
 import shutil
 import sys
 
-# only the end-to-end round entries gate the build; kernel microbenches are
-# tracked but too noisy at --iters 5 to fail a verify run on
-GATED_SUBSTRINGS = ("round",)
+# the end-to-end round entries gate on median time; the matmul microkernel
+# entries gate on GFLOP/s. Other kernel microbenches are tracked but too
+# noisy at --iters 5 to fail a verify run on.
+GATED_SUBSTRINGS = ("round", "microkernel")
 
 # the hotpath bench always runs with fault injection off, so these counters
 # must be exactly zero in every round entry — checked against the current
 # results alone, no baseline needed
 FAULT_KEYS = ("stragglers", "respawns")
+
+# bf16 parameter-board entries pair with the f32 entry of the same name
+# minus this tag; their per-round board bytes must be <= 0.55x the mate's
+BF16_TAG = ", bf16 board"
+BF16_BYTES_KEY = "snap_bytes_shipped_per_round"
+BF16_MAX_RATIO = 0.55
+
+
+def bf16_problems(entries):
+    """Every bf16-board entry must ship at most BF16_MAX_RATIO of its
+    matched f32 entry's parameter-board bytes. The counters are exact
+    (width x params x rounds, no timing noise), so this is checked on the
+    current results alone: a missing mate, a missing counter, or a ratio
+    above the bound all fail the gate."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if BF16_TAG not in name:
+            continue
+        mate = name.replace(BF16_TAG, "")
+        if mate not in entries:
+            problems.append(f"bf16 entry {name!r} has no matched f32 entry {mate!r}")
+            continue
+        cur = e.get(BF16_BYTES_KEY)
+        base = entries[mate].get(BF16_BYTES_KEY)
+        if cur is None or base is None:
+            problems.append(
+                f"bf16 pair {name!r} / {mate!r} is missing {BF16_BYTES_KEY}"
+            )
+            continue
+        if base <= 0:
+            problems.append(
+                f"f32 entry {mate!r} ships 0 board bytes (nothing for bf16 to halve)"
+            )
+            continue
+        if cur > BF16_MAX_RATIO * base:
+            problems.append(
+                f"bf16 entry {name!r} ships {cur}B vs f32 {base}B "
+                f"({cur / base:.3f}x > {BF16_MAX_RATIO}x)"
+            )
+    return problems
 
 
 def fault_problems(entries):
@@ -160,6 +210,21 @@ def main():
         )
         return 1
 
+    # also baseline-independent: each bf16-board entry pairs with its f32
+    # mate inside the same results file, so the 0.55x bytes bound holds (or
+    # fails) on the very first run too
+    halved = bf16_problems(current)
+    if halved:
+        for p in halved:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            "bench gate: bf16 board entries must ship <= "
+            f"{BF16_MAX_RATIO}x the matched f32 entry's board bytes; see "
+            "DESIGN.md §bf16 snapshot wire format",
+            file=sys.stderr,
+        )
+        return 1
+
     try:
         baseline, baseline_problems = load_entries(args.baseline)
     except OSError:
@@ -205,6 +270,34 @@ def main():
     failed = []
     gained_counters = {}
     for name in sorted(gated):
+        if "microkernel" in name:
+            # throughput gate: GFLOP/s dropping below baseline/threshold
+            # fails (the regression direction is inverted vs. time)
+            key = "gflops"
+            base_g = baseline[name].get(key)
+            cur_g = current[name].get(key)
+            if base_g is None or base_g <= 0:
+                if cur_g is not None:
+                    # baseline predates the counter: adopt for the next run
+                    gained_counters.setdefault(name, {})[key] = cur_g
+                continue
+            if cur_g is None or cur_g <= 0:
+                print(
+                    f"  REGRESSED       ?x  {name} [{key}]  "
+                    f"(counter disappeared from current results)"
+                )
+                failed.append(f"{name} [{key}]")
+                continue
+            gratio = base_g / cur_g
+            verdict = "OK" if gratio <= args.threshold else "REGRESSED"
+            print(
+                f"  {verdict:>9}  {gratio:6.3f}x  {name} [{key}]  "
+                f"({base_g:.2f} -> {cur_g:.2f} GFLOP/s)"
+            )
+            if gratio > args.threshold:
+                failed.append(f"{name} [{key}]")
+            continue
+
         cur = current[name]["median_s"]
         base = baseline[name]["median_s"]
         ratio = cur / base if base > 0 else float("inf")
@@ -255,7 +348,7 @@ def main():
             file=sys.stderr,
         )
         return 1
-    print(f"bench gate: OK ({len(gated)} round entries within {args.threshold:.2f}x)")
+    print(f"bench gate: OK ({len(gated)} gated entries within {args.threshold:.2f}x)")
     return 0
 
 

@@ -51,6 +51,24 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== tier-2: fault-injection scenarios (release) =="
   cargo test --release -q --test scenario fault
 
+  # the microkernel's bit-identity contract and the non-finite propagation
+  # policy rerun by name in release: optimized codegen (vectorization, FMA
+  # contraction if it ever crept in) is exactly what could break bitwise
+  # agreement with the scalar reference, so the debug-mode pass isn't enough
+  echo "== tier-2: microkernel bit-identity (release) =="
+  cargo test --release -q --lib blocked_bitwise_equals_reference
+  cargo test --release -q --lib nonfinite_inputs_match_reference_bitwise
+  cargo test --release -q --lib matmul_at_propagates_nonfinite
+
+  echo "== tier-2: non-finite propagation suite (release) =="
+  cargo test --release -q --test nonfinite
+
+  # the bf16 parameter-board golden: bf16-off must stay bit-identical to
+  # f32 while shipping exactly half the board bytes
+  echo "== tier-2: bf16 board golden (release) =="
+  cargo test --release -q --test cluster \
+    bf16_board_halves_snapshot_traffic_and_keeps_separable_trajectories
+
   echo "== perf smoke: hotpath bench (--iters 5) =="
   cargo bench --bench hotpath -- --iters 5
   BENCH=../BENCH_hotpath.json
@@ -59,9 +77,11 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   cat "$BENCH"
   echo
 
-  echo "== tier-2: round-time + bytes-cloned regression gate =="
+  echo "== tier-2: round-time + bytes + GFLOP/s regression gate =="
   # gates cluster-round host memory traffic (bytes_cloned_per_round) along
-  # with median round times: the zero-copy gradient path must stay zero-copy
+  # with median round times, the matmul microkernel GFLOP/s (throughput
+  # regression >5% fails), and the bf16 board's wire bytes (each bf16 row
+  # must ship <= 0.55x its matched f32 row)
   python3 "$SCRIPT_DIR/bench_gate.py" "$BENCH" "$SCRIPT_DIR/../BENCH_baseline.json" \
     --threshold "${EFMUON_BENCH_TOLERANCE:-1.05}"
 fi
