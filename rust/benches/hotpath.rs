@@ -22,8 +22,10 @@ use efmuon::linalg::Matrix;
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
+use efmuon::results::{Record, Store};
 use efmuon::runtime::ModelRuntime;
 use efmuon::spec::CompSpec;
+use efmuon::trace::{TraceAgg, Tracer};
 use efmuon::util::cli::Args;
 use efmuon::util::json::{Json, JsonObj};
 use efmuon::util::rng::Rng;
@@ -68,6 +70,9 @@ fn main() -> anyhow::Result<()> {
     let iters = args.usize("iters", 30).unwrap();
     let mut rng = Rng::new(0);
     let mut entries: Vec<Entry> = Vec::new();
+    // per-phase counts from the traced round entry, appended to the
+    // results store alongside the timing summaries
+    let mut trace_agg: Option<TraceAgg> = None;
     let cores = efmuon::util::threads::num_threads();
     println!("hot-path bench: {cores} thread(s) available, {iters} iters\n");
 
@@ -197,6 +202,7 @@ fn main() -> anyhow::Result<()> {
                 fault: FaultPolicy::off(),
                 fault_plan: None,
                 start_step: 0,
+                tracer: Tracer::Noop,
             },
         )?;
         let r = bench_fn("coordinator round (4 workers, d=4096)", 3, iters, || {
@@ -208,6 +214,56 @@ fn main() -> anyhow::Result<()> {
         let e = entries.last_mut().unwrap();
         e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
         e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+    }
+
+    // ---- the same round with a live tracer, ring drained per round like
+    //      the train loop does. bench_gate.py pairs this entry with its
+    //      untraced twin above (", traced" suffix) and fails the run if
+    //      stamping costs more than the threshold (acceptance: <5%).
+    {
+        let q = Quadratics::new(4, 4096, 0.5, 0.1, &mut Rng::new(3));
+        let x0 = q.init(&mut Rng::new(3));
+        let svc = GradService::spawn_objective(Box::new(q), 3);
+        let (tracer, ring) = Tracer::ring(efmuon::train::TRACE_RING_CAP);
+        let mut coord = Coordinator::spawn(
+            x0,
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
+            svc.handle(),
+            CoordinatorCfg {
+                n_workers: 4,
+                worker_comp: CompSpec::Top { frac: 0.1, nat: false },
+                server_comp: CompSpec::Id,
+                beta: 0.9,
+                schedule: Schedule::constant(0.01),
+                transport: TransportMode::Encoded,
+                round_mode: RoundMode::Sync,
+                seed: 3,
+                use_ns_artifact: false,
+                fault: FaultPolicy::off(),
+                fault_plan: None,
+                start_step: 0,
+                tracer,
+            },
+        )?;
+        let mut agg = TraceAgg::default();
+        let r = bench_fn("coordinator round (4 workers, d=4096), traced", 3, iters, || {
+            coord.round().unwrap();
+            agg.absorb(&ring.drain());
+        });
+        push(&mut entries, r, None);
+        agg.absorb(&ring.drain());
+        agg.dropped = ring.dropped();
+        trace_agg = Some(agg);
+        let n = entries.len();
+        let base = entries
+            .iter()
+            .find(|e| e.result.name == "coordinator round (4 workers, d=4096)")
+            .map(|e| e.result.median_s)
+            .unwrap_or(f64::NAN);
+        println!(
+            "  -> traced round overhead: {:+.2}% over untraced",
+            (entries[n - 1].result.median_s / base - 1.0) * 100.0
+        );
     }
 
     // ---- bidirectional compression + async pipelining: the same synthetic
@@ -236,6 +292,7 @@ fn main() -> anyhow::Result<()> {
                     fault: FaultPolicy::off(),
                     fault_plan: None,
                     start_step: 0,
+                    tracer: Tracer::Noop,
                 },
             )?;
             let r = bench_fn(name, 3, iters, || {
@@ -317,6 +374,7 @@ fn main() -> anyhow::Result<()> {
                 fault: FaultPolicy::off(),
                 fault_plan: None,
                 start_step: 0,
+                tracer: Tracer::Noop,
             },
         )?;
         let r_dist = bench_fn("ef21 round, threaded coordinator (4 workers, 192x192)", 2, cfg_iters, || {
@@ -376,6 +434,7 @@ fn main() -> anyhow::Result<()> {
                     fault_plan: None,
                     start_step: 0,
                     snap_bf16: bf16,
+                    tracer: Tracer::Noop,
                 },
             )?;
             let name = if bf16 {
@@ -485,6 +544,20 @@ fn main() -> anyhow::Result<()> {
         .build();
     std::fs::write(out_path, doc.to_string())?;
     println!("\nwrote {out_path} ({} entries)", entries.len());
+
+    // ---- append this run to the experiment history (results/results.jsonl
+    //      at the repo root, rendered by `efmuon results` and trend-gated by
+    //      `bench_gate.py --results`)
+    let mut rec = Record::new("hotpath");
+    for e in &entries {
+        rec = rec.timing(&e.result);
+    }
+    if let Some(agg) = &trace_agg {
+        rec = rec.trace(agg);
+    }
+    let store = Store::open_default();
+    store.append(&rec)?;
+    println!("appended run to {}", store.path().display());
 
     Ok(())
 }

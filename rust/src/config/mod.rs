@@ -78,6 +78,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Optional JSONL metrics path.
     pub log_path: Option<String>,
+    /// Optional round-phase trace JSONL path (`--trace PATH`); `None`
+    /// keeps the zero-cost `Tracer::Noop` path.
+    pub trace_path: Option<String>,
     /// Straggler / quorum / respawn policy spec: `off`, or a comma list of
     /// `deadline:MS,quorum:F,respawns:N,backoff:MS` (see
     /// [`crate::dist::fault::FaultPolicy`]).
@@ -116,6 +119,7 @@ impl Default for TrainConfig {
             full_codec: false,
             seed: 0,
             log_path: None,
+            trace_path: None,
             fault_policy: "off".into(),
             checkpoint_every: 0,
             checkpoint_dir: None,
@@ -152,6 +156,9 @@ impl TrainConfig {
         self.seed = a.u64("seed", self.seed)?;
         if let Some(p) = a.opt_str("log") {
             self.log_path = Some(p);
+        }
+        if let Some(p) = a.opt_str("trace") {
+            self.trace_path = Some(p);
         }
         self.fault_policy = a.str("fault-policy", &self.fault_policy);
         self.checkpoint_every = a.usize("checkpoint-every", self.checkpoint_every)?;
@@ -192,6 +199,7 @@ impl TrainConfig {
                 "full_codec" => c.full_codec = v.as_bool().ok_or("full_codec: bool")?,
                 "seed" => c.seed = v.as_f64().ok_or("seed: number")? as u64,
                 "log_path" => c.log_path = v.as_str().map(|s| s.to_string()),
+                "trace_path" => c.trace_path = v.as_str().map(|s| s.to_string()),
                 "fault_policy" => {
                     c.fault_policy = v.as_str().ok_or("fault_policy: string")?.into()
                 }
@@ -257,21 +265,24 @@ mod tests {
     fn fault_and_checkpoint_keys_parse() {
         let c = TrainConfig::from_json(
             r#"{"fault_policy": "deadline:50,quorum:0.75,respawns:2,backoff:5",
-                "checkpoint_every": 10, "checkpoint_dir": "/tmp/ck", "resume": true}"#,
+                "checkpoint_every": 10, "checkpoint_dir": "/tmp/ck", "resume": true,
+                "trace_path": "/tmp/trace.jsonl"}"#,
         )
         .unwrap();
         assert_eq!(c.fault_policy, "deadline:50,quorum:0.75,respawns:2,backoff:5");
+        assert_eq!(c.trace_path.as_deref(), Some("/tmp/trace.jsonl"));
         assert_eq!(c.checkpoint_every, 10);
         assert_eq!(c.checkpoint_dir.as_deref(), Some("/tmp/ck"));
         assert!(c.resume);
         let a = Args::parse(
             ["--fault-policy", "deadline:25", "--checkpoint-every", "5",
-             "--checkpoint-dir", "out/ck", "--resume"]
+             "--checkpoint-dir", "out/ck", "--resume", "--trace", "out/trace.jsonl"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let c = TrainConfig::default().override_from_args(&a).unwrap();
         assert_eq!(c.fault_policy, "deadline:25");
+        assert_eq!(c.trace_path.as_deref(), Some("out/trace.jsonl"));
         assert_eq!(c.checkpoint_every, 5);
         assert_eq!(c.checkpoint_dir.as_deref(), Some("out/ck"));
         assert!(c.resume);

@@ -51,6 +51,7 @@ use crate::compress::quantize::{bf16_decode, bf16_encode};
 use crate::linalg::matrix::{Layers, Matrix};
 use crate::opt::{LayerGeometry, Schedule};
 use crate::spec::CompSpec;
+use crate::trace::{Phase, Tracer};
 use crate::util::json::{Json, JsonObj};
 
 use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
@@ -421,6 +422,10 @@ pub struct ClusterCfg {
     /// identical trajectories) for layer-separable objectives, a lossy
     /// approximation for coupled ones; off by default.
     pub snap_bf16: bool,
+    /// Round-phase tracer ([`Tracer::Noop`] = off, the bitwise golden
+    /// anchor). Each shard coordinator gets a shard-tagged clone; the root
+    /// reducer stamps [`Phase::BoardSeal`] under its own tag.
+    pub tracer: Tracer,
 }
 
 impl ClusterCfg {
@@ -438,6 +443,7 @@ impl ClusterCfg {
             fault: self.fault,
             fault_plan: self.fault_plan.clone(),
             start_step: self.start_step,
+            tracer: Tracer::Noop,
         }
     }
 }
@@ -601,6 +607,8 @@ pub struct Cluster {
     step: usize,
     /// First fatal error, latched (same contract as [`Coordinator`]).
     failed: Option<String>,
+    /// The root reducer's own stamp handle (board seals).
+    tracer: Tracer,
 }
 
 impl Cluster {
@@ -636,10 +644,13 @@ impl Cluster {
         for (s, ids) in partition.iter().enumerate() {
             let x0_s: Layers = ids.iter().map(|&i| x0[i].clone()).collect();
             let geom_s: Vec<LayerGeometry> = ids.iter().map(|&i| geometry[i]).collect();
-            let cache = Arc::new(SnapCache::new(cfg.round_mode.lookahead() + 3));
+            let cache = Arc::new(
+                SnapCache::new(cfg.round_mode.lookahead() + 3).traced(cfg.tracer.for_shard(s)),
+            );
             caches.push(cache.clone());
             let shard_handle = handle.for_shard(board.clone(), ids.clone(), cache);
-            let ccfg = cfg.coordinator_cfg();
+            let mut ccfg = cfg.coordinator_cfg();
+            ccfg.tracer = cfg.tracer.for_shard(s);
             let (tx, rx) = channel::<ToShard>();
             let rtx = reply_tx.clone();
             // a lone shard's board is never read (the sharded handle's
@@ -681,6 +692,7 @@ impl Cluster {
             joins,
             step: cfg.start_step,
             failed: None,
+            tracer: cfg.tracer,
         })
     }
 
@@ -743,6 +755,7 @@ impl Cluster {
         // would be pure overhead on the golden-matched deployment.
         if n > 1 {
             self.seal_bytes += self.board.seal_from(self.step + 1, &self.shift_full);
+            self.tracer.stamp(Phase::BoardSeal, self.step, None);
         }
         let per_shard: Vec<RoundStats> = slots.into_iter().map(|s| s.expect("filled")).collect();
         let stats = rollup(self.step, per_shard, self.sum_losses);

@@ -62,6 +62,7 @@ use crate::linalg::matrix::{layers, Layers};
 use crate::opt::ef21::{ServerState, WorkerState};
 use crate::opt::{LayerGeometry, Schedule};
 use crate::spec::CompSpec;
+use crate::trace::{Phase, Tracer};
 
 use super::comm::{FromWorker, ToWorker, Wire};
 use super::fault::{FaultKind, FaultPlan, FaultPolicy};
@@ -109,6 +110,10 @@ pub struct CoordinatorCfg {
     /// from a checkpoint, so the schedule position is restored along with
     /// the parameters.
     pub start_step: usize,
+    /// Round-phase event stamping. [`Tracer::Noop`] (the default on every
+    /// spec-built cfg) reads no clock and takes no lock — the tracer-off
+    /// deployment is bit-identical to one without the field.
+    pub tracer: Tracer,
 }
 
 /// Telemetry of one [`Coordinator::round`] call.
@@ -240,6 +245,7 @@ pub struct Coordinator {
     /// unwind, so without the latch a retry could block on a reply that
     /// never comes).
     failed: Option<String>,
+    tracer: Tracer,
 }
 
 impl Coordinator {
@@ -325,6 +331,7 @@ impl Coordinator {
             respawning: HashSet::new(),
             owed: HashSet::new(),
             failed: None,
+            tracer: cfg.tracer,
         })
     }
 
@@ -371,6 +378,7 @@ impl Coordinator {
             }
         }
         self.meter.record_broadcast(s2w_bytes as u64);
+        self.tracer.stamp(Phase::Broadcast, self.step, None);
         let n = self.to_workers.len();
         self.pending.push_back(InFlight {
             step: self.step,
@@ -527,6 +535,7 @@ impl Coordinator {
         let front_step = p.step;
         for &id in &newly {
             self.owed.insert((front_step, id));
+            self.tracer.stamp(Phase::StragglerSkip, front_step, Some(id));
         }
         self.meter.record_stragglers(newly.len() as u64);
     }
@@ -546,6 +555,7 @@ impl Coordinator {
                         let msgs = uplink.unpack().map_err(anyhow::Error::msg)?;
                         self.server.absorb_late(&msgs);
                         self.meter.record_late_uplink(bytes as u64);
+                        self.tracer.stamp(Phase::LateFold, step, Some(id));
                         return Ok(());
                     }
                     return Err(anyhow!(
@@ -565,6 +575,7 @@ impl Coordinator {
                 }
                 p.slots[id] = Slot::Filled(loss, bytes, uplink);
                 p.filled += 1;
+                self.tracer.stamp(Phase::Uplink, step, Some(id));
                 Ok(())
             }
             FromWorker::Failed { id, err } => self.handle_failure(id, &err),
@@ -618,6 +629,7 @@ impl Coordinator {
         self.joins.push(join);
         self.respawning.insert(id);
         self.meter.record_respawn();
+        self.tracer.stamp(Phase::Respawn, self.step, Some(id));
         Ok(())
     }
 
@@ -649,6 +661,7 @@ impl Coordinator {
             }
             self.server.absorb(&all_msgs);
             self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
+            self.tracer.stamp(Phase::Absorb, p.step, None);
             Ok(Absorbed {
                 step: p.step,
                 radius: p.radius,
@@ -677,6 +690,7 @@ impl Coordinator {
             self.server.absorb_quorum(&quorum_msgs);
             self.meter.record_uplinks(w2s_per_worker as u64, w2s_all);
             self.meter.record_partial_round();
+            self.tracer.stamp(Phase::Quorum, p.step, None);
             Ok(Absorbed {
                 step: p.step,
                 radius: p.radius,

@@ -428,6 +428,47 @@ mod tests {
     }
 
     #[test]
+    fn meter_snapshot_roundtrip_covers_every_field() {
+        // every counter nonzero and pairwise distinct, so a swapped or
+        // dropped key in to_json/from_json cannot cancel out
+        let snap = MeterSnapshot {
+            w2s_per_worker: 101,
+            w2s_all: 202,
+            s2w_total: 303,
+            rounds_issued: 404,
+            rounds_absorbed: 405,
+            snap_assembled: 506,
+            snap_reused: 607,
+            bytes_cloned: 708,
+            snap_bytes_shipped: 809,
+            stragglers: 910,
+            respawns: 911,
+            partial_rounds: 912,
+        };
+        let j = snap.to_json();
+        let line = j.to_line();
+        for key in [
+            "w2s_per_worker",
+            "w2s_all",
+            "s2w_total",
+            "rounds_issued",
+            "rounds_absorbed",
+            "snap_assembled",
+            "snap_reused",
+            "bytes_cloned",
+            "snap_bytes_shipped",
+            "stragglers",
+            "respawns",
+            "partial_rounds",
+        ] {
+            assert!(line.contains(key), "serialized snapshot must carry {key}: {line}");
+        }
+        // text → Json → struct reproduces every field bit for bit
+        let back = MeterSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
     fn meter_fault_counters_roundtrip_and_default_zero() {
         let m = Meter::new();
         m.record_stragglers(2);

@@ -29,6 +29,7 @@ use anyhow::{anyhow, Result};
 
 use crate::funcs::Objective;
 use crate::linalg::matrix::{Layers, Matrix};
+use crate::trace::{Phase, Tracer};
 use crate::util::rng::Rng;
 
 use super::cluster::ParamBoard;
@@ -84,6 +85,10 @@ pub struct SnapCache {
     bytes_assembled: AtomicU64,
     bytes_shipped: AtomicU64,
     fresh: AtomicU64,
+    /// Stamps [`Phase::SnapAssemble`] on every from-scratch assembly
+    /// (`Tracer::Noop` by default — cache hits and the off path stamp
+    /// nothing).
+    tracer: Tracer,
 }
 
 struct SnapCacheInner {
@@ -103,7 +108,15 @@ impl SnapCache {
             bytes_assembled: AtomicU64::new(0),
             bytes_shipped: AtomicU64::new(0),
             fresh: AtomicU64::new(0),
+            tracer: Tracer::Noop,
         }
+    }
+
+    /// The same cache with a live tracer installed (builder form so the
+    /// `SnapCache::new(keep)` construction sites stay unchanged).
+    pub fn traced(mut self, tracer: Tracer) -> SnapCache {
+        self.tracer = tracer;
+        self
     }
 
     /// Rounds assembled from scratch (exactly one per (shard, round)).
@@ -196,6 +209,7 @@ impl SnapCache {
         self.bytes_assembled.fetch_add(bytes as u64, Ordering::Relaxed);
         self.bytes_shipped.fetch_add(shipped, Ordering::Relaxed);
         self.assembled.fetch_add(1, Ordering::Relaxed);
+        self.tracer.stamp(Phase::SnapAssemble, step, None);
         let arc = Arc::new(full);
         debug_assert!(inner.snaps.back().map(|(s, _)| *s < step).unwrap_or(true));
         inner.snaps.push_back((step, arc.clone()));

@@ -8,13 +8,14 @@ use crate::compress::Message;
 use crate::config::TrainConfig;
 use crate::dist::cluster::Cluster;
 use crate::dist::service::GradService;
+use crate::dist::MeterSnapshot;
 use crate::funcs::{CoshObjective, MatrixQuadratic, Objective, Quadratics, Stacked};
 use crate::linalg::matrix::Matrix;
 use crate::lmo::LmoKind;
 use crate::metrics::render_table;
 use crate::opt::ef21::Ef21MuonSeq;
 use crate::opt::{LayerGeometry, Schedule, ScheduleKind};
-use crate::spec::{CompSpec, RunBuilder};
+use crate::spec::{CompSpec, RunBuilder, RunSpec};
 use crate::train::{spawn_seq_driver, train, Driver, TrainReport};
 use crate::util::rng::Rng;
 use crate::util::stats::linfit;
@@ -117,6 +118,9 @@ pub struct S2wRow {
     /// Total w2s bytes per worker over the run.
     pub w2s_bytes: u64,
     pub final_loss: f64,
+    /// The typed spec this row ran (canonical JSON goes to the results
+    /// store so a stored row is reproducible from its record alone).
+    pub spec: RunSpec,
 }
 
 /// EF21-P server-to-worker sweep on the objective backend (offline, no
@@ -152,6 +156,7 @@ pub fn s2w_savings(server_specs: &[CompSpec], rounds: usize, seed: u64) -> Resul
             w2s_bytes: drv.w2s(),
             // full-precision, like the pre-driver sweep always reported
             final_loss: drv.loss_f64(),
+            spec: run,
         });
     }
     Ok(rows)
@@ -203,6 +208,10 @@ pub struct ShardScalingRow {
     pub w2s_bytes: u64,
     pub w2s_all_bytes: u64,
     pub s2w_bytes: u64,
+    /// Full rolled-up meter (every counter, not just the byte totals).
+    pub meter: MeterSnapshot,
+    /// The typed spec this row ran.
+    pub spec: RunSpec,
 }
 
 /// Shard-scaling sweep on a layer-separable synthetic workload: a
@@ -281,6 +290,8 @@ pub fn shard_scaling_with(
             w2s_bytes: m.w2s(),
             w2s_all_bytes: m.w2s_all(),
             s2w_bytes: m.s2w(),
+            meter: m.totals(),
+            spec: run,
         });
     }
     Ok(rows)

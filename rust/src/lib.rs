@@ -32,6 +32,8 @@ pub mod spec;
 pub mod train;
 pub mod config;
 pub mod metrics;
+pub mod trace;
+pub mod results;
 pub mod exp;
 
 pub use linalg::matrix::Matrix;

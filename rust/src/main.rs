@@ -12,6 +12,9 @@
 //!   shards           multi-coordinator layer sharding: scaling sweep
 //!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
 //!   divergence       the §2 divergence demo (naive DCGD vs EF)
+//!   results          render the experiment history (list/status/table/
+//!                    dat/gnuplot over results/results.jsonl)
+//!   help             print the flag reference
 //!
 //! Every flag of `TrainConfig` is a `--flag value` override; see
 //! `efmuon help`.
@@ -22,6 +25,7 @@ use efmuon::config::TrainConfig;
 use efmuon::exp;
 use efmuon::metrics::render_table;
 use efmuon::model::Manifest;
+use efmuon::results;
 use efmuon::util::cli::Args;
 
 fn main() {
@@ -49,6 +53,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "shards" => cmd_shards(args),
         "fig1" | "fig2" => cmd_figures(args),
         "divergence" => cmd_divergence(args),
+        "results" => cmd_results(args),
         "help" | "--help" => {
             println!("{}", HELP);
             Ok(())
@@ -71,6 +76,7 @@ COMMANDS:
                       --lmo-hidden|--lmo-embed|--lmo-vector NORM
                       --fault-policy off|deadline:MS,quorum:F,respawns:R,backoff:MS
                       --checkpoint-every K --checkpoint-dir DIR --resume
+                      --trace out/trace.jsonl (round-phase span events)
   config       resolve (--config/--preset/flags), validate eagerly with
                field-path errors, and print the canonical JSON spec — its
                output is itself a valid --config file (lossless round trip)
@@ -86,6 +92,14 @@ COMMANDS:
   fig1/fig2    Figures 1-2 — compressor sweep (loss vs tokens/bytes)
                flags: --steps K --target LOSS plus all train flags
   divergence   naive biased compression diverges; EF fixes it (paper §2)
+  results      render the experiment history appended by the sweeps and
+               `cargo bench --bench hotpath` (results/results.jsonl):
+                 results list                all experiment keys
+                 results status              latest record per key
+                 results table <key>         full per-run history
+                 results dat <key>           gnuplot-ready columns
+                 results gnuplot <key>       plotting script
+               (--store PATH overrides the store location)
 
 COMPRESSOR SPECS (both directions: --comp for w2s, --server-comp for s2w):
   id | nat | top:F | top:F+nat | rank:F | rank:F+nat | drop:P | damp:G
@@ -260,6 +274,17 @@ fn cmd_s2w(args: &Args) -> Result<()> {
     warn_unknown(args);
     let rows = exp::s2w_savings(exp::s2w_specs(), rounds, seed)?;
     println!("{}", exp::s2w_text(&rows));
+    let recs: Vec<results::Record> = rows
+        .iter()
+        .map(|r| {
+            results::Record::new("s2w").spec(&r.spec).meter(efmuon::dist::MeterSnapshot {
+                w2s_per_worker: r.w2s_bytes,
+                s2w_total: r.s2w_bytes,
+                ..Default::default()
+            })
+        })
+        .collect();
+    append_results(&recs);
     Ok(())
 }
 
@@ -278,6 +303,21 @@ fn cmd_shards(args: &Args) -> Result<()> {
         "\n(layer-separable workload: bytes and losses are invariant in the shard\n\
          count; `round ms` falling toward max-over-shards is the scaling win)"
     );
+    let recs: Vec<results::Record> = rows
+        .iter()
+        .map(|r| {
+            results::Record::new("shards").spec(&r.spec).meter(r.meter).timing(
+                &efmuon::util::timer::BenchResult {
+                    name: format!("cluster round ({} shard(s))", r.shards),
+                    iters: rounds,
+                    median_s: r.round_ms / 1e3,
+                    mad_s: 0.0,
+                    min_s: r.round_ms / 1e3,
+                },
+            )
+        })
+        .collect();
+    append_results(&recs);
     Ok(())
 }
 
@@ -319,4 +359,51 @@ fn cmd_divergence(args: &Args) -> Result<()> {
     warn_unknown(args);
     efmuon::exp::divergence::run_demo(steps, &mut std::io::stdout())?;
     Ok(())
+}
+
+/// `efmuon results {list,status,table,dat,gnuplot}`: render the experiment
+/// history the sweeps and the hotpath bench append to
+/// `results/results.jsonl` (see EXPERIMENTS.md §Results store).
+fn cmd_results(args: &Args) -> Result<()> {
+    let action = args.positional.get(1).cloned().unwrap_or_else(|| "list".into());
+    let store = match args.opt_str("store") {
+        Some(p) => results::Store::new(p),
+        None => results::Store::open_default(),
+    };
+    warn_unknown(args);
+    let recs = store.load().map_err(|e| anyhow!(e))?;
+    let key = || -> Result<&str> {
+        args.positional
+            .get(2)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("usage: efmuon results {action} <experiment>"))
+    };
+    match action.as_str() {
+        "list" => println!("{}", results::render_list(&recs)),
+        "status" => println!("{}", results::render_status(&recs)),
+        "table" => println!("{}", results::render_history(&recs, key()?)),
+        "dat" => print!("{}", results::render_dat(&recs, key()?)),
+        "gnuplot" => print!("{}", results::render_gnuplot(key()?)),
+        other => {
+            return Err(anyhow!(
+                "unknown results action {other:?}; try list | status | table | dat | gnuplot"
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// Best-effort history append: a read-only checkout must not break the
+/// sweep output, so store failures are warnings.
+fn append_results(recs: &[results::Record]) {
+    let store = results::Store::open_default();
+    for rec in recs {
+        if let Err(e) = store.append(rec) {
+            eprintln!("warning: could not append to {}: {e}", store.path().display());
+            return;
+        }
+    }
+    if !recs.is_empty() {
+        eprintln!("(appended {} record(s) to {})", recs.len(), store.path().display());
+    }
 }

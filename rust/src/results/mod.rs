@@ -1,0 +1,577 @@
+//! Append-only experiment results store + reporting (EXPERIMENTS.md
+//! §Results store).
+//!
+//! Every hotpath bench run and `exp::` sweep appends one [`Record`] —
+//! `(experiment key, commit, canonical RunSpec JSON, MeterSnapshot,
+//! timing summaries, trace aggregates)` — to a single JSONL file
+//! (`results/results.jsonl` at the repo root, which is gitignored). The
+//! `efmuon results {list,status,table,dat,gnuplot}` subcommands render the
+//! accumulated history, and `scripts/bench_gate.py --results` gates new
+//! timings against the stored best-ever instead of only the previous run.
+//!
+//! The store is deliberately dumb: append-only, one self-describing JSON
+//! object per line, no index, no schema migration — a record written by an
+//! older build stays readable because every field except `experiment` and
+//! `commit` is optional on read. Appends happen at the CLI/bench layer,
+//! never inside library functions, so `cargo test` writes nothing.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::dist::MeterSnapshot;
+use crate::spec::RunSpec;
+use crate::trace::TraceAgg;
+use crate::util::json::{Json, JsonObj};
+use crate::util::timer::BenchResult;
+
+// ---------------------------------------------------------------------------
+// Commit discovery (no subprocess: read .git directly)
+// ---------------------------------------------------------------------------
+
+/// The commit hash `HEAD` points at in the repository rooted at `root`,
+/// read straight from `.git` (loose ref, then `packed-refs`, then detached
+/// HEAD) — no `git` subprocess, so results stay attributable even in
+/// minimal containers.
+pub fn head_commit(root: &Path) -> Option<String> {
+    let git = root.join(".git");
+    let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    let reference = match head.strip_prefix("ref: ") {
+        None => return Some(head.to_string()), // detached HEAD: the hash itself
+        Some(r) => r.trim(),
+    };
+    if let Ok(hash) = std::fs::read_to_string(git.join(reference)) {
+        return Some(hash.trim().to_string());
+    }
+    // the ref may only exist packed (fresh clones, gc'd repos)
+    let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+    for line in packed.lines() {
+        if line.starts_with('#') || line.starts_with('^') {
+            continue;
+        }
+        if let Some((hash, name)) = line.split_once(' ') {
+            if name.trim() == reference {
+                return Some(hash.trim().to_string());
+            }
+        }
+    }
+    None
+}
+
+/// Walk up from the current directory to the repo root (the directory
+/// holding `ROADMAP.md` — benches run from `rust/`, the CLI from the
+/// root, tests from anywhere under it).
+pub fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    for _ in 0..6 {
+        if dir.join("ROADMAP.md").exists() || dir.join(".git").exists() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// One timing summary inside a record (the serializable face of
+/// [`BenchResult`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl From<&BenchResult> for Timing {
+    fn from(r: &BenchResult) -> Timing {
+        Timing {
+            name: r.name.clone(),
+            iters: r.iters,
+            median_s: r.median_s,
+            mad_s: r.mad_s,
+            min_s: r.min_s,
+        }
+    }
+}
+
+impl Timing {
+    fn to_obj(&self) -> JsonObj {
+        JsonObj::new()
+            .put("name", self.name.as_str())
+            .put("iters", self.iters)
+            .put("median_s", self.median_s)
+            .put("mad_s", self.mad_s)
+            .put("min_s", self.min_s)
+    }
+
+    fn from_json(j: &Json) -> Result<Timing, String> {
+        let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("timing: missing {k}"));
+        Ok(Timing {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("timing: missing name")?
+                .to_string(),
+            iters: j.get("iters").and_then(|v| v.as_usize()).unwrap_or(0),
+            median_s: num("median_s")?,
+            mad_s: num("mad_s").unwrap_or(0.0),
+            min_s: num("min_s").unwrap_or(f64::NAN),
+        })
+    }
+}
+
+/// One appended experiment run. `experiment` is the history key the
+/// reporting CLI groups by; everything else is evidence: the commit the
+/// run was built from, the canonical spec it ran, its communication
+/// meters, its timing summaries and its trace aggregates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub experiment: String,
+    pub commit: String,
+    /// Seconds since the UNIX epoch at append time (0 = unknown).
+    pub unix_s: u64,
+    /// Canonical `RunSpec::to_json` form (a valid `--config` file).
+    pub spec: Option<Json>,
+    pub meter: Option<MeterSnapshot>,
+    pub timings: Vec<Timing>,
+    /// `TraceAgg::to_obj` form: per-phase event counts + drop counter.
+    pub trace: Option<Json>,
+}
+
+impl Record {
+    /// A record stamped with the current commit (best-effort) and time.
+    pub fn new(experiment: impl Into<String>) -> Record {
+        let commit = find_repo_root()
+            .and_then(|r| head_commit(&r))
+            .unwrap_or_else(|| "unknown".into());
+        let unix_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Record {
+            experiment: experiment.into(),
+            commit,
+            unix_s,
+            spec: None,
+            meter: None,
+            timings: Vec::new(),
+            trace: None,
+        }
+    }
+
+    pub fn spec(mut self, spec: &RunSpec) -> Record {
+        self.spec = Some(spec.to_json());
+        self
+    }
+
+    pub fn meter(mut self, m: MeterSnapshot) -> Record {
+        self.meter = Some(m);
+        self
+    }
+
+    pub fn timing(mut self, r: &BenchResult) -> Record {
+        self.timings.push(Timing::from(r));
+        self
+    }
+
+    pub fn trace(mut self, agg: &TraceAgg) -> Record {
+        self.trace = Some(agg.to_obj().build());
+        self
+    }
+
+    /// The JSONL row for this record.
+    pub fn to_obj(&self) -> JsonObj {
+        let mut o = JsonObj::new()
+            .put("experiment", self.experiment.as_str())
+            .put("commit", self.commit.as_str())
+            .put("unix_s", self.unix_s);
+        if let Some(s) = &self.spec {
+            o = o.put("spec", s.clone());
+        }
+        if let Some(m) = &self.meter {
+            o = o.put("meter", m.to_json());
+        }
+        o = o.put(
+            "timings",
+            Json::Arr(self.timings.iter().map(|t| t.to_obj().build()).collect()),
+        );
+        if let Some(t) = &self.trace {
+            o = o.put("trace", t.clone());
+        }
+        o
+    }
+
+    /// Parse one stored row. Only `experiment` and `commit` are required —
+    /// records from older builds (fewer fields) stay readable.
+    pub fn from_json(j: &Json) -> Result<Record, String> {
+        let s = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|v| v.to_string())
+                .ok_or_else(|| format!("record: missing {k}"))
+        };
+        let meter = match j.get("meter") {
+            Some(m) => Some(MeterSnapshot::from_json(m)?),
+            None => None,
+        };
+        let timings = match j.get("timings").and_then(|v| v.as_arr()) {
+            Some(arr) => arr.iter().map(Timing::from_json).collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(Record {
+            experiment: s("experiment")?,
+            commit: s("commit")?,
+            unix_s: j.get("unix_s").and_then(|v| v.as_f64()).map(|v| v as u64).unwrap_or(0),
+            spec: j.get("spec").cloned(),
+            meter,
+            timings,
+            trace: j.get("trace").cloned(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL store of [`Record`]s.
+pub struct Store {
+    path: PathBuf,
+}
+
+impl Store {
+    pub fn new(path: impl Into<PathBuf>) -> Store {
+        Store { path: path.into() }
+    }
+
+    /// The canonical store location: `results/results.jsonl` under the
+    /// repo root (falling back to the current directory when run outside
+    /// the repo).
+    pub fn default_path() -> PathBuf {
+        find_repo_root()
+            .unwrap_or_else(|| PathBuf::from("."))
+            .join("results")
+            .join("results.jsonl")
+    }
+
+    /// The store at [`Store::default_path`].
+    pub fn open_default() -> Store {
+        Store::new(Store::default_path())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record (creates the file and parent directory on first
+    /// use; never truncates — this is the one writer in the codebase that
+    /// must NOT go through `JsonlWriter::create`).
+    pub fn append(&self, rec: &Record) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        writeln!(f, "{}", rec.to_obj().to_line())
+    }
+
+    /// Every stored record, in append order. A missing file is an empty
+    /// history; a malformed line is an error naming the line number (the
+    /// store is evidence — fail loudly rather than silently skip).
+    pub fn load(&self) -> Result<Vec<Record>, String> {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(format!("{}: {e}", self.path.display())),
+        };
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| format!("{}:{}: {e}", self.path.display(), i + 1))?;
+            out.push(
+                Record::from_json(&j)
+                    .map_err(|e| format!("{}:{}: {e}", self.path.display(), i + 1))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reporting (pure renderers — the `efmuon results` subcommands)
+// ---------------------------------------------------------------------------
+
+/// Unique experiment keys in first-seen order.
+pub fn experiments(records: &[Record]) -> Vec<&str> {
+    let mut seen: Vec<&str> = Vec::new();
+    for r in records {
+        if !seen.contains(&r.experiment.as_str()) {
+            seen.push(&r.experiment);
+        }
+    }
+    seen
+}
+
+fn short(commit: &str) -> &str {
+    &commit[..commit.len().min(9)]
+}
+
+fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+/// `results list`: one row per experiment key with run counts and the
+/// commit span of its history.
+pub fn render_list(records: &[Record]) -> String {
+    let rows: Vec<Vec<String>> = experiments(records)
+        .iter()
+        .map(|key| {
+            let runs: Vec<&Record> =
+                records.iter().filter(|r| r.experiment == *key).collect();
+            vec![
+                key.to_string(),
+                runs.len().to_string(),
+                short(&runs[0].commit).to_string(),
+                short(&runs[runs.len() - 1].commit).to_string(),
+            ]
+        })
+        .collect();
+    crate::metrics::render_table(&["experiment", "runs", "first", "latest"], &rows)
+}
+
+/// `results status`: the latest record of every experiment at a glance.
+pub fn render_status(records: &[Record]) -> String {
+    let rows: Vec<Vec<String>> = experiments(records)
+        .iter()
+        .map(|key| {
+            let last = records
+                .iter()
+                .rev()
+                .find(|r| r.experiment == *key)
+                .expect("key came from records");
+            let best = last
+                .timings
+                .iter()
+                .map(|t| t.median_s)
+                .fold(f64::INFINITY, f64::min);
+            let rounds = last
+                .meter
+                .as_ref()
+                .map(|m| m.rounds_absorbed.to_string())
+                .unwrap_or_else(|| "-".into());
+            let events = last
+                .trace
+                .as_ref()
+                .and_then(|t| t.get("events"))
+                .and_then(|v| v.as_f64())
+                .map(|v| (v as u64).to_string())
+                .unwrap_or_else(|| "-".into());
+            vec![
+                key.to_string(),
+                short(&last.commit).to_string(),
+                last.timings.len().to_string(),
+                if best.is_finite() { fmt_ms(best) } else { "-".into() },
+                rounds,
+                events,
+            ]
+        })
+        .collect();
+    crate::metrics::render_table(
+        &["experiment", "commit", "timings", "best ms", "rounds", "trace ev"],
+        &rows,
+    )
+}
+
+/// `results table KEY`: the full history of one experiment, one row per
+/// (run, timing).
+pub fn render_history(records: &[Record], experiment: &str) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (run, r) in records.iter().filter(|r| r.experiment == experiment).enumerate() {
+        for t in &r.timings {
+            let rounds = r
+                .meter
+                .as_ref()
+                .map(|m| m.rounds_absorbed.to_string())
+                .unwrap_or_else(|| "-".into());
+            rows.push(vec![
+                run.to_string(),
+                short(&r.commit).to_string(),
+                t.name.clone(),
+                fmt_ms(t.median_s),
+                fmt_ms(t.mad_s),
+                fmt_ms(t.min_s),
+                t.iters.to_string(),
+                rounds,
+            ]);
+        }
+    }
+    if rows.is_empty() {
+        return format!("no runs recorded for experiment {experiment:?}\n");
+    }
+    crate::metrics::render_table(
+        &["run", "commit", "timing", "median ms", "mad ms", "min ms", "iters", "rounds"],
+        &rows,
+    )
+}
+
+/// `results dat KEY`: the same history as whitespace-separated columns
+/// (run index, median seconds, min seconds, commit, timing name) — the
+/// file format the gnuplot script consumes.
+pub fn render_dat(records: &[Record], experiment: &str) -> String {
+    let mut out = String::from("# run median_s min_s commit timing\n");
+    for (run, r) in records.iter().filter(|r| r.experiment == experiment).enumerate() {
+        for t in &r.timings {
+            out.push_str(&format!(
+                "{} {:.9} {:.9} {} {:?}\n",
+                run,
+                t.median_s,
+                t.min_s,
+                short(&r.commit),
+                t.name
+            ));
+        }
+    }
+    out
+}
+
+/// `results gnuplot KEY`: a self-contained gnuplot script plotting the
+/// median trend over the stored history (pipe `results dat` to the file it
+/// names).
+pub fn render_gnuplot(experiment: &str) -> String {
+    let dat = format!("{experiment}.dat");
+    format!(
+        "# gnuplot script for experiment {experiment:?}\n\
+         # generate the data file first:  efmuon results dat {experiment} > {dat}\n\
+         set title \"{experiment}: median round time by run\"\n\
+         set xlabel \"run (append order)\"\n\
+         set ylabel \"seconds\"\n\
+         set grid\n\
+         plot \"{dat}\" using 1:2 with linespoints title \"median\", \\\n\
+              \"{dat}\" using 1:3 with points title \"min\"\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timer::BenchResult;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("efmuon_results_{name}"))
+    }
+
+    fn bench(name: &str, median: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 5,
+            median_s: median,
+            mad_s: median * 0.01,
+            min_s: median * 0.9,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_with_every_field() {
+        let spec = RunSpec::default();
+        let meter = MeterSnapshot { rounds_absorbed: 7, w2s_per_worker: 123, ..Default::default() };
+        let mut agg = TraceAgg::default();
+        agg.events = 3;
+        let rec = Record::new("hotpath")
+            .spec(&spec)
+            .meter(meter)
+            .timing(&bench("coordinator round", 0.01))
+            .trace(&agg);
+        let line = rec.to_obj().to_line();
+        let back = Record::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.timings.len(), 1);
+        assert_eq!(back.meter.unwrap().rounds_absorbed, 7);
+        // minimal legacy row still parses
+        let old = Json::parse(r#"{"experiment":"x","commit":"abc"}"#).unwrap();
+        let r = Record::from_json(&old).unwrap();
+        assert!(r.timings.is_empty() && r.meter.is_none() && r.spec.is_none());
+        // required keys really are required
+        assert!(Record::from_json(&Json::parse(r#"{"commit":"abc"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn store_appends_and_table_renders_two_runs_of_one_key() {
+        let dir = tmp("append");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Store::new(dir.join("results.jsonl"));
+        assert!(store.load().unwrap().is_empty(), "missing file = empty history");
+        let mut r1 = Record::new("hotpath");
+        r1.commit = "aaaaaaaaaaaa".into();
+        let mut r2 = Record::new("hotpath");
+        r2.commit = "bbbbbbbbbbbb".into();
+        store.append(&r1.timing(&bench("coordinator round", 0.010))).unwrap();
+        store.append(&r2.timing(&bench("coordinator round", 0.009))).unwrap();
+        store.append(&Record::new("other")).unwrap();
+        let recs = store.load().unwrap();
+        assert_eq!(recs.len(), 3, "append must not truncate");
+        assert_eq!(experiments(&recs), vec!["hotpath", "other"]);
+        // the acceptance render: >= 2 appended runs of the same key
+        let table = render_history(&recs, "hotpath");
+        assert!(table.contains("aaaaaaaaa"), "{table}");
+        assert!(table.contains("bbbbbbbbb"), "{table}");
+        assert_eq!(table.matches("coordinator round").count(), 2, "{table}");
+        assert!(render_list(&recs).contains("hotpath"));
+        assert!(render_status(&recs).contains("other"));
+        let dat = render_dat(&recs, "hotpath");
+        assert_eq!(dat.lines().count(), 3, "header + 2 runs: {dat}");
+        assert!(render_gnuplot("hotpath").contains("hotpath.dat"));
+        assert!(render_history(&recs, "missing").contains("no runs"));
+    }
+
+    #[test]
+    fn malformed_line_errors_with_line_number() {
+        let dir = tmp("malformed");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("results.jsonl");
+        std::fs::write(
+            &path,
+            "{\"experiment\":\"a\",\"commit\":\"c\"}\nnot json at all\n",
+        )
+        .unwrap();
+        let err = Store::new(&path).load().unwrap_err();
+        assert!(err.contains(":2:"), "line number missing: {err}");
+        // a JSON line missing required keys also names its line
+        std::fs::write(&path, "{\"commit\":\"c\"}\n").unwrap();
+        let err = Store::new(&path).load().unwrap_err();
+        assert!(err.contains(":1:") && err.contains("experiment"), "{err}");
+    }
+
+    #[test]
+    fn head_commit_reads_loose_packed_and_detached() {
+        let root = tmp("gitread");
+        let _ = std::fs::remove_dir_all(&root);
+        let git = root.join(".git");
+        std::fs::create_dir_all(git.join("refs/heads")).unwrap();
+        // loose ref
+        std::fs::write(git.join("HEAD"), "ref: refs/heads/main\n").unwrap();
+        std::fs::write(git.join("refs/heads/main"), "abc123\n").unwrap();
+        assert_eq!(head_commit(&root).as_deref(), Some("abc123"));
+        // packed ref (loose file removed)
+        std::fs::remove_file(git.join("refs/heads/main")).unwrap();
+        std::fs::write(
+            git.join("packed-refs"),
+            "# pack-refs with: peeled\ndef456 refs/heads/main\n",
+        )
+        .unwrap();
+        assert_eq!(head_commit(&root).as_deref(), Some("def456"));
+        // detached HEAD
+        std::fs::write(git.join("HEAD"), "0123abcd\n").unwrap();
+        assert_eq!(head_commit(&root).as_deref(), Some("0123abcd"));
+    }
+}

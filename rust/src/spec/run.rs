@@ -18,6 +18,7 @@ use crate::dist::{RoundMode, TransportMode};
 use crate::lmo::LmoKind;
 use crate::model::Group;
 use crate::opt::{LayerGeometry, Schedule};
+use crate::trace::Tracer;
 use crate::util::json::{Json, JsonObj};
 
 use super::comp::CompSpec;
@@ -232,6 +233,11 @@ pub struct RunSpec {
     pub seed: u64,
     /// Optional JSONL metrics path.
     pub log_path: Option<String>,
+    /// Optional round-phase trace path: the driver installs a live
+    /// [`Tracer`](crate::trace::Tracer) and drains its ring to this JSONL
+    /// file every round (`None` = the zero-cost `Noop` path, bit-identical
+    /// to a traceless build).
+    pub trace_path: Option<String>,
     /// Straggler / quorum / respawn policy ([`FaultPolicy::off`] =
     /// fail-stop lock-step, bit-identical to the policy-free deployment).
     pub fault: FaultPolicy,
@@ -265,6 +271,7 @@ impl Default for RunSpec {
             full_codec: false,
             seed: 0,
             log_path: None,
+            trace_path: None,
             fault: FaultPolicy::off(),
             checkpoint_every: 0,
             checkpoint_dir: None,
@@ -306,6 +313,7 @@ impl RunSpec {
             fault: self.fault,
             fault_plan: None,
             start_step: 0,
+            tracer: Tracer::Noop,
         }
     }
 
@@ -330,6 +338,7 @@ impl RunSpec {
             // now; CLI wiring is a ROADMAP follow-up (adding it here would
             // change the lossless TrainConfig round-trip surface)
             snap_bf16: false,
+            tracer: Tracer::Noop,
         }
     }
 
@@ -362,6 +371,7 @@ impl RunSpec {
             full_codec: self.full_codec,
             seed: self.seed,
             log_path: self.log_path.clone(),
+            trace_path: self.trace_path.clone(),
             fault_policy: self.fault.spec(),
             checkpoint_every: self.checkpoint_every,
             checkpoint_dir: self.checkpoint_dir.clone(),
@@ -401,6 +411,9 @@ impl RunSpec {
             .put("resume", self.resume);
         if let Some(p) = &self.log_path {
             o = o.put("log_path", p.as_str());
+        }
+        if let Some(p) = &self.trace_path {
+            o = o.put("trace_path", p.as_str());
         }
         if let Some(d) = &self.checkpoint_dir {
             o = o.put("checkpoint_dir", d.as_str());
@@ -503,6 +516,7 @@ impl RunBuilder {
         b.spec.full_codec = cfg.full_codec;
         b.spec.seed = cfg.seed;
         b.spec.log_path = cfg.log_path.clone();
+        b.spec.trace_path = cfg.trace_path.clone();
         match FaultPolicy::parse(&cfg.fault_policy) {
             Ok(p) => b.spec.fault = p,
             Err(e) => b.err("fault_policy", e),
@@ -623,6 +637,12 @@ impl RunBuilder {
         self
     }
 
+    /// Drain round-phase trace events to this JSONL path.
+    pub fn trace(mut self, p: impl Into<String>) -> Self {
+        self.spec.trace_path = Some(p.into());
+        self
+    }
+
     /// Straggler / quorum / respawn policy (typed; validated at `build`).
     pub fn fault(mut self, p: FaultPolicy) -> Self {
         self.spec.fault = p;
@@ -709,6 +729,9 @@ impl RunBuilder {
         }
         if spec.resume && spec.checkpoint_dir.is_none() {
             err.push("resume", "resuming requires checkpoint_dir");
+        }
+        if spec.trace_path.as_deref() == Some("") {
+            err.push("trace_path", "must be a non-empty path (omit the key to disable tracing)");
         }
         if err.fields.is_empty() {
             Ok(spec)
@@ -803,6 +826,19 @@ mod tests {
         for path in ["fault_policy", "checkpoint_every", "resume"] {
             assert!(err.mentions(path), "missing {path} in {err}");
         }
+    }
+
+    #[test]
+    fn trace_path_roundtrips_and_validates() {
+        let spec = RunBuilder::new().trace("/tmp/trace.jsonl").build().unwrap();
+        assert_eq!(spec.trace_path.as_deref(), Some("/tmp/trace.jsonl"));
+        let back = RunBuilder::from_config(&spec.to_train_config()).build().unwrap();
+        assert_eq!(back, spec);
+        let j = spec.to_json().to_string();
+        assert!(j.contains("\"trace_path\""), "{j}");
+        assert!(!RunSpec::default().to_json().to_string().contains("trace_path"));
+        let err = RunBuilder::new().trace("").build().unwrap_err();
+        assert!(err.mentions("trace_path"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Round-phase tracing (DESIGN.md §Observability).
+//!
+//! A [`Tracer`] stamps monotonic point events — one per round phase — into
+//! a bounded ring shared by every component of a deployment (coordinator,
+//! cluster shards, snapshot caches, the root reducer). The ring is drained
+//! by the train loop through a [`crate::metrics::JsonlWriter`] behind
+//! `--trace PATH`, and summarized into per-phase aggregates for the
+//! results store.
+//!
+//! The `Noop` variant is the golden anchor: `stamp` on it is a no-op that
+//! reads no clock and takes no lock, so a tracer-off deployment is
+//! *bitwise identical* to a build without the module — the scenario
+//! harness asserts tracer-on ≡ tracer-off on params/bytes/eval, which only
+//! holds because stamping never participates in the arithmetic.
+//!
+//! Overflow policy: the ring is bounded (`TraceRing::new(cap)`); when
+//! full, the OLDEST event is dropped and a counter is bumped, so a stalled
+//! drainer costs memory-bounded telemetry, never a blocked round.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::JsonObj;
+
+/// Sentinel "this event has no shard" tag (single-coordinator deployments
+/// and the cluster root reducer's seal events).
+pub const NO_SHARD: usize = usize::MAX;
+
+/// The span taxonomy: one variant per round phase that can consume wall
+/// time. Names are stable — they are the `phase` strings in the drained
+/// JSONL and the aggregate keys in the results store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Coordinator issued a round's broadcast to all workers.
+    Broadcast,
+    /// One worker's uplink reply arrived and was slotted.
+    Uplink,
+    /// Full-participation absorb committed a round.
+    Absorb,
+    /// Quorum (partial) absorb committed a round.
+    Quorum,
+    /// A deadline expiry skipped one straggler's slot.
+    StragglerSkip,
+    /// A late uplink from a previously skipped slot folded into G.
+    LateFold,
+    /// A dead worker was respawned through the INIT_STEP path.
+    Respawn,
+    /// A shard's `SnapCache` assembled a full-model snapshot.
+    SnapAssemble,
+    /// The cluster root sealed a `ParamBoard` epoch.
+    BoardSeal,
+}
+
+impl Phase {
+    /// Stable wire name (JSONL `phase` key, aggregate key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Broadcast => "broadcast",
+            Phase::Uplink => "uplink",
+            Phase::Absorb => "absorb",
+            Phase::Quorum => "quorum",
+            Phase::StragglerSkip => "straggler_skip",
+            Phase::LateFold => "late_fold",
+            Phase::Respawn => "respawn",
+            Phase::SnapAssemble => "snap_assemble",
+            Phase::BoardSeal => "board_seal",
+        }
+    }
+
+    /// Every phase, in taxonomy order (aggregation iterates this so the
+    /// emitted key order is stable).
+    pub fn all() -> &'static [Phase] {
+        &[
+            Phase::Broadcast,
+            Phase::Uplink,
+            Phase::Absorb,
+            Phase::Quorum,
+            Phase::StragglerSkip,
+            Phase::LateFold,
+            Phase::Respawn,
+            Phase::SnapAssemble,
+            Phase::BoardSeal,
+        ]
+    }
+}
+
+/// One stamped event: microseconds since the ring's epoch (monotonic, via
+/// `Instant`), the phase, the round step it belongs to, and where it came
+/// from.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub t_us: u64,
+    pub phase: Phase,
+    pub step: usize,
+    /// Shard index, or [`NO_SHARD`].
+    pub shard: usize,
+    /// Worker id for per-worker phases (uplink, skip, fold, respawn).
+    pub worker: Option<usize>,
+}
+
+impl TraceEvent {
+    /// The drained JSONL row for this event.
+    pub fn to_obj(&self) -> JsonObj {
+        let mut o = JsonObj::new()
+            .put("t_us", self.t_us)
+            .put("phase", self.phase.name())
+            .put("step", self.step);
+        if self.shard != NO_SHARD {
+            o = o.put("shard", self.shard);
+        }
+        if let Some(w) = self.worker {
+            o = o.put("worker", w);
+        }
+        o
+    }
+}
+
+/// The bounded event ring every live [`Tracer`] clone feeds. Drop-oldest
+/// on overflow; the drop count is kept so truncation is visible in the
+/// aggregates instead of silent.
+#[derive(Debug)]
+pub struct TraceRing {
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+    stamped: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            inner: Mutex::new(VecDeque::with_capacity(cap.max(1).min(4096))),
+            dropped: AtomicU64::new(0),
+            stamped: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, mut ev: TraceEvent) {
+        ev.t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut q = match self.inner.lock() {
+            Ok(q) => q,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if q.len() >= self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+        self.stamped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take every buffered event (oldest first), leaving the ring empty.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut q = match self.inner.lock() {
+            Ok(q) => q,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        q.drain(..).collect()
+    }
+
+    /// Events lost to overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events stamped since creation (drained or not, including dropped).
+    pub fn stamped(&self) -> u64 {
+        self.stamped.load(Ordering::Relaxed)
+    }
+}
+
+/// Running per-phase counts — the "trace aggregates" of a results-store
+/// record. Fold drained events in with [`TraceAgg::absorb`].
+#[derive(Debug, Default, Clone)]
+pub struct TraceAgg {
+    counts: [u64; 9],
+    pub events: u64,
+    pub dropped: u64,
+}
+
+impl TraceAgg {
+    pub fn absorb(&mut self, events: &[TraceEvent]) {
+        for ev in events {
+            self.events += 1;
+            let idx = Phase::all().iter().position(|p| *p == ev.phase).unwrap_or(0);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn count(&self, phase: Phase) -> u64 {
+        let idx = Phase::all().iter().position(|p| *p == phase).unwrap_or(0);
+        self.counts[idx]
+    }
+
+    /// `{"events": N, "dropped": M, "phases": {"broadcast": n, ...}}`,
+    /// phases with zero events omitted.
+    pub fn to_obj(&self) -> JsonObj {
+        let mut phases = JsonObj::new();
+        for (i, p) in Phase::all().iter().enumerate() {
+            if self.counts[i] > 0 {
+                phases = phases.put(p.name(), self.counts[i]);
+            }
+        }
+        JsonObj::new()
+            .put("events", self.events)
+            .put("dropped", self.dropped)
+            .put("phases", phases.build())
+    }
+}
+
+/// The stamp handle threaded through the dist layer. `Noop` is the
+/// default on every cfg: zero-cost, no clock, no lock — the bitwise
+/// golden anchor. A live tracer is a clone of the same `Arc<TraceRing>`
+/// tagged with the component's shard index.
+#[derive(Debug, Clone, Default)]
+pub enum Tracer {
+    #[default]
+    Noop,
+    Ring { ring: Arc<TraceRing>, shard: usize },
+}
+
+impl Tracer {
+    /// A live tracer (untagged: [`NO_SHARD`]) plus the ring to drain.
+    pub fn ring(cap: usize) -> (Tracer, Arc<TraceRing>) {
+        let ring = Arc::new(TraceRing::new(cap));
+        (Tracer::Ring { ring: ring.clone(), shard: NO_SHARD }, ring)
+    }
+
+    /// The same ring re-tagged for one shard's events.
+    pub fn for_shard(&self, shard: usize) -> Tracer {
+        match self {
+            Tracer::Noop => Tracer::Noop,
+            Tracer::Ring { ring, .. } => Tracer::Ring { ring: ring.clone(), shard },
+        }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        matches!(self, Tracer::Noop)
+    }
+
+    /// Stamp one event. On `Noop` this compiles to a branch on the
+    /// discriminant and nothing else.
+    #[inline]
+    pub fn stamp(&self, phase: Phase, step: usize, worker: Option<usize>) {
+        if let Tracer::Ring { ring, shard } = self {
+            ring.push(TraceEvent { t_us: 0, phase, step, shard: *shard, worker });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_stamps_nothing_and_is_default() {
+        let t = Tracer::default();
+        assert!(t.is_noop());
+        t.stamp(Phase::Broadcast, 0, None); // must not panic, must not allocate
+        assert!(t.for_shard(3).is_noop());
+    }
+
+    #[test]
+    fn ring_records_tags_and_drains_in_order() {
+        let (t, ring) = Tracer::ring(16);
+        t.stamp(Phase::Broadcast, 0, None);
+        let s1 = t.for_shard(1);
+        s1.stamp(Phase::Uplink, 0, Some(2));
+        s1.stamp(Phase::Absorb, 0, None);
+        let evs = ring.drain();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].phase, Phase::Broadcast);
+        assert_eq!(evs[0].shard, NO_SHARD);
+        assert_eq!(evs[1].phase, Phase::Uplink);
+        assert_eq!(evs[1].shard, 1);
+        assert_eq!(evs[1].worker, Some(2));
+        // monotonic timestamps
+        assert!(evs[0].t_us <= evs[1].t_us && evs[1].t_us <= evs[2].t_us);
+        // drained: ring is empty, counters persist
+        assert!(ring.drain().is_empty());
+        assert_eq!(ring.stamped(), 3);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_bounds_by_dropping_oldest() {
+        let (t, ring) = Tracer::ring(2);
+        t.stamp(Phase::Broadcast, 0, None);
+        t.stamp(Phase::Uplink, 0, Some(0));
+        t.stamp(Phase::Absorb, 0, None);
+        let evs = ring.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].phase, Phase::Uplink, "oldest event dropped first");
+        assert_eq!(ring.dropped(), 1);
+        assert_eq!(ring.stamped(), 3);
+    }
+
+    #[test]
+    fn aggregates_count_per_phase_and_serialize() {
+        let (t, ring) = Tracer::ring(64);
+        for k in 0..3 {
+            t.stamp(Phase::Broadcast, k, None);
+            t.stamp(Phase::Uplink, k, Some(0));
+            t.stamp(Phase::Uplink, k, Some(1));
+            t.stamp(Phase::Absorb, k, None);
+        }
+        let mut agg = TraceAgg::default();
+        agg.absorb(&ring.drain());
+        agg.dropped = ring.dropped();
+        assert_eq!(agg.events, 12);
+        assert_eq!(agg.count(Phase::Uplink), 6);
+        assert_eq!(agg.count(Phase::Quorum), 0);
+        let line = agg.to_obj().to_line();
+        assert!(line.contains("\"uplink\":6"), "{line}");
+        assert!(!line.contains("quorum"), "zero phases omitted: {line}");
+    }
+
+    #[test]
+    fn event_json_omits_sentinel_shard_and_absent_worker() {
+        let ev = TraceEvent { t_us: 5, phase: Phase::Broadcast, step: 2, shard: NO_SHARD, worker: None };
+        let line = ev.to_obj().to_line();
+        assert!(!line.contains("shard"), "{line}");
+        assert!(!line.contains("worker"), "{line}");
+        let ev = TraceEvent { t_us: 5, phase: Phase::Uplink, step: 2, shard: 1, worker: Some(3) };
+        let line = ev.to_obj().to_line();
+        assert!(line.contains("\"shard\":1"), "{line}");
+        assert!(line.contains("\"worker\":3"), "{line}");
+    }
+}

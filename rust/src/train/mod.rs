@@ -22,7 +22,10 @@ use crate::model::Manifest;
 use crate::opt::ef21::Ef21MuonSeq;
 use crate::opt::LayerGeometry;
 use crate::spec::RunSpec;
+use crate::trace::{TraceRing, Tracer};
 use crate::util::json::JsonObj;
+
+use std::sync::Arc;
 
 /// One evaluation point on the loss curve.
 #[derive(Debug, Clone)]
@@ -309,6 +312,22 @@ pub fn spawn_driver_at(
     handle: GradHandle,
     start_step: usize,
 ) -> Result<Box<dyn Driver>> {
+    spawn_driver_traced(spec, x0, geometry, handle, start_step, Tracer::Noop)
+}
+
+/// [`spawn_driver_at`] with a round-phase [`Tracer`] installed on the
+/// deployment cfg. Like `start_step`, the tracer rides on the cfg rather
+/// than the spec: the spec carries only the trace *path*, and the live
+/// ring handle is run state, constructed by whoever will drain it
+/// ([`train_spec`], the hotpath bench, the scenario harness).
+pub fn spawn_driver_traced(
+    spec: &RunSpec,
+    x0: Layers,
+    geometry: Vec<LayerGeometry>,
+    handle: GradHandle,
+    start_step: usize,
+    tracer: Tracer,
+) -> Result<Box<dyn Driver>> {
     // RunSpec fields are public, so a caller can bypass RunBuilder; keep
     // the old "reject rather than silently reinterpret as 1" contract
     if spec.shards == 0 {
@@ -319,10 +338,12 @@ pub fn spawn_driver_at(
     if spec.shards > 1 {
         let mut cfg = spec.cluster_cfg();
         cfg.start_step = start_step;
+        cfg.tracer = tracer;
         Ok(Box::new(Cluster::spawn(x0, geometry, handle, cfg)?))
     } else {
         let mut cfg = spec.coordinator_cfg();
         cfg.start_step = start_step;
+        cfg.tracer = tracer;
         Ok(Box::new(Coordinator::spawn(x0, geometry, handle, cfg)?))
     }
 }
@@ -403,9 +424,22 @@ pub fn train_spec(spec: &RunSpec) -> Result<TrainReport> {
         spec.eval_batches,
         spec.seed,
     )?;
-    let mut drv = spawn_driver_at(spec, x0, geometry, svc.handle(), start_step)?;
-    run_driver(spec, drv.as_mut(), tokens_per_step, model_bytes, start_step)
+    let (tracer, ring) = match &spec.trace_path {
+        Some(_) => {
+            let (t, r) = Tracer::ring(TRACE_RING_CAP);
+            (t, Some(r))
+        }
+        None => (Tracer::Noop, None),
+    };
+    let mut drv = spawn_driver_traced(spec, x0, geometry, svc.handle(), start_step, tracer)?;
+    run_driver(spec, drv.as_mut(), tokens_per_step, model_bytes, start_step, ring)
 }
+
+/// Trace-ring capacity for `--trace` runs: a generous per-round event
+/// budget (every phase of every worker of every shard fits many times
+/// over), drained once per round so overflow only occurs if a single round
+/// stamps more than this.
+pub const TRACE_RING_CAP: usize = 65_536;
 
 /// Stem (within `checkpoint_dir`) every checkpoint is saved under — and
 /// the one `--resume` looks for.
@@ -429,10 +463,17 @@ fn run_driver(
     tokens_per_step: usize,
     model_bytes: usize,
     start_step: usize,
+    ring: Option<Arc<TraceRing>>,
 ) -> Result<TrainReport> {
     let mut log = match &spec.log_path {
         Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
         None => None,
+    };
+    // trace drain sink: one JSONL row per stamped event, drained each round
+    // so the bounded ring never wraps on a healthy run
+    let mut trace_log = match (&spec.trace_path, &ring) {
+        (Some(p), Some(_)) => Some(crate::metrics::JsonlWriter::create(p)?),
+        _ => None,
     };
     let ckpt_stem = match (spec.checkpoint_every > 0, &spec.checkpoint_dir) {
         (true, Some(dir)) => Some(std::path::Path::new(dir).join(CHECKPOINT_STEM)),
@@ -448,6 +489,11 @@ fn run_driver(
 
     for step in start_step..spec.steps {
         let stats = drv.round()?;
+        if let (Some(tl), Some(r)) = (trace_log.as_mut(), ring.as_ref()) {
+            for ev in r.drain() {
+                tl.write(&ev.to_obj())?;
+            }
+        }
         // async modes: the first `lookahead` calls absorb no round yet, so
         // there is no train loss to record for them
         if stats.absorbed_step.is_some() {
@@ -511,6 +557,15 @@ fn run_driver(
             };
             checkpoint::save(stem, &params, &meta)?;
         }
+    }
+
+    // final trace drain: late-landing events stamped during the last
+    // drain/eval (pipelined shards, late folds) still reach the file
+    if let (Some(tl), Some(r)) = (trace_log.as_mut(), ring.as_ref()) {
+        for ev in r.drain() {
+            tl.write(&ev.to_obj())?;
+        }
+        tl.flush()?;
     }
 
     // resuming a checkpoint taken at (or past) the final step: the loop

@@ -19,6 +19,7 @@ use efmuon::linalg::matrix::{Layers, Matrix};
 use efmuon::lmo::LmoKind;
 use efmuon::opt::{LayerGeometry, Schedule};
 use efmuon::spec::CompSpec;
+use efmuon::trace::Tracer;
 use efmuon::util::proptest::check;
 use efmuon::util::rng::Rng;
 
@@ -138,6 +139,7 @@ fn spawn_cluster_ex(
             fault_plan: None,
             start_step: 0,
             snap_bf16,
+            tracer: Tracer::Noop,
         },
     )?;
     Ok((cluster, svc))

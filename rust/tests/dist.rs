@@ -17,6 +17,7 @@ use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::{LayerGeometry, Schedule};
 use efmuon::spec::CompSpec;
+use efmuon::trace::Tracer;
 use efmuon::util::rng::Rng;
 
 fn geom() -> Vec<LayerGeometry> {
@@ -50,6 +51,7 @@ fn mk_coord(q: Quadratics, spec: &str, mode: TransportMode, beta: f32) -> (Coord
             fault: FaultPolicy::off(),
             fault_plan: None,
             start_step: 0,
+            tracer: Tracer::Noop,
         },
     )
     .unwrap();
@@ -118,6 +120,7 @@ fn threaded_matches_sequential_reference() {
             fault: FaultPolicy::off(),
             fault_plan: None,
             start_step: 0,
+            tracer: Tracer::Noop,
         },
     )
     .unwrap();
@@ -205,6 +208,7 @@ fn mk_async(lookahead: usize, seed_obj: u64) -> (Coordinator, GradService) {
             fault: FaultPolicy::off(),
             fault_plan: None,
             start_step: 0,
+            tracer: Tracer::Noop,
         },
     )
     .unwrap();
@@ -348,6 +352,7 @@ fn mk_fault_coord(obj: PanicObjective, mode: RoundMode) -> anyhow::Result<(Coord
             fault: FaultPolicy::off(),
             fault_plan: None,
             start_step: 0,
+            tracer: Tracer::Noop,
         },
     )?;
     Ok((coord, svc))
@@ -437,6 +442,7 @@ fn mk_policy_coord(
             fault: FaultPolicy::parse(policy).unwrap(),
             fault_plan: plan.map(Arc::new),
             start_step: 0,
+            tracer: Tracer::Noop,
         },
     )
     .unwrap();

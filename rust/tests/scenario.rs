@@ -42,7 +42,11 @@ use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
 use efmuon::opt::LayerGeometry;
 use efmuon::spec::{RunBuilder, RunSpec, SchedulePlan};
-use efmuon::train::{checkpoint, spawn_driver, spawn_driver_at, Driver, CHECKPOINT_STEM};
+use efmuon::trace::{Phase, TraceAgg, Tracer};
+use efmuon::train::{
+    checkpoint, spawn_driver, spawn_driver_at, spawn_driver_traced, Driver, CHECKPOINT_STEM,
+    TRACE_RING_CAP,
+};
 use efmuon::util::rng::Rng;
 
 /// One deployment shape of the scenario table.
@@ -563,6 +567,155 @@ fn async_converges_near_sync() {
     assert_eq!(pipe.w2s.len(), rounds);
     let gap = (sync.eval - pipe.eval).abs();
     assert!(gap < 1e-2, "async:1 final loss {} vs sync {} (gap {gap})", pipe.eval, sync.eval);
+}
+
+// ---------------------------------------------------------------------------
+// The tracer axis (ISSUE 8): tracer-on ≡ tracer-off, bitwise
+// ---------------------------------------------------------------------------
+
+/// Tracer-on must be bit-identical to tracer-off — trajectory, per-round
+/// bytes in both directions, meters, eval — for every scenario and round
+/// mode, because `Tracer::Noop` is the golden anchor: stamping reads a
+/// clock and pushes into a ring, and neither may ever participate in the
+/// arithmetic. The live ring must ALSO have seen the exact round
+/// lifecycle: one broadcast and one full absorb per round, one uplink per
+/// worker per round, zero fault-phase events in a fault-free run, zero
+/// overflow drops.
+#[test]
+fn tracer_on_matches_tracer_off_bitwise() {
+    for sc in SCENARIOS {
+        for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+            let off = run_scenario(sc, mode, TransportMode::Counted, ROUNDS);
+
+            let spec = scenario_spec(sc, 1, mode, TransportMode::Counted, ROUNDS, FLAT);
+            let q = objective(sc);
+            let x0 = q.init(&mut Rng::new(SEED));
+            let svc = GradService::spawn_objective(Box::new(q), SEED);
+            let (tracer, ring) = Tracer::ring(TRACE_RING_CAP);
+            let mut drv = spawn_driver_traced(&spec, x0, geom(), svc.handle(), 0, tracer).unwrap();
+            let mut s2w = Vec::new();
+            let mut w2s = Vec::new();
+            let mut record = |s: &efmuon::train::DriveRound| {
+                if s.s2w_bytes > 0 {
+                    s2w.push(s.s2w_bytes);
+                }
+                if s.absorbed_step.is_some() {
+                    w2s.push(s.w2s_bytes_per_worker);
+                }
+            };
+            for _ in 0..ROUNDS {
+                record(&drv.round().unwrap());
+            }
+            for s in drv.drain().unwrap() {
+                record(&s);
+            }
+            drop(record);
+
+            let tag = format!("{} / {} / traced", sc.name, mode.spec());
+            assert_eq!(off.params, flatten(&drv.params().unwrap()), "{tag}: trajectory");
+            assert_eq!(off.s2w, s2w, "{tag}: s2w bytes per round");
+            assert_eq!(off.w2s, w2s, "{tag}: w2s bytes per round");
+            assert_eq!(off.meter_w2s, drv.w2s(), "{tag}: w2s meter");
+            assert_eq!(off.meter_s2w, drv.s2w(), "{tag}: s2w meter");
+            assert_eq!(off.eval, drv.eval().unwrap(), "{tag}: eval");
+
+            let mut agg = TraceAgg::default();
+            agg.absorb(&ring.drain());
+            assert_eq!(agg.count(Phase::Broadcast), ROUNDS as u64, "{tag}: broadcasts");
+            assert_eq!(agg.count(Phase::Absorb), ROUNDS as u64, "{tag}: absorbs");
+            assert_eq!(
+                agg.count(Phase::Uplink),
+                (ROUNDS * sc.workers) as u64,
+                "{tag}: one uplink per worker per round"
+            );
+            let fault_phases = agg.count(Phase::Quorum)
+                + agg.count(Phase::StragglerSkip)
+                + agg.count(Phase::LateFold)
+                + agg.count(Phase::Respawn);
+            assert_eq!(fault_phases, 0, "{tag}: no fault-phase events in a fault-free run");
+            assert_eq!(ring.dropped(), 0, "{tag}: ring must not overflow");
+        }
+    }
+}
+
+/// The same identity through the cluster layer: a live tracer threaded to
+/// every shard coordinator, the snapshot caches and the root reducer must
+/// leave the multi-shard trajectory bit-identical, while the ring records
+/// per-shard broadcasts, the root's board seals and the cache assemblies.
+#[test]
+fn tracer_on_cluster_matches_tracer_off_bitwise() {
+    let workers = 3;
+    let shards = 2;
+    let mk = || -> Box<dyn Objective> {
+        Box::new(
+            Stacked::new(
+                stacked_parts(workers)
+                    .into_iter()
+                    .map(|q| Box::new(q) as Box<dyn Objective>)
+                    .collect(),
+            )
+            .unwrap(),
+        )
+    };
+    for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+        let (reference, _) = run_cluster_obj(
+            mk(),
+            workers,
+            2,
+            "top:0.3",
+            "top:0.5",
+            shards,
+            mode,
+            TransportMode::Counted,
+            ROUNDS,
+            FLAT,
+        );
+        let obj = mk();
+        let x0 = obj.init(&mut Rng::new(SEED));
+        let svc = GradService::spawn_objective(obj, SEED);
+        let sc = Scenario { name: "cluster-trace", workers, dim: 0, w2s: "top:0.3", s2w: "top:0.5" };
+        let spec = scenario_spec(&sc, shards, mode, TransportMode::Counted, ROUNDS, FLAT);
+        let mut cfg = spec.cluster_cfg();
+        let (tracer, ring) = Tracer::ring(TRACE_RING_CAP);
+        cfg.tracer = tracer;
+        let mut cluster = Cluster::spawn(
+            x0,
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; 2],
+            svc.handle(),
+            cfg,
+        )
+        .unwrap();
+        cluster.run(ROUNDS).unwrap();
+        let meter = cluster.meter();
+        let tag = format!("cluster traced / {}", mode.spec());
+        assert_eq!(flatten(&cluster.params().unwrap()), reference.params, "{tag}: trajectory");
+        assert_eq!(meter.w2s(), reference.meter_w2s, "{tag}: w2s meter");
+        assert_eq!(meter.s2w(), reference.meter_s2w, "{tag}: s2w meter");
+        assert_eq!(cluster.eval().unwrap(), reference.eval, "{tag}: eval");
+
+        let mut agg = TraceAgg::default();
+        agg.absorb(&ring.drain());
+        assert_eq!(
+            agg.count(Phase::Broadcast),
+            (ROUNDS * shards) as u64,
+            "{tag}: one broadcast per shard per round"
+        );
+        assert_eq!(
+            agg.count(Phase::Uplink),
+            (ROUNDS * shards * workers) as u64,
+            "{tag}: per-shard per-worker uplinks"
+        );
+        assert_eq!(
+            agg.count(Phase::BoardSeal),
+            ROUNDS as u64,
+            "{tag}: the root seals one board epoch per round"
+        );
+        assert!(
+            agg.count(Phase::SnapAssemble) >= 1,
+            "{tag}: at least the first snapshot is assembled from scratch"
+        );
+        assert_eq!(ring.dropped(), 0, "{tag}: ring must not overflow");
+    }
 }
 
 // ---------------------------------------------------------------------------

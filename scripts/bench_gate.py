@@ -12,7 +12,7 @@ regression means the zero-copy snapshot path started cloning again —
 deterministic, so any growth past the threshold (including any growth from
 an exact-zero baseline) fails.
 
-Two more gates ride along:
+More gates ride along:
 
 - The single-thread matmul `microkernel` entries gate on their GFLOP/s
   (throughput, so the regression direction is inverted: dropping below
@@ -20,6 +20,13 @@ Two more gates ride along:
 - The `bf16 board` cluster entries must ship at most 0.55x the
   parameter-board bytes of their matched f32 entries — checked within the
   current results alone (the byte ratio is deterministic; no baseline).
+- The `, traced` round entries must run within the threshold of their
+  untraced mates — also within the current results alone, isolating the
+  tracer overhead from machine noise.
+- With `--results results/results.jsonl`, round entries additionally gate
+  against the best-ever stored median over the whole experiment history
+  (trajectory mode), so slow-boil regressions that pass every run-over-run
+  comparison still fail.
 
 Bench numbers are machine-specific, so the baseline is self-priming and
 untracked: the first run on a machine copies the current results into the
@@ -27,6 +34,7 @@ baseline file (established from the PR-1-era bench set); later runs gate
 against it. Delete the baseline to re-prime after an intentional change.
 
 Usage: bench_gate.py CURRENT BASELINE [--threshold 1.05]
+                     [--results results/results.jsonl]
 """
 
 import argparse
@@ -50,6 +58,11 @@ FAULT_KEYS = ("stragglers", "respawns")
 BF16_TAG = ", bf16 board"
 BF16_BYTES_KEY = "snap_bytes_shipped_per_round"
 BF16_MAX_RATIO = 0.55
+
+# traced round entries pair with the untraced entry of the same name minus
+# this tag; stamping + per-round ring drain must stay within the gate
+# threshold of the untraced round time (the tracer-overhead acceptance)
+TRACE_TAG = ", traced"
 
 
 def bf16_problems(entries):
@@ -82,6 +95,94 @@ def bf16_problems(entries):
             problems.append(
                 f"bf16 entry {name!r} ships {cur}B vs f32 {base}B "
                 f"({cur / base:.3f}x > {BF16_MAX_RATIO}x)"
+            )
+    return problems
+
+
+def trace_problems(entries, threshold):
+    """Every traced round entry must run within `threshold`x its untraced
+    mate in the same results file. Like the bf16 gate this needs no
+    baseline: both twins are measured by the same run on the same machine,
+    so the ratio isolates the tracer overhead from machine noise."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if TRACE_TAG not in name:
+            continue
+        mate = name.replace(TRACE_TAG, "")
+        if mate not in entries:
+            problems.append(f"traced entry {name!r} has no untraced mate {mate!r}")
+            continue
+        cur = e["median_s"]
+        base = entries[mate]["median_s"]
+        if base <= 0:
+            problems.append(f"untraced mate {mate!r} has nonpositive median_s")
+            continue
+        if cur > threshold * base:
+            problems.append(
+                f"traced entry {name!r} took {cur:.6f}s vs untraced {base:.6f}s "
+                f"({cur / base:.3f}x > {threshold}x)"
+            )
+    return problems
+
+
+def load_results(path):
+    """Parse the append-only experiment store (results/results.jsonl, one
+    JSON record per line). Raises ValueError naming the offending line for
+    malformed records — the store is history evidence; silently skipping a
+    line could hide the best-ever entry a regression should gate against."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError as e:
+                raise ValueError(f"{path}:{i}: {e}")
+            if not isinstance(rec, dict) or "experiment" not in rec:
+                raise ValueError(f"{path}:{i}: record is missing 'experiment'")
+            records.append(rec)
+    return records
+
+
+def best_ever(records, name):
+    """Best (minimum) stored median_s for timing `name` over the whole
+    history, or None when the history has never seen that timing. The
+    current run is normally already appended when the gate runs; including
+    it is harmless (min <= current, so it can only make the gate exact)."""
+    vals = [
+        t["median_s"]
+        for r in records
+        for t in r.get("timings", [])
+        if isinstance(t, dict)
+        and t.get("name") == name
+        and isinstance(t.get("median_s"), (int, float))
+        and t["median_s"] > 0
+    ]
+    return min(vals) if vals else None
+
+
+def trajectory_problems(entries, records, threshold):
+    """Trend gate: every gated round entry must stay within `threshold`x of
+    its best-ever stored median, not merely the previous run's. This stops
+    slow-boil regressions — a sequence of +4% steps that each pass the
+    run-over-run gate but compound into a 2x loss. Entries with no stored
+    history pass (their first appended run becomes the trajectory to beat)."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if not any(s in name for s in GATED_SUBSTRINGS):
+            continue
+        if "microkernel" in name:
+            continue  # throughput-gated; the store keeps timings only
+        best = best_ever(records, name)
+        if best is None:
+            continue
+        cur = e["median_s"]
+        if cur > threshold * best:
+            problems.append(
+                f"round entry {name!r} took {cur:.6f}s vs best-ever "
+                f"{best:.6f}s ({cur / best:.3f}x > {threshold}x)"
             )
     return problems
 
@@ -180,6 +281,13 @@ def main():
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=1.05)
+    ap.add_argument(
+        "--results",
+        default=None,
+        help="experiment store (results/results.jsonl): additionally gate "
+        "round entries against the best-ever stored median (trajectory "
+        "mode), not just the previous run",
+    )
     args = ap.parse_args()
 
     try:
@@ -224,6 +332,50 @@ def main():
             file=sys.stderr,
         )
         return 1
+
+    # the tracer-overhead acceptance: traced round entries pair with their
+    # untraced twins inside the same results file, no baseline involved
+    traced = trace_problems(current, args.threshold)
+    if traced:
+        for p in traced:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            f"bench gate: traced round entries must stay within "
+            f"{args.threshold:.2f}x of their untraced mates; see DESIGN.md "
+            "§Observability",
+            file=sys.stderr,
+        )
+        return 1
+
+    # trajectory mode: gate against the best-ever stored run, so slow-boil
+    # regressions (each within threshold of the last run) still fail
+    if args.results is not None:
+        if not os.path.exists(args.results):
+            print(
+                f"bench gate: no experiment store at {args.results} yet; "
+                "trajectory gate skipped (this run's append starts it)"
+            )
+        else:
+            try:
+                records = load_results(args.results)
+            except (OSError, ValueError) as e:
+                print(f"bench gate: cannot read experiment store: {e}", file=sys.stderr)
+                return 1
+            trend = trajectory_problems(current, records, args.threshold)
+            if trend:
+                for p in trend:
+                    print(f"bench gate: {p}", file=sys.stderr)
+                print(
+                    f"bench gate: round entries regressed past "
+                    f"{args.threshold:.2f}x the stored best-ever; see "
+                    "EXPERIMENTS.md §Results store",
+                    file=sys.stderr,
+                )
+                return 1
+            print(
+                f"bench gate: trajectory OK "
+                f"({len(records)} stored record(s) in {args.results})"
+            )
 
     try:
         baseline, baseline_problems = load_entries(args.baseline)

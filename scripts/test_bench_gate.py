@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_gate.py's pure gate logic (no cargo, no bench run).
+
+Covers the trajectory gate (best-ever selection, adoption of entries with
+no history, malformed-record errors), the traced-pair overhead gate, and
+the bf16 pairing gate — the pieces whose failure modes are subtle enough
+to deserve synthetic regression cases. Run directly or via verify.sh:
+
+    python3 scripts/test_bench_gate.py
+"""
+
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_gate  # noqa: E402
+
+
+def entry(name, median_s, **extra):
+    e = {"name": name, "median_s": median_s}
+    e.update(extra)
+    return e
+
+
+def record(experiment="hotpath", timings=()):
+    return {"experiment": experiment, "commit": "abc", "timings": list(timings)}
+
+
+def timing(name, median_s):
+    return {"name": name, "median_s": median_s, "iters": 5}
+
+
+class BestEverTest(unittest.TestCase):
+    def test_selects_minimum_across_history(self):
+        records = [
+            record(timings=[timing("coordinator round", 0.012)]),
+            record(timings=[timing("coordinator round", 0.009)]),
+            record(timings=[timing("coordinator round", 0.011)]),
+        ]
+        self.assertEqual(bench_gate.best_ever(records, "coordinator round"), 0.009)
+
+    def test_unknown_name_and_junk_values_yield_none(self):
+        records = [
+            record(timings=[timing("other", 0.01)]),
+            record(timings=[{"name": "coordinator round"}]),  # no median_s
+            record(timings=[{"name": "coordinator round", "median_s": "fast"}]),
+            record(timings=[{"name": "coordinator round", "median_s": 0}]),
+            {"experiment": "x", "commit": "abc"},  # legacy record, no timings
+        ]
+        self.assertIsNone(bench_gate.best_ever(records, "coordinator round"))
+
+    def test_ignores_other_experiments_timings_only_by_name(self):
+        # best_ever keys on the timing name, which the bench keeps unique;
+        # a same-named timing in another experiment record still counts
+        # (the store is one history, the name is the identity)
+        records = [
+            record("hotpath", [timing("cluster round (2 shard(s))", 0.02)]),
+            record("shards", [timing("cluster round (2 shard(s))", 0.015)]),
+        ]
+        self.assertEqual(
+            bench_gate.best_ever(records, "cluster round (2 shard(s))"), 0.015
+        )
+
+
+class TrajectoryGateTest(unittest.TestCase):
+    def test_synthetic_regression_fails_against_best_ever(self):
+        # history: 10ms then 9ms; current run-over-run baseline would hold
+        # 10.3ms vs 10ms (1.03x, passes), but best-ever 9ms makes it 1.144x
+        records = [
+            record(timings=[timing("coordinator round", 0.010)]),
+            record(timings=[timing("coordinator round", 0.009)]),
+        ]
+        current = {"coordinator round": entry("coordinator round", 0.0103)}
+        problems = bench_gate.trajectory_problems(current, records, 1.05)
+        self.assertEqual(len(problems), 1)
+        self.assertIn("best-ever", problems[0])
+        self.assertIn("0.009000", problems[0])
+
+    def test_within_threshold_passes(self):
+        records = [record(timings=[timing("coordinator round", 0.010)])]
+        current = {"coordinator round": entry("coordinator round", 0.0104)}
+        self.assertEqual(
+            bench_gate.trajectory_problems(current, records, 1.05), []
+        )
+
+    def test_new_entry_with_no_history_is_adopted_silently(self):
+        # a round entry the store has never seen passes: its first appended
+        # run becomes the trajectory later runs are gated against
+        records = [record(timings=[timing("coordinator round", 0.010)])]
+        current = {
+            "coordinator round": entry("coordinator round", 0.010),
+            "cluster round (new)": entry("cluster round (new)", 99.0),
+        }
+        self.assertEqual(
+            bench_gate.trajectory_problems(current, records, 1.05), []
+        )
+
+    def test_non_gated_and_microkernel_entries_are_ignored(self):
+        records = [
+            record(timings=[timing("compress top:0.1", 0.001)]),
+            record(timings=[timing("matmul 256 microkernel (1 thread)", 0.001)]),
+        ]
+        current = {
+            "compress top:0.1": entry("compress top:0.1", 1.0),
+            "matmul 256 microkernel (1 thread)": entry(
+                "matmul 256 microkernel (1 thread)", 1.0
+            ),
+        }
+        self.assertEqual(
+            bench_gate.trajectory_problems(current, records, 1.05), []
+        )
+
+
+class LoadResultsTest(unittest.TestCase):
+    def _write(self, text):
+        f = tempfile.NamedTemporaryFile(
+            "w", suffix=".jsonl", delete=False, dir=tempfile.gettempdir()
+        )
+        f.write(text)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_loads_records_and_skips_blank_lines(self):
+        path = self._write(
+            '{"experiment":"hotpath","commit":"a","timings":[]}\n'
+            "\n"
+            '{"experiment":"shards","commit":"b"}\n'
+        )
+        records = bench_gate.load_results(path)
+        self.assertEqual([r["experiment"] for r in records], ["hotpath", "shards"])
+
+    def test_malformed_json_names_the_line(self):
+        path = self._write('{"experiment":"a","commit":"c"}\nnot json\n')
+        with self.assertRaises(ValueError) as ctx:
+            bench_gate.load_results(path)
+        self.assertIn(":2:", str(ctx.exception))
+
+    def test_record_without_experiment_key_names_the_line(self):
+        path = self._write('{"commit":"c"}\n')
+        with self.assertRaises(ValueError) as ctx:
+            bench_gate.load_results(path)
+        err = str(ctx.exception)
+        self.assertIn(":1:", err)
+        self.assertIn("experiment", err)
+
+
+class TraceGateTest(unittest.TestCase):
+    def test_overhead_within_threshold_passes(self):
+        entries = {
+            "coordinator round": entry("coordinator round", 0.0100),
+            "coordinator round, traced": entry("coordinator round, traced", 0.0103),
+        }
+        self.assertEqual(bench_gate.trace_problems(entries, 1.05), [])
+
+    def test_overhead_past_threshold_fails(self):
+        entries = {
+            "coordinator round": entry("coordinator round", 0.0100),
+            "coordinator round, traced": entry("coordinator round, traced", 0.0110),
+        }
+        problems = bench_gate.trace_problems(entries, 1.05)
+        self.assertEqual(len(problems), 1)
+        self.assertIn("1.100x", problems[0])
+
+    def test_missing_untraced_mate_fails(self):
+        entries = {
+            "coordinator round, traced": entry("coordinator round, traced", 0.01),
+        }
+        problems = bench_gate.trace_problems(entries, 1.05)
+        self.assertEqual(len(problems), 1)
+        self.assertIn("no untraced mate", problems[0])
+
+
+class Bf16GateTest(unittest.TestCase):
+    def test_halved_bytes_pass_and_unhalved_fail(self):
+        entries = {
+            "cluster round (2 shard(s))": entry(
+                "cluster round (2 shard(s))", 0.01, snap_bytes_shipped_per_round=1000
+            ),
+            "cluster round (2 shard(s)), bf16 board": entry(
+                "cluster round (2 shard(s)), bf16 board",
+                0.01,
+                snap_bytes_shipped_per_round=520,
+            ),
+        }
+        self.assertEqual(bench_gate.bf16_problems(entries), [])
+        entries["cluster round (2 shard(s)), bf16 board"][
+            "snap_bytes_shipped_per_round"
+        ] = 900
+        self.assertEqual(len(bench_gate.bf16_problems(entries)), 1)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

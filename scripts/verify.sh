@@ -20,6 +20,12 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== tier-1: bench-gate unit tests (python) =="
+# the gate script is part of the verification surface: its trajectory /
+# traced-pair / bf16 logic is unit-tested so a broken gate cannot silently
+# pass (or fail) every bench run
+python3 "$SCRIPT_DIR/test_bench_gate.py"
+
 echo "== smoke: typed config round trip (efmuon config) =="
 # `efmuon config` prints the validated RunSpec as canonical JSON; feeding
 # that JSON back through --config must reproduce it byte for byte — the
@@ -80,10 +86,14 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== tier-2: round-time + bytes + GFLOP/s regression gate =="
   # gates cluster-round host memory traffic (bytes_cloned_per_round) along
   # with median round times, the matmul microkernel GFLOP/s (throughput
-  # regression >5% fails), and the bf16 board's wire bytes (each bf16 row
-  # must ship <= 0.55x its matched f32 row)
+  # regression >5% fails), the bf16 board's wire bytes (each bf16 row must
+  # ship <= 0.55x its matched f32 row), the traced round's overhead (must
+  # stay within the threshold of its untraced twin), and — via --results —
+  # the trajectory: round times must stay within the threshold of the
+  # best-ever run in the appended experiment history
   python3 "$SCRIPT_DIR/bench_gate.py" "$BENCH" "$SCRIPT_DIR/../BENCH_baseline.json" \
-    --threshold "${EFMUON_BENCH_TOLERANCE:-1.05}"
+    --threshold "${EFMUON_BENCH_TOLERANCE:-1.05}" \
+    --results "$SCRIPT_DIR/../results/results.jsonl"
 fi
 
 echo "verify: OK"
