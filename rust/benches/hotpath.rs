@@ -13,6 +13,7 @@ use efmuon::compress::{codec, parse_spec};
 use efmuon::dist::cluster::{Cluster, ClusterCfg};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::fault::FaultPolicy;
+use efmuon::dist::net::{spawn_loopback_workers, NetCfg, NetHub};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{MatrixQuadratic, Objective, Quadratics, Stacked};
@@ -54,6 +55,12 @@ struct Entry {
     /// width. `bench_gate.py` checks each bf16 entry against its matched
     /// f32 entry (must be <= 0.55x).
     shipped: Option<u64>,
+    /// Transport counters for the round entries: (reconnects,
+    /// heartbeat_misses). Like the fault counters, the bench runs
+    /// fault-free, so `bench_gate.py` fails the run if either is nonzero —
+    /// a link flapping or a heartbeat going missing inside a benchmark is
+    /// itself a perf bug.
+    net: Option<(u64, u64)>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -62,7 +69,15 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         Some(g) => println!("{}   [{g:.2} GFLOP/s]", result.report()),
         None => println!("{}", result.report()),
     }
-    entries.push(Entry { result, gflops, comm: None, cloned: None, faults: None, shipped: None });
+    entries.push(Entry {
+        result,
+        gflops,
+        comm: None,
+        cloned: None,
+        faults: None,
+        shipped: None,
+        net: None,
+    });
 }
 
 fn main() -> anyhow::Result<()> {
@@ -214,6 +229,7 @@ fn main() -> anyhow::Result<()> {
         let e = entries.last_mut().unwrap();
         e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
         e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+        e.net = Some((m.reconnects(), m.heartbeat_misses()));
     }
 
     // ---- the same round with a live tracer, ring drained per round like
@@ -266,6 +282,66 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- the same coordinator round over loopback TCP (dist::net):
+    //      length-prefixed frames + heartbeats + per-link supervisor
+    //      threads on top of the identical compute loop. The delta vs the
+    //      in-process channel entry is the transport overhead
+    //      (EXPERIMENTS.md §Loopback transport overhead); the fault/net
+    //      counters must all stay zero in a fault-free bench.
+    {
+        let q = Quadratics::new(4, 4096, 0.5, 0.1, &mut Rng::new(3));
+        let x0 = q.init(&mut Rng::new(3));
+        let svc = GradService::spawn_objective(Box::new(q), 3);
+        let handle = svc.handle();
+        let hub = NetHub::bind(NetCfg { listen: "127.0.0.1:0".into(), ..NetCfg::default() })?;
+        let workers = spawn_loopback_workers(4, hub.local_addr(), &handle, None);
+        let mut coord = Coordinator::spawn_net(
+            x0,
+            vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }],
+            handle,
+            CoordinatorCfg {
+                n_workers: 4,
+                worker_comp: CompSpec::Top { frac: 0.1, nat: false },
+                server_comp: CompSpec::Id,
+                beta: 0.9,
+                schedule: Schedule::constant(0.01),
+                transport: TransportMode::Encoded,
+                round_mode: RoundMode::Sync,
+                seed: 3,
+                use_ns_artifact: false,
+                fault: FaultPolicy::off(),
+                fault_plan: None,
+                start_step: 0,
+                tracer: Tracer::Noop,
+            },
+            hub,
+        )?;
+        let r = bench_fn("coordinator round over loopback tcp (4 workers, d=4096)", 3, iters, || {
+            coord.round().unwrap();
+        });
+        push(&mut entries, r, None);
+        let s = coord.round()?;
+        let m = coord.meter();
+        let e = entries.last_mut().unwrap();
+        e.comm = Some((s.w2s_bytes_per_worker, s.s2w_bytes));
+        e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+        e.net = Some((m.reconnects(), m.heartbeat_misses()));
+        let base = entries
+            .iter()
+            .find(|e| e.result.name == "coordinator round (4 workers, d=4096)")
+            .map(|e| e.result.median_s)
+            .unwrap_or(f64::NAN);
+        let n = entries.len();
+        println!(
+            "  -> loopback tcp overhead: {:+.2}% over in-process channels",
+            (entries[n - 1].result.median_s / base - 1.0) * 100.0
+        );
+        drop(coord); // sends stop frames, joins the hub's link threads
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+
     // ---- bidirectional compression + async pipelining: the same synthetic
     //      deployment under (s2w id vs top:0.1) x (sync vs async:1). The
     //      JSON rows carry per-round wire bytes in both directions; the
@@ -312,6 +388,7 @@ fn main() -> anyhow::Result<()> {
             let e = entries.last_mut().unwrap();
             e.comm = Some((w2s, s.s2w_bytes));
             e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+            e.net = Some((m.reconnects(), m.heartbeat_misses()));
             Ok(())
         };
         let s2w_comp = CompSpec::Top { frac: 0.1, nat: false };
@@ -384,8 +461,9 @@ fn main() -> anyhow::Result<()> {
         let speed = seq_s / r_dist.median_s;
         push(&mut entries, r_dist, None);
         let m = coord.meter();
-        entries.last_mut().unwrap().faults =
-            Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+        let e = entries.last_mut().unwrap();
+        e.faults = Some((m.stragglers(), m.respawns(), m.partial_rounds()));
+        e.net = Some((m.reconnects(), m.heartbeat_misses()));
         println!("  -> threaded coordinator round: {speed:.2}x vs sequential driver");
     }
 
@@ -470,6 +548,7 @@ fn main() -> anyhow::Result<()> {
             e.cloned = Some((per_round_cloned, per_round_asm));
             e.faults = Some((m1.stragglers, m1.respawns, m1.partial_rounds));
             e.shipped = Some(per_round_shipped);
+            e.net = Some((m1.reconnects, m1.heartbeat_misses));
         }
         if let Some(&(_, base)) = shard_times.first() {
             for &(shards, t) in &shard_times[1..] {
@@ -533,6 +612,9 @@ fn main() -> anyhow::Result<()> {
             }
             if let Some(shipped) = e.shipped {
                 o = o.put("snap_bytes_shipped_per_round", shipped);
+            }
+            if let Some((reconnects, misses)) = e.net {
+                o = o.put("reconnects", reconnects).put("heartbeat_misses", misses);
             }
             o.build()
         })

@@ -91,6 +91,12 @@ pub struct TrainConfig {
     pub checkpoint_dir: Option<String>,
     /// Resume from the latest checkpoint in `checkpoint_dir`.
     pub resume: bool,
+    /// Schedule shape: `warmup-cosine` (default) | `constant` |
+    /// `inv-sqrt-total` | `theory34` (see [`crate::spec::SchedulePlan`]).
+    pub schedule: String,
+    /// Transport of the leader/worker hop: `channel` (in-process, default)
+    /// or `tcp:ADDR` (the socket transport; see [`crate::dist::net`]).
+    pub transport: String,
 }
 
 impl Default for TrainConfig {
@@ -124,6 +130,8 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: false,
+            schedule: "warmup-cosine".into(),
+            transport: "channel".into(),
         }
     }
 }
@@ -166,6 +174,8 @@ impl TrainConfig {
             self.checkpoint_dir = Some(d);
         }
         self.resume = a.bool("resume", self.resume);
+        self.schedule = a.str("schedule", &self.schedule);
+        self.transport = a.str("transport", &self.transport);
         Ok(self)
     }
 
@@ -208,6 +218,8 @@ impl TrainConfig {
                 }
                 "checkpoint_dir" => c.checkpoint_dir = v.as_str().map(|s| s.to_string()),
                 "resume" => c.resume = v.as_bool().ok_or("resume: bool")?,
+                "schedule" => c.schedule = v.as_str().ok_or("schedule: string")?.into(),
+                "transport" => c.transport = v.as_str().ok_or("transport: string")?.into(),
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -286,6 +298,31 @@ mod tests {
         assert_eq!(c.checkpoint_every, 5);
         assert_eq!(c.checkpoint_dir.as_deref(), Some("out/ck"));
         assert!(c.resume);
+    }
+
+    #[test]
+    fn schedule_and_transport_keys_parse() {
+        let c = TrainConfig::from_json(
+            r#"{"schedule": "theory34", "transport": "tcp:127.0.0.1:4310"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.schedule, "theory34");
+        assert_eq!(c.transport, "tcp:127.0.0.1:4310");
+        let a = Args::parse(
+            ["--schedule", "inv-sqrt-total", "--transport", "tcp:0.0.0.0:9"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().override_from_args(&a).unwrap();
+        assert_eq!(c.schedule, "inv-sqrt-total");
+        assert_eq!(c.transport, "tcp:0.0.0.0:9");
+        // defaults validate to the default spec (nothing new required)
+        assert_eq!(TrainConfig::default().schedule, "warmup-cosine");
+        assert_eq!(TrainConfig::default().transport, "channel");
+        let err = TrainConfig { transport: "carrier-pigeon".into(), ..TrainConfig::default() }
+            .validate()
+            .unwrap_err();
+        assert!(err.mentions("transport"), "{err}");
     }
 
     #[test]

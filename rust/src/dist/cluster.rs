@@ -1051,6 +1051,8 @@ pub fn totals_consistent(meter: &ClusterMeter) -> bool {
         && t.stragglers == sum(|m| m.stragglers)
         && t.respawns == sum(|m| m.respawns)
         && t.partial_rounds == sum(|m| m.partial_rounds)
+        && t.reconnects == sum(|m| m.reconnects)
+        && t.heartbeat_misses == sum(|m| m.heartbeat_misses)
 }
 
 #[cfg(test)]
@@ -1170,6 +1172,8 @@ mod tests {
             stragglers: 1,
             respawns: 0,
             partial_rounds: 1,
+            reconnects: 0,
+            heartbeat_misses: 2,
         };
         let m1 = MeterSnapshot {
             w2s_per_worker: 7,
@@ -1184,6 +1188,8 @@ mod tests {
             stragglers: 2,
             respawns: 1,
             partial_rounds: 2,
+            reconnects: 3,
+            heartbeat_misses: 1,
         };
         let cm = ClusterMeter { per_shard: vec![m0, m1], root_bytes_cloned: 40 };
         let t = cm.totals();
@@ -1199,6 +1205,8 @@ mod tests {
         assert_eq!(t.stragglers, 3);
         assert_eq!(t.respawns, 1);
         assert_eq!(t.partial_rounds, 3);
+        assert_eq!(t.reconnects, 3);
+        assert_eq!(t.heartbeat_misses, 3);
         assert!(totals_consistent(&cm));
         let j = cm.to_json();
         assert!(j.get("totals").is_some());

@@ -66,6 +66,7 @@ use crate::trace::{Phase, Tracer};
 
 use super::comm::{FromWorker, ToWorker, Wire};
 use super::fault::{FaultKind, FaultPlan, FaultPolicy};
+use super::net::{ArmSpec, NetHub};
 use super::server::SpectralServer;
 use super::service::GradHandle;
 use super::{Meter, RoundMode, TransportMode};
@@ -213,6 +214,30 @@ impl WorkerLauncher {
     }
 }
 
+/// How a failed worker id comes back, per transport: relaunch an
+/// in-process thread, or re-open the id slot on the socket hub and wait
+/// for a connection — the old worker redialing, or a fresh late joiner —
+/// to claim it (elastic membership). Either way the replacement re-runs
+/// the `INIT_STEP` path against the current server shift.
+enum Respawner {
+    Thread(WorkerLauncher),
+    Net(Arc<NetHub>),
+}
+
+impl Respawner {
+    fn launch(
+        &self,
+        j: usize,
+        w0: &Layers,
+        label: &str,
+    ) -> Result<(Sender<ToWorker>, JoinHandle<()>)> {
+        match self {
+            Respawner::Thread(l) => l.launch(j, w0, label),
+            Respawner::Net(hub) => hub.reclaim(j, w0),
+        }
+    }
+}
+
 /// The leader of a threaded EF21-Muon deployment.
 pub struct Coordinator {
     server: ServerState,
@@ -221,15 +246,18 @@ pub struct Coordinator {
     mode: RoundMode,
     spectral: SpectralServer,
     handle: GradHandle,
-    meter: Meter,
+    /// Shared with the socket hub's reader threads in net deployments
+    /// (they count heartbeat misses), sole owner otherwise.
+    meter: Arc<Meter>,
     step: usize,
     pending: VecDeque<InFlight>,
     to_workers: Vec<Sender<ToWorker>>,
     from_workers: Receiver<FromWorker>,
     joins: Vec<JoinHandle<()>>,
     fault: FaultPolicy,
-    /// Present iff `fault.max_respawns > 0` (see [`WorkerLauncher`]).
-    launcher: Option<WorkerLauncher>,
+    /// Present iff `fault.max_respawns > 0` (see [`WorkerLauncher`] /
+    /// [`Respawner`]).
+    launcher: Option<Respawner>,
     /// Respawns consumed per worker id.
     attempts: Vec<u32>,
     /// Worker ids whose replacement's `Init` reply is still expected (and
@@ -245,6 +273,9 @@ pub struct Coordinator {
     /// unwind, so without the latch a retry could block on a reply that
     /// never comes).
     failed: Option<String>,
+    /// The socket hub backing a net deployment (closed on drop); `None`
+    /// for the in-process channel transport.
+    hub: Option<Arc<NetHub>>,
     tracer: Tracer,
 }
 
@@ -288,29 +319,9 @@ impl Coordinator {
         // keep the launcher (and its reply-channel sender) only when the
         // policy can respawn; otherwise drop it so `recv()` disconnects as
         // soon as every worker thread has exited (fail-stop detection)
-        let launcher = (cfg.fault.max_respawns > 0).then_some(launcher);
+        let launcher = (cfg.fault.max_respawns > 0).then_some(Respawner::Thread(launcher));
 
-        // initialization: collect G⁰ⱼ into id-slots, average in worker order
-        // (bit-identical to the sequential driver's init loop)
-        let mut g0: Vec<Option<Layers>> = (0..cfg.n_workers).map(|_| None).collect();
-        for _ in 0..cfg.n_workers {
-            match reply_rx.recv() {
-                Ok(FromWorker::Init { id, g0: g }) => g0[id] = Some(g),
-                Ok(FromWorker::Failed { id, err }) => {
-                    return Err(anyhow!("worker {id} failed during init: {err}"))
-                }
-                Ok(FromWorker::Round { id, .. }) => {
-                    return Err(anyhow!("worker {id} sent a round reply before init"))
-                }
-                Err(_) => return Err(anyhow!("worker channel closed during init")),
-            }
-        }
-        let mut g0_avg = layers::zeros_like(&x0);
-        let inv = 1.0 / cfg.n_workers as f32;
-        for g in g0.into_iter() {
-            layers::axpy(&mut g0_avg, inv, &g.expect("all init slots filled"));
-        }
-        server.set_g0(g0_avg);
+        server.set_g0(collect_g0(&reply_rx, cfg.n_workers, &x0)?);
 
         Ok(Coordinator {
             server,
@@ -319,7 +330,7 @@ impl Coordinator {
             mode: cfg.round_mode,
             spectral: SpectralServer::new(handle.clone(), cfg.use_ns_artifact),
             handle,
-            meter: Meter::new(),
+            meter: Arc::new(Meter::new()),
             step: cfg.start_step,
             pending: VecDeque::new(),
             to_workers,
@@ -331,6 +342,83 @@ impl Coordinator {
             respawning: HashSet::new(),
             owed: HashSet::new(),
             failed: None,
+            hub: None,
+            tracer: cfg.tracer,
+        })
+    }
+
+    /// Spawn a deployment over the socket transport: arm `hub` for
+    /// `cfg.n_workers` id slots, wait for that many connections to claim
+    /// them, then run the same Algorithm-3 initialization as
+    /// [`Coordinator::spawn`]. The hub's reader threads feed the same reply
+    /// channel the in-process workers would, so everything from the round
+    /// loop down is transport-agnostic — a loopback TCP run is bit-identical
+    /// to the channel run for the same cfg (asserted in
+    /// `rust/tests/scenario.rs`). `cfg.fault_plan` is ignored here: compute
+    /// faults are injected worker-side (`net::worker_loop` takes the plan),
+    /// transport faults via `net::NetCfg::flaky`.
+    pub fn spawn_net(
+        x0: Layers,
+        geometry: Vec<LayerGeometry>,
+        handle: GradHandle,
+        cfg: CoordinatorCfg,
+        hub: Arc<NetHub>,
+    ) -> Result<Coordinator> {
+        if cfg.n_workers == 0 {
+            return Err(anyhow!("n_workers must be >= 1"));
+        }
+        cfg.fault.validate().map_err(|e| anyhow!(e))?;
+        let mut server = ServerState::new(
+            x0.clone(),
+            geometry,
+            &cfg.server_comp,
+            cfg.n_workers,
+            cfg.seed,
+        );
+
+        let meter = Arc::new(Meter::new());
+        let (reply_tx, reply_rx) = channel::<FromWorker>();
+        hub.arm(ArmSpec {
+            n_workers: cfg.n_workers,
+            w0: x0.clone(),
+            comp: cfg.worker_comp,
+            beta: cfg.beta,
+            seed: cfg.seed,
+            reply_tx,
+            meter: meter.clone(),
+            tracer: cfg.tracer.clone(),
+        });
+        let claims = hub.wait_initial(cfg.n_workers)?;
+        let mut to_workers = Vec::with_capacity(cfg.n_workers);
+        let mut joins = Vec::with_capacity(cfg.n_workers);
+        for c in claims {
+            to_workers.push(c.tx);
+            joins.push(c.reader);
+        }
+        let launcher = (cfg.fault.max_respawns > 0).then_some(Respawner::Net(hub.clone()));
+
+        server.set_g0(collect_g0(&reply_rx, cfg.n_workers, &x0)?);
+
+        Ok(Coordinator {
+            server,
+            schedule: cfg.schedule,
+            transport: cfg.transport,
+            mode: cfg.round_mode,
+            spectral: SpectralServer::new(handle.clone(), cfg.use_ns_artifact),
+            handle,
+            meter,
+            step: cfg.start_step,
+            pending: VecDeque::new(),
+            to_workers,
+            from_workers: reply_rx,
+            joins,
+            fault: cfg.fault,
+            launcher,
+            attempts: vec![0; cfg.n_workers],
+            respawning: HashSet::new(),
+            owed: HashSet::new(),
+            failed: None,
+            hub: Some(hub),
             tracer: cfg.tracer,
         })
     }
@@ -738,6 +826,32 @@ impl Coordinator {
     }
 }
 
+/// Algorithm-3 initialization: collect every worker's `G⁰ⱼ` into id-slots
+/// and average in worker order (bit-identical to the sequential driver's
+/// init loop) — shared by the channel and socket spawn paths, which feed
+/// the same reply channel.
+fn collect_g0(reply_rx: &Receiver<FromWorker>, n: usize, x0: &Layers) -> Result<Layers> {
+    let mut g0: Vec<Option<Layers>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        match reply_rx.recv() {
+            Ok(FromWorker::Init { id, g0: g }) => g0[id] = Some(g),
+            Ok(FromWorker::Failed { id, err }) => {
+                return Err(anyhow!("worker {id} failed during init: {err}"))
+            }
+            Ok(FromWorker::Round { id, .. }) => {
+                return Err(anyhow!("worker {id} sent a round reply before init"))
+            }
+            Err(_) => return Err(anyhow!("worker channel closed during init")),
+        }
+    }
+    let mut g0_avg = layers::zeros_like(x0);
+    let inv = 1.0 / n as f32;
+    for g in g0.into_iter() {
+        layers::axpy(&mut g0_avg, inv, &g.expect("all init slots filled"));
+    }
+    Ok(g0_avg)
+}
+
 impl Drop for Coordinator {
     fn drop(&mut self) {
         for tx in &self.to_workers {
@@ -745,8 +859,13 @@ impl Drop for Coordinator {
         }
         // release the launcher's reply-channel sender with the rest
         self.launcher = None;
+        // net mode: the writer threads forward Stop and exit; the reader
+        // threads (these joins) see the clean EOF and exit silently
         for j in self.joins.drain(..) {
             let _ = j.join();
+        }
+        if let Some(hub) = self.hub.take() {
+            hub.close();
         }
     }
 }
@@ -772,8 +891,12 @@ impl Drop for PanicGuard {
 }
 
 /// Worker-thread main loop: init, then one EF21 local step per command.
-/// The `plan` hook injects deterministic faults for tests/benches.
-fn worker_main(
+/// The `plan` hook injects deterministic faults for tests/benches. Also
+/// the compute loop of a socket worker (`net::worker_loop` drives it over
+/// channels bridged to the TCP link) — one loop, every transport, which is
+/// what makes loopback ≡ channel a determinism contract rather than a
+/// coincidence.
+pub(crate) fn worker_main(
     mut state: WorkerState,
     rx: Receiver<ToWorker>,
     tx: Sender<FromWorker>,

@@ -53,6 +53,7 @@ pub mod cluster;
 pub mod comm;
 pub mod coordinator;
 pub mod fault;
+pub mod net;
 pub mod server;
 pub mod service;
 
@@ -156,6 +157,15 @@ pub struct Meter {
     pub respawns: AtomicU64,
     /// Rounds absorbed over a partial quorum (at least one slot skipped).
     pub partial_rounds: AtomicU64,
+    /// Socket links re-established: a worker re-dialing after a torn
+    /// connection, or a late joiner claiming a freed id slot
+    /// ([`net::NetHub`]). Zero on the in-memory channel transport and in
+    /// every fault-free socket run.
+    pub reconnects: AtomicU64,
+    /// Heartbeat windows that elapsed with no frame from a connected
+    /// worker ([`net::NetCfg::miss_threshold`] consecutive misses tear the
+    /// link down). Zero in a healthy run.
+    pub heartbeat_misses: AtomicU64,
 }
 
 impl Meter {
@@ -203,6 +213,16 @@ impl Meter {
         self.partial_rounds.load(Ordering::Relaxed)
     }
 
+    /// Socket links re-established so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Heartbeat misses observed so far.
+    pub fn heartbeat_misses(&self) -> u64 {
+        self.heartbeat_misses.load(Ordering::Relaxed)
+    }
+
     /// Record one issued broadcast (s2w direction).
     pub(crate) fn record_broadcast(&self, s2w: u64) {
         self.s2w_total.fetch_add(s2w, Ordering::Relaxed);
@@ -231,6 +251,16 @@ impl Meter {
         self.partial_rounds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one re-established socket link (re-dial or late join).
+    pub(crate) fn record_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one elapsed heartbeat window without a frame.
+    pub(crate) fn record_heartbeat_miss(&self) {
+        self.heartbeat_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Late w2s bytes from a straggler whose round already absorbed (its
     /// residual still lands in the server estimator, so the wire traffic is
     /// real — count it in the all-workers total, without advancing the
@@ -251,6 +281,8 @@ impl Meter {
             stragglers: self.stragglers(),
             respawns: self.respawns(),
             partial_rounds: self.partial_rounds(),
+            reconnects: self.reconnects(),
+            heartbeat_misses: self.heartbeat_misses(),
             // host memory-traffic counters are overlaid by the cluster
             // layer; a lone coordinator assembles nothing
             ..MeterSnapshot::default()
@@ -287,6 +319,10 @@ pub struct MeterSnapshot {
     pub respawns: u64,
     /// Rounds absorbed over a partial quorum.
     pub partial_rounds: u64,
+    /// Socket links re-established ([`net::NetHub`]).
+    pub reconnects: u64,
+    /// Heartbeat windows elapsed without a frame ([`net::NetCfg`]).
+    pub heartbeat_misses: u64,
 }
 
 impl MeterSnapshot {
@@ -303,6 +339,8 @@ impl MeterSnapshot {
         self.stragglers += other.stragglers;
         self.respawns += other.respawns;
         self.partial_rounds += other.partial_rounds;
+        self.reconnects += other.reconnects;
+        self.heartbeat_misses += other.heartbeat_misses;
         if first {
             self.rounds_issued = other.rounds_issued;
             self.rounds_absorbed = other.rounds_absorbed;
@@ -327,6 +365,8 @@ impl MeterSnapshot {
             .put("stragglers", self.stragglers)
             .put("respawns", self.respawns)
             .put("partial_rounds", self.partial_rounds)
+            .put("reconnects", self.reconnects)
+            .put("heartbeat_misses", self.heartbeat_misses)
             .build()
     }
 
@@ -356,6 +396,8 @@ impl MeterSnapshot {
             stragglers: opt("stragglers"),
             respawns: opt("respawns"),
             partial_rounds: opt("partial_rounds"),
+            reconnects: opt("reconnects"),
+            heartbeat_misses: opt("heartbeat_misses"),
         })
     }
 }
@@ -444,6 +486,8 @@ mod tests {
             stragglers: 910,
             respawns: 911,
             partial_rounds: 912,
+            reconnects: 913,
+            heartbeat_misses: 914,
         };
         let j = snap.to_json();
         let line = j.to_line();
@@ -460,6 +504,8 @@ mod tests {
             "stragglers",
             "respawns",
             "partial_rounds",
+            "reconnects",
+            "heartbeat_misses",
         ] {
             assert!(line.contains(key), "serialized snapshot must carry {key}: {line}");
         }
@@ -475,15 +521,20 @@ mod tests {
         m.record_respawn();
         m.record_partial_round();
         m.record_late_uplink(64);
+        m.record_reconnect();
+        m.record_heartbeat_miss();
+        m.record_heartbeat_miss();
         let snap = m.snapshot();
         assert_eq!(snap.stragglers, 2);
         assert_eq!(snap.respawns, 1);
         assert_eq!(snap.partial_rounds, 1);
+        assert_eq!(snap.reconnects, 1);
+        assert_eq!(snap.heartbeat_misses, 2);
         assert_eq!(snap.w2s_all, 64);
         assert_eq!(snap.w2s_per_worker, 0, "late bytes don't touch the per-worker unit");
         let back = MeterSnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back, snap);
-        // old snapshots without fault counters still parse, as zeros
+        // old snapshots without fault or net counters still parse, as zeros
         let legacy = Json::parse(
             r#"{"w2s_per_worker":1,"w2s_all":2,"s2w_total":3,
                 "rounds_issued":4,"rounds_absorbed":4}"#,
@@ -491,5 +542,6 @@ mod tests {
         .unwrap();
         let s = MeterSnapshot::from_json(&legacy).unwrap();
         assert_eq!((s.stragglers, s.respawns, s.partial_rounds), (0, 0, 0));
+        assert_eq!((s.reconnects, s.heartbeat_misses), (0, 0));
     }
 }

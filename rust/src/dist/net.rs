@@ -1,0 +1,1628 @@
+//! Socket transport: length-prefixed frames, per-worker connection
+//! supervisors, heartbeats, and elastic id-slot membership.
+//!
+//! ## Frame format
+//!
+//! Every hop is one frame: a `u32` little-endian payload length (bounded
+//! by [`MAX_FRAME`], checked *before* any allocation) followed by the
+//! payload — a one-byte tag plus the tag's fields. Variable-size fields
+//! (strings, codec buffers, layer tensors) carry their own length/shape
+//! prefixes, and the decoder bounds-checks every count against the bytes
+//! actually present before allocating, so a hostile length field yields a
+//! named error, never a panic or an attacker-sized allocation. Round and
+//! reply payloads carry the existing `codec::encode` buffers — the wire
+//! format of the compressed hops is exactly the channel transport's
+//! `Encoded` mode, which emits exactly `wire_bytes()` bytes and
+//! round-trips losslessly. That is what makes the loopback ≡ channel
+//! bitwise golden possible: same bytes, same decode, same trajectory.
+//!
+//! ## Supervision and heartbeats
+//!
+//! The leader runs two threads per connected worker: a writer that ships
+//! `ToWorker` commands (and injects [`FlakyPlan`] faults deterministically)
+//! and a reader that routes `Init`/`Reply` frames into the coordinator's
+//! existing reply channel. The worker sends a heartbeat whenever it has
+//! been idle for a heartbeat interval; the leader's reader counts
+//! consecutive receive timeouts and, at [`NetCfg::miss_threshold`], tears
+//! the link down. Heartbeats flow worker → leader only: the worker detects
+//! a dead leader by EOF / write errors, which is enough because the worker
+//! side is the one that redials.
+//!
+//! ## Failure model
+//!
+//! A dead link surfaces as the existing [`FromWorker::Failed`] path, so the
+//! PR-6 deadline/quorum/respawn machinery absorbs it instead of hanging:
+//! the coordinator skips the dead id's in-flight slots and asks the hub to
+//! *reclaim* the slot, which parks it as free (seeded with the current
+//! server shift `W`) until some connection — the old worker redialing, or
+//! a brand-new late joiner — claims it through the `Hello`/`Assign`
+//! handshake and re-runs the `INIT_STEP` re-init. An EF21-P worker that
+//! missed a broadcast cannot resume mid-stream (its shift mirror would
+//! desync), so reconnection is always re-initialization; determinism
+//! survives because a worker's compute identity lives in the slot id
+//! (RNG streams, batch sampling, estimator terms are all keyed on it),
+//! making it irrelevant *which* physical connection holds the slot.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::codec;
+use crate::linalg::matrix::{Layers, Matrix};
+use crate::opt::ef21::WorkerState;
+use crate::spec::CompSpec;
+use crate::trace::{Phase, Tracer};
+
+use super::comm::{FromWorker, ToWorker, Wire};
+use super::coordinator::worker_main;
+use super::fault::{FaultPlan, FaultPolicy};
+use super::service::GradHandle;
+use super::Meter;
+
+/// Upper bound on one frame's payload. Checked against the length prefix
+/// *before* allocating, so a corrupt or hostile prefix can never trigger an
+/// unbounded allocation. 256 MiB comfortably holds the dense `w0` layers of
+/// an `Assign` for any model this crate runs.
+pub const MAX_FRAME: usize = 1 << 28;
+
+const TAG_HELLO: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_INIT: u8 = 4;
+const TAG_ROUND: u8 = 5;
+const TAG_REPLY: u8 = 6;
+const TAG_FAILED: u8 = 7;
+const TAG_HEARTBEAT: u8 = 8;
+const TAG_STOP: u8 = 9;
+
+/// `Failed` frames truncate their error text to this many bytes — the
+/// message is diagnostic, and an unbounded string would let one failure
+/// report balloon a control frame.
+const MAX_ERR_BYTES: usize = 512;
+
+/// One wire message. `Hello`/`Assign`/`Reject` are the membership
+/// handshake; `Init`/`Round`/`Reply`/`Failed` mirror the channel
+/// transport's [`ToWorker`]/[`FromWorker`]; `Heartbeat`/`Stop` are link
+/// control.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker → leader, first frame on every connection. `prev` is the slot
+    /// id a reconnecting worker held before its link died; the hub prefers
+    /// to hand the same slot back when it is still free.
+    Hello { prev: Option<usize> },
+    /// Leader → worker: the claimed slot and everything a fresh
+    /// [`WorkerState`] needs — the deployment seed, momentum β, the w2s
+    /// compressor grammar, and the current server shift `W` to mirror.
+    Assign { id: usize, seed: u64, beta: f32, comp: String, w0: Layers },
+    /// Leader → worker: no free slot (the deployment is full).
+    Reject,
+    /// Worker → leader: the `INIT_STEP` gradient `G⁰ⱼ`.
+    Init { id: usize, g0: Layers },
+    /// Leader → worker: one round's broadcast as `codec::encode` buffers.
+    Round { step: usize, bufs: Vec<Vec<u8>> },
+    /// Worker → leader: one round's uplink as `codec::encode` buffers.
+    /// `bytes` is the metered w2s byte count (identical to the buffer sum
+    /// by the codec's exactness contract).
+    Reply { id: usize, step: usize, loss: f32, bytes: usize, bufs: Vec<Vec<u8>> },
+    /// Worker → leader: irrecoverable worker-side failure.
+    Failed { id: usize, err: String },
+    /// Worker → leader: alive, nothing to report.
+    Heartbeat,
+    /// Leader → worker: exit cleanly.
+    Stop,
+}
+
+impl Frame {
+    /// Compact tag name for error messages (a `Debug` render would dump
+    /// whole layer tensors).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Assign { .. } => "assign",
+            Frame::Reject => "reject",
+            Frame::Init { .. } => "init",
+            Frame::Round { .. } => "round",
+            Frame::Reply { .. } => "reply",
+            Frame::Failed { .. } => "failed",
+            Frame::Heartbeat => "heartbeat",
+            Frame::Stop => "stop",
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_layers(out: &mut Vec<u8>, layers: &Layers) {
+    put_u32(out, layers.len() as u32);
+    for m in layers {
+        put_u32(out, m.rows as u32);
+        put_u32(out, m.cols as u32);
+        for &x in &m.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn put_bufs(out: &mut Vec<u8>, bufs: &[Vec<u8>]) {
+    put_u32(out, bufs.len() as u32);
+    for b in bufs {
+        put_u32(out, b.len() as u32);
+        out.extend_from_slice(b);
+    }
+}
+
+/// Serialize one frame's payload (everything after the length prefix).
+pub fn encode_payload(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Hello { prev } => {
+            out.push(TAG_HELLO);
+            match prev {
+                None => out.push(0),
+                Some(id) => {
+                    out.push(1);
+                    put_u64(&mut out, *id as u64);
+                }
+            }
+        }
+        Frame::Assign { id, seed, beta, comp, w0 } => {
+            out.push(TAG_ASSIGN);
+            put_u64(&mut out, *id as u64);
+            put_u64(&mut out, *seed);
+            put_u32(&mut out, beta.to_bits());
+            put_str(&mut out, comp);
+            put_layers(&mut out, w0);
+        }
+        Frame::Reject => out.push(TAG_REJECT),
+        Frame::Init { id, g0 } => {
+            out.push(TAG_INIT);
+            put_u64(&mut out, *id as u64);
+            put_layers(&mut out, g0);
+        }
+        Frame::Round { step, bufs } => {
+            out.push(TAG_ROUND);
+            put_u64(&mut out, *step as u64);
+            put_bufs(&mut out, bufs);
+        }
+        Frame::Reply { id, step, loss, bytes, bufs } => {
+            out.push(TAG_REPLY);
+            put_u64(&mut out, *id as u64);
+            put_u64(&mut out, *step as u64);
+            put_u32(&mut out, loss.to_bits());
+            put_u64(&mut out, *bytes as u64);
+            put_bufs(&mut out, bufs);
+        }
+        Frame::Failed { id, err } => {
+            out.push(TAG_FAILED);
+            put_u64(&mut out, *id as u64);
+            let b = err.as_bytes();
+            let cut = b.len().min(MAX_ERR_BYTES);
+            put_u32(&mut out, cut as u32);
+            out.extend_from_slice(&b[..cut]);
+        }
+        Frame::Heartbeat => out.push(TAG_HEARTBEAT),
+        Frame::Stop => out.push(TAG_STOP),
+    }
+    out
+}
+
+/// Bounds-checked payload cursor: every read names what it wanted and how
+/// many bytes were actually left, and nothing is allocated from a declared
+/// count before the bytes backing it are known to be present.
+struct Take<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Take<'a> {
+    fn new(buf: &'a [u8]) -> Take<'a> {
+        Take { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        let rem = self.buf.len() - self.pos;
+        if n > rem {
+            return Err(format!(
+                "frame: {what} needs {n} byte(s), {rem} left of a {}-byte payload",
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let b = self.bytes(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// A `u64` field used as an index/size on this machine.
+    fn idx(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| format!("frame: {what} {v} overflows usize"))
+    }
+
+    /// Reject trailing garbage: a valid payload is consumed exactly.
+    fn done(self) -> Result<(), String> {
+        let rem = self.buf.len() - self.pos;
+        if rem != 0 {
+            return Err(format!("frame: {rem} trailing byte(s) after the payload"));
+        }
+        Ok(())
+    }
+}
+
+fn take_str(t: &mut Take, what: &str) -> Result<String, String> {
+    let len = t.u32(what)? as usize;
+    let b = t.bytes(len, what)?;
+    Ok(String::from_utf8_lossy(b).into_owned())
+}
+
+fn take_bufs(t: &mut Take, what: &str) -> Result<Vec<Vec<u8>>, String> {
+    let n = t.u32(what)? as usize;
+    // grown buffer by buffer — never pre-sized from a claimed count
+    let mut bufs = Vec::new();
+    for _ in 0..n {
+        let len = t.u32(what)? as usize;
+        bufs.push(t.bytes(len, what)?.to_vec());
+    }
+    Ok(bufs)
+}
+
+fn take_layers(t: &mut Take, what: &str) -> Result<Layers, String> {
+    let n = t.u32(what)? as usize;
+    let mut layers = Vec::new();
+    for _ in 0..n {
+        let rows = t.u32(what)? as usize;
+        let cols = t.u32(what)? as usize;
+        let elems = rows
+            .checked_mul(cols)
+            .ok_or_else(|| format!("frame: {what} shape {rows}x{cols} overflows"))?;
+        let nbytes = elems
+            .checked_mul(4)
+            .ok_or_else(|| format!("frame: {what} shape {rows}x{cols} overflows"))?;
+        // bounds-checked before the f32 buffer is allocated
+        let raw = t.bytes(nbytes, what)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        layers.push(Matrix::from_vec(rows, cols, data));
+    }
+    Ok(layers)
+}
+
+/// Deserialize one frame payload. Total: every truncated, bit-flipped, or
+/// hostile-length input returns a named error (`rust/src/dist/net.rs`
+/// tests fuzz this), and no allocation is sized by unvalidated input.
+pub fn decode_payload(buf: &[u8]) -> Result<Frame, String> {
+    let mut t = Take::new(buf);
+    let tag = t.u8("frame tag")?;
+    let frame = match tag {
+        TAG_HELLO => {
+            let flag = t.u8("hello prev flag")?;
+            let prev = match flag {
+                0 => None,
+                1 => Some(t.idx("hello prev id")?),
+                other => return Err(format!("frame: hello prev flag must be 0/1, got {other}")),
+            };
+            Frame::Hello { prev }
+        }
+        TAG_ASSIGN => Frame::Assign {
+            id: t.idx("assign id")?,
+            seed: t.u64("assign seed")?,
+            beta: f32::from_bits(t.u32("assign beta")?),
+            comp: take_str(&mut t, "assign comp spec")?,
+            w0: take_layers(&mut t, "assign w0")?,
+        },
+        TAG_REJECT => Frame::Reject,
+        TAG_INIT => Frame::Init {
+            id: t.idx("init id")?,
+            g0: take_layers(&mut t, "init g0")?,
+        },
+        TAG_ROUND => Frame::Round {
+            step: t.idx("round step")?,
+            bufs: take_bufs(&mut t, "round bufs")?,
+        },
+        TAG_REPLY => Frame::Reply {
+            id: t.idx("reply id")?,
+            step: t.idx("reply step")?,
+            loss: f32::from_bits(t.u32("reply loss")?),
+            bytes: t.idx("reply bytes")?,
+            bufs: take_bufs(&mut t, "reply bufs")?,
+        },
+        TAG_FAILED => Frame::Failed {
+            id: t.idx("failed id")?,
+            err: take_str(&mut t, "failed err")?,
+        },
+        TAG_HEARTBEAT => Frame::Heartbeat,
+        TAG_STOP => Frame::Stop,
+        other => return Err(format!("frame: unknown tag {other}")),
+    };
+    t.done()?;
+    Ok(frame)
+}
+
+/// Why a [`Link::recv`] produced no frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinkErr {
+    /// Nothing arrived within the read timeout *at a frame boundary* — the
+    /// peer may just be idle; heartbeat accounting decides.
+    Timeout,
+    /// The link is gone (EOF, I/O error, or a stall in the middle of a
+    /// frame — after which the stream can never be re-synchronized).
+    Closed(String),
+    /// The bytes arrived but are not a valid frame.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for LinkErr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinkErr::Timeout => write!(f, "link idle past the read timeout"),
+            LinkErr::Closed(s) | LinkErr::Corrupt(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Write one frame: `u32` LE payload length, then the payload, one
+/// `write_all` + flush.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    let payload = encode_payload(frame);
+    debug_assert!(payload.len() <= MAX_FRAME, "oversized {} frame", frame.kind());
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut buf, payload.len() as u32);
+    buf.extend_from_slice(&payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Fill `buf` completely. `at_boundary` marks the first bytes of a frame:
+/// only there is a timeout with *zero bytes read* a clean [`LinkErr::Timeout`]
+/// (peer idle). A timeout or EOF mid-frame is [`LinkErr::Closed`] — once a
+/// frame is half-read the stream can never be re-aligned, so pretending the
+/// link is merely idle would corrupt every later frame.
+fn fill(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> Result<(), LinkErr> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(LinkErr::Closed(if got == 0 && at_boundary {
+                    "peer closed the connection".into()
+                } else {
+                    "peer closed mid-frame".into()
+                }))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if got == 0 && at_boundary {
+                    return Err(LinkErr::Timeout);
+                }
+                return Err(LinkErr::Closed("stream stalled mid-frame".into()));
+            }
+            Err(e) => return Err(LinkErr::Closed(format!("read error: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. The length prefix is validated against [`MAX_FRAME`]
+/// before the payload buffer is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, LinkErr> {
+    let mut head = [0u8; 4];
+    fill(r, &mut head, true)?;
+    let len = u32::from_le_bytes(head) as usize;
+    if len > MAX_FRAME {
+        return Err(LinkErr::Corrupt(format!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte bound"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    fill(r, &mut payload, false)?;
+    decode_payload(&payload).map_err(LinkErr::Corrupt)
+}
+
+/// One frame-granular duplex endpoint. Both the in-memory channel pair and
+/// a TCP stream implement it, so everything above the frame layer is
+/// transport-agnostic.
+pub trait Link: Send {
+    fn send(&mut self, frame: &Frame) -> Result<(), String>;
+    fn recv(&mut self) -> Result<Frame, LinkErr>;
+}
+
+/// A [`Link`] over a TCP stream (timeouts are configured on the stream by
+/// whoever dialed/accepted it).
+pub struct TcpLink {
+    stream: TcpStream,
+}
+
+impl TcpLink {
+    pub fn new(stream: TcpStream) -> TcpLink {
+        TcpLink { stream }
+    }
+
+    pub fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&mut self, frame: &Frame) -> Result<(), String> {
+        write_frame(&mut self.stream, frame)
+            .map_err(|e| format!("link write ({}): {e}", frame.kind()))
+    }
+
+    fn recv(&mut self) -> Result<Frame, LinkErr> {
+        read_frame(&mut self.stream)
+    }
+}
+
+/// A [`Link`] over in-process channels — the loopback reference the TCP
+/// endpoint must be indistinguishable from at the frame layer.
+pub struct ChannelLink {
+    tx: Sender<Frame>,
+    rx: Receiver<Frame>,
+    idle: Duration,
+}
+
+impl ChannelLink {
+    /// A crossed pair of endpoints; `idle` plays the role of the socket
+    /// read timeout.
+    pub fn pair(idle: Duration) -> (ChannelLink, ChannelLink) {
+        let (a2b_tx, a2b_rx) = channel();
+        let (b2a_tx, b2a_rx) = channel();
+        (
+            ChannelLink { tx: a2b_tx, rx: b2a_rx, idle },
+            ChannelLink { tx: b2a_tx, rx: a2b_rx, idle },
+        )
+    }
+}
+
+impl Link for ChannelLink {
+    fn send(&mut self, frame: &Frame) -> Result<(), String> {
+        self.tx
+            .send(frame.clone())
+            .map_err(|_| "link peer dropped".to_string())
+    }
+
+    fn recv(&mut self) -> Result<Frame, LinkErr> {
+        match self.rx.recv_timeout(self.idle) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Timeout) => Err(LinkErr::Timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(LinkErr::Closed("link peer dropped".into()))
+            }
+        }
+    }
+}
+
+/// Transport-level fault to inject on one broadcast frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlakyKind {
+    /// Swallow the frame and sever the link (the worker sees EOF) — a
+    /// dropped connection mid-broadcast.
+    DropFrame,
+    /// Hold the frame for this many milliseconds before sending.
+    DelayFrameMs(u64),
+    /// Send a frame whose length prefix promises the full payload but whose
+    /// body stops halfway — the peer gets a named mid-frame decode error.
+    TruncateFrame,
+}
+
+/// Deterministic transport-fault schedule, keyed by `(worker, step)` like
+/// [`FaultPlan`] — every network failure mode is reproducible without a
+/// real flaky network. Consulted by the leader-side writer when it ships
+/// that worker's `Round { step }` frame.
+#[derive(Debug, Clone, Default)]
+pub struct FlakyPlan {
+    at: HashMap<(usize, usize), FlakyKind>,
+}
+
+impl FlakyPlan {
+    pub fn new() -> FlakyPlan {
+        FlakyPlan::default()
+    }
+
+    /// Builder: inject `kind` on worker `worker`'s broadcast of round
+    /// `step`.
+    pub fn with(mut self, worker: usize, step: usize, kind: FlakyKind) -> FlakyPlan {
+        self.at.insert((worker, step), kind);
+        self
+    }
+
+    pub fn at(&self, worker: usize, step: usize) -> Option<FlakyKind> {
+        self.at.get(&(worker, step)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.at.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at.is_empty()
+    }
+}
+
+/// Configuration of the leader-side socket endpoint.
+#[derive(Debug, Clone)]
+pub struct NetCfg {
+    /// Listen address, e.g. `"127.0.0.1:0"` (port 0 = kernel-assigned;
+    /// read it back via [`NetHub::local_addr`]).
+    pub listen: String,
+    /// Worker heartbeat interval; the leader-side read timeout matches it.
+    pub heartbeat_ms: u64,
+    /// Consecutive silent heartbeat intervals before the leader declares
+    /// the link dead.
+    pub miss_threshold: u32,
+    /// Connect-phase I/O timeout (handshake reads/writes).
+    pub io_timeout_ms: u64,
+    /// Unused by the hub itself; documented here so both ends share one
+    /// config vocabulary.
+    pub connect_timeout_ms: u64,
+    /// How long [`NetHub::reclaim`] waits for some connection to claim a
+    /// freed slot before the respawn is declared failed.
+    pub claim_deadline_ms: u64,
+    /// Deterministic transport-fault injection (tests/benches only).
+    pub flaky: Option<Arc<FlakyPlan>>,
+}
+
+impl Default for NetCfg {
+    fn default() -> NetCfg {
+        NetCfg {
+            listen: "127.0.0.1:0".into(),
+            heartbeat_ms: 500,
+            miss_threshold: 3,
+            io_timeout_ms: 2_000,
+            connect_timeout_ms: 1_000,
+            claim_deadline_ms: 10_000,
+            flaky: None,
+        }
+    }
+}
+
+/// One id slot in the hub's membership registry.
+enum SlotState {
+    /// Unclaimed. `w0` is the shift a claimant's [`WorkerState`] must
+    /// mirror (X⁰ initially, the current server `W` after a reclaim);
+    /// `reclaim` marks re-opened slots so the reconnect meter counts only
+    /// genuine reconnections, not first joins.
+    Free { w0: Layers, reclaim: bool },
+    Claimed,
+}
+
+/// A successfully assigned connection, queued for the coordinator to
+/// collect ([`NetHub::wait_initial`] / [`NetHub::reclaim`]).
+pub(crate) struct Claim {
+    pub(crate) id: usize,
+    /// Command sender feeding the connection's writer thread.
+    pub(crate) tx: Sender<ToWorker>,
+    /// The connection's reader thread (joined on coordinator drop).
+    pub(crate) reader: JoinHandle<()>,
+}
+
+/// Everything the hub needs to run handshakes for one deployment. Armed by
+/// `Coordinator::spawn_net` once the reply channel and meter exist.
+pub(crate) struct ArmSpec {
+    pub(crate) n_workers: usize,
+    pub(crate) w0: Layers,
+    pub(crate) comp: CompSpec,
+    pub(crate) beta: f32,
+    pub(crate) seed: u64,
+    pub(crate) reply_tx: Sender<FromWorker>,
+    pub(crate) meter: Arc<Meter>,
+    pub(crate) tracer: Tracer,
+}
+
+struct Armed {
+    comp: CompSpec,
+    beta: f32,
+    seed: u64,
+    reply_tx: Sender<FromWorker>,
+    meter: Arc<Meter>,
+    tracer: Tracer,
+    slots: Vec<SlotState>,
+    claims: VecDeque<Claim>,
+}
+
+#[derive(Default)]
+struct HubState {
+    armed: Option<Armed>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+/// The leader-side socket endpoint: accepts connections, runs the
+/// `Hello`/`Assign` membership handshake against an id-slot registry, and
+/// supervises one writer + reader thread per claimed slot.
+pub struct NetHub {
+    cfg: NetCfg,
+    local: SocketAddr,
+    state: Mutex<HubState>,
+    cv: Condvar,
+    closing: AtomicBool,
+}
+
+impl NetHub {
+    /// Bind the listen address and start accepting. Connections arriving
+    /// before the hub is armed wait in their handshake; the address (with
+    /// the kernel-assigned port resolved) is available immediately, so
+    /// callers can bind port 0, read [`NetHub::local_addr`], and point
+    /// workers at it before `Coordinator::spawn_net` runs.
+    pub fn bind(cfg: NetCfg) -> Result<Arc<NetHub>> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow!("binding {}: {e}", cfg.listen))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| anyhow!("reading bound address: {e}"))?;
+        let hub = Arc::new(NetHub {
+            cfg,
+            local,
+            state: Mutex::new(HubState::default()),
+            cv: Condvar::new(),
+            closing: AtomicBool::new(false),
+        });
+        let h = hub.clone();
+        let join = std::thread::Builder::new()
+            .name("efmuon-net-accept".into())
+            .spawn(move || h.accept_loop(listener))
+            .map_err(|e| anyhow!("spawning accept thread: {e}"))?;
+        hub.lock().accept_join = Some(join);
+        Ok(hub)
+    }
+
+    /// The bound address (kernel-assigned port resolved).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// A worker thread holding this lock may have panicked (injected
+    /// faults do exactly that); the registry it protects is updated in
+    /// full before any wait, so a poisoned guard's data is still coherent.
+    fn lock(&self) -> MutexGuard<'_, HubState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    fn is_closing(&self) -> bool {
+        self.closing.load(Ordering::SeqCst)
+    }
+
+    fn accept_loop(&self, listener: TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.is_closing() {
+                        return;
+                    }
+                    // a failed handshake abandons only that connection
+                    let _ = self.handshake(stream);
+                }
+                Err(_) => {
+                    if self.is_closing() {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Arm the hub for one deployment: open `n_workers` free slots seeded
+    /// with X⁰ and store everything handshakes need.
+    pub(crate) fn arm(&self, spec: ArmSpec) {
+        let mut st = self.lock();
+        st.armed = Some(Armed {
+            comp: spec.comp,
+            beta: spec.beta,
+            seed: spec.seed,
+            reply_tx: spec.reply_tx,
+            meter: spec.meter,
+            tracer: spec.tracer,
+            slots: (0..spec.n_workers)
+                .map(|_| SlotState::Free { w0: spec.w0.clone(), reclaim: false })
+                .collect(),
+            claims: VecDeque::new(),
+        });
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wait until `n` connections have claimed slots, then hand their
+    /// claims over in id order.
+    pub(crate) fn wait_initial(&self, n: usize) -> Result<Vec<Claim>> {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.claim_deadline_ms);
+        let mut st = self.lock();
+        loop {
+            let have = st.armed.as_ref().map_or(0, |a| a.claims.len());
+            if have >= n {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!(
+                    "only {have} of {n} worker(s) connected to {} within {} ms",
+                    self.local,
+                    self.cfg.claim_deadline_ms
+                ));
+            }
+            let (g, _) = match self.cv.wait_timeout(st, deadline - now) {
+                Ok(v) => v,
+                Err(p) => p.into_inner(),
+            };
+            st = g;
+        }
+        let armed = st.armed.as_mut().expect("armed with claims");
+        let mut claims: Vec<Claim> = armed.claims.drain(..).collect();
+        claims.sort_by_key(|c| c.id);
+        Ok(claims)
+    }
+
+    /// Re-open slot `id` (its link died) seeded with the current server
+    /// shift, and wait for some connection — the old worker redialing or a
+    /// fresh late joiner — to claim it.
+    pub(crate) fn reclaim(&self, id: usize, w0: &Layers) -> Result<(Sender<ToWorker>, JoinHandle<()>)> {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.claim_deadline_ms);
+        let mut st = self.lock();
+        {
+            let armed = st.armed.as_mut().expect("reclaim on an armed hub");
+            armed.slots[id] = SlotState::Free { w0: w0.clone(), reclaim: true };
+        }
+        drop(st);
+        self.cv.notify_all();
+        let mut st = self.lock();
+        loop {
+            let armed = st.armed.as_mut().expect("reclaim on an armed hub");
+            if let Some(pos) = armed.claims.iter().position(|c| c.id == id) {
+                let claim = armed.claims.remove(pos).expect("position just found");
+                return Ok((claim.tx, claim.reader));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!(
+                    "no worker claimed freed slot {id} within {} ms",
+                    self.cfg.claim_deadline_ms
+                ));
+            }
+            let (g, _) = match self.cv.wait_timeout(st, deadline - now) {
+                Ok(v) => v,
+                Err(p) => p.into_inner(),
+            };
+            st = g;
+        }
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent; the
+    /// coordinator's `Drop` calls it, but callers whose `spawn_net` failed
+    /// should call it themselves.
+    pub fn close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+        // wake the accept loop out of its blocking accept()
+        let _ = TcpStream::connect(self.local);
+        self.cv.notify_all();
+        let join = self.lock().accept_join.take();
+        if let Some(j) = join {
+            let _ = j.join();
+        }
+    }
+
+    /// Run the membership handshake on one fresh connection: read `Hello`,
+    /// wait for the hub to be armed, pick a free slot (preferring the
+    /// claimant's previous id), send `Assign` (or `Reject` when full), and
+    /// start the slot's writer/reader supervisor threads.
+    fn handshake(&self, stream: TcpStream) -> Result<()> {
+        let io = Duration::from_millis(self.cfg.io_timeout_ms);
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(io))
+            .map_err(|e| anyhow!("handshake read timeout: {e}"))?;
+        stream
+            .set_write_timeout(Some(io))
+            .map_err(|e| anyhow!("handshake write timeout: {e}"))?;
+        let mut reader = stream;
+        let mut writer = reader
+            .try_clone()
+            .map_err(|e| anyhow!("cloning handshake stream: {e}"))?;
+        let prev = match read_frame(&mut reader) {
+            Ok(Frame::Hello { prev }) => prev,
+            Ok(f) => return Err(anyhow!("expected hello, got {} frame", f.kind())),
+            Err(e) => return Err(anyhow!("reading hello: {e}")),
+        };
+
+        // wait for arm (bounded polls so close() can abort the wait)
+        let mut st = self.lock();
+        while st.armed.is_none() {
+            if self.is_closing() {
+                return Err(anyhow!("hub closing before arm"));
+            }
+            let (g, _) = match self.cv.wait_timeout(st, Duration::from_millis(50)) {
+                Ok(v) => v,
+                Err(p) => p.into_inner(),
+            };
+            st = g;
+        }
+        let armed = st.armed.as_mut().expect("armed checked above");
+
+        // prefer the claimant's previous slot, else the lowest free one
+        let free = |s: &SlotState| matches!(s, SlotState::Free { .. });
+        let slot = prev
+            .filter(|&p| p < armed.slots.len() && free(&armed.slots[p]))
+            .or_else(|| armed.slots.iter().position(free));
+        let id = match slot {
+            Some(id) => id,
+            None => {
+                drop(st);
+                write_frame(&mut writer, &Frame::Reject)
+                    .map_err(|e| anyhow!("writing reject: {e}"))?;
+                return Ok(());
+            }
+        };
+        let taken = std::mem::replace(&mut armed.slots[id], SlotState::Claimed);
+        let (w0, reclaimed) = match taken {
+            SlotState::Free { w0, reclaim } => (w0, reclaim),
+            SlotState::Claimed => unreachable!("slot was free"),
+        };
+        let assign = Frame::Assign {
+            id,
+            seed: armed.seed,
+            beta: armed.beta,
+            comp: armed.comp.spec(),
+            w0,
+        };
+        let reply_tx = armed.reply_tx.clone();
+        let meter = armed.meter.clone();
+        let tracer = armed.tracer.clone();
+        drop(st);
+
+        if let Err(e) = write_frame(&mut writer, &assign) {
+            // hand the slot back so another connection can claim it
+            let w0 = match assign {
+                Frame::Assign { w0, .. } => w0,
+                _ => unreachable!("assign frame"),
+            };
+            let mut st = self.lock();
+            if let Some(armed) = st.armed.as_mut() {
+                armed.slots[id] = SlotState::Free { w0, reclaim: reclaimed };
+            }
+            return Err(anyhow!("writing assign to worker {id}: {e}"));
+        }
+
+        let (tx, rx) = channel::<ToWorker>();
+        let link_closing = Arc::new(AtomicBool::new(false));
+        let flaky = self.cfg.flaky.clone();
+        let wclosing = link_closing.clone();
+        std::thread::Builder::new()
+            .name(format!("efmuon-net-send-{id}"))
+            .spawn(move || writer_loop(writer, rx, id, flaky, wclosing))
+            .map_err(|e| anyhow!("spawning writer for worker {id}: {e}"))?;
+        let ctx = ReaderCtx {
+            stream: reader,
+            id,
+            reply_tx,
+            meter: meter.clone(),
+            tracer: tracer.clone(),
+            miss_threshold: self.cfg.miss_threshold,
+            closing: link_closing,
+        };
+        let reader = std::thread::Builder::new()
+            .name(format!("efmuon-net-recv-{id}"))
+            .spawn(move || reader_loop(ctx))
+            .map_err(|e| anyhow!("spawning reader for worker {id}: {e}"))?;
+
+        let mut st = self.lock();
+        if reclaimed {
+            // counted only after a successful Assign: the meter reports
+            // completed reconnections, not dial attempts
+            meter.record_reconnect();
+            tracer.stamp(Phase::NetReconnect, 0, Some(id));
+        } else {
+            tracer.stamp(Phase::NetConnect, 0, Some(id));
+        }
+        if let Some(armed) = st.armed.as_mut() {
+            armed.claims.push_back(Claim { id, tx, reader });
+        }
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+}
+
+/// `Wire` → codec buffers for the socket hop. `Encoded` passes through;
+/// `Counted` (the in-memory analytic mode) is encoded here — the codec
+/// emits exactly `wire_bytes()` bytes and round-trips losslessly, so byte
+/// meters and trajectories stay bit-identical to the channel run in either
+/// transport mode.
+fn encode_wire(wire: Wire) -> Vec<Vec<u8>> {
+    match wire {
+        Wire::Encoded(bufs) => bufs,
+        Wire::Counted(msgs) => msgs.iter().map(codec::encode).collect(),
+    }
+}
+
+/// Leader-side per-link writer: ships `ToWorker` commands as frames,
+/// injecting [`FlakyPlan`] faults deterministically. Exits on `Stop`, on a
+/// write error (the reader will notice the dead link), or when the
+/// coordinator replaces this link's sender (channel disconnect).
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<ToWorker>,
+    id: usize,
+    flaky: Option<Arc<FlakyPlan>>,
+    closing: Arc<AtomicBool>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        let (step, broadcast) = match cmd {
+            ToWorker::Stop => {
+                // mark the link as deliberately closing *before* the Stop
+                // frame, so the reader treats the resulting EOF as clean
+                closing.store(true, Ordering::SeqCst);
+                let _ = write_frame(&mut stream, &Frame::Stop);
+                return;
+            }
+            ToWorker::Round { step, broadcast } => (step, broadcast),
+        };
+        let fault = flaky.as_ref().and_then(|p| p.at(id, step));
+        let bufs = encode_wire(broadcast);
+        match fault {
+            Some(FlakyKind::DropFrame) => {
+                // swallow the frame and sever the link: the worker sees
+                // EOF mid-round and redials; the reader sees EOF too and
+                // routes the failure into the respawn path
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            Some(FlakyKind::TruncateFrame) => {
+                let payload = encode_payload(&Frame::Round { step, bufs });
+                let cut = payload.len() / 2;
+                let mut buf = Vec::with_capacity(4 + cut);
+                put_u32(&mut buf, payload.len() as u32);
+                buf.extend_from_slice(&payload[..cut]);
+                // promise the full payload, deliver half: the peer gets a
+                // named mid-frame error, never a desync
+                let _ = stream.write_all(&buf).and_then(|_| stream.flush());
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            Some(FlakyKind::DelayFrameMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            None => {}
+        }
+        if write_frame(&mut stream, &Frame::Round { step, bufs }).is_err() {
+            return;
+        }
+    }
+}
+
+/// Everything the leader-side reader thread needs (bundled — the thread
+/// outlives the handshake that configured it).
+struct ReaderCtx {
+    stream: TcpStream,
+    id: usize,
+    reply_tx: Sender<FromWorker>,
+    meter: Arc<Meter>,
+    tracer: Tracer,
+    miss_threshold: u32,
+    closing: Arc<AtomicBool>,
+}
+
+/// Route a dead link into the coordinator's existing failure path — unless
+/// the link is deliberately closing (Stop sent), in which case the EOF is
+/// the expected clean shutdown.
+fn fail_link(ctx: &ReaderCtx, err: String) {
+    if ctx.closing.load(Ordering::SeqCst) {
+        return;
+    }
+    let _ = ctx.reply_tx.send(FromWorker::Failed { id: ctx.id, err });
+}
+
+/// Leader-side per-link reader: forwards worker frames into the reply
+/// channel, counts heartbeat misses, and converts any link death into one
+/// [`FromWorker::Failed`].
+fn reader_loop(mut ctx: ReaderCtx) {
+    let threshold = ctx.miss_threshold.max(1);
+    let mut misses = 0u32;
+    loop {
+        match read_frame(&mut ctx.stream) {
+            Ok(Frame::Heartbeat) => misses = 0,
+            Ok(Frame::Init { id, g0 }) => {
+                misses = 0;
+                if id != ctx.id {
+                    fail_link(&ctx, format!("init frame for id {id} on link {}", ctx.id));
+                    return;
+                }
+                if ctx.reply_tx.send(FromWorker::Init { id, g0 }).is_err() {
+                    return;
+                }
+            }
+            Ok(Frame::Reply { id, step, loss, bytes, bufs }) => {
+                misses = 0;
+                if id != ctx.id {
+                    fail_link(&ctx, format!("reply frame for id {id} on link {}", ctx.id));
+                    return;
+                }
+                let uplink = Wire::Encoded(bufs);
+                let msg = FromWorker::Round { id, step, loss, bytes, uplink };
+                if ctx.reply_tx.send(msg).is_err() {
+                    return;
+                }
+            }
+            Ok(Frame::Failed { id: _, err }) => {
+                // worker-reported failure (compute error or panic guard):
+                // attribute it to this link's slot regardless of the tag
+                fail_link(&ctx, err);
+                return;
+            }
+            Ok(f) => {
+                fail_link(&ctx, format!("unexpected {} frame from worker", f.kind()));
+                return;
+            }
+            Err(LinkErr::Timeout) => {
+                misses += 1;
+                ctx.meter.record_heartbeat_miss();
+                ctx.tracer.stamp(Phase::NetMiss, 0, Some(ctx.id));
+                if misses >= threshold {
+                    fail_link(&ctx, format!("worker missed {misses} heartbeat(s)"));
+                    return;
+                }
+            }
+            Err(e @ (LinkErr::Closed(_) | LinkErr::Corrupt(_))) => {
+                fail_link(&ctx, format!("link lost: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Configuration of one worker process/thread dialing a leader.
+#[derive(Debug, Clone)]
+pub struct WorkerCfg {
+    /// Leader address, e.g. `"127.0.0.1:4310"`.
+    pub connect: String,
+    /// Send a heartbeat after this long with nothing to report; also the
+    /// worker-side read timeout.
+    pub heartbeat_ms: u64,
+    pub connect_timeout_ms: u64,
+    /// How long to wait for a slot assignment after `Hello` (the leader may
+    /// not be armed yet).
+    pub assign_timeout_ms: u64,
+    /// Redial budget for *failed* dials (refused, rejected, no assignment).
+    /// A lost established link redials immediately with a fresh budget.
+    pub redial_attempts: u32,
+    /// Base of the exponential redial backoff
+    /// ([`FaultPolicy::backoff_for`]).
+    pub backoff_ms: u64,
+}
+
+impl Default for WorkerCfg {
+    fn default() -> WorkerCfg {
+        WorkerCfg {
+            connect: "127.0.0.1:4310".into(),
+            heartbeat_ms: 500,
+            connect_timeout_ms: 1_000,
+            assign_timeout_ms: 30_000,
+            redial_attempts: 40,
+            backoff_ms: 20,
+        }
+    }
+}
+
+/// How one dialed session ended without error.
+enum SessionEnd {
+    /// The leader sent `Stop`: the run is over.
+    Stopped,
+    /// The link died mid-run; redial immediately and ask for the same slot.
+    LinkLost { id: usize },
+}
+
+/// Why one dial/session attempt failed.
+enum SessionErr {
+    /// Transient (connection refused, slot rejected, handshake timeout):
+    /// retry with backoff, bounded by [`WorkerCfg::redial_attempts`].
+    Retry(String),
+    /// The worker itself is broken (compute error or panic, unusable
+    /// assignment): redialing would re-fail, so the process dies — killed
+    /// workers are the *coordinator's* respawn policy to absorb.
+    Fatal(String),
+}
+
+/// Worker entry point: dial the leader, run EF21 rounds until `Stop`,
+/// redialing with exponential backoff whenever the link (not the compute)
+/// fails. Each reconnection re-runs the `INIT_STEP` handshake against the
+/// leader's current shift — an EF21-P worker that missed a broadcast can
+/// only rejoin by re-initializing.
+pub fn worker_loop(
+    cfg: &WorkerCfg,
+    handle: &GradHandle,
+    plan: Option<Arc<FaultPlan>>,
+) -> Result<()> {
+    let policy = FaultPolicy { backoff_ms: cfg.backoff_ms, ..FaultPolicy::off() };
+    let mut prev: Option<usize> = None;
+    let mut attempt: u32 = 0;
+    loop {
+        match dial_session(cfg, handle, plan.clone(), prev) {
+            Ok(SessionEnd::Stopped) => return Ok(()),
+            Ok(SessionEnd::LinkLost { id }) => {
+                // an established link died: redial at once (the leader is
+                // likely still there) and prefer the slot we held
+                prev = Some(id);
+                attempt = 0;
+            }
+            Err(SessionErr::Fatal(e)) => return Err(anyhow!(e)),
+            Err(SessionErr::Retry(e)) => {
+                attempt += 1;
+                if attempt > cfg.redial_attempts {
+                    return Err(anyhow!(
+                        "giving up after {} dial attempt(s): {e}",
+                        cfg.redial_attempts
+                    ));
+                }
+                let backoff = policy.backoff_for(attempt);
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff));
+                }
+            }
+        }
+    }
+}
+
+/// A claimed slot assignment, parsed off the wire.
+struct Session {
+    id: usize,
+    seed: u64,
+    beta: f32,
+    comp: String,
+    w0: Layers,
+}
+
+/// One dial: connect, handshake (`Hello` → `Assign`/`Reject`), then run
+/// the session until it ends.
+fn dial_session(
+    cfg: &WorkerCfg,
+    handle: &GradHandle,
+    plan: Option<Arc<FaultPlan>>,
+    prev: Option<usize>,
+) -> Result<SessionEnd, SessionErr> {
+    let addr = cfg
+        .connect
+        .to_socket_addrs()
+        .map_err(|e| SessionErr::Fatal(format!("resolving {}: {e}", cfg.connect)))?
+        .next()
+        .ok_or_else(|| SessionErr::Fatal(format!("{} resolves to no address", cfg.connect)))?;
+    let connect_to = Duration::from_millis(cfg.connect_timeout_ms);
+    let stream = TcpStream::connect_timeout(&addr, connect_to)
+        .map_err(|e| SessionErr::Retry(format!("connecting {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(cfg.heartbeat_ms)))
+        .map_err(|e| SessionErr::Retry(format!("setting read timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(connect_to))
+        .map_err(|e| SessionErr::Retry(format!("setting write timeout: {e}")))?;
+    let mut link = TcpLink::new(stream);
+    link.send(&Frame::Hello { prev }).map_err(SessionErr::Retry)?;
+    let deadline = Instant::now() + Duration::from_millis(cfg.assign_timeout_ms);
+    let sess = loop {
+        match link.recv() {
+            Ok(Frame::Assign { id, seed, beta, comp, w0 }) => {
+                break Session { id, seed, beta, comp, w0 }
+            }
+            Ok(Frame::Reject) => return Err(SessionErr::Retry("no free worker slot".into())),
+            Ok(f) => {
+                return Err(SessionErr::Retry(format!(
+                    "expected assign, got {} frame",
+                    f.kind()
+                )))
+            }
+            Err(LinkErr::Timeout) => {
+                if Instant::now() >= deadline {
+                    return Err(SessionErr::Retry(format!(
+                        "no slot assignment within {} ms",
+                        cfg.assign_timeout_ms
+                    )));
+                }
+            }
+            Err(e) => return Err(SessionErr::Retry(format!("awaiting assignment: {e}"))),
+        }
+    };
+    run_session(link.into_stream(), sess, handle, plan, cfg.heartbeat_ms)
+}
+
+/// Run one assigned session: the unchanged channel-transport
+/// [`worker_main`] on a compute thread, an uplink pump that ships its
+/// replies (heartbeating when idle), and the downlink read loop on this
+/// thread. The compute loop is byte-for-byte the in-process worker — that
+/// is the loopback ≡ channel determinism contract.
+fn run_session(
+    stream: TcpStream,
+    sess: Session,
+    handle: &GradHandle,
+    plan: Option<Arc<FaultPlan>>,
+    heartbeat_ms: u64,
+) -> Result<SessionEnd, SessionErr> {
+    let comp = CompSpec::parse(&sess.comp)
+        .map_err(|e| SessionErr::Fatal(format!("leader sent a bad comp spec: {e}")))?;
+    let id = sess.id;
+    let state = WorkerState::new(id, &sess.w0, &comp, sess.beta, sess.seed);
+    let h = handle.for_worker(id);
+    let (to_tx, to_rx) = channel::<ToWorker>();
+    let (from_tx, from_rx) = channel::<FromWorker>();
+    let compute = std::thread::Builder::new()
+        .name(format!("efmuon-net-compute-{id}"))
+        .spawn(move || worker_main(state, to_rx, from_tx, h, plan))
+        .map_err(|e| SessionErr::Fatal(format!("spawning compute thread: {e}")))?;
+
+    let mut wstream = stream
+        .try_clone()
+        .map_err(|e| SessionErr::Fatal(format!("cloning session stream: {e}")))?;
+    let hb = Duration::from_millis(heartbeat_ms);
+    let writer = std::thread::Builder::new()
+        .name(format!("efmuon-net-uplink-{id}"))
+        .spawn(move || loop {
+            let frame = match from_rx.recv_timeout(hb) {
+                Ok(FromWorker::Init { id, g0 }) => Frame::Init { id, g0 },
+                Ok(FromWorker::Round { id, step, loss, bytes, uplink }) => {
+                    Frame::Reply { id, step, loss, bytes, bufs: encode_wire(uplink) }
+                }
+                Ok(FromWorker::Failed { id, err }) => Frame::Failed { id, err },
+                Err(RecvTimeoutError::Timeout) => Frame::Heartbeat,
+                Err(RecvTimeoutError::Disconnected) => return,
+            };
+            if write_frame(&mut wstream, &frame).is_err() {
+                return;
+            }
+        })
+        .map_err(|e| SessionErr::Fatal(format!("spawning uplink thread: {e}")))?;
+
+    let mut rstream = stream;
+    let mut end = loop {
+        match read_frame(&mut rstream) {
+            Ok(Frame::Round { step, bufs }) => {
+                let cmd = ToWorker::Round { step, broadcast: Wire::Encoded(bufs) };
+                if to_tx.send(cmd).is_err() {
+                    break Err(SessionErr::Fatal("compute thread exited".into()));
+                }
+            }
+            Ok(Frame::Stop) => {
+                let _ = to_tx.send(ToWorker::Stop);
+                break Ok(SessionEnd::Stopped);
+            }
+            Ok(Frame::Heartbeat) => {}
+            Ok(_) => break Ok(SessionEnd::LinkLost { id }),
+            Err(LinkErr::Timeout) => {
+                // an idle downlink is legal (the leader may be evaluating);
+                // only a dead compute thread makes waiting pointless — its
+                // Failed reply has already been pumped upstream
+                if compute.is_finished() {
+                    break Err(SessionErr::Fatal("compute thread exited".into()));
+                }
+            }
+            Err(_) => break Ok(SessionEnd::LinkLost { id }),
+        }
+    };
+    let _ = rstream.shutdown(Shutdown::Both);
+    drop(to_tx);
+    if compute.join().is_err() {
+        end = Err(SessionErr::Fatal("compute thread panicked".into()));
+    }
+    let _ = writer.join();
+    end
+}
+
+/// Spawn `n` in-process worker threads dialing `addr` — the loopback
+/// deployment used by the scenario goldens and the hotpath bench. The
+/// `plan` injects *compute* faults worker-side (transport faults live in
+/// [`NetCfg::flaky`] on the leader).
+pub fn spawn_loopback_workers(
+    n: usize,
+    addr: SocketAddr,
+    handle: &GradHandle,
+    plan: Option<Arc<FaultPlan>>,
+) -> Vec<JoinHandle<Result<()>>> {
+    (0..n)
+        .map(|i| {
+            let h = handle.clone();
+            let p = plan.clone();
+            let cfg = WorkerCfg {
+                connect: addr.to_string(),
+                heartbeat_ms: 100,
+                ..WorkerCfg::default()
+            };
+            std::thread::Builder::new()
+                .name(format!("efmuon-net-worker-{i}"))
+                .spawn(move || worker_loop(&cfg, &h, p))
+                .expect("spawning loopback worker thread")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_layers() -> Layers {
+        vec![
+            Matrix::from_vec(2, 3, vec![1.0, -2.5, 0.0, -0.0, 3.4e38, 1.2e-38]),
+            Matrix::from_vec(1, 1, vec![-7.25]),
+        ]
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { prev: None },
+            Frame::Hello { prev: Some(3) },
+            Frame::Assign {
+                id: 2,
+                seed: 99,
+                beta: 0.9,
+                comp: "top:0.3+nat".into(),
+                w0: sample_layers(),
+            },
+            Frame::Reject,
+            Frame::Init { id: 1, g0: sample_layers() },
+            Frame::Round { step: 7, bufs: vec![vec![1, 2, 3], vec![], vec![255]] },
+            Frame::Reply {
+                id: 0,
+                step: 12,
+                loss: -0.125,
+                bytes: 4096,
+                bufs: vec![vec![9, 8, 7]],
+            },
+            Frame::Failed { id: 5, err: "worker thread panicked".into() },
+            Frame::Heartbeat,
+            Frame::Stop,
+        ]
+    }
+
+    #[test]
+    fn frame_roundtrip_every_variant() {
+        for f in sample_frames() {
+            let payload = encode_payload(&f);
+            assert_eq!(decode_payload(&payload).unwrap(), f, "payload roundtrip {}", f.kind());
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &f).unwrap();
+            let mut cursor: &[u8] = &wire;
+            assert_eq!(read_frame(&mut cursor).unwrap(), f, "stream roundtrip {}", f.kind());
+            assert!(cursor.is_empty(), "stream consumed exactly for {}", f.kind());
+        }
+    }
+
+    #[test]
+    fn truncated_prefixes_decode_to_errors_never_panic() {
+        for f in sample_frames() {
+            let payload = encode_payload(&f);
+            for cut in 0..payload.len() {
+                let r = decode_payload(&payload[..cut]);
+                assert!(r.is_err(), "{} truncated to {cut} bytes must not decode", f.kind());
+            }
+            // trailing garbage is rejected too
+            let mut extended = payload;
+            extended.push(0);
+            let e = decode_payload(&extended).unwrap_err();
+            assert!(e.contains("trailing"), "unexpected error: {e}");
+        }
+    }
+
+    #[test]
+    fn bit_flipped_payloads_never_panic_and_name_their_errors() {
+        let payload = encode_payload(&Frame::Reply {
+            id: 1,
+            step: 4,
+            loss: 0.5,
+            bytes: 128,
+            bufs: vec![vec![1, 2, 3, 4], vec![5, 6]],
+        });
+        for i in 0..payload.len() {
+            for mask in [0x01u8, 0x80u8] {
+                let mut mutated = payload.clone();
+                mutated[i] ^= mask;
+                // some flips still decode (e.g. in float bits) — the
+                // property is: never a panic, and every failure is named
+                if let Err(e) = decode_payload(&mutated) {
+                    assert!(!e.is_empty());
+                }
+            }
+        }
+        let e = decode_payload(&[0xff]).unwrap_err();
+        assert!(e.contains("unknown tag"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn hostile_length_prefixes_error_without_allocating() {
+        // frame length prefix beyond MAX_FRAME: rejected before any alloc
+        let mut cursor: &[u8] = &[0xff, 0xff, 0xff, 0xff];
+        match read_frame(&mut cursor) {
+            Err(LinkErr::Corrupt(e)) => assert!(e.contains("exceeds"), "unexpected: {e}"),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+
+        // buffer count claiming u32::MAX entries with an empty body
+        let mut p = vec![TAG_ROUND];
+        put_u64(&mut p, 0);
+        put_u32(&mut p, u32::MAX);
+        let e = decode_payload(&p).unwrap_err();
+        assert!(e.contains("needs"), "unexpected: {e}");
+
+        // layer shape whose element-byte count overflows usize
+        let mut p = vec![TAG_INIT];
+        put_u64(&mut p, 0);
+        put_u32(&mut p, 1);
+        put_u32(&mut p, u32::MAX);
+        put_u32(&mut p, u32::MAX);
+        let e = decode_payload(&p).unwrap_err();
+        assert!(e.contains("overflows"), "unexpected: {e}");
+    }
+
+    #[test]
+    fn failed_frame_truncates_oversized_error_text() {
+        let f = Frame::Failed { id: 1, err: "x".repeat(10_000) };
+        let payload = encode_payload(&f);
+        assert!(payload.len() < 600);
+        match decode_payload(&payload).unwrap() {
+            Frame::Failed { err, .. } => assert_eq!(err.len(), MAX_ERR_BYTES),
+            other => panic!("expected failed, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn channel_and_tcp_links_speak_the_same_frames() {
+        let frames = sample_frames();
+
+        let (mut a, mut b) = ChannelLink::pair(Duration::from_millis(200));
+        for f in &frames {
+            a.send(f).unwrap();
+            assert_eq!(b.recv().unwrap(), *f);
+        }
+        assert_eq!(b.recv(), Err(LinkErr::Timeout));
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .unwrap();
+        let mut c = TcpLink::new(client);
+        let mut s = TcpLink::new(server);
+        for f in &frames {
+            c.send(f).unwrap();
+            assert_eq!(s.recv().unwrap(), *f);
+        }
+        assert_eq!(s.recv(), Err(LinkErr::Timeout));
+    }
+
+    #[test]
+    fn reader_supervisor_counts_misses_and_fails_the_link() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        let meter = Arc::new(Meter::new());
+        let (reply_tx, reply_rx) = channel();
+        let ctx = ReaderCtx {
+            stream: server,
+            id: 3,
+            reply_tx,
+            meter: meter.clone(),
+            tracer: Tracer::Noop,
+            miss_threshold: 2,
+            closing: Arc::new(AtomicBool::new(false)),
+        };
+        reader_loop(ctx); // the client never speaks: two misses, then death
+        match reply_rx.recv().unwrap() {
+            FromWorker::Failed { id, err } => {
+                assert_eq!(id, 3);
+                assert!(err.contains("missed 2"), "unexpected error: {err}");
+            }
+            FromWorker::Init { .. } | FromWorker::Round { .. } => {
+                panic!("expected a Failed reply")
+            }
+        }
+        assert_eq!(meter.heartbeat_misses(), 2);
+        drop(client);
+    }
+
+    #[test]
+    fn flaky_plan_is_keyed_by_worker_and_step() {
+        let plan = FlakyPlan::new()
+            .with(1, 3, FlakyKind::DropFrame)
+            .with(2, 5, FlakyKind::DelayFrameMs(40));
+        assert_eq!(plan.at(1, 3), Some(FlakyKind::DropFrame));
+        assert_eq!(plan.at(2, 5), Some(FlakyKind::DelayFrameMs(40)));
+        assert_eq!(plan.at(1, 4), None);
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert!(FlakyPlan::new().is_empty());
+    }
+
+    #[test]
+    fn hub_assigns_the_free_slot_and_rejects_when_full() {
+        let hub = NetHub::bind(NetCfg {
+            listen: "127.0.0.1:0".into(),
+            heartbeat_ms: 100,
+            miss_threshold: 1000,
+            io_timeout_ms: 2_000,
+            claim_deadline_ms: 5_000,
+            ..NetCfg::default()
+        })
+        .unwrap();
+        let addr = hub.local_addr();
+        let (reply_tx, _reply_rx) = channel();
+        hub.arm(ArmSpec {
+            n_workers: 1,
+            w0: sample_layers(),
+            comp: CompSpec::parse("top:0.3").unwrap(),
+            beta: 0.9,
+            seed: 7,
+            reply_tx,
+            meter: Arc::new(Meter::new()),
+            tracer: Tracer::Noop,
+        });
+
+        let dial = || {
+            let s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(2_000))).unwrap();
+            s
+        };
+        let mut first = TcpLink::new(dial());
+        first.send(&Frame::Hello { prev: None }).unwrap();
+        match first.recv().unwrap() {
+            Frame::Assign { id, seed, beta, comp, w0 } => {
+                assert_eq!(id, 0);
+                assert_eq!(seed, 7);
+                assert_eq!(beta, 0.9);
+                assert_eq!(comp, "top:0.3");
+                assert_eq!(w0, sample_layers());
+            }
+            other => panic!("expected assign, got {}", other.kind()),
+        }
+
+        let mut second = TcpLink::new(dial());
+        second.send(&Frame::Hello { prev: None }).unwrap();
+        match second.recv().unwrap() {
+            Frame::Reject => {}
+            other => panic!("expected reject, got {}", other.kind()),
+        }
+        hub.close();
+    }
+}

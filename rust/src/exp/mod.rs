@@ -483,22 +483,35 @@ fn rate_points(
         } else {
             1.0
         };
-        let sched = Schedule {
-            base: eta,
-            warmup: 0,
-            total: k,
-            min_frac: 1.0,
-            kind: if stochastic { ScheduleKind::Theory34 } else { ScheduleKind::InvSqrtTotal },
-        };
+        // the theory schedules are SchedulePlan shapes now, so this goes
+        // through the same validated builder as every training run
+        // (bit-identical to the former hand-built Schedule literal —
+        // golden-tested in spec::run)
+        let run = RunBuilder::new()
+            .steps(k)
+            .worker_comp("top:0.25")
+            .server_comp("id")
+            .beta(beta)
+            .lr(eta)
+            .warmup(0)
+            .min_lr_frac(1.0)
+            .schedule_kind(if stochastic {
+                ScheduleKind::Theory34
+            } else {
+                ScheduleKind::InvSqrtTotal
+            })
+            .seed(seed)
+            .build()
+            .map_err(|e| anyhow::Error::msg(e.to_string()))?;
         let mut opt = Ef21MuonSeq::new(
             obj,
             geometry.clone(),
-            "top:0.25",
-            "id",
-            beta,
-            sched,
+            run.worker_comp,
+            run.server_comp,
+            run.beta,
+            run.schedule(),
             stochastic,
-            seed,
+            run.seed,
         )
         .map_err(anyhow::Error::msg)?;
         let trace = opt.run(obj, k);

@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   train            run distributed EF21-Muon pretraining on the AOT model
+//!   serve            train over the socket transport: listen on --listen,
+//!                    wait for `efmuon worker` processes to dial in
+//!   worker           join a serving leader: dial --connect, claim a slot,
+//!                    compute rounds until the leader sends stop
 //!   config           validate the resolved config, print it as canonical
 //!                    JSON (lossless round trip; presets via --preset)
 //!   eval             evaluate the loaded init params (artifact smoke test)
@@ -13,7 +17,7 @@
 //!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
 //!   divergence       the §2 divergence demo (naive DCGD vs EF)
 //!   results          render the experiment history (list/status/table/
-//!                    dat/gnuplot over results/results.jsonl)
+//!                    dat/gnuplot/latex over results/results.jsonl)
 //!   help             print the flag reference
 //!
 //! Every flag of `TrainConfig` is a `--flag value` override; see
@@ -44,6 +48,8 @@ fn main() {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "worker" => cmd_worker(args),
         "config" => cmd_config(args),
         "eval" => cmd_eval(args),
         "info" => cmd_info(args),
@@ -77,6 +83,16 @@ COMMANDS:
                       --fault-policy off|deadline:MS,quorum:F,respawns:R,backoff:MS
                       --checkpoint-every K --checkpoint-dir DIR --resume
                       --trace out/trace.jsonl (round-phase span events)
+                      --schedule warmup-cosine|constant|inv-sqrt-total|theory34
+                      --transport channel|tcp:ADDR
+  serve        `train` over the socket transport: bind --listen ADDR
+               (default 127.0.0.1:4310), wait for `workers` efmuon worker
+               processes to dial in, then run the identical round loop.
+               Loopback TCP is bit-identical to the channel deployment.
+  worker       join a serving leader: --connect ADDR plus the train flags
+               that shape the local gradient service (--artifacts, --seed,
+               ...). Claims a free id slot, computes rounds, heartbeats,
+               and redials with exponential backoff if the link drops.
   config       resolve (--config/--preset/flags), validate eagerly with
                field-path errors, and print the canonical JSON spec — its
                output is itself a valid --config file (lossless round trip)
@@ -99,6 +115,7 @@ COMMANDS:
                  results table <key>         full per-run history
                  results dat <key>           gnuplot-ready columns
                  results gnuplot <key>       plotting script
+                 results latex               LaTeX tables (one/experiment)
                (--store PATH overrides the store location)
 
 COMPRESSOR SPECS (both directions: --comp for w2s, --server-comp for s2w):
@@ -159,12 +176,54 @@ fn base_config(args: &Args) -> Result<TrainConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     warn_unknown(args);
+    run_train(&cfg)
+}
+
+/// `efmuon serve --listen ADDR`: exactly `train`, with the transport forced
+/// to the socket deployment. The leader binds `ADDR`, waits for `workers`
+/// `efmuon worker` processes to dial in, and runs the identical round loop
+/// (loopback TCP is bit-identical to the in-process channel run).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let listen = args.str("listen", "127.0.0.1:4310");
+    let mut cfg = base_config(args)?;
+    warn_unknown(args);
+    cfg.transport = format!("tcp:{listen}");
+    println!("serving on {listen}: waiting for {} worker(s) to dial in", cfg.workers);
+    run_train(&cfg)
+}
+
+/// `efmuon worker --connect ADDR`: dial a serving leader, claim a free id
+/// slot via the init handshake, and run the worker compute loop over the
+/// socket until the leader sends stop. Reconnects with exponential backoff
+/// if the link drops; the leader re-initializes us against its current
+/// shift.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args.str("connect", "127.0.0.1:4310");
+    let cfg = base_config(args)?;
+    warn_unknown(args);
+    let spec = cfg.validate()?;
+    let svc = efmuon::dist::service::GradService::spawn_pjrt(
+        spec.artifacts.clone(),
+        spec.workers,
+        spec.corpus_tokens,
+        spec.eval_batches,
+        spec.seed,
+    )?;
+    let handle = svc.handle();
+    println!("worker: dialing {connect} (artifacts {}, seed {})", spec.artifacts, spec.seed);
+    let wcfg = efmuon::dist::net::WorkerCfg { connect, ..Default::default() };
+    efmuon::dist::net::worker_loop(&wcfg, &handle, None)?;
+    println!("worker: leader sent stop; exiting");
+    Ok(())
+}
+
+fn run_train(cfg: &TrainConfig) -> Result<()> {
     println!(
         "training: {} workers, {} shard(s), {} steps, w2s={}, s2w={}, rounds={}, lr={}, beta={}",
         cfg.workers, cfg.shards, cfg.steps, cfg.worker_comp, cfg.server_comp, cfg.round_mode,
         cfg.lr, cfg.beta
     );
-    let report = efmuon::train::train(&cfg)?;
+    let report = efmuon::train::train(cfg)?;
     println!(
         "final eval loss {:.4} after {} steps ({:.1}s, {:.2} s/step)",
         report.final_eval_loss,
@@ -384,9 +443,10 @@ fn cmd_results(args: &Args) -> Result<()> {
         "table" => println!("{}", results::render_history(&recs, key()?)),
         "dat" => print!("{}", results::render_dat(&recs, key()?)),
         "gnuplot" => print!("{}", results::render_gnuplot(key()?)),
+        "latex" => print!("{}", results::render_latex(&recs)),
         other => {
             return Err(anyhow!(
-                "unknown results action {other:?}; try list | status | table | dat | gnuplot"
+                "unknown results action {other:?}; try list | status | table | dat | gnuplot | latex"
             ))
         }
     }

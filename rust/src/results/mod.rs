@@ -392,9 +392,16 @@ pub fn render_status(records: &[Record]) -> String {
     )
 }
 
-/// `results table KEY`: the full history of one experiment, one row per
-/// (run, timing).
-pub fn render_history(records: &[Record], experiment: &str) -> String {
+/// Column headers of the per-experiment history (shared by
+/// `results table` and `results latex`).
+const HISTORY_HEADERS: [&str; 8] =
+    ["run", "commit", "timing", "median ms", "mad ms", "min ms", "iters", "rounds"];
+
+/// The shared row model of `results table` and `results latex`: one row
+/// per (run, timing) of one experiment, in append order. Both renderers
+/// consume exactly these rows, so the LaTeX output can never drift from
+/// the plain table.
+fn history_rows(records: &[Record], experiment: &str) -> Vec<Vec<String>> {
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (run, r) in records.iter().filter(|r| r.experiment == experiment).enumerate() {
         for t in &r.timings {
@@ -415,13 +422,71 @@ pub fn render_history(records: &[Record], experiment: &str) -> String {
             ]);
         }
     }
+    rows
+}
+
+/// `results table KEY`: the full history of one experiment, one row per
+/// (run, timing).
+pub fn render_history(records: &[Record], experiment: &str) -> String {
+    let rows = history_rows(records, experiment);
     if rows.is_empty() {
         return format!("no runs recorded for experiment {experiment:?}\n");
     }
-    crate::metrics::render_table(
-        &["run", "commit", "timing", "median ms", "mad ms", "min ms", "iters", "rounds"],
-        &rows,
-    )
+    crate::metrics::render_table(&HISTORY_HEADERS, &rows)
+}
+
+/// Minimal LaTeX escaping for text cells (experiment keys, timing names,
+/// commit hashes).
+fn latex_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' | '%' | '$' | '#' | '_' | '{' | '}' => {
+                out.push('\\');
+                out.push(c);
+            }
+            '\\' => out.push_str("\\textbackslash{}"),
+            '~' => out.push_str("\\textasciitilde{}"),
+            '^' => out.push_str("\\textasciicircum{}"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// `results latex`: the whole stored history as LaTeX — one `tabular` per
+/// experiment, built from the exact row model of `results table`
+/// ([`history_rows`]), so a paper draft can cite the stored evidence
+/// verbatim. Plain `\hline` rules — no package dependencies.
+pub fn render_latex(records: &[Record]) -> String {
+    let keys = experiments(records);
+    if keys.is_empty() {
+        return "% no experiment history recorded\n".to_string();
+    }
+    let mut out = String::from("% generated by `efmuon results latex`\n");
+    for key in keys {
+        let rows = history_rows(records, key);
+        if rows.is_empty() {
+            out.push_str(&format!("% experiment {}: no timings recorded\n", latex_escape(key)));
+            continue;
+        }
+        out.push_str(&format!(
+            "\n\\begin{{table}}[ht]\n  \\centering\n  \\caption{{Experiment \
+             \\texttt{{{}}}: stored timing history}}\n  \
+             \\begin{{tabular}}{{lllrrrrr}}\n    \\hline\n",
+            latex_escape(key)
+        ));
+        out.push_str(&format!(
+            "    {} \\\\\n    \\hline\n",
+            HISTORY_HEADERS.map(latex_escape).join(" & ")
+        ));
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|c| latex_escape(c)).collect();
+            out.push_str(&format!("    {} \\\\\n", cells.join(" & ")));
+        }
+        out.push_str("    \\hline\n  \\end{tabular}\n\\end{table}\n");
+    }
+    out
 }
 
 /// `results dat KEY`: the same history as whitespace-separated columns
@@ -531,6 +596,20 @@ mod tests {
         assert_eq!(dat.lines().count(), 3, "header + 2 runs: {dat}");
         assert!(render_gnuplot("hotpath").contains("hotpath.dat"));
         assert!(render_history(&recs, "missing").contains("no runs"));
+    }
+
+    #[test]
+    fn latex_shares_the_table_row_model() {
+        let mut r1 = Record::new("hot_path");
+        r1.commit = "aaaaaaaaaaaa".into();
+        let recs = vec![r1.timing(&bench("coordinator round", 0.010)), Record::new("empty_key")];
+        let tex = render_latex(&recs);
+        assert!(tex.contains("\\begin{tabular}{lllrrrrr}"), "{tex}");
+        assert!(tex.contains("hot\\_path"), "underscores must be escaped: {tex}");
+        assert!(tex.contains("0 & aaaaaaaaa & coordinator round & 10.000"), "{tex}");
+        assert!(tex.contains("% experiment empty\\_key: no timings recorded"), "{tex}");
+        assert_eq!(tex.matches("\\end{table}").count(), 1, "one tabular per experiment: {tex}");
+        assert_eq!(render_latex(&[]), "% no experiment history recorded\n");
     }
 
     #[test]

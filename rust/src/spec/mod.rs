@@ -40,7 +40,10 @@ mod run;
 
 pub use comp::{CompSpec, IntoCompSpec, FIGURE_SPECS, PAPER_COMPRESSOR_SPECS, S2W_SPECS};
 pub use preset::Preset;
-pub use run::{lmo_name, parse_lmo, FieldError, GeomSpec, RunBuilder, RunSpec, SchedulePlan, SpecError};
+pub use run::{
+    lmo_name, parse_lmo, parse_schedule_kind, schedule_kind_name, FieldError, GeomSpec, LinkSpec,
+    RunBuilder, RunSpec, SchedulePlan, SpecError,
+};
 
 /// Round scheduling descriptor. [`crate::dist::RoundMode`] is already a
 /// parsed, validated value type; the spec layer re-exports it as the

@@ -17,7 +17,7 @@ use crate::dist::fault::FaultPolicy;
 use crate::dist::{RoundMode, TransportMode};
 use crate::lmo::LmoKind;
 use crate::model::Group;
-use crate::opt::{LayerGeometry, Schedule};
+use crate::opt::{LayerGeometry, Schedule, ScheduleKind};
 use crate::trace::Tracer;
 use crate::util::json::{Json, JsonObj};
 
@@ -102,6 +102,74 @@ pub fn parse_lmo(s: &str) -> Result<LmoKind, String> {
     }
 }
 
+/// Canonical name of a schedule shape (round-trips through
+/// [`parse_schedule_kind`]).
+pub fn schedule_kind_name(kind: ScheduleKind) -> &'static str {
+    match kind {
+        ScheduleKind::WarmupCosine => "warmup-cosine",
+        ScheduleKind::Constant => "constant",
+        ScheduleKind::InvSqrtTotal => "inv-sqrt-total",
+        ScheduleKind::Theory34 => "theory34",
+    }
+}
+
+/// Parse a schedule-shape name (see [`schedule_kind_name`]).
+pub fn parse_schedule_kind(s: &str) -> Result<ScheduleKind, String> {
+    match s {
+        "warmup-cosine" => Ok(ScheduleKind::WarmupCosine),
+        "constant" => Ok(ScheduleKind::Constant),
+        "inv-sqrt-total" => Ok(ScheduleKind::InvSqrtTotal),
+        "theory34" => Ok(ScheduleKind::Theory34),
+        other => Err(format!(
+            "unknown schedule {other:?} (expected warmup-cosine | constant | inv-sqrt-total | theory34)"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LinkSpec — the transport axis (in-process channels or the socket hop)
+// ---------------------------------------------------------------------------
+
+/// Transport of one deployment: the in-process channel pair (the default)
+/// or the socket transport at `ADDR` (`dist::net`) — the leader listens
+/// there and workers dial it. Loopback TCP is bit-identical to the channel
+/// run for the same spec (the PR-9 golden anchor).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinkSpec {
+    Channel,
+    Tcp(String),
+}
+
+impl LinkSpec {
+    /// Parse the `--transport` grammar: `channel` or `tcp:ADDR`.
+    pub fn parse(s: &str) -> Result<LinkSpec, String> {
+        if s == "channel" {
+            return Ok(LinkSpec::Channel);
+        }
+        match s.strip_prefix("tcp:") {
+            Some(addr) if !addr.is_empty() => Ok(LinkSpec::Tcp(addr.to_string())),
+            Some(_) => Err("tcp transport needs an address (tcp:HOST:PORT)".to_string()),
+            None => Err(format!("unknown transport {s:?} (expected channel | tcp:ADDR)")),
+        }
+    }
+
+    /// The canonical spec string (`LinkSpec::parse(s.spec()) == Ok(s)`).
+    pub fn spec(&self) -> String {
+        match self {
+            LinkSpec::Channel => "channel".into(),
+            LinkSpec::Tcp(addr) => format!("tcp:{addr}"),
+        }
+    }
+
+    /// The listen/dial address, when this is the socket transport.
+    pub fn tcp_addr(&self) -> Option<&str> {
+        match self {
+            LinkSpec::Channel => None,
+            LinkSpec::Tcp(addr) => Some(addr.as_str()),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // GeomSpec — the per-group norm/radius parameterization (Gluon's knob)
 // ---------------------------------------------------------------------------
@@ -171,22 +239,44 @@ impl GeomSpec {
 // SchedulePlan — the schedule descriptor (materialized once steps are known)
 // ---------------------------------------------------------------------------
 
-/// Descriptor of the nanoGPT-style warmup+cosine radius schedule. A plan is
-/// independent of the run length; [`SchedulePlan::materialize`] pins it to
-/// a total step count.
+/// Descriptor of a radius schedule. A plan is independent of the run
+/// length; [`SchedulePlan::materialize`] pins it to a total step count.
+/// Every [`ScheduleKind`] the optimizer knows is expressible — the theory
+/// rates (`inv-sqrt-total`, `theory34`) used to be constructed by hand in
+/// the rate benches and now go through `RunBuilder` like everything else.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SchedulePlan {
     /// Base radius / learning rate for hidden layers.
     pub lr: f64,
-    /// Warmup steps.
+    /// Warmup steps (used by `warmup-cosine` only).
     pub warmup: usize,
-    /// Final LR fraction of the cosine decay.
+    /// Final LR fraction of the cosine decay (used by `warmup-cosine`
+    /// only).
     pub min_lr_frac: f64,
+    /// Schedule shape (the default `warmup-cosine` reproduces the
+    /// historical nanoGPT-style schedule exactly).
+    pub kind: ScheduleKind,
 }
 
 impl SchedulePlan {
     pub fn materialize(&self, total_steps: usize) -> Schedule {
-        Schedule::warmup_cosine(self.lr, self.warmup, total_steps, self.min_lr_frac)
+        match self.kind {
+            ScheduleKind::WarmupCosine => {
+                Schedule::warmup_cosine(self.lr, self.warmup, total_steps, self.min_lr_frac)
+            }
+            // these shapes read only base/total in Schedule::at, so the
+            // materialized struct reproduces the legacy hand-built
+            // schedules bit-for-bit (golden-tested below)
+            ScheduleKind::Constant | ScheduleKind::InvSqrtTotal | ScheduleKind::Theory34 => {
+                Schedule {
+                    base: self.lr,
+                    warmup: self.warmup,
+                    total: total_steps,
+                    min_frac: self.min_lr_frac,
+                    kind: self.kind,
+                }
+            }
+        }
     }
 }
 
@@ -248,6 +338,9 @@ pub struct RunSpec {
     /// Resume from the latest checkpoint in `checkpoint_dir` (fresh start
     /// with a notice when none exists yet).
     pub resume: bool,
+    /// Transport the leader/worker hop runs over ([`LinkSpec::Channel`] =
+    /// in-process, bit-identical to `tcp:` loopback for the same spec).
+    pub link: LinkSpec,
 }
 
 impl Default for RunSpec {
@@ -262,7 +355,12 @@ impl Default for RunSpec {
             server_comp: CompSpec::Id,
             round: RoundMode::Sync,
             beta: 0.9,
-            schedule: SchedulePlan { lr: 0.02, warmup: 20, min_lr_frac: 0.1 },
+            schedule: SchedulePlan {
+                lr: 0.02,
+                warmup: 20,
+                min_lr_frac: 0.1,
+                kind: ScheduleKind::WarmupCosine,
+            },
             geom: GeomSpec::default(),
             corpus_tokens: 2_000_000,
             eval_every: 25,
@@ -276,6 +374,7 @@ impl Default for RunSpec {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: false,
+            link: LinkSpec::Channel,
         }
     }
 }
@@ -376,6 +475,8 @@ impl RunSpec {
             checkpoint_every: self.checkpoint_every,
             checkpoint_dir: self.checkpoint_dir.clone(),
             resume: self.resume,
+            schedule: schedule_kind_name(self.schedule.kind).to_string(),
+            transport: self.link.spec(),
         }
     }
 
@@ -417,6 +518,14 @@ impl RunSpec {
         }
         if let Some(d) = &self.checkpoint_dir {
             o = o.put("checkpoint_dir", d.as_str());
+        }
+        // non-default axes only, so the default `efmuon config` output is
+        // byte-identical to the pre-PR-9 form
+        if self.schedule.kind != ScheduleKind::WarmupCosine {
+            o = o.put("schedule", schedule_kind_name(self.schedule.kind));
+        }
+        if self.link != LinkSpec::Channel {
+            o = o.put("transport", self.link.spec());
         }
         o.build()
     }
@@ -505,8 +614,16 @@ impl RunBuilder {
             Err(e) => b.err("lmo_vector", e),
         }
         b.spec.beta = cfg.beta;
-        b.spec.schedule =
-            SchedulePlan { lr: cfg.lr, warmup: cfg.warmup, min_lr_frac: cfg.min_lr_frac };
+        b.spec.schedule = SchedulePlan {
+            lr: cfg.lr,
+            warmup: cfg.warmup,
+            min_lr_frac: cfg.min_lr_frac,
+            kind: ScheduleKind::WarmupCosine,
+        };
+        match parse_schedule_kind(&cfg.schedule) {
+            Ok(k) => b.spec.schedule.kind = k,
+            Err(e) => b.err("schedule", e),
+        }
         b.spec.geom.embed_mult = cfg.embed_mult;
         b.spec.geom.vector_mult = cfg.vector_mult;
         b.spec.corpus_tokens = cfg.corpus_tokens;
@@ -524,6 +641,10 @@ impl RunBuilder {
         b.spec.checkpoint_every = cfg.checkpoint_every;
         b.spec.checkpoint_dir = cfg.checkpoint_dir.clone();
         b.spec.resume = cfg.resume;
+        match LinkSpec::parse(&cfg.transport) {
+            Ok(l) => b.spec.link = l,
+            Err(e) => b.err("transport", e),
+        }
         b
     }
 
@@ -594,6 +715,20 @@ impl RunBuilder {
 
     pub fn min_lr_frac(mut self, frac: f64) -> Self {
         self.spec.schedule.min_lr_frac = frac;
+        self
+    }
+
+    /// Schedule shape (default `warmup-cosine`; the theory rates are
+    /// `inv-sqrt-total` / `theory34`).
+    pub fn schedule_kind(mut self, kind: ScheduleKind) -> Self {
+        self.spec.schedule.kind = kind;
+        self
+    }
+
+    /// Transport of the leader/worker hop (typed; `tcp:` requires
+    /// `shards == 1`, checked at `build`).
+    pub fn link(mut self, link: LinkSpec) -> Self {
+        self.spec.link = link;
         self
     }
 
@@ -733,6 +868,16 @@ impl RunBuilder {
         if spec.trace_path.as_deref() == Some("") {
             err.push("trace_path", "must be a non-empty path (omit the key to disable tracing)");
         }
+        if spec.link.tcp_addr().is_some() && spec.shards != 1 {
+            err.push(
+                "transport",
+                format!(
+                    "transport tcp requires shards == 1 (got {}); sharded socket \
+                     deployments are a ROADMAP item",
+                    spec.shards
+                ),
+            );
+        }
         if err.fields.is_empty() {
             Ok(spec)
         } else {
@@ -839,6 +984,87 @@ mod tests {
         assert!(!RunSpec::default().to_json().to_string().contains("trace_path"));
         let err = RunBuilder::new().trace("").build().unwrap_err();
         assert!(err.mentions("trace_path"), "{err}");
+    }
+
+    #[test]
+    fn schedule_kinds_materialize_bit_identical_to_legacy_literals() {
+        // the rate benches used to hand-build these; RunBuilder must
+        // reproduce them exactly (golden for the exp::rate_points reroute)
+        for (kind, k) in [
+            (ScheduleKind::InvSqrtTotal, 40usize),
+            (ScheduleKind::Theory34, 120),
+            (ScheduleKind::Constant, 7),
+        ] {
+            let spec = RunBuilder::new()
+                .steps(k)
+                .lr(0.05)
+                .warmup(0)
+                .min_lr_frac(1.0)
+                .schedule_kind(kind)
+                .build()
+                .unwrap();
+            let legacy = Schedule { base: 0.05, warmup: 0, total: k, min_frac: 1.0, kind };
+            let got = spec.schedule();
+            assert_eq!(got.base.to_bits(), legacy.base.to_bits());
+            assert_eq!((got.warmup, got.total, got.kind), (legacy.warmup, legacy.total, kind));
+            for step in 0..k {
+                assert_eq!(
+                    got.at(step).to_bits(),
+                    legacy.at(step).to_bits(),
+                    "{kind:?} step {step}"
+                );
+            }
+        }
+        // the default shape is untouched warmup-cosine
+        let spec = RunSpec::default();
+        assert_eq!(spec.schedule.kind, ScheduleKind::WarmupCosine);
+        let legacy = Schedule::warmup_cosine(0.02, 20, spec.steps, 0.1);
+        for step in [0, 10, 19, 20, 57, 199] {
+            assert_eq!(spec.schedule().at(step).to_bits(), legacy.at(step).to_bits());
+        }
+    }
+
+    #[test]
+    fn schedule_and_transport_axes_roundtrip_losslessly() {
+        for kind in [
+            ScheduleKind::WarmupCosine,
+            ScheduleKind::Constant,
+            ScheduleKind::InvSqrtTotal,
+            ScheduleKind::Theory34,
+        ] {
+            assert_eq!(parse_schedule_kind(schedule_kind_name(kind)).unwrap(), kind);
+        }
+        assert!(parse_schedule_kind("cosine?").is_err());
+        for link in [LinkSpec::Channel, LinkSpec::Tcp("127.0.0.1:4310".into())] {
+            assert_eq!(LinkSpec::parse(&link.spec()).unwrap(), link);
+        }
+        assert!(LinkSpec::parse("tcp:").is_err());
+        assert!(LinkSpec::parse("udp:1.2.3.4:1").is_err());
+
+        let spec = RunBuilder::new()
+            .schedule_kind(ScheduleKind::Theory34)
+            .link(LinkSpec::Tcp("127.0.0.1:4310".into()))
+            .build()
+            .unwrap();
+        let back = RunBuilder::from_config(&spec.to_train_config()).build().unwrap();
+        assert_eq!(back, spec);
+        let back = RunSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        // defaults stay out of the JSON so `efmuon config` bytes are stable
+        let dflt = RunSpec::default().to_json().to_string();
+        assert!(!dflt.contains("\"schedule\""), "{dflt}");
+        assert!(!dflt.contains("\"transport\""), "{dflt}");
+    }
+
+    #[test]
+    fn tcp_transport_rejects_sharded_deployments() {
+        let err = RunBuilder::new()
+            .shards(2)
+            .link(LinkSpec::Tcp("127.0.0.1:4310".into()))
+            .build()
+            .unwrap_err();
+        assert!(err.mentions("transport"), "{err}");
+        assert!(err.to_string().contains("shards == 1"), "{err}");
     }
 
     #[test]

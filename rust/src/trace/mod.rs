@@ -51,6 +51,12 @@ pub enum Phase {
     SnapAssemble,
     /// The cluster root sealed a `ParamBoard` epoch.
     BoardSeal,
+    /// A socket worker claimed a free id slot (initial connect).
+    NetConnect,
+    /// A re-dialing or late-joining socket worker re-claimed a freed slot.
+    NetReconnect,
+    /// A heartbeat window elapsed with no frame from a connected worker.
+    NetMiss,
 }
 
 impl Phase {
@@ -66,6 +72,9 @@ impl Phase {
             Phase::Respawn => "respawn",
             Phase::SnapAssemble => "snap_assemble",
             Phase::BoardSeal => "board_seal",
+            Phase::NetConnect => "net_connect",
+            Phase::NetReconnect => "net_reconnect",
+            Phase::NetMiss => "net_miss",
         }
     }
 
@@ -82,6 +91,9 @@ impl Phase {
             Phase::Respawn,
             Phase::SnapAssemble,
             Phase::BoardSeal,
+            Phase::NetConnect,
+            Phase::NetReconnect,
+            Phase::NetMiss,
         ]
     }
 }
@@ -178,7 +190,7 @@ impl TraceRing {
 /// record. Fold drained events in with [`TraceAgg::absorb`].
 #[derive(Debug, Default, Clone)]
 pub struct TraceAgg {
-    counts: [u64; 9],
+    counts: [u64; 12],
     pub events: u64,
     pub dropped: u64,
 }

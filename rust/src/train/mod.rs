@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::dist::cluster::Cluster;
 use crate::dist::coordinator::Coordinator;
+use crate::dist::net::{NetCfg, NetHub};
 use crate::dist::service::{GradHandle, GradService};
 use crate::funcs::Objective;
 use crate::linalg::matrix::Layers;
@@ -340,6 +341,23 @@ pub fn spawn_driver_traced(
         cfg.start_step = start_step;
         cfg.tracer = tracer;
         Ok(Box::new(Cluster::spawn(x0, geometry, handle, cfg)?))
+    } else if let Some(addr) = spec.link.tcp_addr() {
+        // socket deployment (`--transport tcp:ADDR` / `efmuon serve`): bind
+        // first so workers can start dialing, then arm the hub with this
+        // run's protocol parameters and wait for `workers` of them
+        let mut cfg = spec.coordinator_cfg();
+        cfg.start_step = start_step;
+        cfg.tracer = tracer;
+        let hub = NetHub::bind(NetCfg { listen: addr.to_string(), ..NetCfg::default() })?;
+        match Coordinator::spawn_net(x0, geometry, handle, cfg, hub.clone()) {
+            Ok(c) => Ok(Box::new(c)),
+            Err(e) => {
+                // spawn_net arms but could not assemble the deployment; the
+                // accept thread holds an Arc and must be shut down here
+                hub.close();
+                Err(e)
+            }
+        }
     } else {
         let mut cfg = spec.coordinator_cfg();
         cfg.start_step = start_step;

@@ -28,19 +28,28 @@
 //!       injected panic + straggler complete the run with exact meter
 //!       counts; a checkpointed run killed mid-way resumes to the same
 //!       final step with a finite eval loss.
+//!   (i) the socket axis (ISSUE 9): a loopback TCP deployment is
+//!       bit-identical to the in-memory channel run — trajectory, wire
+//!       bytes in both directions, meters, eval — for sync and pipelined
+//!       rounds and both transport modes, with zero transport counters on
+//!       a healthy link; a chaos run over a flaky link (dropped broadcast
+//!       frame + worker panic + a late joiner claiming freed id slots)
+//!       completes with exact reconnect/respawn counters and a finite
+//!       eval.
 
 use std::sync::Arc;
 
 use efmuon::dist::cluster::{totals_consistent, Cluster};
 use efmuon::dist::coordinator::Coordinator;
 use efmuon::dist::fault::{FaultKind, FaultPlan, FaultPolicy};
+use efmuon::dist::net::{spawn_loopback_workers, FlakyKind, FlakyPlan, NetCfg, NetHub};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
 use efmuon::linalg::matrix::Layers;
 use efmuon::lmo::LmoKind;
 use efmuon::opt::ef21::Ef21MuonSeq;
-use efmuon::opt::LayerGeometry;
+use efmuon::opt::{LayerGeometry, ScheduleKind};
 use efmuon::spec::{RunBuilder, RunSpec, SchedulePlan};
 use efmuon::trace::{Phase, TraceAgg, Tracer};
 use efmuon::train::{
@@ -105,7 +114,8 @@ struct RunTrace {
 
 /// The constant-radius plan every scenario uses (warmup 0 + min_lr_frac 1
 /// materializes to exactly the constant schedule, bit for bit).
-const FLAT: SchedulePlan = SchedulePlan { lr: 0.03, warmup: 0, min_lr_frac: 1.0 };
+const FLAT: SchedulePlan =
+    SchedulePlan { lr: 0.03, warmup: 0, min_lr_frac: 1.0, kind: ScheduleKind::WarmupCosine };
 
 /// The typed spec of one scenario run — the scenario harness goes through
 /// the same `RunBuilder` → `spawn_driver` path as `efmuon train`, so the
@@ -351,7 +361,8 @@ fn compressed_s2w_saves_bytes_at_matched_loss() {
     // decaying radius: both runs converge to the optimum's neighborhood, so
     // their final losses match to well under the 1e-3 bar
     let rounds = 600;
-    let plan = SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02 };
+    let plan =
+        SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02, kind: ScheduleKind::WarmupCosine };
     let a = run_scenario_sched(&dense, RoundMode::Sync, TransportMode::Counted, rounds, plan);
     let b = run_scenario_sched(&comp, RoundMode::Sync, TransportMode::Counted, rounds, plan);
     assert!(
@@ -560,7 +571,8 @@ fn cluster_trajectory_invariant_across_shards_modes_transports() {
 fn async_converges_near_sync() {
     let sc = Scenario { name: "async-conv", workers: 3, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
     let rounds = 600;
-    let plan = SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02 };
+    let plan =
+        SchedulePlan { lr: 0.05, warmup: 0, min_lr_frac: 0.02, kind: ScheduleKind::WarmupCosine };
     let sync = run_scenario_sched(&sc, RoundMode::Sync, TransportMode::Counted, rounds, plan);
     let pipe = run_scenario_sched(&sc, RoundMode::Async { lookahead: 1 }, TransportMode::Counted, rounds, plan);
     // every issued round was absorbed by the end (run() drains)
@@ -950,4 +962,164 @@ fn fault_checkpoint_resume_reaches_final_step() {
     let eval = resumed.eval().unwrap();
     assert!(eval.is_finite(), "resumed eval loss must be finite, got {eval}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The socket axis (ISSUE 9): loopback TCP ≡ channel, flaky links, elastic
+// membership
+// ---------------------------------------------------------------------------
+
+/// Run one scenario over loopback TCP: bind a hub on a kernel-assigned
+/// port, dial `sc.workers` in-process socket workers at it, and drive the
+/// run through `Coordinator::spawn_net`. Returns the usual trace plus the
+/// transport counters `(reconnects, heartbeat_misses)`.
+fn run_scenario_net(
+    sc: &Scenario,
+    mode: RoundMode,
+    transport: TransportMode,
+    rounds: usize,
+) -> (RunTrace, (u64, u64)) {
+    let spec = scenario_spec(sc, 1, mode, transport, rounds, FLAT);
+    let q = objective(sc);
+    let x0 = q.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(Box::new(q), SEED);
+    let handle = svc.handle();
+    let hub = NetHub::bind(NetCfg::default()).unwrap();
+    let workers = spawn_loopback_workers(sc.workers, hub.local_addr(), &handle, None);
+    let mut coord =
+        Coordinator::spawn_net(x0, geom(), handle, spec.coordinator_cfg(), hub).unwrap();
+    let stats = coord.run(rounds).unwrap();
+    let mut s2w = Vec::new();
+    let mut w2s = Vec::new();
+    for s in &stats {
+        if s.s2w_bytes > 0 {
+            s2w.push(s.s2w_bytes);
+        }
+        if s.absorbed_step.is_some() {
+            w2s.push(s.w2s_bytes_per_worker);
+        }
+    }
+    let m = coord.meter();
+    let net = (m.reconnects(), m.heartbeat_misses());
+    let trace = RunTrace {
+        params: flatten(coord.params()),
+        s2w,
+        w2s,
+        meter_w2s: m.w2s(),
+        meter_s2w: m.s2w(),
+        eval: coord.eval().unwrap(),
+    };
+    // dropping the coordinator stops every link and closes the hub; the
+    // dialed workers then end their sessions cleanly
+    drop(coord);
+    for w in workers {
+        w.join().expect("worker thread").expect("worker loop");
+    }
+    (trace, net)
+}
+
+/// (i) Golden anchor: a loopback TCP deployment must be bit-identical to
+/// the in-memory channel run — trajectory, per-round wire bytes in both
+/// directions, cumulative meters, and eval — for every scenario, both
+/// round modes, and both transport modes, with zero reconnects and zero
+/// heartbeat misses on a healthy link. The socket hop adds framing and
+/// scheduling, never arithmetic: the compute loop behind the link is the
+/// unchanged channel-transport worker.
+#[test]
+fn net_loopback_matches_channel_bitwise() {
+    for sc in SCENARIOS {
+        for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+            for transport in [TransportMode::Counted, TransportMode::Encoded] {
+                let chan = run_scenario(sc, mode, transport, ROUNDS);
+                let (net, (reconnects, misses)) = run_scenario_net(sc, mode, transport, ROUNDS);
+                let tag = format!("{} / {} / {:?}", sc.name, mode.spec(), transport);
+                assert_eq!(chan.params, net.params, "{tag}: trajectory");
+                assert_eq!(chan.s2w, net.s2w, "{tag}: s2w bytes per round");
+                assert_eq!(chan.w2s, net.w2s, "{tag}: w2s bytes per round");
+                assert_eq!(chan.meter_w2s, net.meter_w2s, "{tag}: w2s meter");
+                assert_eq!(chan.meter_s2w, net.meter_s2w, "{tag}: s2w meter");
+                assert_eq!(chan.eval, net.eval, "{tag}: eval");
+                assert_eq!(
+                    (reconnects, misses),
+                    (0, 0),
+                    "{tag}: healthy-link transport counters must stay zero"
+                );
+            }
+        }
+    }
+}
+
+/// (i) Chaos acceptance: 4 workers over a flaky loopback link. The leader
+/// drops worker 1's broadcast frame at step 3 (severing that link — a
+/// socket EF21-P worker that missed a broadcast can only rejoin by
+/// re-initializing against the current shift), a seeded plan panics the
+/// compute of whoever holds slot 2 at step 6 (killing that worker thread
+/// for good), and a 5th late-joining worker dials the full deployment,
+/// collecting rejects with backoff until a slot frees mid-run. Under a
+/// deadline/quorum policy with a respawn budget the run completes: finite
+/// eval, every round broadcast and absorbed, exactly 2 respawns /
+/// 2 reconnects / 2 partial rounds, zero stragglers (both failures arrive
+/// as failure notifications, not deadline misses), zero heartbeat misses
+/// — and the late joiner ends the run holding a slot (it returns only on
+/// a clean `Stop`), elastic membership absorbing both the departure and
+/// the join.
+#[test]
+fn net_chaos_flaky_link_panic_and_late_joiner_exact_counts() {
+    let sc = Scenario { name: "net-chaos", workers: 4, dim: 12, w2s: "top:0.3", s2w: "top:0.5" };
+    let rounds = 10;
+    let spec = scenario_spec(&sc, 1, RoundMode::Sync, TransportMode::Counted, rounds, FLAT);
+    let mut cfg = spec.coordinator_cfg();
+    cfg.fault = FaultPolicy::parse("deadline:200,quorum:0.5,respawns:2,backoff:0").unwrap();
+    let q = objective(&sc);
+    let x0 = q.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(Box::new(q), SEED);
+    let handle = svc.handle();
+    let flaky = FlakyPlan::new().with(1, 3, FlakyKind::DropFrame);
+    let hub = NetHub::bind(NetCfg { flaky: Some(Arc::new(flaky)), ..NetCfg::default() }).unwrap();
+    let addr = hub.local_addr();
+    let plan = Arc::new(FaultPlan::new().with(2, 6, FaultKind::Panic));
+    let crew = spawn_loopback_workers(4, addr, &handle, Some(plan.clone()));
+    let mut coord = Coordinator::spawn_net(x0, geom(), handle.clone(), cfg, hub).unwrap();
+    // spawned only after `spawn_net` returned, i.e. after all 4 initial
+    // slots were claimed by the crew: the late joiner can never hold the
+    // doomed slot 2 before the step-6 panic frees it
+    let late = spawn_loopback_workers(1, addr, &handle, Some(plan));
+
+    let stats = coord.run(rounds).unwrap();
+    let mut s2w = 0usize;
+    let mut w2s = 0usize;
+    for s in &stats {
+        if s.s2w_bytes > 0 {
+            s2w += 1;
+        }
+        if s.absorbed_step.is_some() {
+            w2s += 1;
+        }
+    }
+    let m = coord.meter();
+    assert_eq!(m.stragglers(), 0, "failure notifications, never deadline misses");
+    assert_eq!(m.respawns(), 2, "the severed link and the panicked worker each respawn");
+    assert_eq!(m.partial_rounds(), 2, "the drop round and the panic round absorb partially");
+    assert_eq!(m.reconnects(), 2, "each freed slot is reclaimed exactly once");
+    assert_eq!(m.heartbeat_misses(), 0, "heartbeats flow well inside the leader's read timeout");
+    assert_eq!(s2w, rounds, "every round broadcast");
+    assert_eq!(w2s, rounds, "every round absorbed");
+    let eval = coord.eval().unwrap();
+    assert!(eval.is_finite(), "eval loss must stay finite, got {eval}");
+    assert!(coord.params().iter().all(|p| p.data.iter().all(|v| v.is_finite())));
+    drop(coord);
+
+    // exactly one crew thread died in the injected panic; the other three
+    // ended on a clean Stop
+    let crew_errs = crew
+        .into_iter()
+        .map(|w| w.join().expect("crew thread joins"))
+        .filter(|r| r.is_err())
+        .count();
+    assert_eq!(crew_errs, 1, "exactly the panicked worker's loop errors out");
+    // the late joiner claimed a freed id slot mid-run and held it to the
+    // end — worker_loop returns Ok only after receiving Stop on a session
+    for w in late {
+        w.join().expect("late joiner thread").expect("late joiner held a slot to the Stop");
+    }
 }

@@ -48,10 +48,13 @@ import sys
 # noisy at --iters 5 to fail a verify run on.
 GATED_SUBSTRINGS = ("round", "microkernel")
 
-# the hotpath bench always runs with fault injection off, so these counters
-# must be exactly zero in every round entry — checked against the current
-# results alone, no baseline needed
-FAULT_KEYS = ("stragglers", "respawns")
+# the hotpath bench always runs with fault injection off and over healthy
+# links, so these counters must be exactly zero in every round entry —
+# checked against the current results alone, no baseline needed.
+# reconnects/heartbeat_misses nonzero in a fault-free loopback bench means
+# the socket transport is dropping or stalling frames on a clean localhost
+# link — a transport bug, never machine noise.
+FAULT_KEYS = ("stragglers", "respawns", "reconnects", "heartbeat_misses")
 
 # bf16 parameter-board entries pair with the f32 entry of the same name
 # minus this tag; their per-round board bytes must be <= 0.55x the mate's

@@ -173,6 +173,46 @@ class TraceGateTest(unittest.TestCase):
         self.assertIn("no untraced mate", problems[0])
 
 
+class FaultGateTest(unittest.TestCase):
+    def test_zero_or_missing_counters_pass(self):
+        # non-net round entries carry no reconnect counters at all; the
+        # loopback entry carries them at zero — both are clean
+        entries = {
+            "coordinator round": entry(
+                "coordinator round", 0.01, stragglers=0, respawns=0
+            ),
+            "coordinator round over loopback tcp": entry(
+                "coordinator round over loopback tcp",
+                0.01,
+                stragglers=0,
+                respawns=0,
+                reconnects=0,
+                heartbeat_misses=0,
+            ),
+        }
+        self.assertEqual(bench_gate.fault_problems(entries), [])
+
+    def test_nonzero_transport_counters_fail(self):
+        entries = {
+            "coordinator round over loopback tcp": entry(
+                "coordinator round over loopback tcp",
+                0.01,
+                reconnects=1,
+                heartbeat_misses=2,
+            ),
+        }
+        problems = bench_gate.fault_problems(entries)
+        self.assertEqual(len(problems), 2)
+        self.assertTrue(any("reconnects=1" in p for p in problems))
+        self.assertTrue(any("heartbeat_misses=2" in p for p in problems))
+
+    def test_non_round_entries_are_not_gated(self):
+        entries = {
+            "compress top:0.1": entry("compress top:0.1", 0.001, reconnects=7),
+        }
+        self.assertEqual(bench_gate.fault_problems(entries), [])
+
+
 class Bf16GateTest(unittest.TestCase):
     def test_halved_bytes_pass_and_unhalved_fail(self):
         entries = {

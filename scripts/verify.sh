@@ -57,6 +57,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== tier-2: fault-injection scenarios (release) =="
   cargo test --release -q --test scenario fault
 
+  # the socket-transport subset reruns by name for the same reason: the
+  # loopback ≡ channel golden and the flaky-link chaos run (reconnect,
+  # heartbeat, elastic membership) are timing-sensitive under release
+  # scheduling, and a failure here should name the transport layer
+  echo "== tier-2: loopback-socket scenarios (release) =="
+  cargo test --release -q --test scenario net_
+
   # the microkernel's bit-identity contract and the non-finite propagation
   # policy rerun by name in release: optimized codegen (vectorization, FMA
   # contraction if it ever crept in) is exactly what could break bitwise
