@@ -13,6 +13,7 @@ use efmuon::compress::{codec, parse_spec};
 use efmuon::dist::cluster::{Cluster, ClusterCfg};
 use efmuon::dist::coordinator::{Coordinator, CoordinatorCfg};
 use efmuon::dist::fault::FaultPolicy;
+use efmuon::dist::sched::{SchedSpec, ShardDelayPlan};
 use efmuon::dist::net::{spawn_loopback_workers, NetCfg, NetHub};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
@@ -61,6 +62,11 @@ struct Entry {
     /// a link flapping or a heartbeat going missing inside a benchmark is
     /// itself a perf bug.
     net: Option<(u64, u64)>,
+    /// Scheduler counters for the cluster-round entries: (steals,
+    /// epochs_ahead_max). Balanced benches run lock-step, so
+    /// `bench_gate.py` fails the run if either is nonzero there; the
+    /// `imbalanced` entries are exempt (running ahead is their point).
+    sched: Option<(u64, u64)>,
 }
 
 fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
@@ -77,6 +83,7 @@ fn push(entries: &mut Vec<Entry>, result: BenchResult, flops: Option<f64>) {
         faults: None,
         shipped: None,
         net: None,
+        sched: None,
     });
 }
 
@@ -512,6 +519,8 @@ fn main() -> anyhow::Result<()> {
                     fault_plan: None,
                     start_step: 0,
                     snap_bf16: bf16,
+                    sched: SchedSpec::off(),
+                    shard_delay: None,
                     tracer: Tracer::Noop,
                 },
             )?;
@@ -549,6 +558,7 @@ fn main() -> anyhow::Result<()> {
             e.faults = Some((m1.stragglers, m1.respawns, m1.partial_rounds));
             e.shipped = Some(per_round_shipped);
             e.net = Some((m1.reconnects, m1.heartbeat_misses));
+            e.sched = Some((m1.steals, m1.epochs_ahead_max));
         }
         if let Some(&(_, base)) = shard_times.first() {
             for &(shards, t) in &shard_times[1..] {
@@ -557,6 +567,82 @@ fn main() -> anyhow::Result<()> {
                     base / t
                 );
             }
+        }
+    }
+
+    // ---- imbalanced shards: the bounded-epoch scheduler's acceptance
+    //      entry. A rotating 15 ms delay (round r stalls shard r % 4) makes
+    //      every lock-step round pay the full delay, while a window of 1
+    //      overlaps each victim's stall with the other shards' next round —
+    //      the windowed median must come in strictly below its lock-step
+    //      mate (bench_gate.py pairs the two entries by name).
+    {
+        let cfg_iters = iters.min(10);
+        let delay_ms = 15;
+        // cover warmup + timed rounds with slack so every measured round
+        // sees the rotating stall
+        let delayed_rounds = 2 + cfg_iters + 8;
+        let mut pair_times: Vec<f64> = Vec::new();
+        for sched in [SchedSpec::off(), SchedSpec::parse("window:1").unwrap()] {
+            let mut rng5 = Rng::new(4);
+            let parts: Vec<Box<dyn Objective>> = (0..8)
+                .map(|_| {
+                    Box::new(MatrixQuadratic::new(2, 96, 96, 0.0, &mut rng5))
+                        as Box<dyn Objective>
+                })
+                .collect();
+            let stack = Stacked::new(parts).map_err(anyhow::Error::msg)?;
+            let x0 = stack.init(&mut Rng::new(4));
+            let svc = GradService::spawn_objective(Box::new(stack), 4);
+            let mut cluster = Cluster::spawn(
+                x0,
+                vec![LayerGeometry { lmo: LmoKind::Spectral, radius_mult: 1.0 }; 8],
+                svc.handle(),
+                ClusterCfg {
+                    shards: 4,
+                    workers_per_shard: 2,
+                    worker_comp: CompSpec::Id,
+                    server_comp: CompSpec::Id,
+                    beta: 0.9,
+                    schedule: Schedule::constant(0.01),
+                    transport: TransportMode::Counted,
+                    round_mode: RoundMode::Sync,
+                    seed: 4,
+                    use_ns_artifact: false,
+                    fault: FaultPolicy::off(),
+                    fault_plan: None,
+                    start_step: 0,
+                    snap_bf16: false,
+                    sched,
+                    shard_delay: Some(std::sync::Arc::new(ShardDelayPlan::alternating(
+                        4,
+                        delayed_rounds,
+                        delay_ms,
+                    ))),
+                    tracer: Tracer::Noop,
+                },
+            )?;
+            let name = if sched.is_off() {
+                "cluster round (4 shards, imbalanced, lock-step)"
+            } else {
+                "cluster round (4 shards, imbalanced, window:1)"
+            };
+            let r = bench_fn(name, 2, cfg_iters, || {
+                cluster.round().unwrap();
+            });
+            pair_times.push(r.median_s);
+            push(&mut entries, r, None);
+            let m = cluster.meter().totals();
+            let e = entries.last_mut().unwrap();
+            e.faults = Some((m.stragglers, m.respawns, m.partial_rounds));
+            e.net = Some((m.reconnects, m.heartbeat_misses));
+            e.sched = Some((m.steals, m.epochs_ahead_max));
+        }
+        if let [lockstep, windowed] = pair_times[..] {
+            println!(
+                "  -> imbalanced 4-shard round: window:1 {:.2}x vs lock-step",
+                lockstep / windowed
+            );
         }
     }
 
@@ -615,6 +701,9 @@ fn main() -> anyhow::Result<()> {
             }
             if let Some((reconnects, misses)) = e.net {
                 o = o.put("reconnects", reconnects).put("heartbeat_misses", misses);
+            }
+            if let Some((steals, ahead)) = e.sched {
+                o = o.put("steals", steals).put("epochs_ahead_max", ahead);
             }
             o.build()
         })

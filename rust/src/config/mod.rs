@@ -97,6 +97,15 @@ pub struct TrainConfig {
     /// Transport of the leader/worker hop: `channel` (in-process, default)
     /// or `tcp:ADDR` (the socket transport; see [`crate::dist::net`]).
     pub transport: String,
+    /// Bounded-epoch shard scheduling spec: `off` (lock-step, default) or
+    /// `window:N[,steal:T|steal:off]` — shards may run up to `N` rounds
+    /// ahead of the slowest; `steal:T` migrates a layer off a shard whose
+    /// EWMA round time exceeds `T`× the fastest shard's (see
+    /// [`crate::dist::sched::SchedSpec`]). Requires `shards >= 2`.
+    pub sched: String,
+    /// Store parameter-board epoch snapshots in bf16 (`--snap-bf16`):
+    /// half the snapshot memory; readers expand back to f32.
+    pub snap_bf16: bool,
 }
 
 impl Default for TrainConfig {
@@ -132,6 +141,8 @@ impl Default for TrainConfig {
             resume: false,
             schedule: "warmup-cosine".into(),
             transport: "channel".into(),
+            sched: "off".into(),
+            snap_bf16: false,
         }
     }
 }
@@ -176,6 +187,8 @@ impl TrainConfig {
         self.resume = a.bool("resume", self.resume);
         self.schedule = a.str("schedule", &self.schedule);
         self.transport = a.str("transport", &self.transport);
+        self.sched = a.str("sched", &self.sched);
+        self.snap_bf16 = a.bool("snap-bf16", self.snap_bf16);
         Ok(self)
     }
 
@@ -220,6 +233,8 @@ impl TrainConfig {
                 "resume" => c.resume = v.as_bool().ok_or("resume: bool")?,
                 "schedule" => c.schedule = v.as_str().ok_or("schedule: string")?.into(),
                 "transport" => c.transport = v.as_str().ok_or("transport: string")?.into(),
+                "sched" => c.sched = v.as_str().ok_or("sched: string")?.into(),
+                "snap_bf16" => c.snap_bf16 = v.as_bool().ok_or("snap_bf16: bool")?,
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -323,6 +338,32 @@ mod tests {
             .validate()
             .unwrap_err();
         assert!(err.mentions("transport"), "{err}");
+    }
+
+    #[test]
+    fn sched_and_snap_bf16_keys_parse() {
+        let c = TrainConfig::from_json(
+            r#"{"sched": "window:2,steal:1.5", "snap_bf16": true, "shards": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(c.sched, "window:2,steal:1.5");
+        assert!(c.snap_bf16);
+        let a = Args::parse(
+            ["--sched", "window:1", "--snap-bf16", "--shards", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().override_from_args(&a).unwrap();
+        assert_eq!(c.sched, "window:1");
+        assert!(c.snap_bf16);
+        assert_eq!(c.shards, 2);
+        // defaults validate to the default spec
+        assert_eq!(TrainConfig::default().sched, "off");
+        assert!(!TrainConfig::default().snap_bf16);
+        let err = TrainConfig { sched: "window:-3".into(), shards: 2, ..TrainConfig::default() }
+            .validate()
+            .unwrap_err();
+        assert!(err.mentions("sched"), "{err}");
     }
 
     #[test]

@@ -39,11 +39,26 @@
 //! With `shards = 1` the cluster is the single-leader deployment
 //! bit-for-bit (the board is never consulted; asserted against the golden
 //! trajectories in `rust/tests/scenario.rs`).
+//!
+//! **Bounded-epoch scheduling.** With a [`SchedSpec`] window the root stops
+//! being a barrier: it keeps issuing rounds while any shard is at most
+//! `window` rounds behind the fastest issue, staging out-of-order replies
+//! in an [`EpochWindow`] and sealing board epochs as rounds complete
+//! rather than at a lock-step rendezvous. A [`RoundClock`]/[`EwmaBank`]
+//! pair tracks per-shard issue→reply times; when the EWMA spread crosses
+//! the steal threshold, the root re-partitions online — migrating the slow
+//! shard's lightest layer (server shift + EF21 error state, bitwise) to
+//! the fastest shard at an epoch boundary through a versioned
+//! [`PartitionPlan`]. `window:0,steal:off` (the default) never enters this
+//! path at all: the lock-step code below is untouched and byte-identical
+//! to every release before the scheduler existed (golden-anchored in
+//! `rust/tests/scenario.rs`). See DESIGN.md §Shard scheduling.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -56,7 +71,11 @@ use crate::util::json::{Json, JsonObj};
 
 use super::coordinator::{Coordinator, CoordinatorCfg, RoundStats};
 use super::fault::{FaultPlan, FaultPolicy};
-use super::service::{GradHandle, SnapCache};
+use super::sched::{
+    EpochWindow, EwmaBank, PartitionPlan, RoundClock, SchedSpec, ServerLayer, ShardDelayPlan,
+    WorkerLayer,
+};
+use super::service::{GradHandle, SharedIds, SnapCache};
 use super::{MeterSnapshot, RoundMode, TransportMode};
 
 // ---------------------------------------------------------------------------
@@ -238,6 +257,14 @@ pub struct ParamBoard {
     layers: usize,
     /// Store epochs in bf16 (half-width snapshots).
     bf16: bool,
+    /// Bounded-epoch mode ([`ParamBoard::windowed`]): reads for a not-yet-
+    /// sealed epoch park on `cv` until the root seals it, instead of
+    /// silently serving the newest older snapshot. Off (the lock-step
+    /// default), `read` never waits and is byte-identical to the board
+    /// before the scheduler existed.
+    windowed: bool,
+    /// Seal/close notifications for windowed readers.
+    cv: Condvar,
 }
 
 struct BoardInner {
@@ -247,6 +274,10 @@ struct BoardInner {
     /// per storage width; only the board's own width is ever populated).
     pool_f32: Vec<Layers>,
     pool_bf16: Vec<Vec<Bf16Mat>>,
+    /// Shutdown latch: wakes parked windowed readers so a failing cluster
+    /// can join its shard threads instead of wedging on a seal that will
+    /// never come.
+    closed: bool,
 }
 
 impl ParamBoard {
@@ -273,10 +304,30 @@ impl ParamBoard {
                 snaps: VecDeque::from([(0usize, snap0)]),
                 pool_f32: Vec::new(),
                 pool_bf16: Vec::new(),
+                closed: false,
             }),
             keep: keep.max(2),
             bf16,
+            windowed: false,
+            cv: Condvar::new(),
         }
+    }
+
+    /// Switch the board into bounded-epoch mode (see the `windowed` field).
+    /// Builder-style so the existing constructors stay untouched.
+    pub fn windowed(mut self) -> ParamBoard {
+        self.windowed = true;
+        self
+    }
+
+    /// Wake every parked windowed reader and make all future reads
+    /// non-blocking (they fall back to the newest sealed epoch). Called on
+    /// cluster teardown and on any root-side error; a no-op for the
+    /// lock-step board, whose reads never wait.
+    pub fn close(&self) {
+        let mut s = self.snaps.lock().expect("board lock");
+        s.closed = true;
+        self.cv.notify_all();
     }
 
     /// Layer count of the full model the board snapshots.
@@ -294,6 +345,9 @@ impl ParamBoard {
             BoardSnap::F32(Arc::new(full))
         };
         Self::seal_locked(&mut s, epoch, snap, self.keep);
+        if self.windowed {
+            self.cv.notify_all();
+        }
     }
 
     /// [`ParamBoard::seal`] from a borrow: copies (f32 board) or encodes
@@ -332,6 +386,9 @@ impl ParamBoard {
         };
         let bytes = snap.wire_bytes();
         Self::seal_locked(&mut s, epoch, snap, self.keep);
+        if self.windowed {
+            self.cv.notify_all();
+        }
         bytes
     }
 
@@ -365,8 +422,19 @@ impl ParamBoard {
     /// The snapshot sealed for `epoch`: the newest sealed epoch `<= epoch`
     /// (the oldest retained one if `epoch` predates the retention window).
     /// Hands out an `Arc` share of the sealed snapshot — never a deep copy.
+    ///
+    /// On a windowed board, a read for an epoch newer than every sealed one
+    /// parks until the root seals it (epochs seal consecutively, so
+    /// `back >= epoch` means `epoch` itself is sealed) or the board closes.
+    /// The root always drains shard replies inside its own wait loops, so
+    /// the seal a parked reader needs is always forthcoming.
     pub fn read(&self, epoch: usize) -> BoardSnap {
-        let s = self.snaps.lock().expect("board lock");
+        let mut s = self.snaps.lock().expect("board lock");
+        if self.windowed {
+            while !s.closed && s.snaps.back().map(|(e, _)| *e < epoch).unwrap_or(true) {
+                s = self.cv.wait(s).expect("board lock");
+            }
+        }
         s.snaps
             .iter()
             .rev()
@@ -422,6 +490,14 @@ pub struct ClusterCfg {
     /// identical trajectories) for layer-separable objectives, a lossy
     /// approximation for coupled ones; off by default.
     pub snap_bf16: bool,
+    /// Bounded-epoch scheduling: how far any shard may run ahead of the
+    /// slowest one, and the work-stealing trigger. [`SchedSpec::off`] (the
+    /// default) takes the lock-step code path untouched — the golden
+    /// anchor.
+    pub sched: SchedSpec,
+    /// Deterministic per-`(shard, round)` delay injection for scheduler
+    /// tests and benches; never part of a serialized `RunSpec`.
+    pub shard_delay: Option<Arc<ShardDelayPlan>>,
     /// Round-phase tracer ([`Tracer::Noop`] = off, the bitwise golden
     /// anchor). Each shard coordinator gets a shard-tagged clone; the root
     /// reducer stamps [`Phase::BoardSeal`] under its own tag.
@@ -486,17 +562,29 @@ pub struct ClusterMeter {
     /// Bytes the root reducer deep-copied sealing board epochs (on top of
     /// the per-shard assembly bytes already in the shard snapshots).
     pub root_bytes_cloned: u64,
+    /// Layers the root's scheduler migrated between shards (0 in lock-step
+    /// and in balanced windowed runs — gated in CI).
+    pub steals: u64,
+    /// High-water mark of how many rounds any shard ran ahead of the
+    /// frontier (0 in lock-step; ≤ the configured window otherwise).
+    pub epochs_ahead_max: u64,
+    /// Current EWMA round-time spread (slowest / fastest shard); 1.0 when
+    /// the scheduler is off or has too few samples.
+    pub round_ewma_spread: f64,
 }
 
 impl ClusterMeter {
     /// Aggregate of all shard meters (the root's seal copies fold into
-    /// `bytes_cloned`).
+    /// `bytes_cloned`; the root's scheduler counters fold into
+    /// `steals` / `epochs_ahead_max`).
     pub fn totals(&self) -> MeterSnapshot {
         let mut t = MeterSnapshot::default();
         for (i, m) in self.per_shard.iter().enumerate() {
             t.absorb_shard(m, i == 0);
         }
         t.bytes_cloned += self.root_bytes_cloned;
+        t.steals += self.steals;
+        t.epochs_ahead_max = t.epochs_ahead_max.max(self.epochs_ahead_max);
         t
     }
 
@@ -530,6 +618,9 @@ impl ClusterMeter {
         JsonObj::new()
             .put("totals", self.totals().to_json())
             .put("root_bytes_cloned", self.root_bytes_cloned)
+            .put("steals", self.steals)
+            .put("epochs_ahead_max", self.epochs_ahead_max)
+            .put("round_ewma_spread", self.round_ewma_spread)
             .put(
                 "per_shard",
                 Json::Arr(self.per_shard.iter().map(|m| m.to_json()).collect()),
@@ -547,6 +638,18 @@ enum ToShard {
     Round,
     Drain,
     Params,
+    /// Work stealing: give global layer `layer` back to the root. Sent only
+    /// when the shard has no round in flight, so the released state is
+    /// post-every-absorbed-round.
+    Release { layer: usize },
+    /// Work stealing: adopt global layer `layer` with its migrated EF21
+    /// state. Same quiescence contract as `Release`.
+    Accept {
+        layer: usize,
+        geometry: LayerGeometry,
+        server: ServerLayer,
+        workers: Vec<WorkerLayer>,
+    },
     Stop,
 }
 
@@ -572,6 +675,19 @@ enum FromShard {
         shard: usize,
         params: Layers,
     },
+    /// Reply to [`ToShard::Release`]: the layer's server shift and per-
+    /// worker EF21 state, bitwise as they stood after the last absorbed
+    /// round.
+    Released {
+        shard: usize,
+        layer: usize,
+        server: ServerLayer,
+        workers: Vec<WorkerLayer>,
+    },
+    /// Reply to [`ToShard::Accept`].
+    Accepted {
+        shard: usize,
+    },
     Failed {
         shard: usize,
         err: String,
@@ -583,8 +699,40 @@ enum FromShard {
 /// drives them lock-step (shard-internal [`RoundMode`] pipelines still
 /// overlap leader and worker work *within* each shard), seals the
 /// [`ParamBoard`] once per round, and reduces per-shard telemetry.
+/// Root-side state of the bounded-epoch scheduler, present only when the
+/// [`SchedSpec`] is not off. Lock-step clusters never allocate this.
+struct WindowState {
+    /// Out-of-order reply staging + the completed-round frontier.
+    win: EpochWindow,
+    /// Issue timestamps for issue→reply round-time sampling.
+    clock: RoundClock,
+    /// Per-shard EWMA round times (the steal trigger).
+    bank: EwmaBank,
+    /// Completed-round rollups not yet returned to the caller — one pops
+    /// per `round()` call, so the completed-rollup stream matches the
+    /// lock-step stream exactly (just `window` calls later).
+    ready: VecDeque<ClusterRoundStats>,
+    /// Layers migrated so far.
+    steals: u64,
+    /// High-water mark of rounds any shard ran ahead of the frontier.
+    ahead_max: u64,
+}
+
 pub struct Cluster {
-    partition: Vec<Vec<usize>>,
+    /// Versioned layer → shard ownership; mutated only by a steal, at an
+    /// epoch boundary with no round in flight.
+    plan: PartitionPlan,
+    /// Full-model layer geometry (migrations re-ship a layer's geometry to
+    /// its new owner).
+    geometry: Vec<LayerGeometry>,
+    /// Full-model layer shapes (the steal picks the donor's lightest layer).
+    shapes: Vec<(usize, usize)>,
+    /// The shared radius schedule (windowed placeholder stats need the
+    /// issued round's radius before any shard has replied).
+    schedule: Schedule,
+    sched: SchedSpec,
+    /// `Some` iff `sched` is not off.
+    win: Option<WindowState>,
     board: Arc<ParamBoard>,
     /// Full-model broadcast shift, incrementally overwritten from shard
     /// replies; copied into a pooled board buffer at each seal.
@@ -630,12 +778,24 @@ impl Cluster {
         }
         let shapes: Vec<(usize, usize)> = x0.iter().map(|m| (m.rows, m.cols)).collect();
         let partition = partition_layers(&shapes, cfg.shards).map_err(anyhow::Error::msg)?;
-        let keep = cfg.round_mode.lookahead() + 3;
-        let board = Arc::new(if cfg.snap_bf16 {
+        cfg.sched.validate().map_err(anyhow::Error::msg)?;
+        if cfg.sched.steal.is_some() && !cfg.fault.is_off() {
+            // a straggler's late reply would land in the steal's dedicated
+            // Released/Accepted recv loops; keep the two protocols apart
+            return Err(anyhow!(
+                "work stealing requires the fault policy off (steal migration \
+                 cannot coexist with straggler deadlines or respawns)"
+            ));
+        }
+        // windowed runs keep `window` extra epochs: the frontier trails the
+        // newest issued round by up to that many still-open rounds
+        let keep = cfg.round_mode.lookahead() + cfg.sched.window + 3;
+        let board = if cfg.snap_bf16 {
             ParamBoard::new_bf16(x0.clone(), keep)
         } else {
             ParamBoard::new(x0.clone(), keep)
-        });
+        };
+        let board = Arc::new(if cfg.sched.is_off() { board } else { board.windowed() });
 
         let (reply_tx, reply_rx) = channel::<FromShard>();
         let mut to_shards = Vec::with_capacity(cfg.shards);
@@ -648,18 +808,27 @@ impl Cluster {
                 SnapCache::new(cfg.round_mode.lookahead() + 3).traced(cfg.tracer.for_shard(s)),
             );
             caches.push(cache.clone());
-            let shard_handle = handle.for_shard(board.clone(), ids.clone(), cache);
+            // the id list lives in a shared cell: a migration swaps it at an
+            // epoch boundary and every sliced handle sees the new ownership
+            let ids_cell = SharedIds::new(ids.clone());
+            let shard_handle = handle.for_shard(board.clone(), ids_cell.clone(), cache);
             let mut ccfg = cfg.coordinator_cfg();
             ccfg.tracer = cfg.tracer.for_shard(s);
             let (tx, rx) = channel::<ToShard>();
             let rtx = reply_tx.clone();
+            let delay = cfg.shard_delay.clone();
             // a lone shard's board is never read (the sharded handle's
             // owns-all-layers fast path skips it), so don't ship shifts
             let ship_shift = cfg.shards > 1;
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("efmuon-shard-{s}"))
-                    .spawn(move || shard_main(s, x0_s, geom_s, shard_handle, ccfg, ship_shift, rx, rtx))
+                    .spawn(move || {
+                        shard_main(
+                            s, x0_s, geom_s, shard_handle, ccfg, ship_shift, ids_cell, delay,
+                            rx, rtx,
+                        )
+                    })
                     .map_err(|e| anyhow!("spawning shard {s}: {e}"))?,
             );
             to_shards.push(tx);
@@ -678,9 +847,22 @@ impl Cluster {
             }
         }
 
+        let shards = partition.len();
         Ok(Cluster {
-            meters: vec![MeterSnapshot::default(); partition.len()],
-            partition,
+            meters: vec![MeterSnapshot::default(); shards],
+            plan: PartitionPlan::new(partition),
+            geometry,
+            shapes,
+            schedule: cfg.schedule.clone(),
+            sched: cfg.sched,
+            win: (!cfg.sched.is_off()).then(|| WindowState {
+                win: EpochWindow::new(shards, cfg.start_step),
+                clock: RoundClock::new(cfg.start_step),
+                bank: EwmaBank::new(shards),
+                ready: VecDeque::new(),
+                steals: 0,
+                ahead_max: 0,
+            }),
             board,
             shift_full: x0,
             caches,
@@ -697,14 +879,20 @@ impl Cluster {
     }
 
     /// The layer partition: `partition()[s]` is the ascending list of
-    /// global layer ids shard `s` owns.
+    /// global layer ids shard `s` owns (the current [`PartitionPlan`] —
+    /// a steal re-partitions online).
     pub fn partition(&self) -> &[Vec<usize>] {
-        &self.partition
+        self.plan.owned()
+    }
+
+    /// The partition plan's version: 0 at spawn, bumped once per steal.
+    pub fn partition_version(&self) -> u64 {
+        self.plan.version()
     }
 
     /// Number of shard coordinators.
     pub fn shards(&self) -> usize {
-        self.partition.len()
+        self.plan.owned().len()
     }
 
     /// Rounds issued (every shard's broadcast sent) so far.
@@ -719,8 +907,12 @@ impl Cluster {
     /// fast with the original error.
     pub fn round(&mut self) -> Result<ClusterRoundStats> {
         self.check_alive()?;
-        let r = self.round_inner();
-        self.latch(r)
+        let r = if self.win.is_some() {
+            self.round_windowed()
+        } else {
+            self.round_inner()
+        };
+        self.latch_close(r)
     }
 
     fn round_inner(&mut self) -> Result<ClusterRoundStats> {
@@ -734,7 +926,7 @@ impl Cluster {
                     if shard >= n || slots[shard].is_some() {
                         return Err(anyhow!("duplicate or out-of-range reply from shard {shard}"));
                     }
-                    for (m, &li) in shift.into_iter().zip(&self.partition[shard]) {
+                    for (m, &li) in shift.into_iter().zip(self.plan.shard(shard)) {
                         self.shift_full[li] = m;
                     }
                     self.meters[shard] = meter;
@@ -763,13 +955,202 @@ impl Cluster {
         Ok(stats)
     }
 
+    /// One bounded-epoch round: steal if the EWMA spread warrants it, issue
+    /// this round to every shard, then process replies only until the
+    /// frontier is within `window` rounds of the issue — fast shards run
+    /// ahead instead of waiting at a barrier. Completed-round rollups pop
+    /// one per call (placeholders with `absorbed_step: None` while the
+    /// window fills), so the completed-rollup stream is the lock-step
+    /// stream, `window` calls later.
+    fn round_windowed(&mut self) -> Result<ClusterRoundStats> {
+        self.maybe_steal()?;
+        let issued = self.step;
+        self.send_all(|| ToShard::Round)?;
+        self.win
+            .as_mut()
+            .expect("windowed")
+            .clock
+            .issue(issued, Instant::now());
+        self.step += 1;
+        // bounded epoch: at most `window` rounds may stay incomplete
+        let window = self.sched.window;
+        while self.win.as_ref().expect("windowed").win.frontier() + window <= issued {
+            self.process_reply()?;
+        }
+        let ws = self.win.as_mut().expect("windowed");
+        Ok(match ws.ready.pop_front() {
+            Some(stats) => stats,
+            None => ClusterRoundStats {
+                step: issued,
+                absorbed_step: None,
+                train_loss: f32::NAN,
+                radius: self.schedule.at(issued),
+                w2s_bytes_per_worker: 0,
+                s2w_bytes: 0,
+                per_shard: Vec::new(),
+            },
+        })
+    }
+
+    /// Receive and stage exactly one shard reply (windowed drive).
+    fn process_reply(&mut self) -> Result<()> {
+        match self.from_shards.recv() {
+            Ok(FromShard::Round { shard, stats, shift, meter }) => {
+                self.stage_round(shard, *stats, shift, meter)
+            }
+            Ok(FromShard::Failed { shard, err }) => {
+                Err(anyhow!("shard {shard} failed: {err}"))
+            }
+            Ok(_) => Err(anyhow!("unexpected shard reply during windowed round")),
+            Err(_) => Err(anyhow!("shard channel closed mid-round")),
+        }
+    }
+
+    /// Stage one shard's round reply: sample its round time, and for every
+    /// round the reply completes, seal the next board epoch and queue the
+    /// rollup. This is where epochs seal out of lock-step — as soon as the
+    /// last shard reports a round, regardless of how far ahead the others
+    /// already are.
+    fn stage_round(
+        &mut self,
+        shard: usize,
+        stats: RoundStats,
+        shift: Layers,
+        meter: MeterSnapshot,
+    ) -> Result<()> {
+        if shard >= self.shards() {
+            return Err(anyhow!("out-of-range reply from shard {shard}"));
+        }
+        self.meters[shard] = meter;
+        let now = Instant::now();
+        let ws = self.win.as_mut().expect("windowed");
+        let round = ws.win.record(shard, stats, shift).map_err(anyhow::Error::msg)?;
+        ws.bank.record(shard, ws.clock.elapsed_s(round, now));
+        let mut completed = Vec::new();
+        while let Some(c) = ws.win.pop_complete() {
+            completed.push(c);
+        }
+        let frontier = ws.win.frontier();
+        let excess = ws.win.done(shard).saturating_sub(frontier + 1);
+        ws.ahead_max = ws.ahead_max.max(excess as u64);
+        ws.clock.trim(frontier);
+        for (r, per_shard, shifts) in completed {
+            // every staged shift predates any future steal (migration only
+            // happens with zero rounds in flight), so the current plan is
+            // the right decoder for all of them
+            for (s, layers) in shifts.into_iter().enumerate() {
+                for (m, &li) in layers.into_iter().zip(self.plan.shard(s)) {
+                    self.shift_full[li] = m;
+                }
+            }
+            if self.shards() > 1 {
+                self.seal_bytes += self.board.seal_from(r + 1, &self.shift_full);
+                self.tracer.stamp(Phase::EpochSeal, r, None);
+            }
+            let rolled = rollup(r, per_shard, self.sum_losses);
+            self.win.as_mut().expect("windowed").ready.push_back(rolled);
+        }
+        if excess > 0 {
+            self.tracer.for_shard(shard).stamp(Phase::ShardAhead, round, None);
+        }
+        Ok(())
+    }
+
+    /// Steal a layer from a persistently slow shard when the EWMA
+    /// round-time spread crosses the threshold. Migration happens at an
+    /// epoch boundary only: the root first catches up to every issued round
+    /// (so no uplink, broadcast, or board read straddles the ownership
+    /// change), then moves the donor's lightest layer — server shift plus
+    /// every worker's EF21 error state, bitwise — to the fastest shard and
+    /// bumps the [`PartitionPlan`] version.
+    fn maybe_steal(&mut self) -> Result<()> {
+        let Some(thresh) = self.sched.steal else { return Ok(()) };
+        let (slow, fast) = {
+            let ws = self.win.as_ref().expect("windowed");
+            if !ws.bank.ready() || ws.bank.spread() < thresh {
+                return Ok(());
+            }
+            (ws.bank.slowest(), ws.bank.fastest())
+        };
+        if slow == fast || self.plan.shard(slow).len() < 2 {
+            // a 1-layer shard never donates (every shard keeps >= 1 layer)
+            return Ok(());
+        }
+        // epoch boundary: no round in flight anywhere during the migration
+        while !self.win.as_ref().expect("windowed").win.caught_up(self.step) {
+            self.process_reply()?;
+        }
+        let layer = *self
+            .plan
+            .shard(slow)
+            .iter()
+            .min_by_key(|&&i| (self.shapes[i].0 * self.shapes[i].1, i))
+            .expect("donor owns >= 2 layers");
+        self.to_shards[slow]
+            .send(ToShard::Release { layer })
+            .map_err(|_| anyhow!("shard {slow} thread has exited"))?;
+        let (server, workers) = match self.from_shards.recv() {
+            Ok(FromShard::Released { shard, layer: l, server, workers })
+                if shard == slow && l == layer =>
+            {
+                (server, workers)
+            }
+            Ok(FromShard::Failed { shard, err }) => {
+                return Err(anyhow!("shard {shard} failed during steal: {err}"))
+            }
+            Ok(_) => return Err(anyhow!("unexpected shard reply during steal")),
+            Err(_) => return Err(anyhow!("shard channel closed during steal")),
+        };
+        self.plan.migrate(layer, slow, fast).map_err(anyhow::Error::msg)?;
+        self.to_shards[fast]
+            .send(ToShard::Accept {
+                layer,
+                geometry: self.geometry[layer],
+                server,
+                workers,
+            })
+            .map_err(|_| anyhow!("shard {fast} thread has exited"))?;
+        match self.from_shards.recv() {
+            Ok(FromShard::Accepted { shard }) if shard == fast => {}
+            Ok(FromShard::Failed { shard, err }) => {
+                return Err(anyhow!("shard {shard} failed during steal: {err}"))
+            }
+            Ok(_) => return Err(anyhow!("unexpected shard reply during steal")),
+            Err(_) => return Err(anyhow!("shard channel closed during steal")),
+        }
+        let ws = self.win.as_mut().expect("windowed");
+        ws.steals += 1;
+        // the donor just shrank and the thief grew: old round times are no
+        // longer evidence about either, so re-learn before stealing again
+        ws.bank.reset();
+        self.tracer.stamp(Phase::LayerSteal, self.step, Some(layer));
+        Ok(())
+    }
+
+    /// Windowed drain: catch up to every issued round (queueing their
+    /// rollups), return the queued tail, then run the legacy drain so
+    /// shard-internal pipelines land too.
+    fn drain_windowed(&mut self) -> Result<Vec<ClusterRoundStats>> {
+        while !self.win.as_ref().expect("windowed").win.caught_up(self.step) {
+            self.process_reply()?;
+        }
+        let mut out: Vec<ClusterRoundStats> =
+            self.win.as_mut().expect("windowed").ready.drain(..).collect();
+        out.extend(self.drain_inner()?);
+        Ok(out)
+    }
+
     /// Drain every shard's pipeline (no-op in sync mode): all issued rounds
     /// land on every shard. Returns one rollup per drained round, in
     /// absorption order.
     pub fn drain(&mut self) -> Result<Vec<ClusterRoundStats>> {
         self.check_alive()?;
-        let r = self.drain_inner();
-        self.latch(r)
+        let r = if self.win.is_some() {
+            self.drain_windowed()
+        } else {
+            self.drain_inner()
+        };
+        self.latch_close(r)
     }
 
     fn drain_inner(&mut self) -> Result<Vec<ClusterRoundStats>> {
@@ -820,11 +1201,23 @@ impl Cluster {
         Ok(out)
     }
 
-    /// Assembled full-model parameters (every shard's server X).
+    /// Assembled full-model parameters (every shard's server X). Windowed
+    /// drive catches up to every issued round first, so the assembled view
+    /// is a consistent round boundary (the queued rollups stay queued for
+    /// the next `round()`/`drain()` call).
     pub fn params(&mut self) -> Result<Layers> {
         self.check_alive()?;
-        let r = self.params_inner();
-        self.latch(r)
+        let r = self.params_catch_up();
+        self.latch_close(r)
+    }
+
+    fn params_catch_up(&mut self) -> Result<Layers> {
+        if self.win.is_some() {
+            while !self.win.as_ref().expect("windowed").win.caught_up(self.step) {
+                self.process_reply()?;
+            }
+        }
+        self.params_inner()
     }
 
     fn params_inner(&mut self) -> Result<Layers> {
@@ -838,7 +1231,7 @@ impl Cluster {
                     if shard >= n {
                         return Err(anyhow!("out-of-range params reply from shard {shard}"));
                     }
-                    for (m, &li) in params.into_iter().zip(&self.partition[shard]) {
+                    for (m, &li) in params.into_iter().zip(self.plan.shard(shard)) {
                         full[li] = m;
                     }
                     filled += 1;
@@ -873,7 +1266,17 @@ impl Cluster {
             m.bytes_cloned = c.bytes_assembled();
             m.snap_bytes_shipped = c.bytes_shipped();
         }
-        ClusterMeter { per_shard, root_bytes_cloned: self.seal_bytes }
+        let (steals, epochs_ahead_max, round_ewma_spread) = match &self.win {
+            Some(ws) => (ws.steals, ws.ahead_max, ws.bank.spread()),
+            None => (0, 0, 1.0),
+        };
+        ClusterMeter {
+            per_shard,
+            root_bytes_cloned: self.seal_bytes,
+            steals,
+            epochs_ahead_max,
+            round_ewma_spread,
+        }
     }
 
     fn send_all(&self, mut cmd: impl FnMut() -> ToShard) -> Result<()> {
@@ -898,10 +1301,24 @@ impl Cluster {
         }
         r
     }
+
+    /// [`Cluster::latch`], closing the board first on error: a windowed
+    /// board may have fast-shard workers parked on an epoch the failed root
+    /// will never seal. Harmless for the lock-step board (no read waits).
+    fn latch_close<T>(&mut self, r: Result<T>) -> Result<T> {
+        if r.is_err() {
+            self.board.close();
+        }
+        self.latch(r)
+    }
 }
 
 impl Drop for Cluster {
     fn drop(&mut self) {
+        // wake any worker parked on an unsealed windowed epoch *before*
+        // joining the shard threads, or the join would wedge on a shard
+        // whose round can no longer complete
+        self.board.close();
         for tx in &self.to_shards {
             let _ = tx.send(ToShard::Stop);
         }
@@ -961,7 +1378,9 @@ impl Drop for PanicGuard {
 /// included), then serve root commands until `Stop` or a fatal error.
 /// `ship_shift` is false on 1-shard clusters: no other shard will ever
 /// read the board, so round replies carry an empty shift instead of a
-/// full-model clone.
+/// full-model clone. `ids` is the shared global-layer-id cell the shard's
+/// sliced grad handles read; a migration swaps it between rounds. `delay`
+/// injects deterministic per-round slowdowns for scheduler tests/benches.
 #[allow(clippy::too_many_arguments)]
 fn shard_main(
     shard: usize,
@@ -970,6 +1389,8 @@ fn shard_main(
     handle: GradHandle,
     cfg: CoordinatorCfg,
     ship_shift: bool,
+    ids: SharedIds,
+    delay: Option<Arc<ShardDelayPlan>>,
     rx: Receiver<ToShard>,
     tx: Sender<FromShard>,
 ) {
@@ -987,23 +1408,30 @@ fn shard_main(
     while let Ok(cmd) = rx.recv() {
         match cmd {
             ToShard::Stop => break,
-            ToShard::Round => match coord.round() {
-                Ok(stats) => {
-                    let reply = FromShard::Round {
-                        shard,
-                        stats: Box::new(stats),
-                        shift: if ship_shift { coord.shift().clone() } else { Vec::new() },
-                        meter: coord.meter().snapshot(),
-                    };
-                    if tx.send(reply).is_err() {
+            ToShard::Round => {
+                if let Some(p) = &delay {
+                    if let Some(ms) = p.at(shard, coord.steps_done()) {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                match coord.round() {
+                    Ok(stats) => {
+                        let reply = FromShard::Round {
+                            shard,
+                            stats: Box::new(stats),
+                            shift: if ship_shift { coord.shift().clone() } else { Vec::new() },
+                            meter: coord.meter().snapshot(),
+                        };
+                        if tx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
                         break;
                     }
                 }
-                Err(e) => {
-                    let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
-                    break;
-                }
-            },
+            }
             ToShard::Drain => match coord.drain() {
                 Ok(stats) => {
                     let reply = FromShard::Drained {
@@ -1024,6 +1452,61 @@ fn shard_main(
                 let reply = FromShard::Params { shard, params: coord.params().clone() };
                 if tx.send(reply).is_err() {
                     break;
+                }
+            }
+            ToShard::Release { layer } => {
+                let cur = ids.get();
+                let at = match cur.binary_search(&layer) {
+                    Ok(at) => at,
+                    Err(_) => {
+                        let _ = tx.send(FromShard::Failed {
+                            shard,
+                            err: format!("asked to release unowned layer {layer}"),
+                        });
+                        break;
+                    }
+                };
+                match coord.release_layer(at) {
+                    Ok((server, workers)) => {
+                        let mut next = (*cur).clone();
+                        next.remove(at);
+                        ids.set(next);
+                        let reply = FromShard::Released { shard, layer, server, workers };
+                        if tx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
+                        break;
+                    }
+                }
+            }
+            ToShard::Accept { layer, geometry, server, workers } => {
+                let cur = ids.get();
+                let at = match cur.binary_search(&layer) {
+                    Err(at) => at,
+                    Ok(_) => {
+                        let _ = tx.send(FromShard::Failed {
+                            shard,
+                            err: format!("asked to adopt already-owned layer {layer}"),
+                        });
+                        break;
+                    }
+                };
+                match coord.accept_layer(at, geometry, server, workers) {
+                    Ok(()) => {
+                        let mut next = (*cur).clone();
+                        next.insert(at, layer);
+                        ids.set(next);
+                        if tx.send(FromShard::Accepted { shard }).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(FromShard::Failed { shard, err: format!("{e:#}") });
+                        break;
+                    }
                 }
             }
         }
@@ -1053,6 +1536,15 @@ pub fn totals_consistent(meter: &ClusterMeter) -> bool {
         && t.partial_rounds == sum(|m| m.partial_rounds)
         && t.reconnects == sum(|m| m.reconnects)
         && t.heartbeat_misses == sum(|m| m.heartbeat_misses)
+        && t.steals == sum(|m| m.steals) + meter.steals
+        && t.epochs_ahead_max
+            == meter
+                .per_shard
+                .iter()
+                .map(|m| m.epochs_ahead_max)
+                .max()
+                .unwrap_or(0)
+                .max(meter.epochs_ahead_max)
 }
 
 #[cfg(test)]
@@ -1174,6 +1666,8 @@ mod tests {
             partial_rounds: 1,
             reconnects: 0,
             heartbeat_misses: 2,
+            steals: 0,
+            epochs_ahead_max: 0,
         };
         let m1 = MeterSnapshot {
             w2s_per_worker: 7,
@@ -1190,8 +1684,16 @@ mod tests {
             partial_rounds: 2,
             reconnects: 3,
             heartbeat_misses: 1,
+            steals: 0,
+            epochs_ahead_max: 0,
         };
-        let cm = ClusterMeter { per_shard: vec![m0, m1], root_bytes_cloned: 40 };
+        let cm = ClusterMeter {
+            per_shard: vec![m0, m1],
+            root_bytes_cloned: 40,
+            steals: 2,
+            epochs_ahead_max: 3,
+            round_ewma_spread: 1.25,
+        };
         let t = cm.totals();
         assert_eq!(t.w2s_per_worker, 17);
         assert_eq!(t.w2s_all, 51);
@@ -1207,9 +1709,14 @@ mod tests {
         assert_eq!(t.partial_rounds, 3);
         assert_eq!(t.reconnects, 3);
         assert_eq!(t.heartbeat_misses, 3);
+        assert_eq!(t.steals, 2, "root-level steal count folds into the totals");
+        assert_eq!(t.epochs_ahead_max, 3, "window high-water mark is a max, not a sum");
         assert!(totals_consistent(&cm));
         let j = cm.to_json();
         assert!(j.get("totals").is_some());
         assert_eq!(j.get("per_shard").and_then(|v| v.as_arr()).unwrap().len(), 2);
+        assert_eq!(j.get("steals").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("epochs_ahead_max").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("round_ewma_spread").and_then(|v| v.as_f64()), Some(1.25));
     }
 }

@@ -16,7 +16,9 @@
 //! so the leader routes them into per-round id-slots by `(step, id)`.
 
 use crate::compress::{codec, Message};
+use crate::compress::Compressor;
 
+use super::sched::WorkerLayer;
 use super::TransportMode;
 
 /// One hop (broadcast or uplink) of per-layer messages on the wire.
@@ -83,6 +85,15 @@ pub enum ToWorker {
     /// Run one EF21 round: apply this broadcast, compute, reply with the
     /// same `step` tag.
     Round { step: usize, broadcast: Wire },
+    /// Hand the layer at local index `at` back to the leader (cluster work
+    /// stealing): remove its `(W, M, G)` triple and reply `Released`. Only
+    /// sent with zero rounds in flight, so the command queue's serial order
+    /// guarantees the state is post-every-absorbed-round.
+    Release { at: usize },
+    /// Adopt a migrated layer at local index `at` with its EF21 state and a
+    /// fresh compressor for its shape. No reply: the serial queue orders it
+    /// before any subsequent `Round`.
+    Accept { at: usize, state: WorkerLayer, comp: Box<dyn Compressor> },
     /// Exit the worker loop.
     Stop,
 }
@@ -99,6 +110,9 @@ pub enum FromWorker {
     /// uplink (folded into the server estimator) instead of a protocol
     /// error.
     Round { id: usize, step: usize, loss: f32, bytes: usize, uplink: Wire },
+    /// Reply to [`ToWorker::Release`]: this worker's EF21 state for the
+    /// released layer, bitwise as it stood after the last absorbed round.
+    Released { id: usize, state: WorkerLayer },
     /// Irrecoverable worker-side failure (including panics: the worker's
     /// panic guard converts an unwind into this message so the leader
     /// returns a clean `Err` instead of hanging).

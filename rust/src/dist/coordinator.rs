@@ -67,6 +67,7 @@ use crate::trace::{Phase, Tracer};
 use super::comm::{FromWorker, ToWorker, Wire};
 use super::fault::{FaultKind, FaultPlan, FaultPolicy};
 use super::net::{ArmSpec, NetHub};
+use super::sched::{ServerLayer, WorkerLayer};
 use super::server::SpectralServer;
 use super::service::GradHandle;
 use super::{Meter, RoundMode, TransportMode};
@@ -277,6 +278,10 @@ pub struct Coordinator {
     /// for the in-process channel transport.
     hub: Option<Arc<NetHub>>,
     tracer: Tracer,
+    /// Compressor descriptors, kept to rebuild per-layer compressors for
+    /// layers adopted mid-run ([`Coordinator::accept_layer`]).
+    worker_comp: CompSpec,
+    server_comp: CompSpec,
 }
 
 impl Coordinator {
@@ -344,6 +349,8 @@ impl Coordinator {
             failed: None,
             hub: None,
             tracer: cfg.tracer,
+            worker_comp: cfg.worker_comp,
+            server_comp: cfg.server_comp,
         })
     }
 
@@ -420,6 +427,8 @@ impl Coordinator {
             failed: None,
             hub: Some(hub),
             tracer: cfg.tracer,
+            worker_comp: cfg.worker_comp,
+            server_comp: cfg.server_comp,
         })
     }
 
@@ -542,6 +551,111 @@ impl Coordinator {
         }
         out.extend(self.drain()?);
         Ok(out)
+    }
+
+    /// Hand the layer at local index `at` over to the cluster root (work
+    /// stealing): quiesce the pipeline, collect every worker's `(W, M, G)`
+    /// triple for the layer, and splice the server-side `(X, W, G)` out of
+    /// the EF21 state machines. The returned state is bitwise as it stood
+    /// after the last absorbed round — the command queue's serial order
+    /// guarantees the workers have applied every issued broadcast first.
+    pub fn release_layer(&mut self, at: usize) -> Result<(ServerLayer, Vec<WorkerLayer>)> {
+        self.check_alive()?;
+        let r = self.release_layer_inner(at);
+        self.latch(r)
+    }
+
+    fn release_layer_inner(&mut self, at: usize) -> Result<(ServerLayer, Vec<WorkerLayer>)> {
+        // quiesce: every issued round must be absorbed before layer state
+        // can move, or in-flight uplinks would straddle the layer-count
+        // change (no-op in sync mode; the drained rounds' telemetry was
+        // already metered when issued)
+        self.drain_inner()?;
+        let n = self.to_workers.len();
+        for tx in &self.to_workers {
+            if tx.send(ToWorker::Release { at }).is_err() {
+                return Err(anyhow!("a worker thread has exited"));
+            }
+        }
+        let mut slots: Vec<Option<WorkerLayer>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match self.from_workers.recv() {
+                Ok(FromWorker::Released { id, state }) => {
+                    if id >= n || slots[id].is_some() {
+                        return Err(anyhow!(
+                            "duplicate or out-of-range release reply from worker {id}"
+                        ));
+                    }
+                    slots[id] = Some(state);
+                }
+                Ok(FromWorker::Failed { id, err }) => {
+                    return Err(anyhow!("worker {id} failed during layer release: {err}"))
+                }
+                Ok(_) => {
+                    return Err(anyhow!("unexpected reply during layer release"))
+                }
+                Err(_) => {
+                    return Err(anyhow!("worker channel closed during layer release"))
+                }
+            }
+        }
+        let workers = slots
+            .into_iter()
+            .map(|s| s.expect("all release slots filled"))
+            .collect();
+        let (x, w, g) = self.server.release_layer(at);
+        Ok((ServerLayer { x, w, g }, workers))
+    }
+
+    /// Adopt a migrated layer at local index `at`: quiesce the pipeline,
+    /// splice the server-side state in (with a fresh compressor for the
+    /// layer's shape), and forward each worker its `(W, M, G)` triple. No
+    /// worker ack — the serial command queue orders the adoption before any
+    /// subsequent round.
+    pub fn accept_layer(
+        &mut self,
+        at: usize,
+        geometry: LayerGeometry,
+        server: ServerLayer,
+        workers: Vec<WorkerLayer>,
+    ) -> Result<()> {
+        self.check_alive()?;
+        let r = self.accept_layer_inner(at, geometry, server, workers);
+        self.latch(r)
+    }
+
+    fn accept_layer_inner(
+        &mut self,
+        at: usize,
+        geometry: LayerGeometry,
+        server: ServerLayer,
+        workers: Vec<WorkerLayer>,
+    ) -> Result<()> {
+        self.drain_inner()?;
+        if workers.len() != self.to_workers.len() {
+            return Err(anyhow!(
+                "migrated layer carries {} worker states for {} workers",
+                workers.len(),
+                self.to_workers.len()
+            ));
+        }
+        let (rows, cols) = (server.x.rows, server.x.cols);
+        let ServerLayer { x, w, g } = server;
+        self.server.accept_layer(
+            at,
+            x,
+            w,
+            g,
+            geometry,
+            self.server_comp.for_shape(rows, cols).build(),
+        );
+        for (tx, state) in self.to_workers.iter().zip(workers) {
+            let comp = self.worker_comp.for_shape(rows, cols).build();
+            if tx.send(ToWorker::Accept { at, state, comp }).is_err() {
+                return Err(anyhow!("a worker thread has exited"));
+            }
+        }
+        Ok(())
     }
 
     /// Fail fast if a previous round already hit a fatal error.
@@ -667,6 +781,11 @@ impl Coordinator {
                 Ok(())
             }
             FromWorker::Failed { id, err } => self.handle_failure(id, &err),
+            FromWorker::Released { id, .. } => {
+                // legitimate only inside `release_layer`'s dedicated recv
+                // loop, which runs with zero rounds in flight
+                Err(anyhow!("unexpected layer release from worker {id}"))
+            }
             FromWorker::Init { id, .. } => {
                 // a respawned worker re-runs the INIT_STEP path; its fresh
                 // G⁰ⱼ is discarded — the server keeps the dead
@@ -841,6 +960,9 @@ fn collect_g0(reply_rx: &Receiver<FromWorker>, n: usize, x0: &Layers) -> Result<
             Ok(FromWorker::Round { id, .. }) => {
                 return Err(anyhow!("worker {id} sent a round reply before init"))
             }
+            Ok(FromWorker::Released { id, .. }) => {
+                return Err(anyhow!("worker {id} sent a release reply before init"))
+            }
             Err(_) => return Err(anyhow!("worker channel closed during init")),
         }
     }
@@ -921,6 +1043,22 @@ pub(crate) fn worker_main(
     while let Ok(cmd) = rx.recv() {
         let (step, broadcast) = match cmd {
             ToWorker::Stop => break,
+            ToWorker::Release { at } => {
+                // cluster work stealing: hand the layer's EF21 state back.
+                // Arrives only with zero rounds in flight, so the triple is
+                // post-every-absorbed-round by the queue's serial order.
+                let (w, m, g) = state.release_layer(at);
+                let layer = WorkerLayer { w, m, g };
+                if tx.send(FromWorker::Released { id, state: layer }).is_err() {
+                    break;
+                }
+                continue;
+            }
+            ToWorker::Accept { at, state: layer, comp } => {
+                let WorkerLayer { w, m, g } = layer;
+                state.accept_layer(at, w, m, g, comp);
+                continue;
+            }
             ToWorker::Round { step, broadcast } => (step, broadcast),
         };
         let fault = plan.as_ref().and_then(|p| p.at(id, step));

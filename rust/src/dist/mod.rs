@@ -54,6 +54,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod fault;
 pub mod net;
+pub mod sched;
 pub mod server;
 pub mod service;
 
@@ -323,6 +324,13 @@ pub struct MeterSnapshot {
     pub reconnects: u64,
     /// Heartbeat windows elapsed without a frame ([`net::NetCfg`]).
     pub heartbeat_misses: u64,
+    /// Layers migrated off persistently slow shards by the windowed root
+    /// scheduler ([`sched::SchedSpec`]). Zero in lock-step and in every
+    /// balanced run.
+    pub steals: u64,
+    /// Largest round lead any shard held over the window frontier
+    /// (bounded by `SchedSpec::window`; exactly 0 in lock-step).
+    pub epochs_ahead_max: u64,
 }
 
 impl MeterSnapshot {
@@ -341,6 +349,12 @@ impl MeterSnapshot {
         self.partial_rounds += other.partial_rounds;
         self.reconnects += other.reconnects;
         self.heartbeat_misses += other.heartbeat_misses;
+        self.steals += other.steals;
+        self.epochs_ahead_max = if first {
+            other.epochs_ahead_max
+        } else {
+            self.epochs_ahead_max.max(other.epochs_ahead_max)
+        };
         if first {
             self.rounds_issued = other.rounds_issued;
             self.rounds_absorbed = other.rounds_absorbed;
@@ -367,6 +381,8 @@ impl MeterSnapshot {
             .put("partial_rounds", self.partial_rounds)
             .put("reconnects", self.reconnects)
             .put("heartbeat_misses", self.heartbeat_misses)
+            .put("steals", self.steals)
+            .put("epochs_ahead_max", self.epochs_ahead_max)
             .build()
     }
 
@@ -398,6 +414,8 @@ impl MeterSnapshot {
             partial_rounds: opt("partial_rounds"),
             reconnects: opt("reconnects"),
             heartbeat_misses: opt("heartbeat_misses"),
+            steals: opt("steals"),
+            epochs_ahead_max: opt("epochs_ahead_max"),
         })
     }
 }
@@ -488,6 +506,8 @@ mod tests {
             partial_rounds: 912,
             reconnects: 913,
             heartbeat_misses: 914,
+            steals: 915,
+            epochs_ahead_max: 916,
         };
         let j = snap.to_json();
         let line = j.to_line();
@@ -506,6 +526,8 @@ mod tests {
             "partial_rounds",
             "reconnects",
             "heartbeat_misses",
+            "steals",
+            "epochs_ahead_max",
         ] {
             assert!(line.contains(key), "serialized snapshot must carry {key}: {line}");
         }
@@ -543,5 +565,6 @@ mod tests {
         let s = MeterSnapshot::from_json(&legacy).unwrap();
         assert_eq!((s.stragglers, s.respawns, s.partial_rounds), (0, 0, 0));
         assert_eq!((s.reconnects, s.heartbeat_misses), (0, 0));
+        assert_eq!((s.steals, s.epochs_ahead_max), (0, 0));
     }
 }

@@ -996,6 +996,14 @@ fn writer_loop(
                 let _ = write_frame(&mut stream, &Frame::Stop);
                 return;
             }
+            ToWorker::Release { .. } | ToWorker::Accept { .. } => {
+                // layer migration is never sent over the socket transport
+                // (stealing requires multiple shards; `--transport tcp:`
+                // requires one) — sever the link so the coordinator gets a
+                // clean Failed instead of a silently dropped command
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
             ToWorker::Round { step, broadcast } => (step, broadcast),
         };
         let fault = flaky.as_ref().and_then(|p| p.at(id, step));
@@ -1301,6 +1309,10 @@ fn run_session(
                 Ok(FromWorker::Round { id, step, loss, bytes, uplink }) => {
                     Frame::Reply { id, step, loss, bytes, bufs: encode_wire(uplink) }
                 }
+                Ok(FromWorker::Released { id, .. }) => Frame::Failed {
+                    id,
+                    err: "layer release is unsupported over the socket transport".into(),
+                },
                 Ok(FromWorker::Failed { id, err }) => Frame::Failed { id, err },
                 Err(RecvTimeoutError::Timeout) => Frame::Heartbeat,
                 Err(RecvTimeoutError::Disconnected) => return,
@@ -1554,7 +1566,7 @@ mod tests {
                 assert_eq!(id, 3);
                 assert!(err.contains("missed 2"), "unexpected error: {err}");
             }
-            FromWorker::Init { .. } | FromWorker::Round { .. } => {
+            FromWorker::Init { .. } | FromWorker::Round { .. } | FromWorker::Released { .. } => {
                 panic!("expected a Failed reply")
             }
         }

@@ -1,0 +1,748 @@
+//! Bounded-epoch shard scheduling: the window manager that lets shards run
+//! ahead of the slowest shard, plus online re-partitioning (work stealing).
+//!
+//! [`SchedSpec`] is the spec-level knob carried by `RunSpec` and
+//! `ClusterCfg`. The default (`off()`) reproduces the lock-step root
+//! reducer bit for bit: every root round blocks until all shards reply and
+//! epochs seal at that barrier. Turning the window on (`window:N`) lets the
+//! root issue up to `N` rounds beyond the slowest shard's last completed
+//! round — the async worker `lookahead` machinery generalized one level up,
+//! to shards. Replies then arrive out of order across shards, so the root
+//! stages them per `(round, shard)` in an [`EpochWindow`] and seals
+//! `ParamBoard` epochs as each round *completes* (all shards reported it)
+//! rather than at a lock-step barrier.
+//!
+//! `steal:THRESH` adds work stealing on top: an [`EwmaBank`] tracks each
+//! shard's issue→reply round time (sampled against the root's
+//! [`RoundClock`], so a shard's queue backlog — the real symptom of being
+//! slow under a window — amplifies its sample), and when the max/min EWMA
+//! spread exceeds the threshold the root closes the window (a one-round
+//! barrier), migrates the slow shard's lightest layer to the fastest shard
+//! through a versioned [`PartitionPlan`], and resumes. Migration happens
+//! only at such an epoch boundary with zero rounds in flight, which is what
+//! keeps the EF21 state consistent: the layer's server shift, server error
+//! state and every worker's `(W, M, G)` triple move *bitwise* to the new
+//! owner, so the stolen layer's trajectory continues as if it had never
+//! moved.
+//!
+//! [`ShardDelayPlan`] is the test/bench-only imbalance harness — the
+//! shard-level sibling of `fault::FaultPlan`: a deterministic schedule of
+//! `(shard, round) → sleep` injected into the shard threads, never
+//! serialized into a config.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::time::Instant;
+
+use crate::linalg::matrix::{Layers, Matrix};
+
+use super::coordinator::RoundStats;
+
+// ---------------------------------------------------------------------------
+// SchedSpec
+// ---------------------------------------------------------------------------
+
+/// Shard scheduling policy for a cluster deployment.
+///
+/// Spec grammar (the `--sched` flag and the `sched` config key): `off`, or
+/// a comma list of `key:value` pairs — `window:2,steal:1.5`. `steal:off`
+/// disables stealing explicitly; [`SchedSpec::spec`] always emits either
+/// `off` or both keys in that fixed order, so `parse(spec(s)) == s`
+/// exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedSpec {
+    /// How many rounds any shard may run ahead of the slowest shard. `0`
+    /// is the lock-step golden anchor: the root blocks on every round.
+    pub window: usize,
+    /// EWMA round-time spread (max/min) that triggers a layer steal from
+    /// the slowest shard; `None` disables stealing. Must be `> 1.0`.
+    pub steal: Option<f64>,
+}
+
+impl Default for SchedSpec {
+    fn default() -> Self {
+        SchedSpec::off()
+    }
+}
+
+impl SchedSpec {
+    /// Cap on the epoch window: each in-flight round stages one shift per
+    /// shard, so the window bounds root-side memory.
+    pub const MAX_WINDOW: usize = 64;
+
+    /// The lock-step default: no window, no stealing.
+    pub const fn off() -> Self {
+        SchedSpec { window: 0, steal: None }
+    }
+
+    /// True when the policy changes nothing about the lock-step cluster.
+    pub fn is_off(&self) -> bool {
+        *self == SchedSpec::off()
+    }
+
+    /// Parse the spec grammar. Accepts `off` (or the empty string) and any
+    /// subset of `window:N,steal:THRESH` (with `steal:off` for `None`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(SchedSpec::off());
+        }
+        let mut p = SchedSpec::off();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("sched: expected key:value, got {part:?}"))?;
+            match key {
+                "window" => {
+                    p.window = val
+                        .parse()
+                        .map_err(|_| format!("sched: bad window {val:?}"))?;
+                }
+                "steal" => {
+                    p.steal = if val == "off" {
+                        None
+                    } else {
+                        Some(
+                            val.parse()
+                                .map_err(|_| format!("sched: bad steal threshold {val:?}"))?,
+                        )
+                    };
+                }
+                other => {
+                    return Err(format!(
+                        "sched: unknown key {other:?} (expected window/steal, or \"off\")"
+                    ))
+                }
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Canonical spec string; `parse` round-trips it losslessly.
+    pub fn spec(&self) -> String {
+        if self.is_off() {
+            return "off".into();
+        }
+        match self.steal {
+            Some(t) => format!("window:{},steal:{}", self.window, t),
+            None => format!("window:{},steal:off", self.window),
+        }
+    }
+
+    /// Field-level validation (also run by `parse`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.window > SchedSpec::MAX_WINDOW {
+            return Err(format!(
+                "sched: window {} exceeds the cap {}",
+                self.window,
+                SchedSpec::MAX_WINDOW
+            ));
+        }
+        if let Some(t) = self.steal {
+            if !t.is_finite() || t <= 1.0 {
+                return Err(format!(
+                    "sched: steal threshold must be a finite ratio > 1 (got {t})"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for SchedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PartitionPlan — versioned layer ownership
+// ---------------------------------------------------------------------------
+
+/// The cluster's layer → shard assignment, versioned so a migration is an
+/// explicit, observable transition rather than a mutation in place.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    version: u64,
+    owned: Vec<Vec<usize>>,
+}
+
+impl PartitionPlan {
+    /// Wrap an initial partition (version 0). Each shard's ids must be
+    /// ascending — `partition_layers` already guarantees this.
+    pub fn new(owned: Vec<Vec<usize>>) -> Self {
+        debug_assert!(owned.iter().all(|ids| ids.windows(2).all(|w| w[0] < w[1])));
+        PartitionPlan { version: 0, owned }
+    }
+
+    /// Bumped once per successful migration.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn owned(&self) -> &[Vec<usize>] {
+        &self.owned
+    }
+
+    pub fn shard(&self, s: usize) -> &[usize] {
+        &self.owned[s]
+    }
+
+    /// The shard currently owning `layer`, if any.
+    pub fn owner_of(&self, layer: usize) -> Option<usize> {
+        self.owned
+            .iter()
+            .position(|ids| ids.binary_search(&layer).is_ok())
+    }
+
+    /// Move `layer` from shard `from` to shard `to`, keeping both id lists
+    /// ascending. Refuses to empty a shard (every coordinator must keep at
+    /// least one layer). Returns the new version.
+    pub fn migrate(&mut self, layer: usize, from: usize, to: usize) -> Result<u64, String> {
+        if from == to || from >= self.owned.len() || to >= self.owned.len() {
+            return Err(format!("partition: bad migration {from} -> {to}"));
+        }
+        if self.owned[from].len() < 2 {
+            return Err(format!("partition: shard {from} cannot give up its last layer"));
+        }
+        let at = self.owned[from]
+            .binary_search(&layer)
+            .map_err(|_| format!("partition: shard {from} does not own layer {layer}"))?;
+        self.owned[from].remove(at);
+        match self.owned[to].binary_search(&layer) {
+            Ok(_) => return Err(format!("partition: shard {to} already owns layer {layer}")),
+            Err(i) => self.owned[to].insert(i, layer),
+        }
+        self.version += 1;
+        Ok(self.version)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EpochWindow — per-epoch completeness tracking for out-of-order replies
+// ---------------------------------------------------------------------------
+
+/// One in-flight round's staging slot: which shards have reported it.
+struct WindowSlot {
+    stats: Vec<Option<RoundStats>>,
+    shifts: Vec<Option<Layers>>,
+    filled: usize,
+}
+
+impl WindowSlot {
+    fn empty(shards: usize) -> Self {
+        WindowSlot {
+            stats: (0..shards).map(|_| None).collect(),
+            shifts: (0..shards).map(|_| None).collect(),
+            filled: 0,
+        }
+    }
+}
+
+/// Completeness tracker for windowed rounds. Shard replies arrive out of
+/// order *across* shards (each shard's own replies stay ordered — the reply
+/// channel is serial per sender), get staged per `(round, shard)`, and pop
+/// in round order once every shard has reported the round. The pop is the
+/// epoch-seal point.
+pub struct EpochWindow {
+    shards: usize,
+    /// Oldest round not yet complete on all shards (== the frontier).
+    base: usize,
+    /// Absolute rounds completed per shard.
+    done: Vec<usize>,
+    staged: VecDeque<WindowSlot>,
+}
+
+impl EpochWindow {
+    pub fn new(shards: usize, start_round: usize) -> Self {
+        assert!(shards > 0, "epoch window needs at least one shard");
+        EpochWindow { shards, base: start_round, done: vec![start_round; shards], staged: VecDeque::new() }
+    }
+
+    /// The slowest shard's completed-round count — no round below this is
+    /// in flight anywhere, so epoch `frontier()` is (or is about to be)
+    /// sealed.
+    pub fn frontier(&self) -> usize {
+        self.base
+    }
+
+    /// Absolute rounds completed by `shard`.
+    pub fn done(&self, shard: usize) -> usize {
+        self.done[shard]
+    }
+
+    /// True when no reply is outstanding below `issued`.
+    pub fn caught_up(&self, issued: usize) -> bool {
+        self.base >= issued
+    }
+
+    /// Stage `shard`'s next reply. Returns the absolute round it answers.
+    pub fn record(
+        &mut self,
+        shard: usize,
+        stats: RoundStats,
+        shift: Layers,
+    ) -> Result<usize, String> {
+        if shard >= self.shards {
+            return Err(format!("epoch window: shard {shard} out of range"));
+        }
+        let round = self.done[shard];
+        if round < self.base {
+            return Err(format!("epoch window: shard {shard} re-reported round {round}"));
+        }
+        let idx = round - self.base;
+        while self.staged.len() <= idx {
+            let slot = WindowSlot::empty(self.shards);
+            self.staged.push_back(slot);
+        }
+        let slot = &mut self.staged[idx];
+        if slot.stats[shard].is_some() {
+            return Err(format!("epoch window: duplicate reply for round {round} shard {shard}"));
+        }
+        slot.stats[shard] = Some(stats);
+        slot.shifts[shard] = Some(shift);
+        slot.filled += 1;
+        self.done[shard] += 1;
+        Ok(round)
+    }
+
+    /// Pop the oldest round once every shard has reported it, advancing the
+    /// frontier. Call in a loop after each `record` — a single reply can
+    /// complete only the front slot, but the slot behind it may already be
+    /// full.
+    pub fn pop_complete(&mut self) -> Option<(usize, Vec<RoundStats>, Vec<Layers>)> {
+        if self.staged.front()?.filled < self.shards {
+            return None;
+        }
+        let slot = self.staged.pop_front().expect("checked front");
+        let round = self.base;
+        self.base += 1;
+        let stats = slot.stats.into_iter().map(|s| s.expect("full slot")).collect();
+        let shifts = slot.shifts.into_iter().map(|s| s.expect("full slot")).collect();
+        Some((round, stats, shifts))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoundClock — issue timestamps for round-time sampling
+// ---------------------------------------------------------------------------
+
+/// Issue times of in-flight rounds, so a reply's round time is measured
+/// issue → reply. Inter-reply intervals would be useless under a window:
+/// the root withholds issuance until the slowest shard catches up, which
+/// paces *every* shard's replies to the slowest — whereas a slow shard's
+/// queue backlog stretches its issue→reply sample and keeps the spread
+/// detectable at any window, including 0.
+#[derive(Default)]
+pub struct RoundClock {
+    base: usize,
+    t: VecDeque<Instant>,
+}
+
+impl RoundClock {
+    pub fn new(start_round: usize) -> Self {
+        RoundClock { base: start_round, t: VecDeque::new() }
+    }
+
+    /// Record `round`'s issue time. Rounds are issued in order.
+    pub fn issue(&mut self, round: usize, at: Instant) {
+        debug_assert_eq!(round, self.base + self.t.len(), "rounds issue in order");
+        self.t.push_back(at);
+    }
+
+    /// Seconds since `round` was issued (0 for an unknown round — only
+    /// possible after an over-eager trim, never in the cluster loop).
+    pub fn elapsed_s(&self, round: usize, now: Instant) -> f64 {
+        match round.checked_sub(self.base).and_then(|i| self.t.get(i)) {
+            Some(&t0) => now.duration_since(t0).as_secs_f64(),
+            None => 0.0,
+        }
+    }
+
+    /// Drop issue times below `frontier` — every shard has reported those
+    /// rounds, so no further sample can reference them.
+    pub fn trim(&mut self, frontier: usize) {
+        while self.base < frontier && !self.t.is_empty() {
+            self.t.pop_front();
+            self.base += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EwmaBank — per-shard round-time tracking
+// ---------------------------------------------------------------------------
+
+/// Per-shard EWMA of round-time samples; the steal trigger reads the
+/// max/min spread. Reset after every migration so the next decision is
+/// based purely on post-steal evidence.
+pub struct EwmaBank {
+    ewma: Vec<f64>,
+    n: Vec<u64>,
+}
+
+impl EwmaBank {
+    /// Smoothing factor: ~5 samples of memory, quick to notice a shard
+    /// going slow without flapping on one noisy round.
+    pub const ALPHA: f64 = 0.4;
+    /// Samples every shard must have before the spread is trusted.
+    pub const MIN_SAMPLES: u64 = 3;
+    /// Floor guarding the max/min ratio against a degenerate ~0s EWMA.
+    const FLOOR_S: f64 = 1e-9;
+
+    pub fn new(shards: usize) -> Self {
+        EwmaBank { ewma: vec![0.0; shards], n: vec![0; shards] }
+    }
+
+    pub fn record(&mut self, shard: usize, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        self.ewma[shard] = if self.n[shard] == 0 {
+            secs
+        } else {
+            Self::ALPHA * secs + (1.0 - Self::ALPHA) * self.ewma[shard]
+        };
+        self.n[shard] += 1;
+    }
+
+    pub fn samples(&self, shard: usize) -> u64 {
+        self.n[shard]
+    }
+
+    pub fn ewma_s(&self, shard: usize) -> f64 {
+        self.ewma[shard]
+    }
+
+    /// True once every shard has at least [`EwmaBank::MIN_SAMPLES`].
+    pub fn ready(&self) -> bool {
+        self.n.iter().all(|&n| n >= Self::MIN_SAMPLES)
+    }
+
+    /// Max/min EWMA ratio across shards (1.0 when degenerate — fewer than
+    /// two shards sampled, or everything at the floor).
+    pub fn spread(&self) -> f64 {
+        let sampled: Vec<f64> = self
+            .n
+            .iter()
+            .zip(&self.ewma)
+            .filter(|(&n, _)| n > 0)
+            .map(|(_, &e)| e.max(Self::FLOOR_S))
+            .collect();
+        if sampled.len() < 2 {
+            return 1.0;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for e in sampled {
+            lo = lo.min(e);
+            hi = hi.max(e);
+        }
+        hi / lo
+    }
+
+    /// Shard with the largest EWMA (lowest index on ties).
+    pub fn slowest(&self) -> usize {
+        let mut best = 0;
+        for s in 1..self.ewma.len() {
+            if self.ewma[s] > self.ewma[best] {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Shard with the smallest EWMA (lowest index on ties).
+    pub fn fastest(&self) -> usize {
+        let mut best = 0;
+        for s in 1..self.ewma.len() {
+            if self.ewma[s] < self.ewma[best] {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Forget everything — called after a steal so the changed partition
+    /// re-earns its statistics.
+    pub fn reset(&mut self) {
+        self.ewma.iter_mut().for_each(|e| *e = 0.0);
+        self.n.iter_mut().for_each(|n| *n = 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer migration payloads
+// ---------------------------------------------------------------------------
+
+/// One layer's server-side EF21 state: params `X`, shift `W`, gradient
+/// estimator `G`.
+pub struct ServerLayer {
+    pub x: Matrix,
+    pub w: Matrix,
+    pub g: Matrix,
+}
+
+/// One layer's worker-side EF21 state: shift `W`, momentum `M`, local
+/// estimator `G` (one per worker, in worker-id order).
+pub struct WorkerLayer {
+    pub w: Matrix,
+    pub m: Matrix,
+    pub g: Matrix,
+}
+
+// ---------------------------------------------------------------------------
+// ShardDelayPlan — deterministic imbalance injection
+// ---------------------------------------------------------------------------
+
+/// A deterministic schedule of per-shard delays keyed by `(shard, round)` —
+/// the imbalance harness for scheduler tests and the imbalanced bench.
+/// Carried as `Option<Arc<ShardDelayPlan>>` on `ClusterCfg` and consulted
+/// by each shard thread right before it runs a round. Never serialized
+/// into a config: imbalance is injected by tests, not configured by runs.
+#[derive(Debug, Clone, Default)]
+pub struct ShardDelayPlan {
+    delays: HashMap<(usize, usize), u64>,
+}
+
+impl ShardDelayPlan {
+    pub fn new() -> Self {
+        ShardDelayPlan::default()
+    }
+
+    /// Delay `shard` by `ms` before it runs `round` (builder-style).
+    pub fn with(mut self, shard: usize, round: usize, ms: u64) -> Self {
+        self.delays.insert((shard, round), ms);
+        self
+    }
+
+    /// The delay scheduled for `(shard, round)`, if any.
+    pub fn at(&self, shard: usize, round: usize) -> Option<u64> {
+        self.delays.get(&(shard, round)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.delays.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.delays.is_empty()
+    }
+
+    /// Rotating imbalance: round `r` delays shard `r % shards` by `ms`.
+    /// With a window ≥ 1 each delay overlaps the previous victim's compute,
+    /// so the windowed run beats lock-step wall-clock — a *constant*
+    /// slow shard would self-serialize and show no win.
+    pub fn alternating(shards: usize, rounds: usize, ms: u64) -> Self {
+        let mut plan = ShardDelayPlan::new();
+        for r in 0..rounds {
+            plan.delays.insert((r % shards, r), ms);
+        }
+        plan
+    }
+
+    /// Persistent imbalance: `shard` is delayed by `ms` on every round in
+    /// `[0, rounds)` — the steal trigger's target shape.
+    pub fn constant(shard: usize, rounds: usize, ms: u64) -> Self {
+        let mut plan = ShardDelayPlan::new();
+        for r in 0..rounds {
+            plan.delays.insert((shard, r), ms);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn sched_default_is_off_and_roundtrips() {
+        let s = SchedSpec::default();
+        assert!(s.is_off());
+        assert_eq!(s.spec(), "off");
+        assert_eq!(SchedSpec::parse("off").unwrap(), s);
+        assert_eq!(SchedSpec::parse("").unwrap(), s);
+        // window:0,steal:off is semantically off and canonicalizes to "off"
+        let z = SchedSpec::parse("window:0,steal:off").unwrap();
+        assert!(z.is_off());
+        assert_eq!(z.spec(), "off");
+    }
+
+    #[test]
+    fn sched_spec_parse_roundtrip() {
+        for s in ["window:2,steal:off", "window:1,steal:1.5", "window:0,steal:3", "window:64,steal:off"] {
+            let p = SchedSpec::parse(s).unwrap();
+            assert_eq!(SchedSpec::parse(&p.spec()).unwrap(), p, "spec {s}");
+        }
+        let p = SchedSpec::parse("window:3").unwrap();
+        assert_eq!(p.window, 3);
+        assert_eq!(p.steal, None);
+        assert_eq!(p.spec(), "window:3,steal:off");
+    }
+
+    #[test]
+    fn sched_rejects_bad_fields() {
+        assert!(SchedSpec::parse("window:-1").is_err());
+        assert!(SchedSpec::parse("window:two").is_err());
+        assert!(SchedSpec::parse(&format!("window:{}", SchedSpec::MAX_WINDOW + 1)).is_err());
+        assert!(SchedSpec::parse("steal:1.0").is_err(), "threshold must exceed 1");
+        assert!(SchedSpec::parse("steal:0.5").is_err());
+        assert!(SchedSpec::parse("steal:nan").is_err());
+        assert!(SchedSpec::parse("steal:inf").is_err());
+        assert!(SchedSpec::parse("pizza:1").is_err());
+        assert!(SchedSpec::parse("window=1").is_err());
+    }
+
+    #[test]
+    fn partition_plan_migrates_with_version_bump() {
+        let mut plan = PartitionPlan::new(vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]]);
+        assert_eq!(plan.version(), 0);
+        assert_eq!(plan.owner_of(4), Some(0));
+        assert_eq!(plan.migrate(4, 0, 2).unwrap(), 1);
+        assert_eq!(plan.shard(0), &[0]);
+        assert_eq!(plan.shard(2), &[2, 4, 6], "insertion keeps ids ascending");
+        assert_eq!(plan.owner_of(4), Some(2));
+        // the donor is down to one layer: the floor refuses a second steal
+        assert!(plan.migrate(0, 0, 1).is_err());
+        // errors: not the owner / same shard / out of range
+        assert!(plan.migrate(3, 1, 2).is_err());
+        assert!(plan.migrate(1, 1, 1).is_err());
+        assert!(plan.migrate(1, 1, 9).is_err());
+        assert_eq!(plan.version(), 1, "failed migrations must not bump");
+    }
+
+    fn stats(step: usize) -> RoundStats {
+        RoundStats {
+            step,
+            absorbed_step: Some(step),
+            train_loss: step as f32,
+            radius: 0.1,
+            w2s_bytes_per_worker: 8,
+            s2w_bytes: 16,
+        }
+    }
+
+    #[test]
+    fn epoch_window_stages_out_of_order_and_pops_in_order() {
+        let mut win = EpochWindow::new(3, 0);
+        assert_eq!(win.frontier(), 0);
+        // shard 1 races two rounds ahead; shard 2 one; shard 0 is slow
+        assert_eq!(win.record(1, stats(0), vec![]).unwrap(), 0);
+        assert_eq!(win.record(1, stats(1), vec![]).unwrap(), 1);
+        assert_eq!(win.record(2, stats(0), vec![]).unwrap(), 0);
+        assert!(win.pop_complete().is_none(), "round 0 still missing shard 0");
+        assert_eq!(win.done(1), 2);
+        assert_eq!(win.frontier(), 0);
+        // the slow shard lands round 0: exactly one pop
+        assert_eq!(win.record(0, stats(0), vec![]).unwrap(), 0);
+        let (r, stats0, shifts) = win.pop_complete().unwrap();
+        assert_eq!(r, 0);
+        assert_eq!(stats0.len(), 3);
+        assert_eq!(shifts.len(), 3);
+        assert_eq!(stats0[1].step, 0, "per-shard stats in shard order");
+        assert!(win.pop_complete().is_none());
+        assert_eq!(win.frontier(), 1);
+        assert!(win.caught_up(1));
+        assert!(!win.caught_up(2));
+        // rounds can complete back to back: two pops in round order
+        assert_eq!(win.record(2, stats(1), vec![]).unwrap(), 1);
+        assert_eq!(win.record(0, stats(1), vec![]).unwrap(), 1);
+        assert_eq!(win.record(0, stats(2), vec![]).unwrap(), 2);
+        assert_eq!(win.record(1, stats(2), vec![]).unwrap(), 2);
+        assert_eq!(win.pop_complete().unwrap().0, 1);
+        assert!(win.pop_complete().is_none(), "round 2 still missing shard 2");
+        assert_eq!(win.record(2, stats(2), vec![]).unwrap(), 2);
+        assert_eq!(win.pop_complete().unwrap().0, 2);
+        assert_eq!(win.frontier(), 3);
+    }
+
+    #[test]
+    fn epoch_window_rejects_bad_records() {
+        let mut win = EpochWindow::new(2, 5);
+        assert_eq!(win.frontier(), 5, "starts at the cluster's start step");
+        assert!(win.record(7, stats(5), vec![]).is_err(), "shard out of range");
+        assert_eq!(win.record(0, stats(5), vec![]).unwrap(), 5);
+    }
+
+    #[test]
+    fn round_clock_measures_issue_to_reply_and_trims() {
+        let t0 = Instant::now();
+        let mut clock = RoundClock::new(0);
+        clock.issue(0, t0);
+        clock.issue(1, t0 + Duration::from_millis(10));
+        assert_eq!(clock.len(), 2);
+        let now = t0 + Duration::from_millis(30);
+        assert!((clock.elapsed_s(0, now) - 0.030).abs() < 1e-9);
+        assert!((clock.elapsed_s(1, now) - 0.020).abs() < 1e-9);
+        clock.trim(1);
+        assert_eq!(clock.len(), 1);
+        assert_eq!(clock.elapsed_s(0, now), 0.0, "trimmed rounds read as 0");
+        assert!((clock.elapsed_s(1, now) - 0.020).abs() < 1e-9);
+        clock.trim(2);
+        assert!(clock.is_empty());
+    }
+
+    #[test]
+    fn ewma_bank_detects_slow_shard_and_resets() {
+        let mut bank = EwmaBank::new(3);
+        assert!(!bank.ready());
+        assert_eq!(bank.spread(), 1.0, "degenerate spread is 1");
+        for _ in 0..4 {
+            bank.record(0, 0.010);
+            bank.record(1, 0.012);
+            bank.record(2, 0.050);
+        }
+        assert!(bank.ready());
+        assert_eq!(bank.slowest(), 2);
+        assert_eq!(bank.fastest(), 0);
+        assert!(bank.spread() > 4.0, "50ms vs 10ms spreads ~5x");
+        // non-finite and negative samples are ignored, not poisoning
+        bank.record(0, f64::NAN);
+        bank.record(0, -1.0);
+        assert_eq!(bank.samples(0), 4);
+        bank.reset();
+        assert!(!bank.ready());
+        assert_eq!(bank.samples(2), 0);
+        assert_eq!(bank.spread(), 1.0);
+    }
+
+    #[test]
+    fn shard_delay_plan_builders() {
+        let plan = ShardDelayPlan::new().with(1, 3, 25).with(0, 0, 10);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.at(1, 3), Some(25));
+        assert_eq!(plan.at(0, 0), Some(10));
+        assert_eq!(plan.at(1, 4), None);
+
+        let alt = ShardDelayPlan::alternating(4, 8, 30);
+        assert_eq!(alt.len(), 8, "one delayed shard per round");
+        for r in 0..8 {
+            assert_eq!(alt.at(r % 4, r), Some(30));
+            for s in 0..4 {
+                if s != r % 4 {
+                    assert_eq!(alt.at(s, r), None);
+                }
+            }
+        }
+
+        let cst = ShardDelayPlan::constant(2, 5, 40);
+        assert_eq!(cst.len(), 5);
+        for r in 0..5 {
+            assert_eq!(cst.at(2, r), Some(40));
+            assert_eq!(cst.at(0, r), None);
+        }
+        assert_eq!(cst.at(2, 5), None);
+    }
+}

@@ -59,6 +59,33 @@ fn batch_rng(seed: u64, worker: usize, step: usize) -> Rng {
     Rng::with_stream(seed.wrapping_add(step_mix), grad_stream(worker))
 }
 
+/// A shard's owned-layer id list (ascending global ids), swappable online:
+/// the cluster's work-stealing scheduler re-partitions layers between
+/// rounds ([`super::sched`]), and every clone of a shard's handle — the
+/// coordinator's and each worker's — must observe the new ownership at its
+/// next request. Reads snapshot the current `Arc` (no borrow held across a
+/// request); swaps happen only with zero rounds in flight, so no request
+/// ever straddles two partitions.
+#[derive(Clone)]
+pub struct SharedIds(Arc<Mutex<Arc<Vec<usize>>>>);
+
+impl SharedIds {
+    pub fn new(ids: Vec<usize>) -> SharedIds {
+        SharedIds(Arc::new(Mutex::new(Arc::new(ids))))
+    }
+
+    /// The current id list (an `Arc` snapshot — stable for the request
+    /// that grabbed it even if a swap lands meanwhile).
+    pub fn get(&self) -> Arc<Vec<usize>> {
+        self.0.lock().expect("shared ids lock").clone()
+    }
+
+    /// Replace the id list (cluster root, at a migration boundary).
+    pub fn set(&self, ids: Vec<usize>) {
+        *self.0.lock().expect("shared ids lock") = Arc::new(ids);
+    }
+}
+
 /// Per-shard cache of assembled full-model snapshots, keyed by round.
 ///
 /// Every worker of a shard assembles the *identical* full model for a given
@@ -265,8 +292,9 @@ enum HandleInner {
     Sharded {
         inner: Box<GradHandle>,
         board: Arc<ParamBoard>,
-        /// Global layer ids this shard owns (ascending).
-        layer_ids: Arc<Vec<usize>>,
+        /// Global layer ids this shard owns (ascending; swappable online —
+        /// the cluster scheduler migrates layers between shards).
+        layer_ids: SharedIds,
         /// Shared by every worker-derived clone of this shard's handle:
         /// one snapshot assembly per (shard, round), not per worker.
         cache: Arc<SnapCache>,
@@ -315,14 +343,14 @@ impl GradHandle {
     pub fn for_shard(
         &self,
         board: Arc<ParamBoard>,
-        layer_ids: Vec<usize>,
+        layer_ids: SharedIds,
         cache: Arc<SnapCache>,
     ) -> GradHandle {
         GradHandle {
             inner: HandleInner::Sharded {
                 inner: Box::new(self.clone()),
                 board,
-                layer_ids: Arc::new(layer_ids),
+                layer_ids,
                 cache,
             },
         }
@@ -383,7 +411,7 @@ impl GradHandle {
                     .map_err(anyhow::Error::msg)
             }
             HandleInner::Sharded { inner, board, layer_ids, cache } => {
-                let ids: Arc<Vec<usize>> = layer_ids.clone();
+                let ids: Arc<Vec<usize>> = layer_ids.get();
                 // a shard owning every layer (the 1-shard cluster) needs no
                 // assembly: skip the snapshot entirely so the golden-matched
                 // deployment is cost-identical to the unsharded one
@@ -447,10 +475,11 @@ impl GradHandle {
                     .map_err(anyhow::Error::msg)
             }
             HandleInner::Sharded { inner, board, layer_ids, .. } => {
-                if layer_ids.len() == board.layers() {
+                let ids = layer_ids.get();
+                if ids.len() == board.layers() {
                     return inner.eval(params);
                 }
-                let full = assemble(board.as_ref(), layer_ids.as_slice(), params, INIT_STEP)?;
+                let full = assemble(board.as_ref(), ids.as_slice(), params, INIT_STEP)?;
                 inner.eval(&full)
             }
         }

@@ -17,7 +17,7 @@
 //!   fig1 / fig2      reproduce Figures 1–2 (compressor sweep)
 //!   divergence       the §2 divergence demo (naive DCGD vs EF)
 //!   results          render the experiment history (list/status/table/
-//!                    dat/gnuplot/latex over results/results.jsonl)
+//!                    dat/gnuplot/latex/compact over results/results.jsonl)
 //!   help             print the flag reference
 //!
 //! Every flag of `TrainConfig` is a `--flag value` override; see
@@ -85,6 +85,7 @@ COMMANDS:
                       --trace out/trace.jsonl (round-phase span events)
                       --schedule warmup-cosine|constant|inv-sqrt-total|theory34
                       --transport channel|tcp:ADDR
+                      --sched off|window:N,steal:T --snap-bf16
   serve        `train` over the socket transport: bind --listen ADDR
                (default 127.0.0.1:4310), wait for `workers` efmuon worker
                processes to dial in, then run the identical round loop.
@@ -116,6 +117,8 @@ COMMANDS:
                  results dat <key>           gnuplot-ready columns
                  results gnuplot <key>       plotting script
                  results latex               LaTeX tables (one/experiment)
+                 results compact [--keep N]  drop superseded records, keeping
+                                             the best per commit + last N
                (--store PATH overrides the store location)
 
 COMPRESSOR SPECS (both directions: --comp for w2s, --server-comp for s2w):
@@ -140,6 +143,18 @@ SHARDING:
   coordinators (balanced by parameter count), each with its own worker
   pool, reduced by a root coordinator; --shards 1 is bit-identical to the
   single-leader deployment.
+
+SHARD SCHEDULING (--shards >= 2):
+  --sched window:N[,steal:T]
+    bounded-epoch rounds: shards run up to N rounds ahead of the slowest
+    shard, sealing board epochs as they complete instead of at a lock-step
+    barrier. window:0 (and the default, off) is bit-identical to lock-step.
+    steal:T migrates the lightest layer off a shard whose EWMA round time
+    exceeds T x the fastest shard's (T > 1.0; requires --fault-policy off);
+    the migrated layer's trajectory is preserved bitwise.
+  --snap-bf16
+    store parameter-board epoch snapshots in bf16: half the snapshot
+    memory and board bytes; readers expand back to f32.
 
 FAULT TOLERANCE:
   --fault-policy deadline:MS,quorum:F,respawns:R,backoff:MS
@@ -420,15 +435,16 @@ fn cmd_divergence(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `efmuon results {list,status,table,dat,gnuplot}`: render the experiment
-/// history the sweeps and the hotpath bench append to
-/// `results/results.jsonl` (see EXPERIMENTS.md §Results store).
+/// `efmuon results {list,status,table,dat,gnuplot,latex,compact}`: render
+/// (or retire) the experiment history the sweeps and the hotpath bench
+/// append to `results/results.jsonl` (see EXPERIMENTS.md §Results store).
 fn cmd_results(args: &Args) -> Result<()> {
     let action = args.positional.get(1).cloned().unwrap_or_else(|| "list".into());
     let store = match args.opt_str("store") {
         Some(p) => results::Store::new(p),
         None => results::Store::open_default(),
     };
+    let keep = args.usize("keep", 10).map_err(anyhow::Error::msg)?;
     warn_unknown(args);
     let recs = store.load().map_err(|e| anyhow!(e))?;
     let key = || -> Result<&str> {
@@ -444,9 +460,18 @@ fn cmd_results(args: &Args) -> Result<()> {
         "dat" => print!("{}", results::render_dat(&recs, key()?)),
         "gnuplot" => print!("{}", results::render_gnuplot(key()?)),
         "latex" => print!("{}", results::render_latex(&recs)),
+        "compact" => {
+            let st = store.compact(keep).map_err(|e| anyhow!(e))?;
+            println!(
+                "compacted {}: kept {} of {} record(s)",
+                store.path().display(),
+                st.kept,
+                st.kept + st.dropped
+            );
+        }
         other => {
             return Err(anyhow!(
-                "unknown results action {other:?}; try list | status | table | dat | gnuplot | latex"
+                "unknown results action {other:?}; try list | status | table | dat | gnuplot | latex | compact"
             ))
         }
     }

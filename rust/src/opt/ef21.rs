@@ -241,6 +241,42 @@ impl ServerState {
         }
     }
 
+    /// Remove layer `i` from every parallel per-layer vector and return its
+    /// `(X, W, G)` triple — the server half of a cluster layer migration.
+    /// The caller guarantees no round is in flight, so the triple is the
+    /// layer's exact post-round state; re-inserting it bitwise via
+    /// [`ServerState::accept_layer`] on another server continues the
+    /// layer's trajectory unchanged.
+    pub fn release_layer(&mut self, i: usize) -> (Matrix, Matrix, Matrix) {
+        self.lmos.remove(i);
+        self.geometry.remove(i);
+        self.compressors.remove(i);
+        self.agg.remove(i);
+        (self.x.remove(i), self.w.remove(i), self.g.remove(i))
+    }
+
+    /// Insert a migrated layer at index `i` with its EF21 state, geometry
+    /// and a fresh compressor for its shape (compressors are stateless
+    /// across layers, so a rebuilt one is exact; the LMO is rebuilt from
+    /// the geometry). Inverse of [`ServerState::release_layer`].
+    pub fn accept_layer(
+        &mut self,
+        i: usize,
+        x: Matrix,
+        w: Matrix,
+        g: Matrix,
+        geom: LayerGeometry,
+        comp: Box<dyn Compressor>,
+    ) {
+        self.lmos.insert(i, geom.lmo_for());
+        self.geometry.insert(i, geom);
+        self.compressors.insert(i, comp);
+        self.agg.insert(i, Matrix::zeros(x.rows, x.cols));
+        self.x.insert(i, x);
+        self.w.insert(i, w);
+        self.g.insert(i, g);
+    }
+
     /// ‖G‖ dual-norm diagnostics (per layer).
     pub fn grad_estimator_norms(&mut self) -> Vec<f64> {
         let mut rng = self.rng.split(0xd1a6);
@@ -310,6 +346,29 @@ impl WorkerState {
             msgs.push(msg);
         }
         msgs
+    }
+
+    /// Remove layer `i` and return its `(W, M, G)` triple — the worker half
+    /// of a cluster layer migration (see [`ServerState::release_layer`]).
+    pub fn release_layer(&mut self, i: usize) -> (Matrix, Matrix, Matrix) {
+        self.compressors.remove(i);
+        (self.w.remove(i), self.m.remove(i), self.g.remove(i))
+    }
+
+    /// Insert a migrated layer at index `i` with its EF21 state and a fresh
+    /// compressor. Inverse of [`WorkerState::release_layer`].
+    pub fn accept_layer(
+        &mut self,
+        i: usize,
+        w: Matrix,
+        m: Matrix,
+        g: Matrix,
+        comp: Box<dyn Compressor>,
+    ) {
+        self.compressors.insert(i, comp);
+        self.w.insert(i, w);
+        self.m.insert(i, m);
+        self.g.insert(i, g);
     }
 }
 

@@ -14,7 +14,18 @@
 //! older build stays readable because every field except `experiment` and
 //! `commit` is optional on read. Appends happen at the CLI/bench layer,
 //! never inside library functions, so `cargo test` writes nothing.
+//!
+//! Reporting groups history rows by [`Record::key`] — the experiment name
+//! qualified by a hash of the full canonical `RunSpec` JSON — so sweeps
+//! that vary more than one knob under a single experiment name stop
+//! colliding in `results table` / `results latex`. Legacy records without
+//! a stored spec keep the bare name as their key and still render.
+//! Long histories are trimmed with [`Store::compact`] (`efmuon results
+//! compact`), which always preserves the best-ever median per timing name
+//! — the exact reference the trajectory gate (`bench_gate.py --results`)
+//! compares against.
 
+use std::collections::HashMap;
 use std::fs::OpenOptions;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -73,6 +84,17 @@ pub fn find_repo_root() -> Option<PathBuf> {
         }
     }
     None
+}
+
+/// FNV-1a 64-bit hash — stable across platforms, builds and runs, which a
+/// stored history key must be (a std `Hasher` guarantees none of that).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 // ---------------------------------------------------------------------------
@@ -185,6 +207,25 @@ impl Record {
     pub fn trace(mut self, agg: &TraceAgg) -> Record {
         self.trace = Some(agg.to_obj().build());
         self
+    }
+
+    /// FNV-1a hash of the canonical spec JSON, when the record carries one.
+    /// The canonical text is a fixed point of the JSON round trip (asserted
+    /// in `rust/tests/spec_api.rs`), so the hash survives store round trips.
+    pub fn spec_hash(&self) -> Option<u64> {
+        self.spec.as_ref().map(|s| fnv1a64(s.to_string().as_bytes()))
+    }
+
+    /// The history key reporting groups by: `experiment#xxxxxxxx` — the
+    /// experiment name qualified by the full-`RunSpec` hash — for records
+    /// that carry a spec, and the bare experiment name for legacy records.
+    /// Two runs of one sweep that differ in *any* spec knob therefore get
+    /// distinct history keys instead of colliding under the sweep's name.
+    pub fn key(&self) -> String {
+        match self.spec_hash() {
+            Some(h) => format!("{}#{:08x}", self.experiment, h & 0xffff_ffff),
+            None => self.experiment.clone(),
+        }
     }
 
     /// The JSONL row for this record.
@@ -305,6 +346,86 @@ impl Store {
         }
         Ok(out)
     }
+
+    /// Compact the history in place, keeping — per history key
+    /// ([`Record::key`]):
+    ///
+    /// - the best record per `(commit, timing name)` — the run holding the
+    ///   minimal stored `median_s`, so every commit keeps one
+    ///   representative row per timing (retries of the same commit
+    ///   collapse to the best one);
+    /// - by implication, the best-ever record per timing name over the
+    ///   whole history — exactly the reference the trajectory gate
+    ///   (`bench_gate.py --results`) compares against, so compaction can
+    ///   never loosen that gate;
+    /// - the last `keep_last` records unconditionally (recent context,
+    ///   including records that carry no timings at all).
+    ///
+    /// Survivors stay in append order. The rewrite is atomic (tmp file +
+    /// rename) and skipped entirely when nothing would be dropped; a
+    /// missing file is an empty history, not an error.
+    pub fn compact(&self, keep_last: usize) -> Result<CompactStats, String> {
+        let recs = self.load()?;
+        let n = recs.len();
+        let mut keep = vec![false; n];
+
+        // the tail: last keep_last records per key, newest first
+        let mut tail: HashMap<String, usize> = HashMap::new();
+        for i in (0..n).rev() {
+            let c = tail.entry(recs[i].key()).or_insert(0);
+            if *c < keep_last {
+                keep[i] = true;
+                *c += 1;
+            }
+        }
+        // best per (key, commit, timing name). The global best-ever per
+        // (key, timing) is the best of its own commit, so it is always
+        // among these minima — the trajectory-gate invariant.
+        let mut best: HashMap<(String, String, String), (f64, usize)> = HashMap::new();
+        for (i, r) in recs.iter().enumerate() {
+            let k = r.key();
+            for t in &r.timings {
+                if !(t.median_s > 0.0) {
+                    continue; // the gate ignores nonpositive medians; so do we
+                }
+                let e = best
+                    .entry((k.clone(), r.commit.clone(), t.name.clone()))
+                    .or_insert((f64::INFINITY, i));
+                if t.median_s < e.0 {
+                    *e = (t.median_s, i);
+                }
+            }
+        }
+        for (_, (_, i)) in best {
+            keep[i] = true;
+        }
+
+        let kept: Vec<&Record> = recs.iter().zip(&keep).filter(|(_, k)| **k).map(|(r, _)| r).collect();
+        let stats = CompactStats { kept: kept.len(), dropped: n - kept.len() };
+        if stats.dropped == 0 {
+            return Ok(stats); // leave the file untouched (also: missing file)
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("{}: {e}", tmp.display()))?;
+            for r in &kept {
+                writeln!(f, "{}", r.to_obj().to_line())
+                    .map_err(|e| format!("{}: {e}", tmp.display()))?;
+            }
+        }
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("{}: {e}", self.path.display()))?;
+        Ok(stats)
+    }
+}
+
+/// Outcome of [`Store::compact`]: how many records survived and how many
+/// were dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactStats {
+    pub kept: usize,
+    pub dropped: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -317,6 +438,19 @@ pub fn experiments(records: &[Record]) -> Vec<&str> {
     for r in records {
         if !seen.contains(&r.experiment.as_str()) {
             seen.push(&r.experiment);
+        }
+    }
+    seen
+}
+
+/// Unique history keys ([`Record::key`]) in first-seen order — the
+/// partition `results latex` emits one table per.
+pub fn history_keys(records: &[Record]) -> Vec<String> {
+    let mut seen: Vec<String> = Vec::new();
+    for r in records {
+        let k = r.key();
+        if !seen.contains(&k) {
+            seen.push(k);
         }
     }
     seen
@@ -392,27 +526,33 @@ pub fn render_status(records: &[Record]) -> String {
     )
 }
 
-/// Column headers of the per-experiment history (shared by
-/// `results table` and `results latex`).
-const HISTORY_HEADERS: [&str; 8] =
-    ["run", "commit", "timing", "median ms", "mad ms", "min ms", "iters", "rounds"];
+/// Column headers of the per-key history (shared by `results table` and
+/// `results latex`). `spec` is the short `RunSpec` hash of [`Record::key`]
+/// (`-` for legacy records without a stored spec).
+const HISTORY_HEADERS: [&str; 9] =
+    ["run", "commit", "spec", "timing", "median ms", "mad ms", "min ms", "iters", "rounds"];
 
 /// The shared row model of `results table` and `results latex`: one row
-/// per (run, timing) of one experiment, in append order. Both renderers
-/// consume exactly these rows, so the LaTeX output can never drift from
-/// the plain table.
-fn history_rows(records: &[Record], experiment: &str) -> Vec<Vec<String>> {
+/// per (run, timing) of the selected records, in append order. Both
+/// renderers consume exactly these rows, so the LaTeX output can never
+/// drift from the plain table.
+fn history_rows_by(records: &[Record], matches: impl Fn(&Record) -> bool) -> Vec<Vec<String>> {
     let mut rows: Vec<Vec<String>> = Vec::new();
-    for (run, r) in records.iter().filter(|r| r.experiment == experiment).enumerate() {
+    for (run, r) in records.iter().filter(|r| matches(r)).enumerate() {
         for t in &r.timings {
             let rounds = r
                 .meter
                 .as_ref()
                 .map(|m| m.rounds_absorbed.to_string())
                 .unwrap_or_else(|| "-".into());
+            let spec = r
+                .spec_hash()
+                .map(|h| format!("{:08x}", h & 0xffff_ffff))
+                .unwrap_or_else(|| "-".into());
             rows.push(vec![
                 run.to_string(),
                 short(&r.commit).to_string(),
+                spec,
                 t.name.clone(),
                 fmt_ms(t.median_s),
                 fmt_ms(t.mad_s),
@@ -425,8 +565,15 @@ fn history_rows(records: &[Record], experiment: &str) -> Vec<Vec<String>> {
     rows
 }
 
-/// `results table KEY`: the full history of one experiment, one row per
-/// (run, timing).
+/// Rows for one selector: an exact history key (`name#hash`) narrows to
+/// that spec; a bare experiment name keeps the legacy behavior and shows
+/// every record appended under it (the `spec` column disambiguates).
+fn history_rows(records: &[Record], key: &str) -> Vec<Vec<String>> {
+    history_rows_by(records, |r| r.key() == key || r.experiment == key)
+}
+
+/// `results table KEY`: the full history of one experiment (bare name) or
+/// one exact spec-qualified key (`name#hash`), one row per (run, timing).
 pub fn render_history(records: &[Record], experiment: &str) -> String {
     let rows = history_rows(records, experiment);
     if rows.is_empty() {
@@ -455,17 +602,20 @@ fn latex_escape(s: &str) -> String {
 }
 
 /// `results latex`: the whole stored history as LaTeX — one `tabular` per
-/// experiment, built from the exact row model of `results table`
-/// ([`history_rows`]), so a paper draft can cite the stored evidence
-/// verbatim. Plain `\hline` rules — no package dependencies.
+/// history key ([`Record::key`]; spec-qualified, so sweeps varying more
+/// than one knob get one table per distinct spec while legacy name-keyed
+/// records keep their own), built from the exact row model of
+/// `results table` ([`history_rows_by`]), so a paper draft can cite the
+/// stored evidence verbatim. Plain `\hline` rules — no package
+/// dependencies.
 pub fn render_latex(records: &[Record]) -> String {
-    let keys = experiments(records);
+    let keys = history_keys(records);
     if keys.is_empty() {
         return "% no experiment history recorded\n".to_string();
     }
     let mut out = String::from("% generated by `efmuon results latex`\n");
-    for key in keys {
-        let rows = history_rows(records, key);
+    for key in &keys {
+        let rows = history_rows_by(records, |r| r.key() == *key);
         if rows.is_empty() {
             out.push_str(&format!("% experiment {}: no timings recorded\n", latex_escape(key)));
             continue;
@@ -473,7 +623,7 @@ pub fn render_latex(records: &[Record]) -> String {
         out.push_str(&format!(
             "\n\\begin{{table}}[ht]\n  \\centering\n  \\caption{{Experiment \
              \\texttt{{{}}}: stored timing history}}\n  \
-             \\begin{{tabular}}{{lllrrrrr}}\n    \\hline\n",
+             \\begin{{tabular}}{{llllrrrrr}}\n    \\hline\n",
             latex_escape(key)
         ));
         out.push_str(&format!(
@@ -604,12 +754,96 @@ mod tests {
         r1.commit = "aaaaaaaaaaaa".into();
         let recs = vec![r1.timing(&bench("coordinator round", 0.010)), Record::new("empty_key")];
         let tex = render_latex(&recs);
-        assert!(tex.contains("\\begin{tabular}{lllrrrrr}"), "{tex}");
+        assert!(tex.contains("\\begin{tabular}{llllrrrrr}"), "{tex}");
         assert!(tex.contains("hot\\_path"), "underscores must be escaped: {tex}");
-        assert!(tex.contains("0 & aaaaaaaaa & coordinator round & 10.000"), "{tex}");
+        assert!(tex.contains("0 & aaaaaaaaa & - & coordinator round & 10.000"), "{tex}");
         assert!(tex.contains("% experiment empty\\_key: no timings recorded"), "{tex}");
         assert_eq!(tex.matches("\\end{table}").count(), 1, "one tabular per experiment: {tex}");
         assert_eq!(render_latex(&[]), "% no experiment history recorded\n");
+    }
+
+    #[test]
+    fn spec_hash_keys_split_sweeps_and_legacy_names_still_render() {
+        use crate::spec::RunBuilder;
+        let mut a = Record::new("sweep");
+        a.commit = "aaaaaaaaaaaa".into();
+        let a = a.spec(&RunSpec::default()).timing(&bench("cluster round", 0.010));
+        let spec2 = RunBuilder::new().workers(8).build().unwrap();
+        let mut b = Record::new("sweep");
+        b.commit = "bbbbbbbbbbbb".into();
+        let b = b.spec(&spec2).timing(&bench("cluster round", 0.008));
+        let mut legacy = Record::new("sweep");
+        legacy.commit = "cccccccccccc".into();
+        let legacy = legacy.timing(&bench("cluster round", 0.007));
+        let recs = vec![a.clone(), b.clone(), legacy.clone()];
+        // distinct specs get distinct keys under the same experiment name
+        assert_ne!(a.key(), b.key());
+        assert!(a.key().starts_with("sweep#"), "{}", a.key());
+        assert_eq!(legacy.key(), "sweep");
+        assert_eq!(history_keys(&recs).len(), 3);
+        // table by exact key narrows to the one spec
+        let t = render_history(&recs, &a.key());
+        assert!(t.contains("aaaaaaaaa") && !t.contains("bbbbbbbbb"), "{t}");
+        // table by bare name still renders everything (legacy workflow);
+        // the spec column disambiguates
+        let t = render_history(&recs, "sweep");
+        for c in ["aaaaaaaaa", "bbbbbbbbb", "ccccccccc"] {
+            assert!(t.contains(c), "{t}");
+        }
+        // latex partitions by key: one tabular per spec, plus the legacy one
+        let tex = render_latex(&recs);
+        assert_eq!(tex.matches("\\end{table}").count(), 3, "{tex}");
+        // the key survives a store round trip (hash of canonical JSON text)
+        let line = a.to_obj().to_line();
+        let back = Record::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.key(), a.key());
+    }
+
+    #[test]
+    fn compact_keeps_best_per_commit_and_tail() {
+        let dir = tmp("compact");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Store::new(dir.join("results.jsonl"));
+        // a missing file compacts to an empty no-op
+        assert_eq!(store.compact(2).unwrap(), CompactStats { kept: 0, dropped: 0 });
+        // index 0: an old record with no timings (only the tail could keep
+        // it); 1-2: two runs of commit bbbb, the first holding the
+        // best-ever median; 3-5: one run each of three later commits
+        let mut r0 = Record::new("hotpath");
+        r0.commit = "000000000000".into();
+        store.append(&r0).unwrap();
+        let runs = [
+            (0.005, "bbbbbbbbbbbb"),
+            (0.009, "bbbbbbbbbbbb"),
+            (0.011, "cccccccccccc"),
+            (0.012, "dddddddddddd"),
+            (0.013, "eeeeeeeeeeee"),
+        ];
+        for (m, c) in runs {
+            let mut r = Record::new("hotpath");
+            r.commit = c.into();
+            store.append(&r.timing(&bench("cluster round", m))).unwrap();
+        }
+        let st = store.compact(2).unwrap();
+        // dropped: the timing-less head and the worse bbbb retry; kept:
+        // best-per-commit (bbbb 0.005, cccc, dddd, eeee), tail covered
+        assert_eq!(st, CompactStats { kept: 4, dropped: 2 });
+        let recs = store.load().unwrap();
+        assert_eq!(recs.len(), 4);
+        // the trajectory gate's reference — best-ever per timing — survives
+        let best = recs
+            .iter()
+            .flat_map(|r| &r.timings)
+            .map(|t| t.median_s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(best, 0.005, "best-ever median must survive compaction");
+        // append order preserved; the last two records are the tail
+        assert_eq!(recs[recs.len() - 1].commit, "eeeeeeeeeeee");
+        assert_eq!(recs[recs.len() - 2].commit, "dddddddddddd");
+        assert!(!recs.iter().any(|r| r.commit == "000000000000"));
+        assert_eq!(recs.iter().filter(|r| r.commit == "bbbbbbbbbbbb").count(), 1);
+        // idempotent: a second pass drops nothing
+        assert_eq!(store.compact(2).unwrap(), CompactStats { kept: 4, dropped: 0 });
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::config::TrainConfig;
 use crate::dist::cluster::ClusterCfg;
 use crate::dist::coordinator::CoordinatorCfg;
 use crate::dist::fault::FaultPolicy;
+use crate::dist::sched::SchedSpec;
 use crate::dist::{RoundMode, TransportMode};
 use crate::lmo::LmoKind;
 use crate::model::Group;
@@ -341,6 +342,15 @@ pub struct RunSpec {
     /// Transport the leader/worker hop runs over ([`LinkSpec::Channel`] =
     /// in-process, bit-identical to `tcp:` loopback for the same spec).
     pub link: LinkSpec,
+    /// Bounded-epoch shard scheduling ([`SchedSpec::off`] = lock-step
+    /// rounds, bit-identical to the scheduler-free cluster; see
+    /// [`crate::dist::sched`]). Requires `shards >= 2`.
+    pub sched: SchedSpec,
+    /// Store `ParamBoard` epoch snapshots in bf16: half the snapshot
+    /// memory and board bytes, a rounded (still deterministic) trajectory
+    /// (see [`crate::dist::cluster::ClusterCfg::snap_bf16`]). Off is
+    /// bit-identical to the f32 board.
+    pub snap_bf16: bool,
 }
 
 impl Default for RunSpec {
@@ -375,6 +385,8 @@ impl Default for RunSpec {
             checkpoint_dir: None,
             resume: false,
             link: LinkSpec::Channel,
+            sched: SchedSpec::off(),
+            snap_bf16: false,
         }
     }
 }
@@ -433,10 +445,9 @@ impl RunSpec {
             fault: self.fault,
             fault_plan: None,
             start_step: 0,
-            // bf16 board snapshots are a bench/test deployment knob for
-            // now; CLI wiring is a ROADMAP follow-up (adding it here would
-            // change the lossless TrainConfig round-trip surface)
-            snap_bf16: false,
+            snap_bf16: self.snap_bf16,
+            sched: self.sched,
+            shard_delay: None,
             tracer: Tracer::Noop,
         }
     }
@@ -477,6 +488,8 @@ impl RunSpec {
             resume: self.resume,
             schedule: schedule_kind_name(self.schedule.kind).to_string(),
             transport: self.link.spec(),
+            sched: self.sched.spec(),
+            snap_bf16: self.snap_bf16,
         }
     }
 
@@ -526,6 +539,12 @@ impl RunSpec {
         }
         if self.link != LinkSpec::Channel {
             o = o.put("transport", self.link.spec());
+        }
+        if !self.sched.is_off() {
+            o = o.put("sched", self.sched.spec());
+        }
+        if self.snap_bf16 {
+            o = o.put("snap_bf16", true);
         }
         o.build()
     }
@@ -645,6 +664,11 @@ impl RunBuilder {
             Ok(l) => b.spec.link = l,
             Err(e) => b.err("transport", e),
         }
+        match SchedSpec::parse(&cfg.sched) {
+            Ok(s) => b.spec.sched = s,
+            Err(e) => b.err("sched", e),
+        }
+        b.spec.snap_bf16 = cfg.snap_bf16;
         b
     }
 
@@ -802,6 +826,19 @@ impl RunBuilder {
         self
     }
 
+    /// Bounded-epoch shard scheduling (typed; validated at `build` —
+    /// requires `shards >= 2`, and stealing requires the fault policy off).
+    pub fn sched(mut self, s: SchedSpec) -> Self {
+        self.spec.sched = s;
+        self
+    }
+
+    /// Store `ParamBoard` epoch snapshots in bf16.
+    pub fn snap_bf16(mut self, on: bool) -> Self {
+        self.spec.snap_bf16 = on;
+        self
+    }
+
     /// Validate everything and return the spec, or *every* problem found.
     pub fn build(self) -> Result<RunSpec, SpecError> {
         let RunBuilder { spec, errors } = self;
@@ -867,6 +904,26 @@ impl RunBuilder {
         }
         if spec.trace_path.as_deref() == Some("") {
             err.push("trace_path", "must be a non-empty path (omit the key to disable tracing)");
+        }
+        if let Err(e) = spec.sched.validate() {
+            err.push("sched", e);
+        }
+        if !spec.sched.is_off() && spec.shards < 2 {
+            err.push(
+                "sched",
+                format!(
+                    "a bounded-epoch window requires shards >= 2 (got {}); the \
+                     single-leader deployment is always lock-step",
+                    spec.shards
+                ),
+            );
+        }
+        if spec.sched.steal.is_some() && !spec.fault.is_off() {
+            err.push(
+                "sched",
+                "work stealing requires fault_policy off (steal migration cannot \
+                 coexist with straggler deadlines or respawns)",
+            );
         }
         if spec.link.tcp_addr().is_some() && spec.shards != 1 {
             err.push(
@@ -1065,6 +1122,49 @@ mod tests {
             .unwrap_err();
         assert!(err.mentions("transport"), "{err}");
         assert!(err.to_string().contains("shards == 1"), "{err}");
+    }
+
+    #[test]
+    fn sched_and_snap_bf16_roundtrip_losslessly() {
+        let spec = RunBuilder::new()
+            .shards(2)
+            .sched(SchedSpec::parse("window:2,steal:1.5").unwrap())
+            .snap_bf16(true)
+            .build()
+            .unwrap();
+        let back = RunBuilder::from_config(&spec.to_train_config()).build().unwrap();
+        assert_eq!(back, spec);
+        let back = RunSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        // defaults stay out of the JSON so `efmuon config` bytes are stable
+        let dflt = RunSpec::default().to_json().to_string();
+        assert!(!dflt.contains("\"sched\""), "{dflt}");
+        assert!(!dflt.contains("snap_bf16"), "{dflt}");
+    }
+
+    #[test]
+    fn sched_validation_pins_its_preconditions() {
+        // a window needs a cluster to schedule
+        let err = RunBuilder::new()
+            .sched(SchedSpec::parse("window:1").unwrap())
+            .build()
+            .unwrap_err();
+        assert!(err.mentions("sched"), "{err}");
+        assert!(err.to_string().contains("shards >= 2"), "{err}");
+        // stealing cannot coexist with the fault machinery
+        let err = RunBuilder::new()
+            .shards(2)
+            .sched(SchedSpec::parse("window:1,steal:1.5").unwrap())
+            .fault(FaultPolicy::parse("deadline:50,quorum:0.75,respawns:2,backoff:5").unwrap())
+            .build()
+            .unwrap_err();
+        assert!(err.mentions("sched"), "{err}");
+        assert!(err.to_string().contains("fault_policy off"), "{err}");
+        // grammar errors arrive with the field path
+        let cfg =
+            TrainConfig { sched: "window:banana".into(), shards: 2, ..TrainConfig::default() };
+        let err = RunBuilder::from_config(&cfg).build().unwrap_err();
+        assert!(err.mentions("sched"), "{err}");
     }
 
     #[test]

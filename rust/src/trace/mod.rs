@@ -57,6 +57,14 @@ pub enum Phase {
     NetReconnect,
     /// A heartbeat window elapsed with no frame from a connected worker.
     NetMiss,
+    /// The windowed root sealed a `ParamBoard` epoch as its round
+    /// completed across shards (the out-of-order sibling of `BoardSeal`).
+    EpochSeal,
+    /// The root migrated a layer from a persistently slow shard (the
+    /// `worker` field carries the layer id).
+    LayerSteal,
+    /// A shard's reply put it ahead of the window frontier.
+    ShardAhead,
 }
 
 impl Phase {
@@ -75,6 +83,9 @@ impl Phase {
             Phase::NetConnect => "net_connect",
             Phase::NetReconnect => "net_reconnect",
             Phase::NetMiss => "net_miss",
+            Phase::EpochSeal => "epoch_seal",
+            Phase::LayerSteal => "layer_steal",
+            Phase::ShardAhead => "shard_ahead",
         }
     }
 
@@ -94,6 +105,9 @@ impl Phase {
             Phase::NetConnect,
             Phase::NetReconnect,
             Phase::NetMiss,
+            Phase::EpochSeal,
+            Phase::LayerSteal,
+            Phase::ShardAhead,
         ]
     }
 }
@@ -190,7 +204,7 @@ impl TraceRing {
 /// record. Fold drained events in with [`TraceAgg::absorb`].
 #[derive(Debug, Default, Clone)]
 pub struct TraceAgg {
-    counts: [u64; 12],
+    counts: [u64; 15],
     pub events: u64,
     pub dropped: u64,
 }

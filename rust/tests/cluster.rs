@@ -12,7 +12,8 @@ use std::sync::Arc;
 
 use efmuon::dist::cluster::{partition_layers, Cluster, ClusterCfg, ParamBoard};
 use efmuon::dist::fault::FaultPolicy;
-use efmuon::dist::service::{GradService, SnapCache};
+use efmuon::dist::sched::SchedSpec;
+use efmuon::dist::service::{GradService, SharedIds, SnapCache};
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
 use efmuon::linalg::matrix::{Layers, Matrix};
@@ -139,6 +140,8 @@ fn spawn_cluster_ex(
             fault_plan: None,
             start_step: 0,
             snap_bf16,
+            sched: SchedSpec::off(),
+            shard_delay: None,
             tracer: Tracer::Noop,
         },
     )?;
@@ -266,7 +269,9 @@ fn snapshot_cache_zero_alloc_steady_state() {
     let board = Arc::new(ParamBoard::new(x0.clone(), 3));
     let cache = Arc::new(SnapCache::new(3));
     let svc = GradService::spawn_objective(obj, 7);
-    let sh = svc.handle().for_shard(board.clone(), vec![0], cache.clone());
+    let sh = svc
+        .handle()
+        .for_shard(board.clone(), SharedIds::new(vec![0]), cache.clone());
     let mut h0 = sh.for_worker(0);
     let mut h1 = sh.for_worker(1);
     let own: Layers = vec![x0[0].clone()];

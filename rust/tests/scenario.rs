@@ -36,6 +36,14 @@
 //!       frame + worker panic + a late joiner claiming freed id slots)
 //!       completes with exact reconnect/respawn counters and a finite
 //!       eval.
+//!   (j) the sched axis (ISSUE 10): a bounded-epoch window with stealing
+//!       disabled is bit-identical to the lock-step cluster — trajectory,
+//!       per-round bytes, meters, eval — for every window, round mode and
+//!       shard count, with zero steals and `epochs_ahead_max <= window`;
+//!       an injected persistently slow shard under `steal:T` migrates
+//!       exactly one layer (donor keeps its floor) and the run stays
+//!       bitwise on the lock-step trajectory — migration moves state, not
+//!       arithmetic.
 
 use std::sync::Arc;
 
@@ -43,6 +51,7 @@ use efmuon::dist::cluster::{totals_consistent, Cluster};
 use efmuon::dist::coordinator::Coordinator;
 use efmuon::dist::fault::{FaultKind, FaultPlan, FaultPolicy};
 use efmuon::dist::net::{spawn_loopback_workers, FlakyKind, FlakyPlan, NetCfg, NetHub};
+use efmuon::dist::sched::{SchedSpec, ShardDelayPlan};
 use efmuon::dist::service::GradService;
 use efmuon::dist::{RoundMode, TransportMode};
 use efmuon::funcs::{Objective, Quadratics, Stacked};
@@ -1122,4 +1131,201 @@ fn net_chaos_flaky_link_panic_and_late_joiner_exact_counts() {
     for w in late {
         w.join().expect("late joiner thread").expect("late joiner held a slot to the Stop");
     }
+}
+
+// ---------------------------------------------------------------------------
+// The sched axis (ISSUE 10): bounded-epoch windows + work stealing
+// ---------------------------------------------------------------------------
+
+/// Scheduler observables of one windowed cluster run.
+struct SchedProbe {
+    steals: u64,
+    epochs_ahead_max: u64,
+    partition_version: u64,
+    partition: Vec<Vec<usize>>,
+}
+
+/// Run a [`Cluster`] under a scheduler spec (and an optional injected
+/// per-shard delay plan — a harness hook on `ClusterCfg`, never part of a
+/// spec, exactly like `FaultPlan`). Collects the usual trace plus the
+/// scheduler counters.
+#[allow(clippy::too_many_arguments)]
+fn run_cluster_sched(
+    obj: Box<dyn Objective>,
+    workers: usize,
+    n_layers: usize,
+    w2s: &'static str,
+    s2w: &'static str,
+    shards: usize,
+    mode: RoundMode,
+    rounds: usize,
+    sched: &str,
+    delay: Option<ShardDelayPlan>,
+) -> (RunTrace, SchedProbe) {
+    let x0 = obj.init(&mut Rng::new(SEED));
+    let svc = GradService::spawn_objective(obj, SEED);
+    let sc = Scenario { name: "cluster-sched", workers, dim: 0, w2s, s2w };
+    let mut spec = scenario_spec(&sc, shards, mode, TransportMode::Counted, rounds, FLAT);
+    spec.sched = SchedSpec::parse(sched).unwrap();
+    let mut cfg = spec.cluster_cfg();
+    cfg.shard_delay = delay.map(Arc::new);
+    let mut cluster = Cluster::spawn(
+        x0,
+        vec![LayerGeometry { lmo: LmoKind::Euclidean, radius_mult: 1.0 }; n_layers],
+        svc.handle(),
+        cfg,
+    )
+    .unwrap();
+    let stats = cluster.run(rounds).unwrap();
+    let mut s2wv = Vec::new();
+    let mut w2sv = Vec::new();
+    // placeholders (absorbed_step None, zero bytes) filter out, so the
+    // completed-rollup stream is directly comparable to lock-step's
+    for s in &stats {
+        if s.s2w_bytes > 0 {
+            s2wv.push(s.s2w_bytes);
+        }
+        if s.absorbed_step.is_some() {
+            w2sv.push(s.w2s_bytes_per_worker);
+        }
+    }
+    let meter = cluster.meter();
+    assert!(totals_consistent(&meter), "cluster meter rollup inconsistent");
+    let probe = SchedProbe {
+        steals: meter.steals,
+        epochs_ahead_max: meter.epochs_ahead_max,
+        partition_version: cluster.partition_version(),
+        partition: cluster.partition().to_vec(),
+    };
+    let trace = RunTrace {
+        params: flatten(&cluster.params().unwrap()),
+        s2w: s2wv,
+        w2s: w2sv,
+        meter_w2s: meter.w2s(),
+        meter_s2w: meter.s2w(),
+        eval: cluster.eval().unwrap(),
+    };
+    (trace, probe)
+}
+
+/// (j) Golden anchor: with stealing disabled, every bounded-epoch window —
+/// including `window:0` driven through the windowed machinery by an inert
+/// steal threshold — must be bit-identical to the lock-step cluster:
+/// trajectory, completed-rollup byte streams in both directions, meters,
+/// eval. Across shard counts and round modes, with zero steals, an intact
+/// version-0 partition, and `epochs_ahead_max` within the window.
+#[test]
+fn sched_windowed_no_steal_matches_lockstep_bitwise() {
+    let workers = 2;
+    let mk = || -> Box<dyn Objective> {
+        Box::new(
+            Stacked::new(vec![
+                Box::new(Quadratics::new(workers, 8, 0.5, 0.0, &mut Rng::new(2300)))
+                    as Box<dyn Objective>,
+                Box::new(Quadratics::new(workers, 6, 0.5, 0.0, &mut Rng::new(2301))),
+                Box::new(Quadratics::new(workers, 4, 0.5, 0.0, &mut Rng::new(2302))),
+            ])
+            .unwrap(),
+        )
+    };
+    // window:0 with a threshold no spread reaches exercises the windowed
+    // drive at its lock-step bound; window:1/2 let shards run ahead
+    const SCHEDS: &[(&str, u64)] =
+        &[("window:0,steal:1000000", 0), ("window:1", 1), ("window:2", 2)];
+    for mode in [RoundMode::Sync, RoundMode::Async { lookahead: 1 }] {
+        for shards in [2usize, 3] {
+            let (reference, _) = run_cluster_sched(
+                mk(), workers, 3, "top:0.3", "top:0.5", shards, mode, ROUNDS, "off", None,
+            );
+            for &(sched, window) in SCHEDS {
+                let (t, probe) = run_cluster_sched(
+                    mk(), workers, 3, "top:0.3", "top:0.5", shards, mode, ROUNDS, sched, None,
+                );
+                let tag = format!("{shards} shards / {} / {sched}", mode.spec());
+                assert_eq!(reference.params, t.params, "{tag}: trajectory");
+                assert_eq!(reference.s2w, t.s2w, "{tag}: s2w bytes per round");
+                assert_eq!(reference.w2s, t.w2s, "{tag}: w2s bytes per round");
+                assert_eq!(reference.meter_w2s, t.meter_w2s, "{tag}: w2s meter");
+                assert_eq!(reference.meter_s2w, t.meter_s2w, "{tag}: s2w meter");
+                assert_eq!(reference.eval, t.eval, "{tag}: eval");
+                assert_eq!(probe.steals, 0, "{tag}: no steal without imbalance");
+                assert_eq!(probe.partition_version, 0, "{tag}: partition untouched");
+                assert!(
+                    probe.epochs_ahead_max <= window,
+                    "{tag}: ahead {} must stay within the window {window}",
+                    probe.epochs_ahead_max
+                );
+            }
+        }
+    }
+}
+
+/// (j) Acceptance: 8 equal layers over 4 shards with shard 0 persistently
+/// delayed. Under `window:1,steal:3` the EWMA spread crosses the threshold
+/// once the bank is warm, the scheduler migrates exactly one layer off the
+/// slow shard (its lightest, layer 0), and never steals again: the donor
+/// is at the one-layer floor and stays slowest, so no other shard can be
+/// picked. The run stays bitwise on the undelayed lock-step trajectory —
+/// params, integer byte streams, meters, eval — because migration ships
+/// the server shift and every worker's EF21 error state verbatim, and the
+/// pinned deterministic shape (Euclidean LMO, `id` compressors, noise-0
+/// quadratics, sync rounds) consumes no RNG a migration could reorder.
+#[test]
+fn sched_imbalance_steals_exactly_one_layer_bitwise() {
+    let workers = 2;
+    let rounds = 12;
+    let mk = || -> Box<dyn Objective> {
+        Box::new(
+            Stacked::new(
+                (0..8u64)
+                    .map(|i| {
+                        Box::new(Quadratics::new(workers, 6, 0.5, 0.0, &mut Rng::new(2400 + i)))
+                            as Box<dyn Objective>
+                    })
+                    .collect(),
+            )
+            .unwrap(),
+        )
+    };
+    let (reference, _) = run_cluster_sched(
+        mk(), workers, 8, "id", "id", 4, RoundMode::Sync, rounds, "off", None,
+    );
+    let (t, probe) = run_cluster_sched(
+        mk(),
+        workers,
+        8,
+        "id",
+        "id",
+        4,
+        RoundMode::Sync,
+        rounds,
+        "window:1,steal:3",
+        Some(ShardDelayPlan::constant(0, rounds, 25)),
+    );
+    assert_eq!(probe.steals, 1, "exactly one steal");
+    assert_eq!(probe.partition_version, 1, "one migration bumps the plan version once");
+    assert!(probe.epochs_ahead_max <= 1, "ahead stays within the window");
+    // 8 equal layers x 4 shards partition as {s, s+4}; the slow shard 0
+    // donates its lightest-by-id layer 0 and keeps layer 4 (the floor)
+    assert_eq!(probe.partition[0], vec![4], "the donor keeps exactly its floor layer");
+    let thief = probe
+        .partition
+        .iter()
+        .position(|lys| lys.contains(&0))
+        .expect("some shard adopted layer 0");
+    assert_ne!(thief, 0, "the stolen layer moved off the slow shard");
+    assert_eq!(probe.partition[thief].len(), 3, "the thief grew by one layer");
+    let mut owned: Vec<usize> = probe.partition.iter().flatten().copied().collect();
+    owned.sort_unstable();
+    assert_eq!(owned, (0..8).collect::<Vec<_>>(), "every layer owned exactly once");
+    // bitwise trajectory preservation across the migration (per-round loss
+    // scalars regroup across shards, so the comparison is params + the
+    // integer byte streams + meters + eval — all partition-invariant)
+    assert_eq!(reference.params, t.params, "stolen-layer trajectory preserved bitwise");
+    assert_eq!(reference.s2w, t.s2w, "s2w bytes per round");
+    assert_eq!(reference.w2s, t.w2s, "w2s bytes per round");
+    assert_eq!(reference.meter_w2s, t.meter_w2s, "w2s meter");
+    assert_eq!(reference.meter_s2w, t.meter_s2w, "s2w meter");
+    assert_eq!(reference.eval, t.eval, "eval");
+    assert!(t.eval.is_finite(), "eval loss must stay finite, got {}", t.eval);
 }

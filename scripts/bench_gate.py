@@ -23,6 +23,11 @@ More gates ride along:
 - The `, traced` round entries must run within the threshold of their
   untraced mates — also within the current results alone, isolating the
   tracer overhead from machine noise.
+- Scheduler counters (`steals`, `epochs_ahead_max`) must be exactly zero
+  in every balanced round entry (balanced benches run lock-step); the
+  `imbalanced` entries are exempt, and their windowed run must instead
+  come in strictly below its lock-step mate's median — the bounded-epoch
+  window's wall-clock acceptance.
 - With `--results results/results.jsonl`, round entries additionally gate
   against the best-ever stored median over the whole experiment history
   (trajectory mode), so slow-boil regressions that pass every run-over-run
@@ -66,6 +71,20 @@ BF16_MAX_RATIO = 0.55
 # this tag; stamping + per-round ring drain must stay within the gate
 # threshold of the untraced round time (the tracer-overhead acceptance)
 TRACE_TAG = ", traced"
+
+# scheduler counters: a balanced fault-free bench runs lock-step, so a
+# nonzero steal or ahead-of-frontier high-water mark there means the
+# bounded-epoch scheduler activated where it must be inert. The entries
+# whose names carry IMBALANCED_MARK are exempt — running ahead of the
+# stalled shard is their entire point.
+SCHED_KEYS = ("steals", "epochs_ahead_max")
+IMBALANCED_MARK = "imbalanced"
+
+# the imbalanced scheduler entries pair a windowed run with a lock-step run
+# of the same stalled deployment; the windowed median must come in strictly
+# below its lock-step mate (the bounded-epoch window's acceptance bar)
+WINDOW_TAG = ", window:1"
+LOCKSTEP_TAG = ", lock-step"
 
 
 def bf16_problems(entries):
@@ -208,6 +227,54 @@ def fault_problems(entries):
     return problems
 
 
+def sched_problems(entries):
+    """Nonzero scheduler counters in a balanced bench entry fail the gate:
+    every non-imbalanced entry runs lock-step (or with an inert window), so
+    a steal or a shard running ahead there means the scheduler fired where
+    it must be a no-op — a determinism bug, never machine noise."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if not any(s in name for s in GATED_SUBSTRINGS):
+            continue
+        if IMBALANCED_MARK in name:
+            continue
+        for key in SCHED_KEYS:
+            v = e.get(key, 0)
+            if v:
+                problems.append(
+                    f"round entry {name!r} has {key}={v} in a balanced lock-step bench"
+                )
+    return problems
+
+
+def imbalance_problems(entries):
+    """Every imbalanced windowed entry must beat its lock-step mate in the
+    same results file — strictly, not within a threshold: the rotating
+    stall dominates the round time, so a windowed run that fails to
+    overlap it has lost the scheduler's entire wall-clock win. Like the
+    bf16 and trace gates this needs no baseline (both twins are measured
+    by the same run on the same machine)."""
+    problems = []
+    for name, e in sorted(entries.items()):
+        if IMBALANCED_MARK not in name or WINDOW_TAG not in name:
+            continue
+        mate = name.replace(WINDOW_TAG, LOCKSTEP_TAG)
+        if mate not in entries:
+            problems.append(f"windowed entry {name!r} has no lock-step mate {mate!r}")
+            continue
+        cur = e["median_s"]
+        base = entries[mate]["median_s"]
+        if base <= 0:
+            problems.append(f"lock-step mate {mate!r} has nonpositive median_s")
+            continue
+        if cur >= base:
+            problems.append(
+                f"windowed entry {name!r} took {cur:.6f}s vs lock-step "
+                f"{base:.6f}s ({cur / base:.3f}x >= 1x)"
+            )
+    return problems
+
+
 def load_entries(path):
     """Index a bench file's entries by name.
 
@@ -317,6 +384,31 @@ def main():
             "bench gate: fault counters must be zero in a fault-free bench "
             "run (the bench never injects faults); see DESIGN.md §Fault "
             "tolerance",
+            file=sys.stderr,
+        )
+        return 1
+
+    # likewise baseline-independent: scheduler counters must be zero in
+    # every balanced entry, and each imbalanced windowed entry must beat
+    # its lock-step mate inside the same results file
+    sched = sched_problems(current)
+    if sched:
+        for p in sched:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            "bench gate: scheduler counters must be zero outside the "
+            "imbalanced entries (balanced benches run lock-step); see "
+            "DESIGN.md §Shard scheduling",
+            file=sys.stderr,
+        )
+        return 1
+    imbal = imbalance_problems(current)
+    if imbal:
+        for p in imbal:
+            print(f"bench gate: {p}", file=sys.stderr)
+        print(
+            "bench gate: imbalanced windowed entries must come in strictly "
+            "below their lock-step mates; see DESIGN.md §Shard scheduling",
             file=sys.stderr,
         )
         return 1

@@ -232,5 +232,77 @@ class Bf16GateTest(unittest.TestCase):
         self.assertEqual(len(bench_gate.bf16_problems(entries)), 1)
 
 
+class SchedGateTest(unittest.TestCase):
+    def test_zero_or_missing_counters_pass(self):
+        entries = {
+            "coordinator round": entry("coordinator round", 0.01),
+            "cluster round (2 shard(s))": entry(
+                "cluster round (2 shard(s))", 0.01, steals=0, epochs_ahead_max=0
+            ),
+        }
+        self.assertEqual(bench_gate.sched_problems(entries), [])
+
+    def test_nonzero_counters_in_balanced_entry_fail(self):
+        entries = {
+            "cluster round (4 shard(s))": entry(
+                "cluster round (4 shard(s))", 0.01, steals=1, epochs_ahead_max=2
+            ),
+        }
+        problems = bench_gate.sched_problems(entries)
+        self.assertEqual(len(problems), 2)
+        self.assertTrue(any("steals=1" in p for p in problems))
+        self.assertTrue(any("epochs_ahead_max=2" in p for p in problems))
+
+    def test_imbalanced_entries_are_exempt(self):
+        entries = {
+            "cluster round (4 shards, imbalanced, window:1)": entry(
+                "cluster round (4 shards, imbalanced, window:1)",
+                0.01,
+                steals=0,
+                epochs_ahead_max=1,
+            ),
+        }
+        self.assertEqual(bench_gate.sched_problems(entries), [])
+
+    def test_non_round_entries_are_not_gated(self):
+        entries = {
+            "compress top:0.1": entry("compress top:0.1", 0.001, steals=3),
+        }
+        self.assertEqual(bench_gate.sched_problems(entries), [])
+
+
+class ImbalanceGateTest(unittest.TestCase):
+    WIN = "cluster round (4 shards, imbalanced, window:1)"
+    LOCK = "cluster round (4 shards, imbalanced, lock-step)"
+
+    def test_windowed_strictly_below_lockstep_passes(self):
+        entries = {
+            self.LOCK: entry(self.LOCK, 0.0150),
+            self.WIN: entry(self.WIN, 0.0090),
+        }
+        self.assertEqual(bench_gate.imbalance_problems(entries), [])
+
+    def test_windowed_at_or_above_lockstep_fails(self):
+        entries = {
+            self.LOCK: entry(self.LOCK, 0.0150),
+            self.WIN: entry(self.WIN, 0.0150),
+        }
+        problems = bench_gate.imbalance_problems(entries)
+        self.assertEqual(len(problems), 1)
+        self.assertIn(">= 1x", problems[0])
+
+    def test_missing_lockstep_mate_fails(self):
+        entries = {self.WIN: entry(self.WIN, 0.009)}
+        problems = bench_gate.imbalance_problems(entries)
+        self.assertEqual(len(problems), 1)
+        self.assertIn("no lock-step mate", problems[0])
+
+    def test_balanced_entries_are_not_paired(self):
+        entries = {
+            "cluster round (2 shard(s))": entry("cluster round (2 shard(s))", 0.01),
+        }
+        self.assertEqual(bench_gate.imbalance_problems(entries), [])
+
+
 if __name__ == "__main__":
     unittest.main(verbosity=2)

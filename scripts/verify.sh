@@ -64,6 +64,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== tier-2: loopback-socket scenarios (release) =="
   cargo test --release -q --test scenario net_
 
+  # the shard-scheduler subset reruns by name too: the bounded-epoch window
+  # and the steal migration are the most timing-sensitive paths in the repo
+  # (EWMA round-time sampling, injected shard stalls, out-of-order epoch
+  # seals), and their bitwise goldens must hold under release scheduling
+  echo "== tier-2: shard-scheduler scenarios (release) =="
+  cargo test --release -q --test scenario sched_
+
   # the microkernel's bit-identity contract and the non-finite propagation
   # policy rerun by name in release: optimized codegen (vectorization, FMA
   # contraction if it ever crept in) is exactly what could break bitwise
